@@ -1,0 +1,72 @@
+//! End-to-end bench for experiment 2 (paper Table 6 / Fig. 8): the
+//! 3-objective SiLago search, plus micro-benches of the analytical
+//! hardware objectives (Eq. 3 / Eq. 4) that price every candidate.
+
+use std::rc::Rc;
+
+use mohaq::coordinator::{run_search, ExperimentSpec};
+use mohaq::hw::{silago::SiLago, Platform};
+use mohaq::model::ModelDesc;
+use mohaq::quant::{Bits, QuantConfig};
+use mohaq::runtime::{Artifacts, Runtime};
+use mohaq::util::bench::Bencher;
+use mohaq::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::new(100, 1500, 1_000_000);
+    println!("== hardware-objective micro-benchmarks (paper-dims model) ==");
+    let model = ModelDesc::paper();
+    let silago = SiLago::paper_experiment();
+    let mut rng = Rng::new(3);
+    let mut qcs = Vec::new();
+    for _ in 0..64 {
+        let bits: Vec<Bits> = (0..8)
+            .map(|_| *rng.choose(&[Bits::B4, Bits::B8, Bits::B16]))
+            .collect();
+        qcs.push(QuantConfig { w_bits: bits.clone(), a_bits: bits });
+    }
+    let mut i = 0;
+    b.bench("silago speedup (Eq.4)", || {
+        i = (i + 1) % qcs.len();
+        silago.speedup(&model, &qcs[i])
+    });
+    b.bench("silago energy (Eq.3)", || {
+        i = (i + 1) % qcs.len();
+        silago.energy_pj(&model, &qcs[i]).unwrap()
+    });
+    b.bench("sram violation + size", || {
+        i = (i + 1) % qcs.len();
+        silago.sram_violation(&model, &qcs[i])
+    });
+
+    let dir = std::env::var("MOHAQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        println!("\nbench_exp2: no artifacts at {dir}; skipping end-to-end search");
+        return Ok(());
+    }
+    let rt = Runtime::cpu()?;
+    let arts = Rc::new(Artifacts::load(&dir)?);
+
+    println!("\n== bench_exp2: SiLago 3-objective search (scaled: 5 generations) ==");
+    let mut spec = ExperimentSpec::exp2_silago();
+    spec.ga.generations = 5;
+    let t0 = std::time::Instant::now();
+    let outcome = run_search(&spec, arts, &rt, false)?;
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "evaluations {:>6} ({:.1}/s)   execs {:>6}   pareto {}   wall {:.1}s",
+        outcome.evaluations,
+        outcome.evaluations as f64 / secs,
+        outcome.exec_calls,
+        outcome.rows.len(),
+        secs
+    );
+    let best_sp = outcome.rows.iter().filter_map(|r| r.speedup).fold(0.0, f64::max);
+    let min_e = outcome
+        .rows
+        .iter()
+        .filter_map(|r| r.energy_uj)
+        .fold(f64::INFINITY, f64::min);
+    println!("max speedup {best_sp:.2}x   min energy {min_e:.4} uJ");
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! End-to-end bench for experiment 3 (paper Tables 7-8 / Figs. 9-10):
+//! Bitfusion search throughput, the bit-brick speedup model, and the
+//! beacon retraining step cost (the expensive operation Algorithm 1
+//! rations).
+
+use std::rc::Rc;
+
+use mohaq::coordinator::{run_search, ExperimentSpec, Trainer};
+use mohaq::hw::{bitfusion::Bitfusion, Platform};
+use mohaq::model::ModelDesc;
+use mohaq::quant::{Bits, QuantConfig};
+use mohaq::runtime::{Artifacts, Runtime};
+use mohaq::util::bench::Bencher;
+use mohaq::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::new(100, 1500, 1_000_000);
+    println!("== bitfusion model micro-benchmarks (paper-dims model) ==");
+    let model = ModelDesc::paper();
+    let bf = Bitfusion::paper_experiment();
+    let mut rng = Rng::new(5);
+    let qcs: Vec<QuantConfig> = (0..64)
+        .map(|_| QuantConfig {
+            w_bits: (0..8).map(|_| *rng.choose(&Bits::SEARCHABLE)).collect(),
+            a_bits: (0..8).map(|_| *rng.choose(&Bits::SEARCHABLE)).collect(),
+        })
+        .collect();
+    let mut i = 0;
+    b.bench("bitfusion speedup (bit-brick Eq.4)", || {
+        i = (i + 1) % qcs.len();
+        bf.speedup(&model, &qcs[i])
+    });
+    b.bench("beacon distance (8 layers)", || {
+        i = (i + 1) % qcs.len();
+        qcs[i].beacon_distance(&qcs[(i + 7) % qcs.len()])
+    });
+
+    let dir = std::env::var("MOHAQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        println!("\nbench_exp3: no artifacts at {dir}; skipping end-to-end parts");
+        return Ok(());
+    }
+    let rt = Runtime::cpu()?;
+    let arts = Rc::new(Artifacts::load(&dir)?);
+
+    // Beacon retraining step cost (binary-connect SGD via AOT train step).
+    let mut trainer = Trainer::new(&rt, arts.clone(), 7)?;
+    let qc2 = QuantConfig::uniform(arts.layer_names.len(), Bits::B2, Bits::B8);
+    let mut bench = Bencher::new(200, 2500, 1000);
+    println!("\n== beacon retraining cost ==");
+    let weights = arts.weights.clone();
+    bench.bench("binary-connect train step (batch 32)", || {
+        trainer.retrain(&weights, &qc2, 1, 1e-3).unwrap().1.wall_secs
+    });
+
+    println!("\n== bench_exp3: Bitfusion search, inference-only (scaled: 5 gens) ==");
+    let mut spec = ExperimentSpec::exp3_bitfusion(false);
+    spec.ga.generations = 5;
+    let t0 = std::time::Instant::now();
+    let outcome = run_search(&spec, arts, &rt, false)?;
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "evaluations {:>6} ({:.1}/s)   execs {:>6}   pareto {}   wall {:.1}s",
+        outcome.evaluations,
+        outcome.evaluations as f64 / secs,
+        outcome.exec_calls,
+        outcome.rows.len(),
+        secs
+    );
+    let best_sp = outcome.rows.iter().filter_map(|r| r.speedup).fold(0.0, f64::max);
+    println!("max speedup {best_sp:.1}x (paper reaches 40.7x inference-only)");
+    Ok(())
+}

@@ -1,0 +1,141 @@
+//! Runtime hot-path benches: the PJRT inference call (literal vs
+//! pre-uploaded-buffer input paths), parameter-set upload, qparam
+//! resolution and the full val_error evaluation — the numbers behind
+//! EXPERIMENTS.md §Perf L3.
+//!
+//! Needs `make artifacts`; exits 0 with a notice otherwise.
+
+use std::rc::Rc;
+
+use mohaq::eval::EvalService;
+use mohaq::quant::{resolve_qparams, Bits, QuantConfig};
+use mohaq::runtime::{Artifacts, Input, Runtime};
+use mohaq::util::bench::Bencher;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::var("MOHAQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        println!("bench_runtime: no artifacts at {dir}; run `make artifacts` first");
+        return Ok(());
+    }
+    let rt = Runtime::cpu()?;
+    let arts = Rc::new(Artifacts::load(&dir)?);
+    let mut b = Bencher::new(300, 3000, 10_000);
+    println!("== runtime hot-path benchmarks ==");
+
+    b.bench("Artifacts::load (full bundle)", || Artifacts::load(&dir).unwrap());
+
+    let exec = rt.load(arts.hlo_path("infer")?)?;
+    let n = arts.layer_names.len();
+    let qc = QuantConfig::uniform(n, Bits::B4, Bits::B8);
+    b.bench("resolve_qparams (8 layers)", || {
+        resolve_qparams(&qc, &arts.layer_names, &arts.w_clips, &arts.a_clips).unwrap()
+    });
+
+    // One inference batch, literal path (weights re-uploaded every call).
+    let (wq, aq) = resolve_qparams(&qc, &arts.layer_names, &arts.w_clips, &arts.a_clips)?;
+    let (bsz, t, f) = (arts.batch, arts.seq_len, arts.feat_dim);
+    let split = &arts.val_subsets[0];
+    let (x, y) = split.batch(0, bsz, t, f);
+    let shapes: Vec<Vec<i64>> = arts
+        .tensors
+        .iter()
+        .map(|i| i.shape.iter().map(|&d| d as i64).collect())
+        .collect();
+    let frames = (bsz * t) as u64;
+
+    b.bench_items("infer batch (all-literal inputs)", frames, || {
+        let mut inputs: Vec<Input> = Vec::with_capacity(arts.weights.len() + 4);
+        for (data, shape) in arts.weights.iter().zip(&shapes) {
+            inputs.push(Input::F32(data, shape.clone()));
+        }
+        inputs.push(Input::F32(&wq, vec![n as i64, 4]));
+        inputs.push(Input::F32(&aq, vec![n as i64, 4]));
+        inputs.push(Input::F32(x, vec![bsz as i64, t as i64, f as i64]));
+        inputs.push(Input::I32(y, vec![bsz as i64, t as i64]));
+        exec.run_literals(&inputs).unwrap()
+    });
+
+    // Same batch, weights resident on device (the production path).
+    let statics: Vec<_> = arts
+        .weights
+        .iter()
+        .zip(&shapes)
+        .map(|(data, shape)| exec.upload(&Input::F32(data, shape.clone())).unwrap())
+        .collect();
+    b.bench_items("infer batch (device-resident weights)", frames, || {
+        let fresh = [
+            Input::F32(&wq, vec![n as i64, 4]),
+            Input::F32(&aq, vec![n as i64, 4]),
+            Input::F32(x, vec![bsz as i64, t as i64, f as i64]),
+            Input::I32(y, vec![bsz as i64, t as i64]),
+        ];
+        exec.run_mixed(&statics, &fresh).unwrap()
+    });
+
+    // One-shot: param-set upload cost (kept alive afterwards — PJRT CPU
+    // aborts if buffers with in-flight transfers are freed in a tight
+    // alloc/free loop, so this is measured once, not in a loop).
+    let t0 = std::time::Instant::now();
+    let kept: Vec<_> = arts
+        .weights
+        .iter()
+        .zip(&shapes)
+        .map(|(data, shape)| exec.upload(&Input::F32(data, shape.clone())).unwrap())
+        .collect();
+    println!(
+        "{:<48} {:>10.2} µs one-shot ({} tensors)",
+        "upload full param set",
+        t0.elapsed().as_secs_f64() * 1e6,
+        kept.len()
+    );
+
+    // Full candidate evaluation (4 subsets, max rule) through EvalService.
+    let mut svc = EvalService::new(&rt, arts.clone())?;
+    let mut rng = mohaq::util::rng::Rng::new(0xeea1);
+    let mut bc = Bencher::new(300, 4000, 12);
+    bc.bench("EvalService::val_error (uncached candidate)", || {
+        // Fresh random genome every iteration: never hits the cache.
+        let w: Vec<Bits> = (0..n).map(|_| *rng.choose(&Bits::SEARCHABLE)).collect();
+        let a: Vec<Bits> = (0..n).map(|_| *rng.choose(&Bits::SEARCHABLE)).collect();
+        svc.val_error(&QuantConfig { w_bits: w, a_bits: a }, 0).unwrap()
+    });
+    let qc_fixed = QuantConfig::uniform(n, Bits::B8, Bits::B8);
+    svc.val_error(&qc_fixed, 0)?;
+    b.bench("EvalService::val_error (cache hit)", || {
+        svc.val_error(&qc_fixed, 0).unwrap()
+    });
+
+    println!("\nstats: {:?} execs", svc.stats().executions);
+
+    // L2 graph comparison: interpret-mode Pallas lowering vs the pure-jnp
+    // lowering of the SAME computation (numerics pytest-identical).
+    if std::path::Path::new(&dir).join("infer_ref.hlo.txt").exists() {
+        println!("\n== L2 graph comparison (one inference batch) ==");
+        let exec_ref = rt.load(arts.hlo_path("infer_ref")?)?;
+        let mut bg = Bencher::new(300, 4000, 60);
+        bg.bench_items("infer batch (pallas graph)", frames, || {
+            let mut inputs: Vec<Input> = Vec::with_capacity(arts.weights.len() + 4);
+            for (data, shape) in arts.weights.iter().zip(&shapes) {
+                inputs.push(Input::F32(data, shape.clone()));
+            }
+            inputs.push(Input::F32(&wq, vec![n as i64, 4]));
+            inputs.push(Input::F32(&aq, vec![n as i64, 4]));
+            inputs.push(Input::F32(x, vec![bsz as i64, t as i64, f as i64]));
+            inputs.push(Input::I32(y, vec![bsz as i64, t as i64]));
+            exec.run_literals(&inputs).unwrap()
+        });
+        bg.bench_items("infer batch (pure-jnp graph)", frames, || {
+            let mut inputs: Vec<Input> = Vec::with_capacity(arts.weights.len() + 4);
+            for (data, shape) in arts.weights.iter().zip(&shapes) {
+                inputs.push(Input::F32(data, shape.clone()));
+            }
+            inputs.push(Input::F32(&wq, vec![n as i64, 4]));
+            inputs.push(Input::F32(&aq, vec![n as i64, 4]));
+            inputs.push(Input::F32(x, vec![bsz as i64, t as i64, f as i64]));
+            inputs.push(Input::I32(y, vec![bsz as i64, t as i64]));
+            exec_ref.run_literals(&inputs).unwrap()
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Experiment 1 (paper §5.2, Table 5, Fig. 7): multi-objective search
+//! minimizing WER_V and memory size — no hardware model. Reproduces the
+//! headline claims: ~8x compression with no error increase; ~12x with a
+//! small (paper: 1.5pp) increase.
+//!
+//!     cargo run --release --example exp1_compression -- \
+//!         [--gens 60] [--seed N] [--out out/exp1] [--artifacts artifacts]
+
+use std::rc::Rc;
+
+use mohaq::coordinator::{baseline_rows, run_search, ExperimentSpec};
+use mohaq::report;
+use mohaq::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let dir = args.get_or("artifacts", "artifacts");
+    let out_dir = args.get_or("out", "out/exp1").to_string();
+
+    let arts = Rc::new(mohaq::runtime::Artifacts::load(dir)?);
+    let rt = mohaq::runtime::Runtime::cpu()?;
+
+    let mut spec = ExperimentSpec::exp1();
+    spec.ga.generations = args.get_usize("gens", spec.ga.generations);
+    spec.ga.seed = args.get_u64("seed", spec.ga.seed);
+
+    println!(
+        "== Experiment 1: WER vs memory size ({} vars, {} gens) ==",
+        2 * arts.layer_names.len(),
+        spec.ga.generations
+    );
+    let outcome = run_search(&spec, arts.clone(), &rt, true)?;
+
+    println!("\n== Pareto set (paper Table 5 analog) ==\n");
+    println!(
+        "{}",
+        report::render_table(&outcome.rows, &baseline_rows(&arts), &arts)
+    );
+
+    // Headline claims (§5.2) — shape, not absolute numbers.
+    let base = arts.baseline.val_err;
+    let best_at = |min_cp: f64| {
+        outcome
+            .rows
+            .iter()
+            .filter(|r| r.cp_r >= min_cp)
+            .map(|r| r.wer_v)
+            .fold(f64::INFINITY, f64::min)
+    };
+    println!("== Headline compression claims ==");
+    for cp in [8.0, 10.0, 12.0] {
+        let err = best_at(cp);
+        if err.is_finite() {
+            println!(
+                "  >= {cp:>4.1}x: best WER_V {:.2}%  ({:+.2} pp vs baseline)",
+                err * 100.0,
+                (err - base) * 100.0
+            );
+        } else {
+            println!("  >= {cp:>4.1}x: no solution in the final set");
+        }
+    }
+
+    std::fs::create_dir_all(&out_dir)?;
+    report::write_front_csv(format!("{out_dir}/front.csv"), &outcome.rows)?;
+    report::write_records_csv(format!("{out_dir}/records.csv"), &outcome)?;
+    std::fs::write(format!("{out_dir}/summary.md"), report::summary_md(&outcome))?;
+    println!("\nwrote {out_dir}/{{front.csv,records.csv,summary.md}} (Fig. 7 data)");
+    println!("{}", report::summary_md(&outcome));
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Experiment 2 (paper §5.3, Table 6, Fig. 8): three-objective search
+//! (WER_V, speedup, energy) on the SiLago CGRA model with a 6 MB DiMArch
+//! SRAM constraint and tied W=A per layer.
+//!
+//! Reproduced claims: solutions reaching a high fraction of the max
+//! speedup (all-4-bit: 3.9x) and energy saving at small error increases.
+//!
+//!     cargo run --release --example exp2_silago -- \
+//!         [--gens 15] [--seed N] [--sram-mb 6] [--out out/exp2]
+
+use std::rc::Rc;
+
+use mohaq::coordinator::{baseline_rows, run_search, ExperimentSpec, PlatformChoice};
+use mohaq::hw::{silago::SiLago, Platform};
+use mohaq::quant::{Bits, QuantConfig};
+use mohaq::report;
+use mohaq::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let dir = args.get_or("artifacts", "artifacts");
+    let out_dir = args.get_or("out", "out/exp2").to_string();
+
+    let arts = Rc::new(mohaq::runtime::Artifacts::load(dir)?);
+    let rt = mohaq::runtime::Runtime::cpu()?;
+
+    let mut spec = ExperimentSpec::exp2_silago();
+    spec.ga.generations = args.get_usize("gens", spec.ga.generations);
+    spec.ga.seed = args.get_u64("seed", spec.ga.seed);
+    spec.platform = PlatformChoice::SiLago { sram_mb: args.get_f64("sram-mb", 6.0) };
+
+    println!(
+        "== Experiment 2: SiLago, 3 objectives, {} vars, {} gens ==",
+        arts.layer_names.len(),
+        spec.ga.generations
+    );
+    let outcome = run_search(&spec, arts.clone(), &rt, true)?;
+
+    println!("\n== Pareto set (paper Table 6 analog) ==\n");
+    println!(
+        "{}",
+        report::render_table(&outcome.rows, &baseline_rows(&arts), &arts)
+    );
+
+    // §5.3 framing: % of max speedup / energy saving vs error increase.
+    let silago = SiLago::new(None);
+    let n = arts.layer_names.len();
+    let all4 = QuantConfig::uniform(n, Bits::B4, Bits::B4);
+    let max_speedup = silago.speedup(&arts.model, &all4);
+    let min_energy = silago.energy_pj(&arts.model, &all4).unwrap() / 1e6;
+    let base16 = QuantConfig::uniform(n, Bits::B16, Bits::B16);
+    let base_energy = silago.energy_pj(&arts.model, &base16).unwrap() / 1e6;
+    let base_err = arts.baseline.val_err_16bit;
+
+    println!("== §5.3 claims: fraction of max possible performance ==");
+    println!(
+        "  max speedup (all-4-bit): {max_speedup:.2}x; min energy {min_energy:.3} uJ (base {base_energy:.3} uJ)"
+    );
+    for extra_pp in [0.0, 0.5, 1.0, 2.6] {
+        let best = outcome
+            .rows
+            .iter()
+            .filter(|r| r.wer_v <= base_err + extra_pp / 100.0 + 1e-9)
+            .filter_map(|r| r.speedup.map(|s| (s, r.energy_uj.unwrap_or(f64::NAN))))
+            .fold((0.0f64, f64::INFINITY), |acc, (s, e)| (acc.0.max(s), acc.1.min(e)));
+        if best.0 > 0.0 {
+            let sp_frac = best.0 / max_speedup * 100.0;
+            let en_save = (base_energy - best.1) / (base_energy - min_energy) * 100.0;
+            println!(
+                "  +{extra_pp:.1}pp error budget: {:.0}% of max speedup, {:.0}% of max energy saving",
+                sp_frac, en_save
+            );
+        } else {
+            println!("  +{extra_pp:.1}pp error budget: no solution");
+        }
+    }
+
+    std::fs::create_dir_all(&out_dir)?;
+    report::write_front_csv(format!("{out_dir}/front.csv"), &outcome.rows)?;
+    report::write_records_csv(format!("{out_dir}/records.csv"), &outcome)?;
+    std::fs::write(format!("{out_dir}/summary.md"), report::summary_md(&outcome))?;
+    println!("\nwrote {out_dir}/ (Fig. 8 data)");
+    println!("{}", report::summary_md(&outcome));
+    Ok(())
+}

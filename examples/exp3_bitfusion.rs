@@ -1,0 +1,135 @@
+//! Experiment 3 (paper §5.4, Tables 7-8, Figs. 9-10): Bitfusion with a
+//! 2 MB SRAM constraint (10.6x compression needed). This is the END-TO-END
+//! driver of the whole stack: inference-only search first, then
+//! beacon-based search where the coordinator retrains beacons from Rust by
+//! looping the AOT binary-connect train step (loss curves logged), and a
+//! comparison of the two Pareto fronts (hypervolume + per-speedup errors).
+//!
+//!     cargo run --release --example exp3_bitfusion -- \
+//!         [--mode inference|beacon|both] [--gens 60] [--seed N]
+//!         [--threshold 6] [--retrain-steps 250] [--out out/exp3]
+
+use std::rc::Rc;
+
+use mohaq::coordinator::search::BeaconPolicyOverrides;
+use mohaq::coordinator::{baseline_rows, run_search, ExperimentSpec, SearchOutcome};
+use mohaq::pareto::hypervolume::hypervolume_2d;
+use mohaq::report;
+use mohaq::util::cli::Args;
+
+fn front_points(outcome: &SearchOutcome) -> Vec<Vec<f64>> {
+    // (error, -speedup) minimization space.
+    outcome
+        .rows
+        .iter()
+        .filter_map(|r| r.speedup.map(|s| vec![r.wer_v, -s]))
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let dir = args.get_or("artifacts", "artifacts");
+    let out_dir = args.get_or("out", "out/exp3").to_string();
+    let mode = args.get_or("mode", "both").to_string();
+    let gens = args.get_usize("gens", 60);
+    let seed = args.get_u64("seed", 0x5eed);
+
+    let arts = Rc::new(mohaq::runtime::Artifacts::load(dir)?);
+    let rt = mohaq::runtime::Runtime::cpu()?;
+    std::fs::create_dir_all(&out_dir)?;
+    let baselines = baseline_rows(&arts);
+
+    let mut inference: Option<SearchOutcome> = None;
+    let mut beacon: Option<SearchOutcome> = None;
+
+    if mode == "inference" || mode == "both" {
+        let mut spec = ExperimentSpec::exp3_bitfusion(false);
+        spec.ga.generations = gens;
+        spec.ga.seed = seed;
+        println!("== Experiment 3a: Bitfusion, inference-only search ==");
+        let outcome = run_search(&spec, arts.clone(), &rt, true)?;
+        println!("\n== Pareto set (paper Table 7 analog) ==\n");
+        println!("{}", report::render_table(&outcome.rows, &baselines, &arts));
+        report::write_front_csv(format!("{out_dir}/front_inference.csv"), &outcome.rows)?;
+        report::write_records_csv(format!("{out_dir}/records_inference.csv"), &outcome)?;
+        inference = Some(outcome);
+    }
+
+    if mode == "beacon" || mode == "both" {
+        let mut spec = ExperimentSpec::exp3_bitfusion(true);
+        spec.ga.generations = gens;
+        spec.ga.seed = seed;
+        spec.beacon = Some(BeaconPolicyOverrides {
+            threshold: Some(args.get_f64("threshold", 6.0)),
+            retrain_steps: Some(args.get_usize("retrain-steps", 250)),
+            max_beacons: Some(args.get_usize("max-beacons", 4)),
+        });
+        println!("\n== Experiment 3b: Bitfusion, beacon-based search ==");
+        let outcome = run_search(&spec, arts.clone(), &rt, true)?;
+        println!("\n== Pareto set (paper Table 8 analog) ==\n");
+        println!("{}", report::render_table(&outcome.rows, &baselines, &arts));
+        println!("beacons created: {}", outcome.beacons.len());
+        for (qc, steps) in &outcome.beacons {
+            println!("  - {qc} ({steps} binary-connect steps)");
+        }
+        report::write_front_csv(format!("{out_dir}/front_beacon.csv"), &outcome.rows)?;
+        report::write_records_csv(format!("{out_dir}/records_beacon.csv"), &outcome)?;
+        beacon = Some(outcome);
+    }
+
+    if let (Some(inf), Some(bea)) = (&inference, &beacon) {
+        // Fig. 10: compare the two fronts.
+        println!("\n== Front comparison (paper Fig. 10 analog) ==");
+        let reference = [1.0, 0.0]; // err <= 100%, speedup >= 0
+        let hv_inf = hypervolume_2d(&front_points(inf), &reference);
+        let hv_bea = hypervolume_2d(&front_points(bea), &reference);
+        println!("  hypervolume (ref err=1.0, speedup=0): inference {hv_inf:.3}  beacon {hv_bea:.3}");
+
+        let max_sp = |o: &SearchOutcome| {
+            o.rows
+                .iter()
+                .filter_map(|r| r.speedup.map(|s| (s, r.wer_t)))
+                .fold((0.0f64, 0.0f64), |acc, (s, e)| if s > acc.0 { (s, e) } else { acc })
+        };
+        let (si, ei) = max_sp(inf);
+        let (sb, eb) = max_sp(bea);
+        println!("  max speedup: inference {si:.1}x @ WER_T {:.1}%", ei * 100.0);
+        println!("  max speedup: beacon    {sb:.1}x @ WER_T {:.1}%", eb * 100.0);
+
+        // Error at matched speedup levels (the paper's 40.7x comparison).
+        let err_at = |o: &SearchOutcome, sp: f64| {
+            o.rows
+                .iter()
+                .filter(|r| r.speedup.unwrap_or(0.0) >= sp)
+                .map(|r| r.wer_t)
+                .fold(f64::INFINITY, f64::min)
+        };
+        for sp in [20.0, 30.0, si.min(sb)] {
+            let a = err_at(inf, sp);
+            let b = err_at(bea, sp);
+            if a.is_finite() || b.is_finite() {
+                println!(
+                    "  WER_T at >= {sp:.0}x: inference {}  beacon {}",
+                    if a.is_finite() { format!("{:.1}%", a * 100.0) } else { "-".into() },
+                    if b.is_finite() { format!("{:.1}%", b * 100.0) } else { "-".into() },
+                );
+            }
+        }
+        assert!(
+            hv_bea >= hv_inf * 0.98,
+            "beacon front should not be dominated: hv {hv_bea:.3} vs {hv_inf:.3}"
+        );
+    }
+
+    for (name, o) in [("inference", &inference), ("beacon", &beacon)] {
+        if let Some(o) = o {
+            std::fs::write(
+                format!("{out_dir}/summary_{name}.md"),
+                report::summary_md(o),
+            )?;
+            println!("\n{}", report::summary_md(o));
+        }
+    }
+    println!("wrote {out_dir}/ (Figs. 9/10 data)");
+    Ok(())
+}

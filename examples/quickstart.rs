@@ -1,0 +1,74 @@
+//! Quickstart: load the artifact bundle, print the model breakdown
+//! (paper Table 4), evaluate a handful of uniform quantization configs on
+//! the AOT inference executable, and score them on both hardware models.
+//!
+//!     cargo run --release --example quickstart [-- --artifacts artifacts]
+
+use std::rc::Rc;
+
+use mohaq::hw::{bitfusion::Bitfusion, silago::SiLago, Platform};
+use mohaq::quant::{Bits, QuantConfig};
+use mohaq::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let dir = args.get_or("artifacts", "artifacts");
+
+    let arts = Rc::new(mohaq::runtime::Artifacts::load(dir)?);
+    let rt = mohaq::runtime::Runtime::cpu()?;
+    let mut eval = mohaq::eval::EvalService::new(&rt, arts.clone())?;
+
+    println!("== Model breakdown (paper Table 4 formulas) ==\n");
+    println!("{}", arts.model.table4());
+    println!(
+        "float baseline: val {:.2}%  test {:.2}%  (paper band: 16.2% / 17.2%)\n",
+        arts.baseline.val_err * 100.0,
+        arts.baseline.test_err * 100.0
+    );
+
+    let silago = SiLago::new(None);
+    let bitfusion = Bitfusion::new(None);
+    let n = arts.layer_names.len();
+
+    println!("== Uniform post-training quantization sweep ==\n");
+    println!(
+        "{:<14}{:>9}{:>8}{:>10}{:>12}{:>14}",
+        "config", "WER_V", "Cp_r", "size MB", "SiLago spd", "Bitfusion spd"
+    );
+    for (w, a) in [
+        (Bits::B32, Bits::B32),
+        (Bits::B16, Bits::B16),
+        (Bits::B8, Bits::B8),
+        (Bits::B4, Bits::B8),
+        (Bits::B4, Bits::B4),
+        (Bits::B2, Bits::B8),
+    ] {
+        let qc = QuantConfig::uniform(n, w, a);
+        let err = eval.val_error(&qc, 0)?;
+        let silago_ok = w != Bits::B2 && w != Bits::B32;
+        println!(
+            "{:<14}{:>8.2}%{:>7.1}x{:>10.3}{:>12}{:>14}",
+            format!("W{w}/A{a}"),
+            err * 100.0,
+            arts.model.compression_ratio(&qc.w_bits),
+            arts.model.size_bytes(&qc.w_bits) / (1024.0 * 1024.0),
+            if silago_ok {
+                format!("{:.2}x", silago.speedup(&arts.model, &qc))
+            } else {
+                "-".into()
+            },
+            if w == Bits::B32 {
+                "-".into()
+            } else {
+                format!("{:.2}x", bitfusion.speedup(&arts.model, &qc))
+            },
+        );
+    }
+
+    let stats = eval.stats();
+    println!(
+        "\n{} PJRT executions, {} cache hits — python never ran.",
+        stats.executions, stats.cache_hits
+    );
+    Ok(())
+}

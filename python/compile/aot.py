@@ -1,0 +1,287 @@
+"""AOT pipeline: train -> calibrate -> lower -> write artifacts.
+
+Runs ONCE at ``make artifacts``; Python is never on the search path. Emits:
+
+  artifacts/
+    infer.hlo.txt        quantized inference graph (Pallas kernels),
+                         inputs = [param leaves..., wq(8,4), aq(8,4),
+                         x(B,T,F), labels(B,T)], outputs = (err, total, loss)
+    train_step.hlo.txt   binary-connect SGD step (STE), inputs = [param
+                         leaves..., wq, aq, x, labels, lr], outputs =
+                         [new param leaves..., loss]
+    logits.hlo.txt       raw logits graph (examples / debugging)
+    weights.bin          f32 LE param leaves, flatten order == manifest
+    {train,val,test}_{x,y}.bin   f32/i32 LE tensors of the corpus splits
+    calibration.json     MMSE weight clips, activation clips, requant16
+                         deltas, fixed-point info
+    manifest.json        the single source of truth the Rust side parses:
+                         shapes, tensor order, HLO signatures, baseline
+                         metrics, config echo
+
+HLO *text* is the interchange format — jax >= 0.5 serialized protos use
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .config import (PipelineConfig, SUPPORTED_BITS, paper_preset,
+                     quant_layer_names, tiny_preset)
+from .data import make_splits
+from .model import (collect_activations, infer_fn, logits_fn, loss_and_err,
+                    no_quant_qparams, train_step_fn)
+from .quantize import (activation_clip_table, fixed16_delta, fixed16_snap,
+                       genome_qparams, weight_clip_table)
+from .train import evaluate, train_baseline
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (aot recipe)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def flatten_params(params):
+    """Flatten with path names; order matches jax.jit's HLO parameter order."""
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(params)[0]
+    names, leaves = [], []
+    for path, leaf in leaves_with_path:
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        names.append(name)
+        leaves.append(np.asarray(leaf, np.float32))
+    return names, leaves
+
+
+def write_bin(path: str, arr: np.ndarray):
+    with open(path, "wb") as f:
+        f.write(np.ascontiguousarray(arr).tobytes())
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", default="default",
+                    choices=["default", "tiny", "paper"])
+    ap.add_argument("--config", default=None,
+                    help="JSON PipelineConfig file (overrides --preset)")
+    ap.add_argument("--skip-train", action="store_true",
+                    help="reuse weights from a previous run if present")
+    args = ap.parse_args()
+
+    if args.config:
+        cfg = PipelineConfig.from_json(open(args.config).read())
+    elif args.preset == "tiny":
+        cfg = tiny_preset()
+    elif args.preset == "paper":
+        cfg = paper_preset()
+    else:
+        cfg = PipelineConfig()
+    mcfg, dcfg = cfg.model, cfg.data
+    qnames = quant_layer_names(mcfg)
+    n_q = len(qnames)
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+
+    t_start = time.time()
+    print(f"[aot] preset={args.preset} model={mcfg} ")
+
+    # ------------------------------------------------------------------ data
+    print("[aot] generating synthetic corpus ...")
+    splits = make_splits(dcfg)
+    x_tr, y_tr = splits["train"]
+    x_te, y_te = splits["test"]
+    val_x = np.stack([s[0] for s in splits["val"]])  # (S, n, T, F)
+    val_y = np.stack([s[1] for s in splits["val"]])
+    write_bin(f"{out}/train_x.bin", x_tr)
+    write_bin(f"{out}/train_y.bin", y_tr)
+    write_bin(f"{out}/val_x.bin", val_x)
+    write_bin(f"{out}/val_y.bin", val_y)
+    write_bin(f"{out}/test_x.bin", x_te)
+    write_bin(f"{out}/test_y.bin", y_te)
+
+    # ----------------------------------------------------------------- train
+    weights_path = f"{out}/weights.bin"
+    train_hist: List[dict] = []
+    if args.skip_train and os.path.exists(f"{out}/manifest.json"):
+        raise SystemExit("--skip-train: manifest already present; nothing to do")
+    print("[aot] training float baseline ...")
+    params, train_hist = train_baseline(cfg, splits)
+
+    # Snap the 16-bit-fixed parameters (recurrent vectors, biases) once —
+    # the paper keeps these out of the searched precisions (§4.1).
+    for name in qnames:
+        for key, val in params[name].items():
+            if not key.startswith("w"):
+                params[name][key] = fixed16_snap(val)
+
+    # ------------------------------------------------------------- calibrate
+    print("[aot] calibrating (MMSE clips, activation ranges) ...")
+    wmats = {name: [params[name][k] for k in params[name]
+                    if k.startswith("w") and k != "b"]
+             for name in qnames}
+    # FC bias is fixed-point, never int-quantized; exclude from clip pool.
+    w_clips = weight_clip_table(wmats)
+
+    n_calib = min(cfg.calib_seqs, val_x.shape[0] * val_x.shape[1])
+    calib_x = val_x.reshape(-1, dcfg.seq_len, dcfg.feat_dim)[:n_calib]
+    mxv_inputs, layer_outputs = collect_activations(params, calib_x, mcfg)
+    a_clips = activation_clip_table(mxv_inputs)
+    requant16 = {name: fixed16_delta(layer_outputs[name])
+                 for name in qnames if name != "FC"}
+
+    # -------------------------------------------------------- baseline evals
+    print("[aot] baseline evaluation ...")
+    base_val_subsets = [
+        evaluate(params, val_x[i], val_y[i], cfg) for i in range(dcfg.val_subsets)
+    ]
+    base_val = max(base_val_subsets)
+    base_test = evaluate(params, x_te, y_te, cfg)
+    # 16-bit full implementation (Base_S / Base_F rows of Tables 6-8).
+    wq16, aq16 = genome_qparams([16] * n_q, [16] * n_q, w_clips, a_clips,
+                                layer_names=qnames)
+    base16_val = max(
+        evaluate(params, val_x[i], val_y[i], cfg, wq=jnp.asarray(wq16),
+                 aq=jnp.asarray(aq16), requant16=requant16)
+        for i in range(dcfg.val_subsets)
+    )
+    print(f"[aot]   float val(max-of-subsets)={base_val:.4f} "
+          f"test={base_test:.4f} 16bit val={base16_val:.4f}")
+
+    # ------------------------------------------------------------- lower HLO
+    print("[aot] lowering HLO ...")
+    b, t, f = dcfg.batch, dcfg.seq_len, dcfg.feat_dim
+    x_spec = jax.ShapeDtypeStruct((b, t, f), jnp.float32)
+    y_spec = jax.ShapeDtypeStruct((b, t), jnp.int32)
+    q_spec = jax.ShapeDtypeStruct((n_q, 4), jnp.float32)
+    lr_spec = jax.ShapeDtypeStruct((), jnp.float32)
+    p_spec = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+
+    def infer(p, wq, aq, x, y):
+        return infer_fn(p, wq, aq, x, y, mcfg, requant16=requant16,
+                        use_pallas=True)
+
+    def infer_ref(p, wq, aq, x, y):
+        # Pure-jnp variant of the same graph (kernels replaced by their
+        # oracle) — used by the perf study in EXPERIMENTS.md §Perf.
+        return infer_fn(p, wq, aq, x, y, mcfg, requant16=requant16,
+                        use_pallas=False)
+
+    def logits(p, wq, aq, x):
+        return logits_fn(p, wq, aq, x, mcfg, requant16=requant16,
+                         use_pallas=True)
+
+    def train_step(p, wq, aq, x, y, lr):
+        return train_step_fn(p, wq, aq, x, y, lr, mcfg,
+                             clip_norm=cfg.train.clip_norm)
+
+    hlo_infer = to_hlo_text(
+        jax.jit(infer).lower(p_spec, q_spec, q_spec, x_spec, y_spec))
+    hlo_infer_ref = to_hlo_text(
+        jax.jit(infer_ref).lower(p_spec, q_spec, q_spec, x_spec, y_spec))
+    hlo_logits = to_hlo_text(
+        jax.jit(logits).lower(p_spec, q_spec, q_spec, x_spec))
+    hlo_train = to_hlo_text(
+        jax.jit(train_step).lower(p_spec, q_spec, q_spec, x_spec, y_spec,
+                                  lr_spec))
+    open(f"{out}/infer.hlo.txt", "w").write(hlo_infer)
+    open(f"{out}/infer_ref.hlo.txt", "w").write(hlo_infer_ref)
+    open(f"{out}/logits.hlo.txt", "w").write(hlo_logits)
+    open(f"{out}/train_step.hlo.txt", "w").write(hlo_train)
+
+    # --------------------------------------------------------- weights + map
+    names, leaves = flatten_params(params)
+    tensor_index, offset = [], 0
+    blob = bytearray()
+    for name, leaf in zip(names, leaves):
+        raw = np.ascontiguousarray(leaf).tobytes()
+        tensor_index.append({
+            "name": name, "shape": list(leaf.shape),
+            "offset": offset, "bytes": len(raw),
+        })
+        blob.extend(raw)
+        offset += len(raw)
+    open(weights_path, "wb").write(bytes(blob))
+
+    # ----------------------------------------------------------- calibration
+    calibration = {
+        "supported_bits": SUPPORTED_BITS,
+        "w_clips": w_clips,
+        "a_clips": a_clips,
+        "requant16": requant16,
+        "aux_fixed_bits": 16,
+    }
+    open(f"{out}/calibration.json", "w").write(json.dumps(calibration, indent=2))
+
+    # --------------------------------------------------------------- manifest
+    layer_dims = [{"name": n, "m": m, "n": nn} for n, m, nn in mcfg.layer_dims()]
+    manifest = {
+        "version": 1,
+        "created_unix": int(time.time()),
+        "config": json.loads(cfg.to_json()),
+        "quant_layers": qnames,
+        "layer_dims": layer_dims,
+        "weights": {"file": "weights.bin", "tensors": tensor_index},
+        "data": {
+            "batch": b, "seq_len": t, "feat_dim": f,
+            "num_classes": mcfg.num_classes,
+            "train": {"x": "train_x.bin", "y": "train_y.bin",
+                      "shape": list(x_tr.shape)},
+            "val": {"x": "val_x.bin", "y": "val_y.bin",
+                    "shape": list(val_x.shape)},
+            "test": {"x": "test_x.bin", "y": "test_y.bin",
+                     "shape": list(x_te.shape)},
+        },
+        "hlo": {
+            "infer": {
+                "file": "infer.hlo.txt",
+                "inputs": names + ["wq", "aq", "x", "labels"],
+                "outputs": ["err_count", "total", "loss"],
+            },
+            "infer_ref": {
+                "file": "infer_ref.hlo.txt",
+                "inputs": names + ["wq", "aq", "x", "labels"],
+                "outputs": ["err_count", "total", "loss"],
+            },
+            "logits": {
+                "file": "logits.hlo.txt",
+                "inputs": names + ["wq", "aq", "x"],
+                "outputs": ["logits"],
+            },
+            "train_step": {
+                "file": "train_step.hlo.txt",
+                "inputs": names + ["wq", "aq", "x", "labels", "lr"],
+                "outputs": names + ["loss"],
+            },
+        },
+        "baseline": {
+            "val_err_subsets": base_val_subsets,
+            "val_err": base_val,
+            "test_err": base_test,
+            "val_err_16bit": float(base16_val),
+            "train_history": train_hist,
+            "beacon_lr": cfg.train.beacon_lr,
+        },
+        "hash": hashlib.sha256(bytes(blob)).hexdigest()[:16],
+    }
+    open(f"{out}/manifest.json", "w").write(json.dumps(manifest, indent=2))
+    print(f"[aot] done in {time.time() - t_start:.1f}s -> {out}/")
+
+
+if __name__ == "__main__":
+    main()

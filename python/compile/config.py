@@ -1,0 +1,148 @@
+"""Build-time configuration for the MOHAQ compile pipeline.
+
+The paper's model (Table 4): input 23 FBANK features, 4 Bi-SRU layers
+(n=550) with 3 projection layers (p=256) in between, and a final FC layer
+to 1904 context-dependent phone states.
+
+We keep the exact topology (4 Bi-SRU + 3 projections + FC, 8 quantizable
+"layers": L0 Pr1 L1 Pr2 L2 Pr3 L3 FC) but scale the dimensions so the AOT
+CPU search loop stays fast; the `paper` preset restores the published dims.
+All dims flow into the artifact manifest so the Rust side never hardcodes
+them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import List
+
+
+# Names of the 8 quantizable layers of the paper topology, in order. This
+# ordering defines the genome layout used by the Rust search (index 0..7).
+# Configs with a different num_sru_layers derive their own list via
+# ``quant_layer_names`` (used by the tiny test preset).
+QUANT_LAYERS: List[str] = ["L0", "Pr1", "L1", "Pr2", "L2", "Pr3", "L3", "FC"]
+
+
+def quant_layer_names(cfg: "ModelConfig") -> List[str]:
+    """Quantizable layer names, in genome order, for this topology."""
+    return [name for name, _, _ in cfg.layer_dims()]
+
+# Precisions considered by the search (paper §4.2): 2/4/8-bit integer and
+# 16-bit fixed point. 32 encodes the float baseline (quantization off).
+SUPPORTED_BITS: List[int] = [2, 4, 8, 16]
+
+
+@dataclass
+class ModelConfig:
+    """Dimensions of the Bi-SRU speech model."""
+
+    feat_dim: int = 23          # input feature size (paper: 23 FBANK)
+    hidden: int = 64            # SRU hidden cells per direction (paper: 550)
+    proj: int = 32              # projection units (paper: 256)
+    num_classes: int = 48       # phone states (paper: 1904)
+    num_sru_layers: int = 4     # Bi-SRU layers (paper: 4)
+
+    @property
+    def bi_out(self) -> int:
+        """Output width of a Bi-SRU layer (both directions)."""
+        return 2 * self.hidden
+
+    def layer_dims(self):
+        """(name, m, n) per quantizable layer, matching Table 4 layout.
+
+        m is the MxV input size, n the output size. For a Bi-SRU layer the
+        MxV weight per direction is (m, 3n); projection and FC are (m, n).
+        """
+        dims = []
+        m = self.feat_dim
+        for i in range(self.num_sru_layers):
+            dims.append((f"L{i}", m, self.hidden))
+            if i < self.num_sru_layers - 1:
+                dims.append((f"Pr{i+1}", self.bi_out, self.proj))
+                m = self.proj
+        dims.append(("FC", self.bi_out, self.num_classes))
+        # Reorder to the canonical QUANT_LAYERS order (already in order).
+        return dims
+
+
+@dataclass
+class DataConfig:
+    """Synthetic phone-state corpus (TIMIT substitute; DESIGN.md §3)."""
+
+    seed: int = 1234
+    num_classes: int = 48
+    feat_dim: int = 23
+    seq_len: int = 64           # frames per sequence
+    batch: int = 32             # lowered batch size (shape-specialized)
+    train_seqs: int = 1024
+    val_subsets: int = 4        # paper §4.2: max error over 4 val subsets
+    val_seqs_per_subset: int = 32
+    test_seqs: int = 128
+    # Generator knobs: prototypes confined to a low-rank subspace create
+    # class confusability; noise adds irreducible error.
+    proto_rank: int = 8
+    proto_scale: float = 0.9
+    noise_std: float = 1.5
+    drift_std: float = 0.15     # slowly-varying channel drift per sequence
+    self_loop: float = 0.82     # Markov self-transition (phone durations)
+
+
+@dataclass
+class TrainConfig:
+    seed: int = 7
+    steps: int = 700
+    lr: float = 2e-3
+    weight_decay: float = 1e-5
+    clip_norm: float = 5.0
+    # Beacon retraining (binary-connect) — executed from Rust via the AOT
+    # train-step; lr here is only the default baked into the manifest.
+    beacon_lr: float = 1e-3
+
+
+@dataclass
+class PipelineConfig:
+    model: ModelConfig = field(default_factory=ModelConfig)
+    data: DataConfig = field(default_factory=DataConfig)
+    train: TrainConfig = field(default_factory=TrainConfig)
+    # Number of validation sequences used to calibrate activation ranges
+    # (paper §4.1: "70 sequences were enough").
+    calib_seqs: int = 70
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=2)
+
+    @staticmethod
+    def from_json(text: str) -> "PipelineConfig":
+        raw = json.loads(text)
+        return PipelineConfig(
+            model=ModelConfig(**raw.get("model", {})),
+            data=DataConfig(**raw.get("data", {})),
+            train=TrainConfig(**raw.get("train", {})),
+            calib_seqs=raw.get("calib_seqs", 70),
+        )
+
+
+def paper_preset() -> PipelineConfig:
+    """The published dimensions (5.5M params). Slow on CPU; for reference."""
+    cfg = PipelineConfig()
+    cfg.model = ModelConfig(feat_dim=23, hidden=550, proj=256, num_classes=1904)
+    cfg.data.num_classes = 1904
+    return cfg
+
+
+def tiny_preset() -> PipelineConfig:
+    """Small config for unit tests."""
+    cfg = PipelineConfig()
+    cfg.model = ModelConfig(feat_dim=5, hidden=8, proj=6, num_classes=7, num_sru_layers=2)
+    cfg.data = DataConfig(
+        num_classes=7, feat_dim=5, seq_len=12, batch=4, train_seqs=64,
+        val_subsets=2, val_seqs_per_subset=4, test_seqs=8,
+        # Keep the tiny task learnable: less noise, stronger prototypes.
+        noise_std=0.6, proto_scale=1.3, proto_rank=5,
+    )
+    cfg.train = TrainConfig(steps=60)
+    cfg.calib_seqs = 8
+    return cfg

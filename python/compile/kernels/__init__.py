@@ -1,0 +1,7 @@
+"""L1 Pallas kernels and their pure-jnp oracle (ref.py)."""
+
+from .fake_quant import fake_quant
+from .qmatmul import qmatmul
+from .sru_scan import sru_scan
+
+__all__ = ["fake_quant", "qmatmul", "sru_scan"]

@@ -1,0 +1,66 @@
+"""Pallas fake-quantization kernel (L1).
+
+Elementwise ``clip(round(x/Δ), qmin, qmax) * Δ`` with runtime parameters,
+blocked over a 2-D grid. The quant params arrive as a length-4 f32 vector
+``[delta, qmin, qmax, enabled]`` so precision is a *runtime* input and one
+AOT executable serves every genome the Rust search proposes.
+
+interpret=True everywhere: CPU PJRT cannot execute Mosaic custom-calls
+(see DESIGN.md §Hardware-Adaptation). Block shapes are still chosen
+TPU-shaped: (8k, 128)-aligned tiles that fit VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile: 256x256 f32 = 256 KiB/operand — comfortably inside a 16 MiB
+# VMEM budget with double buffering (in + out + params).
+DEFAULT_BLOCK = (256, 256)
+
+
+def _fq_block(x, p):
+    delta, qmin, qmax, enabled = p[0], p[1], p[2], p[3]
+    q = jnp.clip(jnp.round(x / delta), qmin, qmax) * delta
+    return enabled * q + (1.0 - enabled) * x
+
+
+def _fq_kernel(x_ref, p_ref, o_ref):
+    o_ref[...] = _fq_block(x_ref[...], p_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def fake_quant(x, params, block=DEFAULT_BLOCK):
+    """Fake-quantize ``x`` (any rank) with params ``[Δ, qmin, qmax, enabled]``.
+
+    Rank != 2 inputs are flattened to (rows, cols) for blocking and restored
+    afterwards; semantics are purely elementwise.
+    """
+    orig_shape = x.shape
+    if x.ndim == 0:
+        x2 = x.reshape(1, 1)
+    elif x.ndim == 1:
+        x2 = x.reshape(1, -1)
+    else:
+        x2 = x.reshape(-1, x.shape[-1])
+
+    m, n = x2.shape
+    bm, bn = min(block[0], m), min(block[1], n)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn))
+
+    out = pl.pallas_call(
+        _fq_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((4,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x2.dtype),
+        interpret=True,
+    )(x2, params)
+    return out.reshape(orig_shape)

@@ -1,0 +1,86 @@
+"""Pallas fake-quantized blocked matmul kernel (L1) — the MxV hot-spot.
+
+The paper's compute hot-spot is the SRU/projection/FC matrix-to-vector
+multiplications with per-layer precision (Table 4: >99% of all ops). On
+Bitfusion the low-precision speedup comes from composing bit-bricks per
+operand; the TPU-shaped analog implemented here is: fake-quantize the
+activation tile and the weight tile *as they are loaded into VMEM*, then
+feed the MXU-friendly f32 dot, accumulating across the K grid dimension
+(HBM->VMEM schedule expressed with BlockSpec instead of threadblocks —
+DESIGN.md §Hardware-Adaptation).
+
+Quant params are runtime length-4 vectors ``[delta, qmin, qmax, enabled]``
+for activations (``a_params``) and weights (``w_params``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fake_quant import _fq_block
+
+# MXU-shaped tiles: multiples of (8, 128) for f32. bm=512 amortizes grid
+# overhead (each x-tile 512x128 = 256 KiB; x + w + acc ~= 448 KiB, well
+# inside VMEM with double buffering). Measured on the default model's
+# (2048,128)@(128,192) MxV: bm 128 -> 512 cuts interpret-mode wallclock
+# 1.9x with identical numerics (EXPERIMENTS.md §Perf L1).
+DEFAULT_BM = 512
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _qmm_kernel(x_ref, w_ref, ap_ref, wp_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xq = _fq_block(x_ref[...], ap_ref[...])
+    wq = _fq_block(w_ref[...], wp_ref[...])
+    o_ref[...] += jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+
+
+def _pad_to(a, m0, m1):
+    p0 = (-a.shape[0]) % m0
+    p1 = (-a.shape[1]) % m1
+    if p0 or p1:
+        a = jnp.pad(a, ((0, p0), (0, p1)))
+    return a
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def qmatmul(x, w, a_params, w_params, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """``fake_quant(x) @ fake_quant(w)`` with f32 accumulation.
+
+    x: (M, K), w: (K, N). Inputs are zero-padded to block multiples (zero
+    is a fixed point of symmetric fake-quant, so padding never perturbs the
+    accumulation) and the result sliced back to (M, N).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {x.shape} @ {w.shape}"
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+
+    xp = _pad_to(x, bm, bk)
+    wp = _pad_to(w, bk, bn)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    out = pl.pallas_call(
+        _qmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+            pl.BlockSpec((4,), lambda i, j, l: (0,)),
+            pl.BlockSpec((4,), lambda i, j, l: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, a_params, w_params)
+    return out[:m, :n]

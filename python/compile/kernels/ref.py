@@ -1,0 +1,88 @@
+"""Pure-jnp reference implementations — the correctness oracle.
+
+Every Pallas kernel in this package has its semantics defined here; pytest
+asserts allclose between kernel and reference across hypothesis-driven
+shape/value sweeps. The L2 training graph also uses these (wrapped with a
+straight-through estimator) because Pallas interpret-mode kernels are not
+differentiated through.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fake_quant_ref(x, delta, qmin, qmax, enabled=1.0):
+    """Linear fake quantization: clip(round(x/Δ), qmin, qmax) * Δ.
+
+    ``enabled`` in {0.0, 1.0} selects pass-through (float baseline) without
+    changing the traced graph shape — precision is a *runtime* input so one
+    AOT executable serves every genome (DESIGN.md §2).
+    """
+    q = jnp.clip(jnp.round(x / delta), qmin, qmax) * delta
+    return enabled * q + (1.0 - enabled) * x
+
+
+def quant_params_for_bits(bits: int, clip: float):
+    """(delta, qmin, qmax, enabled) for symmetric ``bits``-bit quantization.
+
+    Matches the paper's ranges (§4.1): [-128,127] for 8b, [-8,7] for 4b,
+    [-2,1] for 2b, and 16-bit fixed point as a 2^15-level grid over the
+    clip range. bits==32 disables quantization (float baseline).
+    """
+    if bits >= 32:
+        return 1.0, -1.0, 1.0, 0.0
+    qmax = 2.0 ** (bits - 1) - 1.0
+    qmin = -(2.0 ** (bits - 1))
+    delta = clip / (2.0 ** (bits - 1))
+    return delta, qmin, qmax, 1.0
+
+
+def matmul_ref(x, w):
+    """Plain f32 matmul, the accumulation semantics qmatmul must match."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def qmatmul_ref(x, w, a_params, w_params):
+    """Fake-quantized matmul: quantize activations and weights, then dot.
+
+    ``a_params``/``w_params`` are (delta, qmin, qmax, enabled) 4-vectors.
+    This is the MxV hot-spot of the paper's SRU model: on Bitfusion/SiLago
+    the low-precision benefit is claimed by the analytical hardware model;
+    numerically we simulate with quantize->dequantize in f32 (DESIGN.md §3).
+    """
+    xq = fake_quant_ref(x, a_params[0], a_params[1], a_params[2], a_params[3])
+    wq = fake_quant_ref(w, w_params[0], w_params[1], w_params[2], w_params[3])
+    return matmul_ref(xq, wq)
+
+
+def sru_scan_ref(u, v_f, v_r, b_f, b_r, c0):
+    """SRU elementwise recurrence (Lei et al. 2018, paper Eq. 2).
+
+    u:  (B, T, 3n) pre-computed input projections [z | f | r] = W x_t
+    v_f, v_r, b_f, b_r: (n,) recurrent vectors and biases (the parameters
+        the paper keeps in 16-bit fixed point, excluded from int quant)
+    c0: (B, n) initial state.
+
+    Returns (h, cT): h (B, T, n), cT (B, n).
+
+        f_t = sigmoid(u_f + v_f * c_{t-1} + b_f)
+        r_t = sigmoid(u_r + v_r * c_{t-1} + b_r)
+        c_t = f_t * c_{t-1} + (1 - f_t) * u_z
+        h_t = r_t * tanh(c_t) + (1 - r_t) * u_z      (highway on u_z)
+    """
+    n = v_f.shape[0]
+
+    def step(c, u_t):
+        u_z = u_t[:, :n]
+        u_f = u_t[:, n : 2 * n]
+        u_r = u_t[:, 2 * n :]
+        f = jax.nn.sigmoid(u_f + v_f * c + b_f)
+        r = jax.nn.sigmoid(u_r + v_r * c + b_r)
+        c_new = f * c + (1.0 - f) * u_z
+        h = r * jnp.tanh(c_new) + (1.0 - r) * u_z
+        return c_new, h
+
+    c_t, h_seq = jax.lax.scan(step, c0, jnp.swapaxes(u, 0, 1))
+    return jnp.swapaxes(h_seq, 0, 1), c_t

@@ -1,0 +1,58 @@
+"""Load an artifact bundle back into Python (tests, analysis notebooks).
+
+The Rust coordinator is the production consumer of artifacts/; this module
+exists so pytest can cross-check the bundle against the live model and so
+experiments can be reproduced from a frozen bundle without retraining.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Tuple
+
+import numpy as np
+
+from .config import PipelineConfig
+
+
+def load_manifest(art_dir: str) -> dict:
+    with open(os.path.join(art_dir, "manifest.json")) as f:
+        return json.load(f)
+
+
+def load_params(art_dir: str, manifest: dict | None = None) -> Dict:
+    """Rebuild the nested parameter pytree from weights.bin."""
+    manifest = manifest or load_manifest(art_dir)
+    blob = open(os.path.join(art_dir, "weights.bin"), "rb").read()
+    params: Dict = {}
+    for t in manifest["weights"]["tensors"]:
+        arr = np.frombuffer(
+            blob, dtype=np.float32, count=t["bytes"] // 4, offset=t["offset"]
+        ).reshape(t["shape"])
+        layer, key = t["name"].split("/")
+        params.setdefault(layer, {})[key] = arr
+    return params
+
+
+def load_calibration(art_dir: str) -> dict:
+    with open(os.path.join(art_dir, "calibration.json")) as f:
+        return json.load(f)
+
+
+def load_config(art_dir: str, manifest: dict | None = None) -> PipelineConfig:
+    manifest = manifest or load_manifest(art_dir)
+    return PipelineConfig.from_json(json.dumps(manifest["config"]))
+
+
+def load_split(art_dir: str, which: str, manifest: dict | None = None
+               ) -> Tuple[np.ndarray, np.ndarray]:
+    """Return (x, y) for 'train'/'val'/'test'. val keeps its subset axis."""
+    manifest = manifest or load_manifest(art_dir)
+    meta = manifest["data"][which]
+    shape = meta["shape"]
+    x = np.fromfile(os.path.join(art_dir, meta["x"]), dtype=np.float32)
+    y = np.fromfile(os.path.join(art_dir, meta["y"]), dtype=np.int32)
+    x = x.reshape(shape)
+    y = y.reshape(shape[:-1])
+    return x, y

@@ -1,0 +1,286 @@
+"""L2: the Bi-SRU speech-recognition model (paper Fig. 6a, Table 4).
+
+Topology: 4 bidirectional SRU layers (L0..L3) with 3 projection layers
+(Pr1..Pr3) in between, a final FC layer to phone-state logits, softmax
+cross-entropy per frame. The 8 named layers L0 Pr1 L1 Pr2 L2 Pr3 L3 FC are
+the quantizable units — each has a weight precision and an activation
+precision, exactly the 16-variable genome of the paper's experiment 1/3
+(SiLago ties W=A, giving 8 variables).
+
+Quantization enters the graph ONLY through runtime tensors wq/aq of shape
+(8, 4) holding per-layer ``[delta, qmin, qmax, enabled]`` — the Rust
+coordinator resolves the genome (bits per layer) against the calibration
+tables and feeds these, so a single AOT executable evaluates any candidate
+solution (DESIGN.md §2).
+
+Per the paper §4.1 only MxV weights/activations are int-quantized; SRU
+recurrent vectors and biases are 16-bit fixed point — they are snapped to
+the fixed-point grid once, in the weights artifact (quantize.fixed16_snap),
+not per-genome.
+
+Two forward paths, numerically identical (pytest-enforced):
+  * use_pallas=True  — L1 kernels, used for the AOT inference artifact;
+  * use_pallas=False — ref.py ops with a straight-through estimator,
+    differentiable, used for the AOT binary-connect train step.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig, quant_layer_names
+from .kernels import fake_quant, qmatmul, sru_scan
+from .kernels.ref import fake_quant_ref, sru_scan_ref
+
+
+# ---------------------------------------------------------------------------
+# Straight-through estimator for the train path (binary-connect, paper §4.3)
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def fq_ste(x, p):
+    return fake_quant_ref(x, p[0], p[1], p[2], p[3])
+
+
+def _fq_ste_fwd(x, p):
+    return fq_ste(x, p), (x, p)
+
+
+def _fq_ste_bwd(res, g):
+    x, p = res
+    # Pass gradients through inside the clip range, zero outside; when
+    # quantization is disabled (enabled==0) pass everything through.
+    scaled = x / p[0]
+    inside = jnp.logical_and(scaled >= p[1], scaled <= p[2])
+    mask = jnp.where(p[3] > 0.5, inside.astype(g.dtype), jnp.ones_like(g))
+    return g * mask, jnp.zeros_like(p)
+
+
+fq_ste.defvjp(_fq_ste_fwd, _fq_ste_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+SRU_AUX = ["vf_f", "vr_f", "bf_f", "br_f", "vf_b", "vr_b", "bf_b", "br_b"]
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict:
+    """Initialize the parameter pytree (plain nested dict of f32 arrays)."""
+    rng = np.random.default_rng(seed)
+
+    def glorot(shape):
+        fan_in, fan_out = shape[0], shape[1]
+        s = np.sqrt(6.0 / (fan_in + fan_out))
+        return rng.uniform(-s, s, size=shape).astype(np.float32)
+
+    params: Dict = {}
+    for name, m, n in cfg.layer_dims():
+        if name.startswith("L"):
+            layer = {
+                "w_fwd": glorot((m, 3 * n)),
+                "w_bwd": glorot((m, 3 * n)),
+            }
+            for aux in SRU_AUX:
+                if aux.startswith("b"):
+                    # Forget-gate bias slightly positive helps retention.
+                    init = np.full(n, 0.5 if "f" in aux[:2] else 0.0, np.float32)
+                else:
+                    init = rng.uniform(-0.5, 0.5, size=n).astype(np.float32)
+                layer[aux] = init
+            params[name] = layer
+        elif name.startswith("Pr"):
+            params[name] = {"w": glorot((m, n))}
+        else:  # FC
+            params[name] = {"w": glorot((m, n)), "b": np.zeros(n, np.float32)}
+    return params
+
+
+def param_order(cfg: ModelConfig) -> List[Tuple[str, str]]:
+    """Canonical (layer, tensor) flatten order shared with the Rust side.
+
+    Matches jax.tree flatten order (dicts flatten in sorted-key order), and
+    is written into the artifact manifest so Rust never guesses.
+    """
+    order = []
+    names = sorted(n for n, _, _ in cfg.layer_dims())
+    for name in names:
+        if name.startswith("L") and name != "FC":
+            keys = sorted(["w_fwd", "w_bwd"] + SRU_AUX)
+        elif name.startswith("Pr"):
+            keys = ["w"]
+        else:
+            keys = ["b", "w"]
+        for k in keys:
+            order.append((name, k))
+    return order
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _mm(x2, w, a_p, w_p, use_pallas):
+    if use_pallas:
+        return qmatmul(x2, w, a_p, w_p)
+    return jnp.dot(fq_ste(x2, a_p), fq_ste(w, w_p),
+                   preferred_element_type=jnp.float32)
+
+
+def _sru_dir(u, layer, suffix, use_pallas):
+    b, t, n3 = u.shape
+    n = n3 // 3
+    c0 = jnp.zeros((b, n), jnp.float32)
+    args = (layer[f"vf_{suffix}"], layer[f"vr_{suffix}"],
+            layer[f"bf_{suffix}"], layer[f"br_{suffix}"], c0)
+    if use_pallas:
+        h, _ = sru_scan(u.reshape(b, t, 3, n), *args)
+    else:
+        h, _ = sru_scan_ref(u, *args)
+    return h
+
+
+def forward(params, x, wq, aq, cfg: ModelConfig, use_pallas: bool = True,
+            requant16: Dict[str, float] | None = None):
+    """Compute per-frame logits.
+
+    x: (B, T, feat). wq/aq: (8, 4) runtime quant params per QUANT_LAYERS
+    index. requant16: optional {layer_name: delta16} — the paper's §4.1
+    "re-quantization to 16-bit fixed point" of intermediate activations,
+    applied after each quantized layer with calibration-derived static
+    deltas (baked as constants at lowering time).
+    """
+    b, t, _ = x.shape
+    h = x
+    for idx, name in enumerate(quant_layer_names(cfg)):
+        layer = params[name]
+        a_p, w_p = aq[idx], wq[idx]
+        h2 = h.reshape(b * t, h.shape[-1])
+        if name.startswith("L"):
+            u_f = _mm(h2, layer["w_fwd"], a_p, w_p, use_pallas).reshape(b, t, -1)
+            # Backward direction: reverse time before and after.
+            u_b = _mm(h2, layer["w_bwd"], a_p, w_p, use_pallas).reshape(b, t, -1)
+            h_f = _sru_dir(u_f, layer, "f", use_pallas)
+            h_b = _sru_dir(u_b[:, ::-1], layer, "b", use_pallas)[:, ::-1]
+            h = jnp.concatenate([h_f, h_b], axis=-1)
+        elif name.startswith("Pr"):
+            h = _mm(h2, layer["w"], a_p, w_p, use_pallas).reshape(b, t, -1)
+        else:  # FC
+            h = (_mm(h2, layer["w"], a_p, w_p, use_pallas)
+                 + layer["b"]).reshape(b, t, -1)
+        if requant16 and name in requant16 and name != "FC":
+            d16 = requant16[name]
+            p16 = jnp.array([d16, -32768.0, 32767.0, 1.0], jnp.float32)
+            h = (fake_quant(h, p16) if use_pallas
+                 else fake_quant_ref(h, p16[0], p16[1], p16[2], p16[3]))
+    return h  # logits (B, T, K)
+
+
+def no_quant_qparams(n_layers: int = 8) -> jnp.ndarray:
+    """(n_layers,4) quant params that disable quantization (float baseline)."""
+    row = jnp.array([1.0, -1.0, 1.0, 0.0], jnp.float32)
+    return jnp.tile(row, (n_layers, 1))
+
+
+# ---------------------------------------------------------------------------
+# Loss / metrics / train step
+# ---------------------------------------------------------------------------
+
+def loss_and_err(logits, labels):
+    """(mean CE loss, error count, frame count) over all frames."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot_ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = -jnp.mean(onehot_ll)
+    pred = jnp.argmax(logits, axis=-1)
+    err = jnp.sum((pred != labels).astype(jnp.float32))
+    total = jnp.float32(labels.size)
+    return loss, err, total
+
+
+def infer_fn(params, wq, aq, x, labels, cfg: ModelConfig,
+             requant16=None, use_pallas=True):
+    """The AOT inference entry: returns (err_count, total, loss)."""
+    logits = forward(params, x, wq, aq, cfg, use_pallas=use_pallas,
+                     requant16=requant16)
+    loss, err, total = loss_and_err(logits, labels)
+    return err, total, loss
+
+
+def logits_fn(params, wq, aq, x, cfg: ModelConfig, requant16=None,
+              use_pallas=True):
+    """AOT entry returning raw logits (examples / debugging)."""
+    return forward(params, x, wq, aq, cfg, use_pallas=use_pallas,
+                   requant16=requant16)
+
+
+def collect_activations(params, x, cfg: ModelConfig, max_samples: int = 40000,
+                        seed: int = 0):
+    """Run the float forward capturing (a) the input of every MxV (for
+    activation clip calibration) and (b) the output of every layer (for the
+    static 16-bit re-quantization deltas). Paper §4.1: expected ranges are
+    collected from ~70 validation sequences through the float model.
+
+    Returns (mxv_inputs, layer_outputs): dicts name -> 1-D sample array.
+    """
+    rng = np.random.default_rng(seed)
+    n_layers = len(quant_layer_names(cfg))
+    wq = no_quant_qparams(n_layers)
+    aq = no_quant_qparams(n_layers)
+    b, t, _ = x.shape
+    mxv_inputs: Dict[str, np.ndarray] = {}
+    layer_outputs: Dict[str, np.ndarray] = {}
+
+    def sample(a):
+        flat = np.asarray(a).ravel()
+        if flat.size > max_samples:
+            flat = rng.choice(flat, size=max_samples, replace=False)
+        return flat
+
+    h = jnp.asarray(x)
+    for idx, name in enumerate(quant_layer_names(cfg)):
+        layer = params[name]
+        a_p, w_p = aq[idx], wq[idx]
+        mxv_inputs[name] = sample(h)
+        h2 = h.reshape(b * t, h.shape[-1])
+        if name.startswith("L") and name != "FC":
+            u_f = _mm(h2, layer["w_fwd"], a_p, w_p, False).reshape(b, t, -1)
+            u_b = _mm(h2, layer["w_bwd"], a_p, w_p, False).reshape(b, t, -1)
+            h_f = _sru_dir(u_f, layer, "f", False)
+            h_b = _sru_dir(u_b[:, ::-1], layer, "b", False)[:, ::-1]
+            h = jnp.concatenate([h_f, h_b], axis=-1)
+        elif name.startswith("Pr"):
+            h = _mm(h2, layer["w"], a_p, w_p, False).reshape(b, t, -1)
+        else:
+            h = (_mm(h2, layer["w"], a_p, w_p, False)
+                 + layer["b"]).reshape(b, t, -1)
+        layer_outputs[name] = sample(h)
+    return mxv_inputs, layer_outputs
+
+
+def train_step_fn(params, wq, aq, x, labels, lr, cfg: ModelConfig,
+                  clip_norm: float = 5.0):
+    """One binary-connect SGD step (paper §4.3): quantized (STE) forward and
+    backward, float master-weight update. Returns (new_params, loss).
+
+    Lowered to HLO once; the Rust beacon manager loops it to retrain a
+    beacon without Python on the search path.
+    """
+    def objective(p):
+        logits = forward(p, x, wq, aq, cfg, use_pallas=False)
+        loss, _, _ = loss_and_err(logits, labels)
+        return loss
+
+    loss, grads = jax.value_and_grad(objective)(params)
+    # Global-norm clipping.
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in leaves))
+    scale = jnp.minimum(1.0, clip_norm / (gnorm + 1e-12))
+    new_params = jax.tree_util.tree_map(lambda p, g: p - lr * scale * g,
+                                        params, grads)
+    return new_params, loss

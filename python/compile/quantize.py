@@ -1,0 +1,137 @@
+"""Quantization calibration: MMSE clipping thresholds and 16-bit fixed point.
+
+Paper §2.3/§4.1: integer quantization uses symmetric linear quantization
+with clipping; clipping thresholds are selected with the Minimum Mean
+Square Error (MMSE) method [Sung et al. 2015]. Activation thresholds are
+derived from "expected ranges" collected by running ~70 validation
+sequences through the float model.
+
+The outputs of this module become ``calibration.json`` in the artifact
+bundle: per-layer, per-bitwidth weight clips and activation clips, plus the
+static 16-bit re-quantization deltas. The Rust side resolves a genome
+against these tables to produce the runtime (Δ, qmin, qmax, enabled) rows.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, List
+
+import numpy as np
+
+from .config import QUANT_LAYERS, SUPPORTED_BITS
+
+
+def fake_quant_np(x: np.ndarray, clip: float, bits: int) -> np.ndarray:
+    """NumPy mirror of kernels.ref.fake_quant_ref for calibration search."""
+    if bits >= 32:
+        return x
+    levels = 2.0 ** (bits - 1)
+    delta = clip / levels
+    return np.clip(np.round(x / delta), -levels, levels - 1.0) * delta
+
+
+def mmse_clip(x: np.ndarray, bits: int, n_grid: int = 60) -> float:
+    """Grid-search the clipping threshold minimizing quantization MSE.
+
+    Searches clip in (0, max|x|]; low bit-widths favour clips well inside
+    the tail (the paper's outlier observation, §2.3).
+    """
+    flat = np.abs(np.asarray(x, dtype=np.float64)).ravel()
+    amax = float(flat.max()) if flat.size else 1.0
+    if amax == 0.0:
+        return 1e-8
+    best_clip, best_mse = amax, np.inf
+    xs = np.asarray(x, dtype=np.float64).ravel()
+    if xs.size > 200_000:  # subsample for speed; MMSE is statistical anyway
+        rng = np.random.default_rng(0)
+        xs = rng.choice(xs, size=200_000, replace=False)
+    for frac in np.linspace(1.0 / n_grid, 1.0, n_grid):
+        clip = amax * frac
+        err = xs - fake_quant_np(xs, clip, bits)
+        mse = float(np.mean(err * err))
+        if mse < best_mse:
+            best_mse, best_clip = mse, clip
+    return float(best_clip)
+
+
+def fixed16_delta(x: np.ndarray) -> float:
+    """Δ for 16-bit fixed point covering the range of x (paper §4.1).
+
+    The integer part gets the minimum bits needed for max|x|; one sign bit;
+    the rest is fraction: Δ = 2^-(15 - int_bits).
+    """
+    amax = float(np.max(np.abs(x))) if np.asarray(x).size else 1.0
+    int_bits = max(0, int(np.ceil(np.log2(max(amax, 1e-12) + 1e-12))))
+    int_bits = min(int_bits, 15)
+    return 2.0 ** -(15 - int_bits)
+
+
+def fixed16_snap(x: np.ndarray) -> np.ndarray:
+    """Snap values onto their 16-bit fixed-point grid (recurrent vectors,
+    biases — the parameters the paper always keeps at 16-bit)."""
+    d = fixed16_delta(x)
+    return (np.clip(np.round(np.asarray(x, np.float64) / d), -32768, 32767) * d
+            ).astype(np.float32)
+
+
+def weight_clip_table(weights_per_layer: Dict[str, List[np.ndarray]]
+                      ) -> Dict[str, Dict[str, float]]:
+    """MMSE clip per (layer, bits) over the layer's pooled MxV matrices.
+
+    Bi-SRU layers pool both direction matrices — the genome assigns one
+    precision per named layer (paper Table 5 layout).
+    """
+    table: Dict[str, Dict[str, float]] = {}
+    for name, mats in weights_per_layer.items():
+        pooled = np.concatenate([np.asarray(m).ravel() for m in mats])
+        table[name] = {}
+        for bits in SUPPORTED_BITS:
+            if bits == 16:
+                # 16-bit fixed point: clip at the observed max (lossless
+                # range), delta from the fixed-point grid.
+                amax = float(np.max(np.abs(pooled)))
+                table[name][str(bits)] = amax if amax > 0 else 1e-8
+            else:
+                table[name][str(bits)] = mmse_clip(pooled, bits)
+    return table
+
+
+def activation_clip_table(acts_per_layer: Dict[str, np.ndarray]
+                          ) -> Dict[str, Dict[str, float]]:
+    """Activation clips from collected samples (paper: expected ranges from
+    ~70 validation sequences; we apply MMSE on the pooled samples for int
+    bits and the median per-sequence max for 16-bit)."""
+    table: Dict[str, Dict[str, float]] = {}
+    for name, samples in acts_per_layer.items():
+        pooled = np.asarray(samples).ravel()
+        table[name] = {}
+        for bits in SUPPORTED_BITS:
+            if bits == 16:
+                table[name][str(bits)] = float(np.max(np.abs(pooled)) or 1e-8)
+            else:
+                table[name][str(bits)] = mmse_clip(pooled, bits)
+    return table
+
+
+def qparams_row(clip: float, bits: int) -> List[float]:
+    """[delta, qmin, qmax, enabled] — mirrors quant::resolve on the Rust
+    side; kept here for python-side tests and the calibration artifact."""
+    if bits >= 32:
+        return [1.0, -1.0, 1.0, 0.0]
+    levels = 2.0 ** (bits - 1)
+    return [clip / levels, -levels, levels - 1.0, 1.0]
+
+
+def genome_qparams(genome_w: Iterable[int], genome_a: Iterable[int],
+                   w_clips: Dict[str, Dict[str, float]],
+                   a_clips: Dict[str, Dict[str, float]],
+                   layer_names: List[str] = None) -> tuple:
+    """Resolve (W-bits, A-bits) genomes to (n_layers,4) qparam arrays."""
+    names = layer_names if layer_names is not None else QUANT_LAYERS
+    wq, aq = [], []
+    for idx, name in enumerate(names):
+        wb = list(genome_w)[idx]
+        ab = list(genome_a)[idx]
+        wq.append(qparams_row(w_clips[name][str(wb)] if wb < 32 else 1.0, wb))
+        aq.append(qparams_row(a_clips[name][str(ab)] if ab < 32 else 1.0, ab))
+    return (np.asarray(wq, np.float32), np.asarray(aq, np.float32))

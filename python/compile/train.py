@@ -1,0 +1,112 @@
+"""Build-time baseline training (float, Adam) — produces the pre-trained
+parameters that post-training quantization starts from.
+
+This replaces the paper's PyTorch-Kaldi 24-epoch TIMIT training with a JAX
+loop over the synthetic corpus (DESIGN.md §3). Runs once inside
+``make artifacts``; never on the search path.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import PipelineConfig, quant_layer_names
+from .data import batches
+from .model import forward, init_params, loss_and_err, no_quant_qparams
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.float32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8,
+                weight_decay=0.0):
+    t = state["t"] + 1.0
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                               state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                               state["v"], grads)
+    mhat_scale = 1.0 / (1.0 - b1 ** t)
+    vhat_scale = 1.0 / (1.0 - b2 ** t)
+
+    def upd(p, m_, v_):
+        step = lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps)
+        return p - step - lr * weight_decay * p
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def train_baseline(cfg: PipelineConfig, splits, log_every: int = 100,
+                   verbose: bool = True) -> Tuple[Dict, list]:
+    """Train the float model; returns (params, loss_history)."""
+    mcfg = cfg.model
+    params = init_params(mcfg, seed=cfg.train.seed)
+    opt = adam_init(params)
+    n_layers = len(quant_layer_names(mcfg))
+    wq = no_quant_qparams(n_layers)
+    aq = no_quant_qparams(n_layers)
+    clip_norm = cfg.train.clip_norm
+
+    @jax.jit
+    def step(params, opt, x, y):
+        def objective(p):
+            logits = forward(p, x, wq, aq, mcfg, use_pallas=False)
+            loss, err, total = loss_and_err(logits, y)
+            return loss, (err, total)
+
+        (loss, (err, total)), grads = jax.value_and_grad(
+            objective, has_aux=True)(params)
+        leaves = jax.tree_util.tree_leaves(grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in leaves))
+        scale = jnp.minimum(1.0, clip_norm / (gnorm + 1e-12))
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        params, opt = adam_update(params, grads, opt, cfg.train.lr,
+                                  weight_decay=cfg.train.weight_decay)
+        return params, opt, loss, err / total
+
+    x_tr, y_tr = splits["train"]
+    it = batches(x_tr, y_tr, cfg.data.batch, seed=cfg.train.seed + 1)
+    history = []
+    for i in range(cfg.train.steps):
+        x, y = next(it)
+        params, opt, loss, err = step(params, opt, x, y)
+        if i % log_every == 0 or i == cfg.train.steps - 1:
+            l, e = float(loss), float(err)
+            history.append({"step": i, "loss": l, "train_err": e})
+            if verbose:
+                print(f"  [train] step {i:4d} loss {l:.4f} err {e:.3f}")
+    return jax.device_get(params), history
+
+
+def evaluate(params, x, y, cfg: PipelineConfig, wq=None, aq=None,
+             requant16=None) -> float:
+    """Float/quantized error rate over a full split (batched)."""
+    mcfg = cfg.model
+    n_layers = len(quant_layer_names(mcfg))
+    if wq is None:
+        wq = no_quant_qparams(n_layers)
+    if aq is None:
+        aq = no_quant_qparams(n_layers)
+
+    @jax.jit
+    def run(params, xb, yb):
+        logits = forward(params, xb, wq, aq, mcfg, use_pallas=False,
+                         requant16=requant16)
+        _, err, total = loss_and_err(logits, yb)
+        return err, total
+
+    b = cfg.data.batch
+    assert x.shape[0] % b == 0, "splits are sized as batch multiples"
+    err_sum, tot_sum = 0.0, 0.0
+    for i in range(0, x.shape[0], b):
+        err, tot = run(params, x[i:i + b], y[i:i + b])
+        err_sum += float(err)
+        tot_sum += float(tot)
+    return err_sum / max(tot_sum, 1.0)

@@ -1,0 +1,24 @@
+"""Shared pytest fixtures: tiny configs and hypothesis profiles."""
+
+import hypothesis
+import numpy as np
+import pytest
+
+from compile.config import tiny_preset
+
+# Pallas interpret-mode is slow; keep example counts modest but meaningful.
+hypothesis.settings.register_profile(
+    "mohaq", max_examples=20, deadline=None,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow],
+)
+hypothesis.settings.load_profile("mohaq")
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    return tiny_preset()
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,101 @@
+"""End-to-end AOT pipeline on the tiny preset: artifacts complete and
+self-consistent, HLO text loadable, weights round-trip."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from compile.load import load_calibration, load_manifest, load_params, load_split
+
+ART = "/tmp/mohaq_test_artifacts"
+
+
+@pytest.fixture(scope="module")
+def tiny_artifacts():
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", ART, "--preset", "tiny"],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600,
+    )
+    return ART
+
+
+def test_all_files_emitted(tiny_artifacts):
+    for f in [
+        "manifest.json", "calibration.json", "weights.bin",
+        "infer.hlo.txt", "train_step.hlo.txt", "logits.hlo.txt",
+        "train_x.bin", "train_y.bin", "val_x.bin", "val_y.bin",
+        "test_x.bin", "test_y.bin",
+    ]:
+        assert os.path.exists(os.path.join(tiny_artifacts, f)), f
+
+
+def test_manifest_consistency(tiny_artifacts):
+    man = load_manifest(tiny_artifacts)
+    blob_size = os.path.getsize(os.path.join(tiny_artifacts, "weights.bin"))
+    total = sum(t["bytes"] for t in man["weights"]["tensors"])
+    assert total == blob_size
+    # Input lists: params + wq/aq/x(/labels)(/lr).
+    n_tensors = len(man["weights"]["tensors"])
+    assert len(man["hlo"]["infer"]["inputs"]) == n_tensors + 4
+    assert len(man["hlo"]["train_step"]["inputs"]) == n_tensors + 5
+    assert len(man["hlo"]["train_step"]["outputs"]) == n_tensors + 1
+    # Quant layers match layer dims.
+    assert man["quant_layers"] == [d["name"] for d in man["layer_dims"]]
+
+
+def test_hlo_text_is_hlo(tiny_artifacts):
+    for f in ["infer.hlo.txt", "train_step.hlo.txt", "logits.hlo.txt"]:
+        text = open(os.path.join(tiny_artifacts, f)).read()
+        assert text.startswith("HloModule"), f
+        assert "ENTRY" in text
+
+
+def test_weights_roundtrip_shapes(tiny_artifacts):
+    man = load_manifest(tiny_artifacts)
+    params = load_params(tiny_artifacts, man)
+    for t in man["weights"]["tensors"]:
+        layer, key = t["name"].split("/")
+        assert list(params[layer][key].shape) == t["shape"]
+
+
+def test_aux_params_are_fixed16_snapped(tiny_artifacts):
+    from compile.quantize import fixed16_snap
+    params = load_params(tiny_artifacts)
+    for layer, tensors in params.items():
+        for key, val in tensors.items():
+            if not key.startswith("w"):
+                np.testing.assert_array_equal(fixed16_snap(val), val,
+                                              err_msg=f"{layer}/{key}")
+
+
+def test_calibration_covers_all_layers_bits(tiny_artifacts):
+    man = load_manifest(tiny_artifacts)
+    calib = load_calibration(tiny_artifacts)
+    for name in man["quant_layers"]:
+        for bits in ["2", "4", "8", "16"]:
+            assert calib["w_clips"][name][bits] > 0
+            assert calib["a_clips"][name][bits] > 0
+    for name in man["quant_layers"][:-1]:
+        assert calib["requant16"][name] > 0
+
+
+def test_baseline_metrics_sane(tiny_artifacts):
+    man = load_manifest(tiny_artifacts)
+    b = man["baseline"]
+    assert 0.0 < b["val_err"] <= 1.0
+    assert 0.0 < b["test_err"] <= 1.0
+    assert len(b["val_err_subsets"]) == man["config"]["data"]["val_subsets"]
+    assert max(b["val_err_subsets"]) == b["val_err"]
+
+
+def test_data_splits_roundtrip(tiny_artifacts):
+    man = load_manifest(tiny_artifacts)
+    x, y = load_split(tiny_artifacts, "test", man)
+    assert x.shape[0] == man["config"]["data"]["test_seqs"]
+    assert y.max() < man["config"]["model"]["num_classes"]

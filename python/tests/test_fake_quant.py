@@ -1,0 +1,83 @@
+"""L1 fake-quant kernel vs pure-jnp oracle (the CORE correctness signal),
+plus algebraic properties of the quantizer itself."""
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import fake_quant
+from compile.kernels.ref import fake_quant_ref, quant_params_for_bits
+
+
+def params(bits, clip):
+    return np.array(quant_params_for_bits(bits, clip), dtype=np.float32)
+
+
+@given(
+    rows=st.integers(1, 70),
+    cols=st.integers(1, 70),
+    bits=st.sampled_from([2, 4, 8, 16]),
+    clip=st.floats(0.1, 4.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref(rows, cols, bits, clip, seed):
+    x = np.random.default_rng(seed).normal(size=(rows, cols)).astype(np.float32)
+    p = params(bits, clip)
+    out_kernel = np.asarray(fake_quant(x, p))
+    out_ref = np.asarray(fake_quant_ref(x, *p))
+    np.testing.assert_array_equal(out_kernel, out_ref)
+
+
+@given(
+    shape=st.sampled_from([(7,), (3, 5), (2, 3, 4), (2, 2, 2, 3)]),
+    bits=st.sampled_from([2, 4, 8]),
+)
+def test_kernel_handles_any_rank(shape, bits):
+    x = np.random.default_rng(1).normal(size=shape).astype(np.float32)
+    p = params(bits, 2.0)
+    out = np.asarray(fake_quant(x, p))
+    assert out.shape == shape
+    np.testing.assert_array_equal(out, np.asarray(fake_quant_ref(x, *p)))
+
+
+def test_disabled_is_identity():
+    x = np.random.default_rng(2).normal(size=(16, 16)).astype(np.float32)
+    p = params(32, 1.0)  # bits>=32 -> enabled=0
+    np.testing.assert_array_equal(np.asarray(fake_quant(x, p)), x)
+
+
+@given(bits=st.sampled_from([2, 4, 8]), clip=st.floats(0.5, 3.0))
+def test_output_on_quantization_grid(bits, clip):
+    x = np.random.default_rng(3).normal(size=(32, 8)).astype(np.float32)
+    p = params(bits, clip)
+    out = np.asarray(fake_quant(x, p))
+    delta = p[0]
+    steps = out / delta
+    np.testing.assert_allclose(steps, np.round(steps), atol=1e-5)
+    assert out.min() >= p[1] * delta - 1e-6
+    assert out.max() <= p[2] * delta + 1e-6
+
+
+@given(bits=st.sampled_from([2, 4, 8, 16]))
+def test_idempotent(bits):
+    x = np.random.default_rng(4).normal(size=(8, 8)).astype(np.float32)
+    p = params(bits, 1.5)
+    once = np.asarray(fake_quant(x, p))
+    twice = np.asarray(fake_quant(once, p))
+    np.testing.assert_array_equal(once, twice)
+
+
+def test_paper_integer_ranges():
+    """Paper §4.1: ranges are [-128,127], [-8,7], [-2,1] for 8/4/2 bits."""
+    for bits, (lo, hi) in [(8, (-128, 127)), (4, (-8, 7)), (2, (-2, 1))]:
+        _, qmin, qmax, enabled = quant_params_for_bits(bits, 1.0)
+        assert (qmin, qmax) == (lo, hi)
+        assert enabled == 1.0
+
+
+def test_custom_block_shapes():
+    x = np.random.default_rng(5).normal(size=(130, 70)).astype(np.float32)
+    p = params(4, 2.0)
+    a = np.asarray(fake_quant(x, p, block=(32, 32)))
+    b = np.asarray(fake_quant(x, p, block=(256, 256)))
+    np.testing.assert_array_equal(a, b)

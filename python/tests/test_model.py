@@ -1,0 +1,120 @@
+"""L2 model: pallas path == ref path, STE gradients, loss/err metrics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.config import quant_layer_names, tiny_preset
+from compile.model import (forward, fq_ste, init_params, loss_and_err,
+                           no_quant_qparams, param_order, train_step_fn)
+from compile.quantize import qparams_row
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_preset()
+    params = init_params(cfg.model, seed=1)
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(3, cfg.data.seq_len, cfg.model.feat_dim)).astype(np.float32)
+    y = rng.integers(0, cfg.model.num_classes, size=(3, cfg.data.seq_len)).astype(np.int32)
+    return cfg, params, x, y
+
+
+def quniform(cfg, bits, clip=1.0):
+    n = len(quant_layer_names(cfg.model))
+    return jnp.asarray([qparams_row(clip, bits)] * n, jnp.float32)
+
+
+def test_forward_shapes(setup):
+    cfg, params, x, _ = setup
+    n_layers = len(quant_layer_names(cfg.model))
+    logits = forward(params, x, no_quant_qparams(n_layers),
+                     no_quant_qparams(n_layers), cfg.model, use_pallas=False)
+    assert logits.shape == (3, cfg.data.seq_len, cfg.model.num_classes)
+
+
+def test_pallas_matches_ref_unquantized(setup):
+    cfg, params, x, _ = setup
+    n_layers = len(quant_layer_names(cfg.model))
+    wq = no_quant_qparams(n_layers)
+    aq = no_quant_qparams(n_layers)
+    a = forward(params, x, wq, aq, cfg.model, use_pallas=True)
+    b = forward(params, x, wq, aq, cfg.model, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+def test_pallas_matches_ref_quantized(setup):
+    cfg, params, x, _ = setup
+    wq = quniform(cfg, 4, 0.5)
+    aq = quniform(cfg, 8, 4.0)
+    a = forward(params, x, wq, aq, cfg.model, use_pallas=True)
+    b = forward(params, x, wq, aq, cfg.model, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+def test_pallas_matches_ref_with_requant16(setup):
+    cfg, params, x, _ = setup
+    wq = quniform(cfg, 8, 0.5)
+    aq = quniform(cfg, 8, 4.0)
+    rq = {n: 2.0 ** -10 for n in quant_layer_names(cfg.model) if n != "FC"}
+    a = forward(params, x, wq, aq, cfg.model, use_pallas=True, requant16=rq)
+    b = forward(params, x, wq, aq, cfg.model, use_pallas=False, requant16=rq)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+def test_quantization_perturbs_logits(setup):
+    cfg, params, x, _ = setup
+    n_layers = len(quant_layer_names(cfg.model))
+    clean = forward(params, x, no_quant_qparams(n_layers),
+                    no_quant_qparams(n_layers), cfg.model, use_pallas=False)
+    noisy = forward(params, x, quniform(cfg, 2, 0.5), quniform(cfg, 2, 2.0),
+                    cfg.model, use_pallas=False)
+    assert np.abs(np.asarray(clean) - np.asarray(noisy)).max() > 1e-3
+
+
+def test_ste_gradient_is_masked_passthrough():
+    p = jnp.asarray(qparams_row(1.0, 4), jnp.float32)  # delta=.125, [-8,7]
+    x = jnp.asarray([0.0, 0.05, 0.8, 2.0, -3.0])       # last two clip
+    g = jax.grad(lambda v: jnp.sum(fq_ste(v, p)))(x)
+    np.testing.assert_array_equal(np.asarray(g), [1.0, 1.0, 1.0, 0.0, 0.0])
+
+
+def test_ste_gradient_passthrough_when_disabled():
+    p = jnp.asarray(qparams_row(1.0, 32), jnp.float32)
+    x = jnp.asarray([5.0, -9.0])
+    g = jax.grad(lambda v: jnp.sum(fq_ste(v, p)))(x)
+    np.testing.assert_array_equal(np.asarray(g), [1.0, 1.0])
+
+
+def test_loss_and_err_counts():
+    logits = jnp.asarray([[[10.0, 0.0], [0.0, 10.0]]])  # (1, 2, 2)
+    labels = jnp.asarray([[0, 0]])
+    loss, err, total = loss_and_err(logits, labels)
+    assert float(total) == 2.0
+    assert float(err) == 1.0  # second frame predicted class 1
+    assert float(loss) > 0.0
+
+
+def test_train_step_reduces_loss_on_repeated_batch(setup):
+    cfg, params, x, y = setup
+    wq = quniform(cfg, 4, 0.5)
+    aq = quniform(cfg, 8, 4.0)
+    step = jax.jit(lambda p, x_, y_: train_step_fn(p, wq, aq, x_, y_, 0.05, cfg.model))
+    p = jax.tree_util.tree_map(jnp.asarray, params)
+    losses = []
+    for _ in range(8):
+        p, loss = step(p, x, y)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_param_order_matches_tree_flatten(setup):
+    cfg, params, _, _ = setup
+    order = param_order(cfg.model)
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat_names = [
+        "/".join(str(getattr(k, "key", k)) for k in path) for path, _ in leaves
+    ]
+    expect = [f"{layer}/{key}" for layer, key in order]
+    assert flat_names == expect

@@ -1,0 +1,84 @@
+"""L1 quantized-matmul kernel vs oracle: hypothesis sweeps over shapes
+(including block-boundary and non-divisible cases) and precisions."""
+
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.kernels import qmatmul
+from compile.kernels.ref import matmul_ref, qmatmul_ref, quant_params_for_bits
+
+
+def params(bits, clip):
+    return np.array(quant_params_for_bits(bits, clip), dtype=np.float32)
+
+
+@given(
+    m=st.integers(1, 80),
+    k=st.integers(1, 80),
+    n=st.integers(1, 80),
+    wb=st.sampled_from([2, 4, 8, 16]),
+    ab=st.sampled_from([2, 4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref(m, k, n, wb, ab, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    ap, wp = params(ab, 3.0), params(wb, 1.0)
+    out_k = np.asarray(qmatmul(x, w, ap, wp))
+    out_r = np.asarray(qmatmul_ref(x, w, ap, wp))
+    np.testing.assert_allclose(out_k, out_r, rtol=1e-5, atol=1e-5)
+
+
+def test_noquant_equals_plain_matmul():
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=(33, 65)).astype(np.float32)
+    w = rng.normal(size=(65, 17)).astype(np.float32)
+    p = params(32, 1.0)
+    np.testing.assert_allclose(
+        np.asarray(qmatmul(x, w, p, p)),
+        np.asarray(matmul_ref(x, w)),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+@given(
+    bm=st.sampled_from([8, 32, 128]),
+    bn=st.sampled_from([8, 32, 128]),
+    bk=st.sampled_from([8, 32, 128]),
+)
+def test_block_shape_invariance(bm, bn, bk):
+    """Accumulation across K-blocks must not change the result."""
+    rng = np.random.default_rng(11)
+    x = rng.normal(size=(50, 70)).astype(np.float32)
+    w = rng.normal(size=(70, 30)).astype(np.float32)
+    ap, wp = params(8, 3.0), params(4, 1.0)
+    out = np.asarray(qmatmul(x, w, ap, wp, bm=bm, bn=bn, bk=bk))
+    ref = np.asarray(qmatmul_ref(x, w, ap, wp))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_exact_block_multiple_shapes():
+    rng = np.random.default_rng(13)
+    x = rng.normal(size=(256, 128)).astype(np.float32)
+    w = rng.normal(size=(128, 256)).astype(np.float32)
+    ap, wp = params(8, 3.0), params(8, 1.0)
+    np.testing.assert_allclose(
+        np.asarray(qmatmul(x, w, ap, wp)),
+        np.asarray(qmatmul_ref(x, w, ap, wp)),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_quantization_actually_changes_result():
+    """Guard against the kernel silently skipping quantization."""
+    rng = np.random.default_rng(17)
+    x = rng.normal(size=(16, 16)).astype(np.float32)
+    w = rng.normal(size=(16, 16)).astype(np.float32)
+    p32 = params(32, 1.0)
+    p2 = params(2, 1.0)
+    full = np.asarray(qmatmul(x, w, p32, p32))
+    quant = np.asarray(qmatmul(x, w, p32, p2))
+    assert np.abs(full - quant).max() > 1e-3

@@ -1,0 +1,74 @@
+"""Calibration math: MMSE clips, fixed-point snapping, qparams rows."""
+
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.quantize import (activation_clip_table, fake_quant_np,
+                              fixed16_delta, fixed16_snap, genome_qparams,
+                              mmse_clip, qparams_row, weight_clip_table)
+
+
+@given(bits=st.sampled_from([2, 4, 8]), seed=st.integers(0, 1000))
+def test_mmse_clip_within_range(bits, seed):
+    x = np.random.default_rng(seed).normal(size=2000).astype(np.float32)
+    clip = mmse_clip(x, bits)
+    assert 0 < clip <= np.abs(x).max() + 1e-9
+
+
+def test_mmse_clips_inside_tail_for_low_bits():
+    x = np.random.default_rng(0).normal(size=20000)
+    c2 = mmse_clip(x, 2)
+    c8 = mmse_clip(x, 8)
+    assert c2 < c8 <= np.abs(x).max() + 1e-12
+
+
+def test_mmse_reduces_mse_vs_max_clip():
+    x = np.random.default_rng(1).normal(size=10000)
+    amax = float(np.abs(x).max())
+    clip = mmse_clip(x, 4)
+    mse_opt = np.mean((x - fake_quant_np(x, clip, 4)) ** 2)
+    mse_max = np.mean((x - fake_quant_np(x, amax, 4)) ** 2)
+    assert mse_opt <= mse_max
+
+
+@given(scale=st.floats(1e-3, 1e3), seed=st.integers(0, 100))
+def test_fixed16_snap_small_relative_error(scale, seed):
+    x = (np.random.default_rng(seed).normal(size=500) * scale).astype(np.float32)
+    snapped = fixed16_snap(x)
+    # 16-bit fixed point keeps ~4+ decimal digits of the range.
+    tol = fixed16_delta(x) / 2 + 1e-12
+    assert np.abs(snapped - x).max() <= tol
+
+
+def test_fixed16_snap_idempotent():
+    x = np.random.default_rng(3).normal(size=100).astype(np.float32)
+    once = fixed16_snap(x)
+    np.testing.assert_array_equal(fixed16_snap(once), once)
+
+
+def test_fixed16_delta_is_power_of_two():
+    for scale in [0.01, 1.0, 37.5]:
+        d = fixed16_delta(np.array([scale]))
+        assert 2.0 ** round(np.log2(d)) == d
+
+
+def test_qparams_row_paper_ranges():
+    assert qparams_row(1.0, 2)[1:3] == [-2.0, 1.0]
+    assert qparams_row(1.0, 4)[1:3] == [-8.0, 7.0]
+    assert qparams_row(1.0, 8)[1:3] == [-128.0, 127.0]
+    assert qparams_row(2.0, 4)[0] == 0.25
+    assert qparams_row(9.9, 32) == [1.0, -1.0, 1.0, 0.0]
+
+
+def test_clip_tables_and_genome_resolution():
+    rng = np.random.default_rng(5)
+    layers = ["A", "B"]
+    wt = weight_clip_table({n: [rng.normal(size=400)] for n in layers})
+    at = activation_clip_table({n: rng.normal(size=400) * 3 for n in layers})
+    for n in layers:
+        for bits in ["2", "4", "8", "16"]:
+            assert wt[n][bits] > 0 and at[n][bits] > 0
+    wq, aq = genome_qparams([4, 8], [16, 2], wt, at, layer_names=layers)
+    assert wq.shape == (2, 4) and aq.shape == (2, 4)
+    assert wq[0][0] == np.float32(wt["A"]["4"] / 8.0)
+    assert aq[1][2] == 1.0  # 2-bit qmax

@@ -1,0 +1,74 @@
+"""L1 fused SRU recurrence kernel vs the lax.scan oracle."""
+
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.kernels import sru_scan
+from compile.kernels.ref import sru_scan_ref
+
+
+def make_inputs(b, t, n, seed):
+    rng = np.random.default_rng(seed)
+    u = rng.normal(size=(b, t, 3, n)).astype(np.float32)
+    vf, vr = (rng.uniform(-0.5, 0.5, size=n).astype(np.float32) for _ in range(2))
+    bf, br = (rng.normal(size=n).astype(np.float32) * 0.1 for _ in range(2))
+    c0 = rng.normal(size=(b, n)).astype(np.float32)
+    return u, vf.astype(np.float32), vr.astype(np.float32), bf.astype(np.float32), br.astype(np.float32), c0
+
+
+@given(
+    b=st.integers(1, 20),
+    t=st.integers(1, 20),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref(b, t, n, seed):
+    u, vf, vr, bf, br, c0 = make_inputs(b, t, n, seed)
+    h_k, ct_k = sru_scan(u, vf, vr, bf, br, c0)
+    h_r, ct_r = sru_scan_ref(u.reshape(b, t, 3 * n), vf, vr, bf, br, c0)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ct_k), np.asarray(ct_r), rtol=1e-5, atol=1e-5)
+
+
+@given(bb=st.sampled_from([1, 4, 16]), bn=st.sampled_from([8, 32, 128]))
+def test_block_shape_invariance(bb, bn):
+    u, vf, vr, bf, br, c0 = make_inputs(9, 11, 50, 3)
+    h1, ct1 = sru_scan(u, vf, vr, bf, br, c0, bb=bb, bn=bn)
+    h2, ct2 = sru_scan_ref(u.reshape(9, 11, 150), vf, vr, bf, br, c0)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ct1), np.asarray(ct2), rtol=1e-5, atol=1e-5)
+
+
+def test_state_propagates_through_time():
+    """With f ~ 1 (huge forget bias), c_t stays ~ c0 over time."""
+    b, t, n = 2, 6, 4
+    u = np.zeros((b, t, 3, n), dtype=np.float32)
+    vf = np.zeros(n, dtype=np.float32)
+    vr = np.zeros(n, dtype=np.float32)
+    bf = np.full(n, 20.0, dtype=np.float32)   # sigmoid -> ~1: keep state
+    br = np.zeros(n, dtype=np.float32)
+    c0 = np.arange(b * n, dtype=np.float32).reshape(b, n)
+    _, ct = sru_scan(u, vf, vr, bf, br, c0)
+    np.testing.assert_allclose(np.asarray(ct), c0, rtol=1e-4, atol=1e-4)
+
+
+def test_zero_forget_replaces_state():
+    """With f ~ 0 (large negative bias), c_t = u_z at every step."""
+    b, t, n = 1, 3, 5
+    rng = np.random.default_rng(5)
+    u = rng.normal(size=(b, t, 3, n)).astype(np.float32)
+    vf = np.zeros(n, dtype=np.float32)
+    vr = np.zeros(n, dtype=np.float32)
+    bf = np.full(n, -20.0, dtype=np.float32)
+    br = np.zeros(n, dtype=np.float32)
+    c0 = rng.normal(size=(b, n)).astype(np.float32)
+    _, ct = sru_scan(u, vf, vr, bf, br, c0)
+    np.testing.assert_allclose(np.asarray(ct), u[:, -1, 0], rtol=1e-4, atol=1e-4)
+
+
+def test_sequential_dependence():
+    """Shuffling time steps must change the final state (a scan, not a map)."""
+    u, vf, vr, bf, br, c0 = make_inputs(1, 8, 6, 9)
+    _, ct1 = sru_scan(u, vf, vr, bf, br, c0)
+    _, ct2 = sru_scan(u[:, ::-1], vf, vr, bf, br, c0)
+    assert np.abs(np.asarray(ct1) - np.asarray(ct2)).max() > 1e-4

@@ -1,0 +1,149 @@
+//! JSON experiment configs: a file-driven way to define searches beyond
+//! the three paper presets (used by `mohaq search --config FILE`).
+//!
+//! Example:
+//! ```json
+//! {
+//!   "name": "custom-bitfusion",
+//!   "platform": {"kind": "bitfusion", "sram_mb": 1.5},
+//!   "objectives": ["error", "neg_speedup"],
+//!   "ga": {"pop_size": 10, "initial_pop_size": 40, "generations": 30, "seed": 7},
+//!   "beacon": {"threshold": 5.0, "retrain_steps": 200, "max_beacons": 3},
+//!   "err_feasible_pp": 8.0
+//! }
+//! ```
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{BeaconPolicyOverrides, ExperimentSpec, ObjectiveKind, PlatformChoice};
+use crate::moo::Nsga2Config;
+use crate::util::json::Json;
+
+fn parse_objective(name: &str) -> Result<ObjectiveKind> {
+    Ok(match name {
+        "error" | "wer" => ObjectiveKind::Error,
+        "size" | "size_mb" => ObjectiveKind::SizeMb,
+        "neg_speedup" | "speedup" => ObjectiveKind::NegSpeedup,
+        "energy" | "energy_uj" => ObjectiveKind::EnergyUj,
+        other => anyhow::bail!("unknown objective '{other}'"),
+    })
+}
+
+fn parse_platform(j: Option<&Json>) -> Result<PlatformChoice> {
+    let Some(j) = j else { return Ok(PlatformChoice::None) };
+    let kind = j.req("kind")?.as_str().context("platform.kind")?;
+    let sram_mb = j.get("sram_mb").and_then(|v| v.as_f64());
+    Ok(match kind {
+        "none" => PlatformChoice::None,
+        "silago" => PlatformChoice::SiLago { sram_mb: sram_mb.unwrap_or(6.0) },
+        "bitfusion" => PlatformChoice::Bitfusion { sram_mb: sram_mb.unwrap_or(2.0) },
+        other => anyhow::bail!("unknown platform '{other}'"),
+    })
+}
+
+/// Parse an ExperimentSpec from JSON text.
+pub fn spec_from_json(text: &str) -> Result<ExperimentSpec> {
+    let j = Json::parse(text).map_err(|e| anyhow::anyhow!("config: {e}"))?;
+    let name = j.req("name")?.as_str().context("name")?.to_string();
+    let platform = parse_platform(j.get("platform"))?;
+    let objectives = j
+        .req("objectives")?
+        .as_arr()
+        .context("objectives")?
+        .iter()
+        .map(|v| parse_objective(v.as_str().unwrap_or("")))
+        .collect::<Result<Vec<_>>>()?;
+    anyhow::ensure!(!objectives.is_empty(), "at least one objective required");
+
+    let mut ga = Nsga2Config::default();
+    if let Some(g) = j.get("ga") {
+        if let Some(v) = g.get("pop_size").and_then(Json::as_usize) {
+            ga.pop_size = v;
+        }
+        if let Some(v) = g.get("initial_pop_size").and_then(Json::as_usize) {
+            ga.initial_pop_size = v;
+        }
+        if let Some(v) = g.get("generations").and_then(Json::as_usize) {
+            ga.generations = v;
+        }
+        if let Some(v) = g.get("seed").and_then(Json::as_i64) {
+            ga.seed = v as u64;
+        }
+        if let Some(v) = g.get("crossover_prob").and_then(Json::as_f64) {
+            ga.crossover_prob = v;
+        }
+        if let Some(v) = g.get("mutation_prob").and_then(Json::as_f64) {
+            ga.mutation_prob = Some(v);
+        }
+    }
+
+    let beacon = j.get("beacon").map(|b| BeaconPolicyOverrides {
+        threshold: b.get("threshold").and_then(Json::as_f64),
+        retrain_steps: b.get("retrain_steps").and_then(Json::as_usize),
+        max_beacons: b.get("max_beacons").and_then(Json::as_usize),
+    });
+
+    Ok(ExperimentSpec {
+        name,
+        platform,
+        objectives,
+        beacon,
+        ga,
+        err_feasible_pp: j.get("err_feasible_pp").and_then(Json::as_f64).unwrap_or(8.0),
+    })
+}
+
+pub fn spec_from_file(path: &str) -> Result<ExperimentSpec> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    spec_from_json(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let spec = spec_from_json(
+            r#"{
+              "name": "custom",
+              "platform": {"kind": "bitfusion", "sram_mb": 1.5},
+              "objectives": ["error", "neg_speedup"],
+              "ga": {"pop_size": 12, "generations": 30, "seed": 7},
+              "beacon": {"threshold": 5.0, "retrain_steps": 200},
+              "err_feasible_pp": 10.0
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(spec.name, "custom");
+        assert!(matches!(spec.platform, PlatformChoice::Bitfusion { sram_mb } if sram_mb == 1.5));
+        assert_eq!(spec.objectives.len(), 2);
+        assert_eq!(spec.ga.pop_size, 12);
+        assert_eq!(spec.ga.generations, 30);
+        assert_eq!(spec.beacon.as_ref().unwrap().threshold, Some(5.0));
+        assert_eq!(spec.err_feasible_pp, 10.0);
+    }
+
+    #[test]
+    fn defaults_without_platform_or_beacon() {
+        let spec = spec_from_json(
+            r#"{"name": "plain", "objectives": ["error", "size"]}"#,
+        )
+        .unwrap();
+        assert!(matches!(spec.platform, PlatformChoice::None));
+        assert!(spec.beacon.is_none());
+        assert_eq!(spec.ga.pop_size, 10);
+        assert_eq!(spec.err_feasible_pp, 8.0);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(spec_from_json("{").is_err());
+        assert!(spec_from_json(r#"{"name": "x", "objectives": []}"#).is_err());
+        assert!(spec_from_json(r#"{"name": "x", "objectives": ["bogus"]}"#).is_err());
+        assert!(spec_from_json(
+            r#"{"name": "x", "objectives": ["error"], "platform": {"kind": "tpu"}}"#
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,165 @@
+//! Beacon-based search (paper §4.3, Algorithm 1).
+//!
+//! A beacon is a retrained model placed at one point of the search space.
+//! Candidates within a log2-precision distance `threshold` of a beacon
+//! re-evaluate their error with the beacon's parameters instead of the
+//! baseline's — modeling the retraining benefit search-wide at the cost of
+//! a handful of retrainings. When a candidate in the "beacon-feasible
+//! area" has no beacon within the threshold, it becomes one.
+
+use anyhow::Result;
+
+use super::trainer::{RetrainReport, Trainer};
+use crate::eval::EvalService;
+use crate::quant::QuantConfig;
+
+#[derive(Debug, Clone)]
+pub struct BeaconPolicy {
+    /// Max log2-precision distance to share a beacon (paper uses 6 for the
+    /// 8-layer model; ~25% of the max possible distance).
+    pub threshold: f64,
+    /// Enlarged feasibility area for beacon creation: candidates whose
+    /// *baseline* error is below this may be retrained (paper: enlarge the
+    /// 8pp area because retraining rescues solutions beyond it).
+    pub feasible_err: f64,
+    /// Don't waste retraining on solutions already close to the baseline
+    /// error ("not allowing low error solutions to be retrained").
+    pub min_err_for_retrain: f64,
+    /// Binary-connect SGD steps per beacon.
+    pub retrain_steps: usize,
+    pub lr: f32,
+    /// Hard cap on beacons (retraining is the expensive operation).
+    pub max_beacons: usize,
+}
+
+impl BeaconPolicy {
+    /// Defaults mirroring the paper's experiment 3 setup, parameterized by
+    /// the baseline error of the loaded artifact.
+    pub fn paper_defaults(baseline_err: f64, beacon_lr: f32) -> BeaconPolicy {
+        BeaconPolicy {
+            threshold: 6.0,
+            feasible_err: baseline_err + 0.35,
+            min_err_for_retrain: baseline_err + 0.04,
+            retrain_steps: 250,
+            lr: beacon_lr,
+            max_beacons: 4,
+        }
+    }
+}
+
+pub struct Beacon {
+    pub qc: QuantConfig,
+    /// Parameter-set id registered in the EvalService.
+    pub set_idx: usize,
+    pub report: RetrainReport,
+}
+
+pub struct BeaconManager {
+    pub policy: BeaconPolicy,
+    pub beacons: Vec<Beacon>,
+    /// Telemetry: (genome display, distance, created) per lookup.
+    pub lookups: usize,
+    pub created_log: Vec<String>,
+}
+
+impl BeaconManager {
+    pub fn new(policy: BeaconPolicy) -> BeaconManager {
+        BeaconManager { policy, beacons: Vec::new(), lookups: 0, created_log: Vec::new() }
+    }
+
+    /// Nearest beacon by the weights-only log2 distance.
+    pub fn nearest(&self, qc: &QuantConfig) -> Option<(usize, f64)> {
+        self.beacons
+            .iter()
+            .enumerate()
+            .map(|(i, b)| (i, b.qc.beacon_distance(qc)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+    }
+
+    /// Algorithm 1: decide which parameter set to evaluate `qc` with.
+    /// Returns None when the candidate should use the baseline set, or
+    /// Some(set_idx) when a beacon applies (possibly freshly created).
+    pub fn select_or_create(
+        &mut self,
+        qc: &QuantConfig,
+        base_err: f64,
+        eval: &mut EvalService,
+        trainer: &mut Trainer,
+    ) -> Result<Option<usize>> {
+        self.lookups += 1;
+        // Outside the (enlarged) beacon-feasible area: baseline evaluation.
+        if base_err > self.policy.feasible_err {
+            return Ok(None);
+        }
+        // Low-error solutions don't benefit enough to justify retraining,
+        // but they may still share an existing nearby beacon.
+        let wants_beacon = base_err >= self.policy.min_err_for_retrain;
+        let nearest = self.nearest(qc);
+
+        match nearest {
+            Some((idx, d)) if d <= self.policy.threshold => {
+                Ok(Some(self.beacons[idx].set_idx))
+            }
+            _ if wants_beacon && self.beacons.len() < self.policy.max_beacons => {
+                // Convert this solution into a beacon by retraining.
+                let (params, report) = trainer.retrain(
+                    &eval.param_set(0).host.clone(),
+                    qc,
+                    self.policy.retrain_steps,
+                    self.policy.lr,
+                )?;
+                let name = format!("beacon{}[{}]", self.beacons.len(), qc.display_wa());
+                let set_idx = eval.add_param_set(&name, params)?;
+                self.created_log.push(name);
+                self.beacons.push(Beacon { qc: qc.clone(), set_idx, report });
+                Ok(Some(set_idx))
+            }
+            // No beacon close enough and not eligible to create one.
+            Some((idx, d)) if d <= self.policy.threshold * 1.5 && !wants_beacon => {
+                // Mildly-off solutions still borrow the nearest beacon in
+                // preference to nothing only when inside the threshold —
+                // here they fall back to the baseline.
+                let _ = (idx, d);
+                Ok(None)
+            }
+            _ => Ok(None),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Bits;
+
+    fn qc(bits: &[u32]) -> QuantConfig {
+        let b: Vec<Bits> = bits.iter().map(|&x| Bits::from_bits(x).unwrap()).collect();
+        QuantConfig { w_bits: b.clone(), a_bits: b }
+    }
+
+    #[test]
+    fn nearest_picks_minimum_distance() {
+        let policy = BeaconPolicy::paper_defaults(0.16, 1e-3);
+        let mut mgr = BeaconManager::new(policy);
+        mgr.beacons.push(Beacon {
+            qc: qc(&[2; 8]),
+            set_idx: 1,
+            report: RetrainReport { steps: 0, lr: 0.0, loss_curve: vec![], wall_secs: 0.0 },
+        });
+        mgr.beacons.push(Beacon {
+            qc: qc(&[16; 8]),
+            set_idx: 2,
+            report: RetrainReport { steps: 0, lr: 0.0, loss_curve: vec![], wall_secs: 0.0 },
+        });
+        let (idx, d) = mgr.nearest(&qc(&[2, 2, 2, 2, 2, 2, 2, 4])).unwrap();
+        assert_eq!(idx, 0);
+        assert!((d - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_defaults_threshold_is_six() {
+        let p = BeaconPolicy::paper_defaults(0.16, 1e-3);
+        assert_eq!(p.threshold, 6.0);
+        assert!(p.feasible_err > 0.16);
+    }
+}

@@ -1,0 +1,16 @@
+//! L3 coordinator — the paper's system contribution: the MOHAQ search
+//! (Fig. 4) over AOT-compiled evaluation, with beacon-based retraining
+//! (Algorithm 1) orchestrated entirely from Rust.
+
+pub mod beacon;
+pub mod problem;
+pub mod search;
+pub mod trainer;
+
+pub use beacon::{Beacon, BeaconManager, BeaconPolicy};
+pub use problem::{EvalRecord, MohaqProblem, ObjectiveKind};
+pub use search::{
+    baseline_rows, run_search, BeaconPolicyOverrides, ExperimentSpec, GenerationLog,
+    PlatformChoice, SearchOutcome, SolutionRow,
+};
+pub use trainer::{RetrainReport, Trainer};

@@ -1,0 +1,168 @@
+//! The MOHAQ optimization problem: glues genome decoding, the AOT error
+//! evaluation (with optional beacon search), the analytical hardware
+//! objectives and the SRAM constraint into a `moo::Problem` NSGA-II can
+//! drive (paper Fig. 4).
+
+use std::rc::Rc;
+
+use crate::coordinator::beacon::BeaconManager;
+use crate::coordinator::trainer::Trainer;
+use crate::eval::EvalService;
+use crate::hw::Platform;
+use crate::moo::{Evaluation, Problem};
+use crate::quant::QuantConfig;
+use crate::runtime::Artifacts;
+
+/// Objectives supported by the experiments (all minimized; speedup is
+/// negated per paper §4.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ObjectiveKind {
+    /// Validation error (max over subsets).
+    Error,
+    /// Model size in MB (experiment 1).
+    SizeMb,
+    /// Negated Eq.-4 speedup (experiments 2, 3).
+    NegSpeedup,
+    /// Eq.-3 energy in uJ (experiment 2).
+    EnergyUj,
+}
+
+impl ObjectiveKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ObjectiveKind::Error => "WER_V",
+            ObjectiveKind::SizeMb => "size_MB",
+            ObjectiveKind::NegSpeedup => "-speedup",
+            ObjectiveKind::EnergyUj => "energy_uJ",
+        }
+    }
+}
+
+/// Telemetry of one candidate evaluation (figures 5/9/10 inputs).
+#[derive(Debug, Clone)]
+pub struct EvalRecord {
+    pub genome: Vec<i64>,
+    pub base_err: f64,
+    pub err: f64,
+    /// Parameter set used for the final error (0 = baseline).
+    pub set_idx: usize,
+    pub objectives: Vec<f64>,
+    pub violation: f64,
+}
+
+pub struct MohaqProblem {
+    pub arts: Rc<Artifacts>,
+    pub eval: EvalService,
+    pub trainer: Option<Trainer>,
+    pub beacons: Option<BeaconManager>,
+    pub platform: Option<Box<dyn Platform>>,
+    pub objectives: Vec<ObjectiveKind>,
+    /// W == A per layer (SiLago) halves the genome.
+    pub tied: bool,
+    /// Feasibility area: err <= err_limit (paper: baseline + 8pp => 24%).
+    pub err_limit: f64,
+    /// Minimum gene value (SiLago lacks 2-bit => 2).
+    pub gene_min: i64,
+    /// Every evaluation, in order (telemetry).
+    pub records: Vec<EvalRecord>,
+}
+
+impl MohaqProblem {
+    pub fn decode(&self, genome: &[i64]) -> QuantConfig {
+        let qc = if self.tied {
+            QuantConfig::from_genome_tied(genome)
+        } else {
+            QuantConfig::from_genome_wa(genome)
+        };
+        qc.unwrap_or_else(|| panic!("invalid genome {genome:?}"))
+    }
+
+    /// Evaluate the error objective with beacon logic (Algorithm 1).
+    fn error_of(&mut self, qc: &QuantConfig) -> anyhow::Result<(f64, f64, usize)> {
+        let base_err = self.eval.val_error(qc, 0)?;
+        if let (Some(beacons), Some(trainer)) = (self.beacons.as_mut(), self.trainer.as_mut()) {
+            if let Some(set) = beacons.select_or_create(qc, base_err, &mut self.eval, trainer)? {
+                let err = self.eval.val_error(qc, set)?;
+                // A beacon can only help; keep the better of the two
+                // (retraining a *different* genome can occasionally hurt
+                // an easy solution — the paper keeps such solutions via
+                // the baseline parameters).
+                if err < base_err {
+                    return Ok((base_err, err, set));
+                }
+            }
+        }
+        Ok((base_err, base_err, 0))
+    }
+}
+
+impl Problem for MohaqProblem {
+    fn num_vars(&self) -> usize {
+        let l = self.arts.layer_names.len();
+        if self.tied {
+            l
+        } else {
+            2 * l
+        }
+    }
+
+    fn num_objectives(&self) -> usize {
+        self.objectives.len()
+    }
+
+    fn var_range(&self, _i: usize) -> (i64, i64) {
+        (self.gene_min, 4)
+    }
+
+    fn objective_names(&self) -> Vec<String> {
+        self.objectives.iter().map(|o| o.name().to_string()).collect()
+    }
+
+    fn evaluate(&mut self, genome: &[i64]) -> Evaluation {
+        let qc = self.decode(genome);
+        let (base_err, err, set_idx) = self
+            .error_of(&qc)
+            .unwrap_or_else(|e| panic!("candidate evaluation failed: {e:#}"));
+
+        let mut objectives = Vec::with_capacity(self.objectives.len());
+        for kind in &self.objectives {
+            let v = match kind {
+                ObjectiveKind::Error => err,
+                ObjectiveKind::SizeMb => {
+                    self.arts.model.size_bytes(&qc.w_bits) / (1024.0 * 1024.0)
+                }
+                ObjectiveKind::NegSpeedup => {
+                    let p = self.platform.as_ref().expect("speedup needs a platform");
+                    -p.speedup(&self.arts.model, &qc)
+                }
+                ObjectiveKind::EnergyUj => {
+                    let p = self.platform.as_ref().expect("energy needs a platform");
+                    p.energy_pj(&self.arts.model, &qc).expect("platform lacks energy model")
+                        / 1e6
+                }
+            };
+            objectives.push(v);
+        }
+
+        // Constraints: SRAM capacity (MB over) + error feasibility area
+        // (paper §4.2: solutions > baseline+8pp are excluded from the
+        // pool). Error violation is scaled so a few pp of excess error
+        // compares to MBs of memory excess.
+        let mut violation = 0.0;
+        if let Some(p) = self.platform.as_ref() {
+            violation += p.sram_violation(&self.arts.model, &qc);
+        }
+        violation += (err - self.err_limit).max(0.0) * 10.0;
+
+        let record = EvalRecord {
+            genome: genome.to_vec(),
+            base_err,
+            err,
+            set_idx,
+            objectives: objectives.clone(),
+            violation,
+        };
+        self.records.push(record);
+        Evaluation { objectives, violation }
+    }
+}

@@ -1,0 +1,300 @@
+//! Experiment driver: wires artifacts + runtime + eval + beacons + NSGA-II
+//! into one call, and post-processes the final population into the
+//! paper-style solution tables (Tables 5-8).
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::beacon::{BeaconManager, BeaconPolicy};
+use super::problem::{MohaqProblem, ObjectiveKind};
+use super::trainer::Trainer;
+use crate::eval::EvalService;
+use crate::hw::{bitfusion::Bitfusion, silago::SiLago, Platform};
+use crate::moo::{Nsga2, Nsga2Config};
+use crate::quant::{Bits, QuantConfig};
+use crate::runtime::{Artifacts, Runtime};
+
+#[derive(Debug, Clone)]
+pub enum PlatformChoice {
+    None,
+    SiLago { sram_mb: f64 },
+    Bitfusion { sram_mb: f64 },
+}
+
+#[derive(Debug, Clone)]
+pub struct ExperimentSpec {
+    pub name: String,
+    pub platform: PlatformChoice,
+    pub objectives: Vec<ObjectiveKind>,
+    /// Enable beacon-based search with this policy (None = inference-only).
+    pub beacon: Option<BeaconPolicyOverrides>,
+    pub ga: Nsga2Config,
+    /// Feasibility area width above the 16-bit baseline error (paper: 8pp).
+    pub err_feasible_pp: f64,
+}
+
+/// Beacon policy knobs exposed to drivers; unset fields use paper defaults.
+#[derive(Debug, Clone, Default)]
+pub struct BeaconPolicyOverrides {
+    pub threshold: Option<f64>,
+    pub retrain_steps: Option<usize>,
+    pub max_beacons: Option<usize>,
+}
+
+impl ExperimentSpec {
+    /// Experiment 1 (§5.2): WER vs memory size, no hardware model.
+    pub fn exp1() -> ExperimentSpec {
+        ExperimentSpec {
+            name: "exp1-compression".into(),
+            platform: PlatformChoice::None,
+            objectives: vec![ObjectiveKind::Error, ObjectiveKind::SizeMb],
+            beacon: None,
+            ga: Nsga2Config { pop_size: 10, initial_pop_size: 40, generations: 60, ..Default::default() },
+            err_feasible_pp: 8.0,
+        }
+    }
+
+    /// Experiment 2 (§5.3): SiLago, 3 objectives, 6 MB SRAM, tied W=A.
+    pub fn exp2_silago() -> ExperimentSpec {
+        ExperimentSpec {
+            name: "exp2-silago".into(),
+            platform: PlatformChoice::SiLago { sram_mb: 6.0 },
+            objectives: vec![
+                ObjectiveKind::Error,
+                ObjectiveKind::NegSpeedup,
+                ObjectiveKind::EnergyUj,
+            ],
+            beacon: None,
+            ga: Nsga2Config { pop_size: 10, initial_pop_size: 40, generations: 15, ..Default::default() },
+            err_feasible_pp: 8.0,
+        }
+    }
+
+    /// Experiment 3 (§5.4): Bitfusion, 2 MB SRAM; beacon optional.
+    pub fn exp3_bitfusion(beacon: bool) -> ExperimentSpec {
+        ExperimentSpec {
+            name: if beacon { "exp3-bitfusion-beacon".into() } else { "exp3-bitfusion".into() },
+            platform: PlatformChoice::Bitfusion { sram_mb: 2.0 },
+            objectives: vec![ObjectiveKind::Error, ObjectiveKind::NegSpeedup],
+            beacon: beacon.then(BeaconPolicyOverrides::default),
+            ga: Nsga2Config { pop_size: 10, initial_pop_size: 40, generations: 60, ..Default::default() },
+            err_feasible_pp: 8.0,
+        }
+    }
+}
+
+/// One row of a paper-style solutions table.
+#[derive(Debug, Clone)]
+pub struct SolutionRow {
+    pub qc: QuantConfig,
+    pub wer_v: f64,
+    pub wer_t: f64,
+    pub cp_r: f64,
+    pub size_mb: f64,
+    pub speedup: Option<f64>,
+    pub energy_uj: Option<f64>,
+    /// Which parameter set produced wer_v ("baseline" or a beacon name).
+    pub param_set: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct GenerationLog {
+    pub generation: usize,
+    pub evaluations: usize,
+    pub best_err: f64,
+    pub feasible: usize,
+}
+
+pub struct SearchOutcome {
+    pub spec_name: String,
+    pub rows: Vec<SolutionRow>,
+    pub history: Vec<GenerationLog>,
+    pub evaluations: usize,
+    pub exec_calls: usize,
+    pub cache_hits: usize,
+    pub beacons: Vec<(String, usize)>,
+    /// All evaluation records (figures 9/10 scatter data).
+    pub records: Vec<super::problem::EvalRecord>,
+    pub baseline_val_err: f64,
+    pub baseline_test_err: f64,
+    pub wall_secs: f64,
+}
+
+fn make_platform(choice: &PlatformChoice) -> Option<Box<dyn Platform>> {
+    match choice {
+        PlatformChoice::None => None,
+        PlatformChoice::SiLago { sram_mb } => Some(Box::new(SiLago::new(Some(sram_mb * 1024.0 * 1024.0)))),
+        PlatformChoice::Bitfusion { sram_mb } => {
+            Some(Box::new(Bitfusion::new(Some(sram_mb * 1024.0 * 1024.0))))
+        }
+    }
+}
+
+/// Run a full MOHAQ search per the spec. `verbose` prints per-generation
+/// progress to stdout (experiment drivers); silence it in benches.
+pub fn run_search(
+    spec: &ExperimentSpec,
+    arts: Rc<Artifacts>,
+    rt: &Runtime,
+    verbose: bool,
+) -> Result<SearchOutcome> {
+    let t0 = std::time::Instant::now();
+    let eval = EvalService::new(rt, arts.clone()).context("creating eval service")?;
+    let platform = make_platform(&spec.platform);
+    let tied = platform.as_ref().map(|p| p.tied_wa()).unwrap_or(false);
+    let gene_min = platform
+        .as_ref()
+        .map(|p| p.supported_bits().iter().map(|b| b.to_gene()).min().unwrap())
+        .unwrap_or(1);
+    let err_limit = arts.baseline.val_err_16bit + spec.err_feasible_pp / 100.0;
+
+    let (trainer, beacons) = if let Some(ov) = &spec.beacon {
+        let mut policy = BeaconPolicy::paper_defaults(
+            arts.baseline.val_err_16bit,
+            arts.baseline.beacon_lr as f32,
+        );
+        if let Some(t) = ov.threshold {
+            policy.threshold = t;
+        }
+        if let Some(s) = ov.retrain_steps {
+            policy.retrain_steps = s;
+        }
+        if let Some(m) = ov.max_beacons {
+            policy.max_beacons = m;
+        }
+        (
+            Some(Trainer::new(rt, arts.clone(), spec.ga.seed ^ 0xbeac0)?),
+            Some(BeaconManager::new(policy)),
+        )
+    } else {
+        (None, None)
+    };
+
+    let mut problem = MohaqProblem {
+        arts: arts.clone(),
+        eval,
+        trainer,
+        beacons,
+        platform,
+        objectives: spec.objectives.clone(),
+        tied,
+        err_limit,
+        gene_min,
+        records: Vec::new(),
+    };
+
+    let mut algo = Nsga2::new(spec.ga.clone());
+    let mut history: Vec<GenerationLog> = Vec::new();
+    let pop = algo.run(&mut problem, |stats| {
+        let best_err = stats
+            .population
+            .iter()
+            .filter(|i| i.feasible())
+            .map(|i| i.objectives[0])
+            .fold(f64::INFINITY, f64::min);
+        let feasible = stats.population.iter().filter(|i| i.feasible()).count();
+        history.push(GenerationLog {
+            generation: stats.generation,
+            evaluations: stats.evaluations,
+            best_err,
+            feasible,
+        });
+        if verbose {
+            println!(
+                "  gen {:>3}  evals {:>4}  feasible {:>2}/{}  best WER_V {:.4}",
+                stats.generation,
+                stats.evaluations,
+                feasible,
+                stats.population.len(),
+                best_err
+            );
+        }
+    });
+
+    // ---- Post-process the Pareto set into report rows ------------------
+    let set = Nsga2::pareto_set(&pop);
+    // Latest record per genome tells us which parameter set scored it.
+    let mut set_of: HashMap<Vec<i64>, usize> = HashMap::new();
+    for r in &problem.records {
+        set_of.insert(r.genome.clone(), r.set_idx);
+    }
+
+    let mut rows = Vec::with_capacity(set.len());
+    for ind in &set {
+        let qc = problem.decode(&ind.genome);
+        let set_idx = *set_of.get(&ind.genome).unwrap_or(&0);
+        let wer_v = problem.eval.val_error(&qc, set_idx)?;
+        let wer_t = problem.eval.test_error(&qc, set_idx)?;
+        let model = &problem.arts.model;
+        rows.push(SolutionRow {
+            cp_r: model.compression_ratio(&qc.w_bits),
+            size_mb: model.size_bytes(&qc.w_bits) / (1024.0 * 1024.0),
+            speedup: problem.platform.as_ref().map(|p| p.speedup(model, &qc)),
+            energy_uj: problem
+                .platform
+                .as_ref()
+                .and_then(|p| p.energy_pj(model, &qc))
+                .map(|pj| pj / 1e6),
+            param_set: problem.eval.param_set(set_idx).name.clone(),
+            qc,
+            wer_v,
+            wer_t,
+        });
+    }
+    rows.sort_by(|a, b| a.wer_v.partial_cmp(&b.wer_v).unwrap());
+
+    let stats = problem.eval.stats();
+    Ok(SearchOutcome {
+        spec_name: spec.name.clone(),
+        rows,
+        history,
+        evaluations: algo.evaluations(),
+        exec_calls: stats.executions,
+        cache_hits: stats.cache_hits,
+        beacons: problem
+            .beacons
+            .as_ref()
+            .map(|b| {
+                b.beacons
+                    .iter()
+                    .map(|bc| (bc.qc.display_wa(), bc.report.steps))
+                    .collect()
+            })
+            .unwrap_or_default(),
+        records: problem.records,
+        baseline_val_err: arts.baseline.val_err_16bit,
+        baseline_test_err: arts.baseline.test_err,
+        wall_secs: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Baseline rows (Base / Base_16bit) for the report tables.
+pub fn baseline_rows(arts: &Artifacts) -> Vec<SolutionRow> {
+    let n = arts.layer_names.len();
+    let float_qc = QuantConfig::uniform(n, Bits::B32, Bits::B32);
+    let qc16 = QuantConfig::uniform(n, Bits::B16, Bits::B16);
+    vec![
+        SolutionRow {
+            qc: float_qc,
+            wer_v: arts.baseline.val_err,
+            wer_t: arts.baseline.test_err,
+            cp_r: 1.0,
+            size_mb: arts.model.baseline_size_bits() as f64 / 8.0 / (1024.0 * 1024.0),
+            speedup: None,
+            energy_uj: None,
+            param_set: "baseline".into(),
+        },
+        SolutionRow {
+            qc: qc16.clone(),
+            wer_v: arts.baseline.val_err_16bit,
+            wer_t: arts.baseline.test_err,
+            cp_r: arts.model.compression_ratio(&qc16.w_bits),
+            size_mb: arts.model.size_bytes(&qc16.w_bits) / (1024.0 * 1024.0),
+            speedup: Some(1.0),
+            energy_uj: None,
+            param_set: "baseline".into(),
+        },
+    ]
+}

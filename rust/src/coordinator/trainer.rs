@@ -1,0 +1,159 @@
+//! Beacon retraining driver: loops the AOT binary-connect train step
+//! (paper §4.3) from Rust. Python is NOT involved — the train-step graph
+//! was lowered once at `make artifacts`.
+
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::quant::QuantConfig;
+use crate::runtime::{scalar_f32, vec_f32, Artifacts, Executor, Input, Runtime};
+use crate::util::rng::Rng;
+
+pub struct Trainer {
+    arts: Rc<Artifacts>,
+    exec: Executor,
+    rng: Rng,
+    /// Scratch for gathering non-contiguous training batches.
+    x_batch: Vec<f32>,
+    y_batch: Vec<i32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct RetrainReport {
+    pub steps: usize,
+    pub lr: f32,
+    /// Loss after each logged interval (the loss curve for EXPERIMENTS.md).
+    pub loss_curve: Vec<(usize, f32)>,
+    pub wall_secs: f64,
+}
+
+impl Trainer {
+    pub fn new(rt: &Runtime, arts: Rc<Artifacts>, seed: u64) -> Result<Trainer> {
+        let exec = rt.load(arts.hlo_path("train_step")?)?;
+        Ok(Trainer {
+            arts,
+            exec,
+            rng: Rng::new(seed),
+            x_batch: Vec::new(),
+            y_batch: Vec::new(),
+        })
+    }
+
+    fn gather_batch(&mut self) {
+        let a = &self.arts;
+        let (b, t, f) = (a.batch, a.seq_len, a.feat_dim);
+        let xs = t * f;
+        self.x_batch.clear();
+        self.y_batch.clear();
+        for _ in 0..b {
+            let s = self.rng.below(a.train.num_seqs);
+            self.x_batch.extend_from_slice(&a.train.x[s * xs..(s + 1) * xs]);
+            self.y_batch.extend_from_slice(&a.train.y[s * t..(s + 1) * t]);
+        }
+    }
+
+    /// Run `steps` binary-connect SGD steps starting from `start` params,
+    /// quantized per `qc`. Returns (new params, report).
+    pub fn retrain(
+        &mut self,
+        start: &[Vec<f32>],
+        qc: &QuantConfig,
+        steps: usize,
+        lr: f32,
+    ) -> Result<(Vec<Vec<f32>>, RetrainReport)> {
+        let t0 = std::time::Instant::now();
+        let a = self.arts.clone();
+        anyhow::ensure!(start.len() == a.tensors.len(), "bad param count");
+        let (wq, aq) = crate::quant::resolve_qparams(
+            qc,
+            &a.layer_names,
+            &a.w_clips,
+            &a.a_clips,
+        )?;
+        let n_layers = a.layer_names.len() as i64;
+        let (b, t, f) = (a.batch as i64, a.seq_len as i64, a.feat_dim as i64);
+        let shapes: Vec<Vec<i64>> = a
+            .tensors
+            .iter()
+            .map(|info| info.shape.iter().map(|&d| d as i64).collect())
+            .collect();
+
+        let mut params: Vec<Vec<f32>> = start.to_vec();
+        let mut loss_curve = Vec::new();
+        let log_every = (steps / 10).max(1);
+
+        for step in 0..steps {
+            self.gather_batch();
+            let mut inputs: Vec<Input> = Vec::with_capacity(params.len() + 5);
+            for (data, shape) in params.iter().zip(&shapes) {
+                inputs.push(Input::F32(data, shape.clone()));
+            }
+            inputs.push(Input::F32(&wq, vec![n_layers, 4]));
+            inputs.push(Input::F32(&aq, vec![n_layers, 4]));
+            inputs.push(Input::F32(&self.x_batch, vec![b, t, f]));
+            inputs.push(Input::I32(&self.y_batch, vec![b, t]));
+            inputs.push(Input::ScalarF32(lr));
+
+            let out = self.exec.run_literals(&inputs).context("train step")?;
+            anyhow::ensure!(
+                out.len() == params.len() + 1,
+                "train step returned {} outputs, expected {}",
+                out.len(),
+                params.len() + 1
+            );
+            for (i, lit) in out[..params.len()].iter().enumerate() {
+                params[i] = vec_f32(lit)?;
+            }
+            let loss = scalar_f32(&out[params.len()])?;
+            if step % log_every == 0 || step + 1 == steps {
+                loss_curve.push((step, loss));
+            }
+        }
+        let report = RetrainReport {
+            steps,
+            lr,
+            loss_curve,
+            wall_secs: t0.elapsed().as_secs_f64(),
+        };
+        Ok((params, report))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Bits;
+    use std::path::PathBuf;
+
+    #[test]
+    fn retraining_decreases_loss() {
+        let dir = std::env::var("MOHAQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        let p = PathBuf::from(dir);
+        if !p.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts present");
+            return;
+        }
+        let arts = Rc::new(Artifacts::load(p).unwrap());
+        let rt = Runtime::cpu().unwrap();
+        let mut trainer = Trainer::new(&rt, arts.clone(), 42).unwrap();
+        let qc = QuantConfig::uniform(arts.layer_names.len(), Bits::B2, Bits::B8);
+        let (new_params, report) = trainer
+            .retrain(&arts.weights, &qc, 30, arts.baseline.beacon_lr as f32)
+            .unwrap();
+        assert_eq!(new_params.len(), arts.weights.len());
+        let first = report.loss_curve.first().unwrap().1;
+        let last = report.loss_curve.last().unwrap().1;
+        assert!(
+            last < first,
+            "loss should decrease: {first} -> {last} ({:?})",
+            report.loss_curve
+        );
+        // Parameters actually moved.
+        let moved = new_params
+            .iter()
+            .zip(&arts.weights)
+            .any(|(a, b)| a.iter().zip(b).any(|(x, y)| (x - y).abs() > 1e-6));
+        assert!(moved);
+    }
+}

@@ -1,0 +1,228 @@
+//! Candidate-solution evaluation service: the error objective.
+//!
+//! Wraps the AOT inference executable. A candidate (QuantConfig) is
+//! resolved against the calibration tables into runtime (Δ,qmin,qmax,en)
+//! rows, then the executable runs over the validation subsets; the error
+//! objective is the MAX subset error (paper §4.2's variance-reduction
+//! trick). Results are memoized per (parameter-set, genome) — NSGA-II
+//! revisits genomes often with pop 10 x 60 generations.
+//!
+//! Parameter sets: index 0 is the baseline pre-trained model; beacon
+//! retraining registers additional sets (paper §4.3). All sets stay
+//! resident on the PJRT device so per-eval upload cost is only the quant
+//! params + data batch.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::quant::{resolve_qparams, Bits, QuantConfig};
+use crate::runtime::{scalar_f32, Artifacts, Executor, Input, Runtime, Split};
+
+pub struct ParamSet {
+    pub name: String,
+    /// Host copy (beacon sets need it as the start point of further runs
+    /// and for the final report).
+    pub host: Vec<Vec<f32>>,
+    bufs: Vec<crate::runtime::DeviceTensor>,
+}
+
+type CacheKey = (usize, Vec<Bits>, Vec<Bits>);
+
+pub struct EvalStats {
+    pub executions: usize,
+    pub cache_hits: usize,
+    pub unique_solutions: usize,
+}
+
+pub struct EvalService {
+    pub arts: Rc<Artifacts>,
+    exec: Executor,
+    param_sets: Vec<ParamSet>,
+    cache: HashMap<CacheKey, f64>,
+    executions: usize,
+    cache_hits: usize,
+}
+
+impl EvalService {
+    pub fn new(rt: &Runtime, arts: Rc<Artifacts>) -> Result<EvalService> {
+        // Two lowerings of the SAME computation exist in the bundle:
+        // `infer` (Pallas kernels, the TPU-shaped artifact) and
+        // `infer_ref` (XLA-native ops). pytest proves them numerically
+        // equivalent; on CPU PJRT the native lowering is ~4.6x faster
+        // (EXPERIMENTS.md §Perf L2), so it is the default here.
+        // MOHAQ_INFER_GRAPH=pallas forces the kernel graph.
+        let which = match std::env::var("MOHAQ_INFER_GRAPH").as_deref() {
+            Ok("pallas") => "infer",
+            Ok("ref") => "infer_ref",
+            _ => "infer_ref",
+        };
+        let exec = rt.load(arts.hlo_path(which).or_else(|_| arts.hlo_path("infer"))?)?;
+        let mut svc = EvalService {
+            arts: arts.clone(),
+            exec,
+            param_sets: Vec::new(),
+            cache: HashMap::new(),
+            executions: 0,
+            cache_hits: 0,
+        };
+        let baseline = arts.weights.clone();
+        svc.add_param_set("baseline", baseline)?;
+        Ok(svc)
+    }
+
+    /// Register a parameter set (e.g. a retrained beacon); returns its id.
+    pub fn add_param_set(&mut self, name: &str, host: Vec<Vec<f32>>) -> Result<usize> {
+        anyhow::ensure!(
+            host.len() == self.arts.tensors.len(),
+            "param set has {} tensors, artifact expects {}",
+            host.len(),
+            self.arts.tensors.len()
+        );
+        let mut bufs = Vec::with_capacity(host.len());
+        for (data, info) in host.iter().zip(&self.arts.tensors) {
+            let shape: Vec<i64> = info.shape.iter().map(|&d| d as i64).collect();
+            // Scalars/1-D keep their manifest shape.
+            bufs.push(self.exec.upload(&Input::F32(data, shape))?);
+        }
+        self.param_sets.push(ParamSet { name: name.to_string(), host, bufs });
+        Ok(self.param_sets.len() - 1)
+    }
+
+    pub fn param_set(&self, idx: usize) -> &ParamSet {
+        &self.param_sets[idx]
+    }
+
+    pub fn num_param_sets(&self) -> usize {
+        self.param_sets.len()
+    }
+
+    pub fn stats(&self) -> EvalStats {
+        EvalStats {
+            executions: self.executions,
+            cache_hits: self.cache_hits,
+            unique_solutions: self.cache.len(),
+        }
+    }
+
+    fn qparams(&self, qc: &QuantConfig) -> Result<(Vec<f32>, Vec<f32>)> {
+        resolve_qparams(qc, &self.arts.layer_names, &self.arts.w_clips, &self.arts.a_clips)
+    }
+
+    /// (err_count, total, loss_sum) accumulated over every batch of a split.
+    fn run_split(&mut self, qc: &QuantConfig, set: usize, split: &Split) -> Result<(f64, f64, f64)> {
+        let a = &self.arts;
+        let (b, t, f) = (a.batch, a.seq_len, a.feat_dim);
+        let n_layers = a.layer_names.len() as i64;
+        let (wq, aq) = self.qparams(qc)?;
+        let (mut err, mut total, mut loss) = (0.0, 0.0, 0.0);
+        for k in 0..split.num_batches(b) {
+            let (x, y) = split.batch(k, b, t, f);
+            let fresh = [
+                Input::F32(&wq, vec![n_layers, 4]),
+                Input::F32(&aq, vec![n_layers, 4]),
+                Input::F32(x, vec![b as i64, t as i64, f as i64]),
+                Input::I32(y, vec![b as i64, t as i64]),
+            ];
+            let out = self
+                .exec
+                .run_mixed(&self.param_sets[set].bufs, &fresh)
+                .with_context(|| format!("infer exec, set {set}"))?;
+            err += scalar_f32(&out[0])? as f64;
+            total += scalar_f32(&out[1])? as f64;
+            loss += scalar_f32(&out[2])? as f64;
+            self.executions += 1;
+        }
+        Ok((err, total, loss))
+    }
+
+    /// Validation error = max over the subsets (paper §4.2). Cached.
+    pub fn val_error(&mut self, qc: &QuantConfig, set: usize) -> Result<f64> {
+        let key: CacheKey = (set, qc.w_bits.clone(), qc.a_bits.clone());
+        if let Some(&v) = self.cache.get(&key) {
+            self.cache_hits += 1;
+            return Ok(v);
+        }
+        let mut worst: f64 = 0.0;
+        // Rc clone only — never deep-copy the split data on the hot path.
+        let arts = Rc::clone(&self.arts);
+        for split in &arts.val_subsets {
+            let (e, t, _) = self.run_split(qc, set, split)?;
+            worst = worst.max(e / t.max(1.0));
+        }
+        self.cache.insert(key, worst);
+        Ok(worst)
+    }
+
+    /// Test-set error (final report column WER_T). Uncached — called once
+    /// per Pareto solution.
+    pub fn test_error(&mut self, qc: &QuantConfig, set: usize) -> Result<f64> {
+        let arts = Rc::clone(&self.arts);
+        let (e, t, _) = self.run_split(qc, set, &arts.test)?;
+        Ok(e / t.max(1.0))
+    }
+
+    /// Mean validation loss (beacon diagnostics).
+    pub fn val_loss(&mut self, qc: &QuantConfig, set: usize) -> Result<f64> {
+        let arts = Rc::clone(&self.arts);
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for split in &arts.val_subsets {
+            let (_, _, l) = self.run_split(qc, set, split)?;
+            n += split.num_batches(self.arts.batch);
+            sum += l;
+        }
+        Ok(sum / n.max(1) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts() -> Option<Rc<Artifacts>> {
+        let dir = std::env::var("MOHAQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        let p = PathBuf::from(dir);
+        if !p.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts present");
+            return None;
+        }
+        Some(Rc::new(Artifacts::load(p).unwrap()))
+    }
+
+    #[test]
+    fn float_baseline_error_matches_manifest() {
+        let Some(arts) = artifacts() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let mut svc = EvalService::new(&rt, arts.clone()).unwrap();
+        // B32 disables quantization -> must reproduce the float val error
+        // computed by the Python pipeline (bit-for-bit same graph modulo
+        // the Pallas kernels, which pytest proves equivalent).
+        let qc = QuantConfig::uniform(arts.layer_names.len(), Bits::B32, Bits::B32);
+        let err = svc.val_error(&qc, 0).unwrap();
+        let expect = arts.baseline.val_err;
+        assert!(
+            (err - expect).abs() < 0.02,
+            "rust eval {err} vs python {expect}"
+        );
+    }
+
+    #[test]
+    fn quantized_error_ordered_and_cached() {
+        let Some(arts) = artifacts() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let mut svc = EvalService::new(&rt, arts.clone()).unwrap();
+        let n = arts.layer_names.len();
+        let e16 = svc.val_error(&QuantConfig::uniform(n, Bits::B16, Bits::B16), 0).unwrap();
+        let e2 = svc.val_error(&QuantConfig::uniform(n, Bits::B2, Bits::B8), 0).unwrap();
+        assert!(e2 > e16 + 0.05, "2-bit {e2} should be much worse than 16-bit {e16}");
+        // Cache hit on repeat.
+        let before = svc.stats().executions;
+        let again = svc.val_error(&QuantConfig::uniform(n, Bits::B16, Bits::B16), 0).unwrap();
+        assert_eq!(again, e16);
+        assert_eq!(svc.stats().executions, before);
+        assert!(svc.stats().cache_hits > 0);
+    }
+}

@@ -1,0 +1,148 @@
+//! Bitfusion model (paper §2.5.2; Sharma et al. 2017).
+//!
+//! A Fused-PE groups 16 bit-bricks; each brick multiplies 1- or 2-bit
+//! operands. An (w x a) MAC consumes (w/2)*(a/2) bricks (operands below
+//! 2 bits round up to one brick), so per-cycle parallelism is
+//! 16 / (bricks per op). 16-bit operands are processed as 8-bit halves
+//! over two cycles each. Relative to the 16x16 baseline this gives the
+//! paper's headline: 2-bit ops are 64x faster than 16-bit ops.
+
+use super::{eq4_speedup, Platform};
+use crate::model::ModelDesc;
+use crate::quant::{Bits, QuantConfig};
+
+#[derive(Debug, Clone)]
+pub struct Bitfusion {
+    /// Experiment 3 constrains the SRAM to 2 MB (§5.4).
+    pub sram_bytes: Option<f64>,
+}
+
+/// Bit-bricks consumed by one operand lane (min one brick => 2-bit lanes).
+fn brick_width(bits: Bits) -> f64 {
+    (bits.bits().max(2).min(8) as f64) / 2.0
+}
+
+/// Extra cycles for 16-bit operands (8-bit halves over 2 cycles).
+fn cycle_factor(bits: Bits) -> f64 {
+    if bits.bits() >= 16 {
+        2.0
+    } else {
+        1.0
+    }
+}
+
+/// Throughput of a (w x a) MAC relative to a 16x16 MAC.
+/// T(2,2) = 64, T(8,8) = 4, T(16,16) = 1 — the paper's §2.5.2 anchors.
+pub fn mac_speedup(w: Bits, a: Bits) -> f64 {
+    64.0 / (brick_width(w) * brick_width(a) * cycle_factor(w) * cycle_factor(a))
+}
+
+impl Bitfusion {
+    pub fn new(sram_bytes: Option<f64>) -> Self {
+        Bitfusion { sram_bytes }
+    }
+
+    /// The §5.4 configuration: 2 MB SRAM (10.6x compression needed).
+    pub fn paper_experiment() -> Self {
+        Bitfusion { sram_bytes: Some(2.0 * 1024.0 * 1024.0) }
+    }
+}
+
+impl Platform for Bitfusion {
+    fn name(&self) -> &str {
+        "Bitfusion"
+    }
+
+    fn supported_bits(&self) -> &[Bits] {
+        &Bits::SEARCHABLE
+    }
+
+    fn tied_wa(&self) -> bool {
+        false
+    }
+
+    fn speedup(&self, model: &ModelDesc, qc: &QuantConfig) -> f64 {
+        eq4_speedup(model, qc, mac_speedup)
+    }
+
+    fn energy_pj(&self, _model: &ModelDesc, _qc: &QuantConfig) -> Option<f64> {
+        // The paper uses Bitfusion with speedup + memory constraint only.
+        None
+    }
+
+    fn sram_bytes(&self) -> Option<f64> {
+        self.sram_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn qc(wa: &[(u32, u32)]) -> QuantConfig {
+        QuantConfig {
+            w_bits: wa.iter().map(|&(w, _)| Bits::from_bits(w).unwrap()).collect(),
+            a_bits: wa.iter().map(|&(_, a)| Bits::from_bits(a).unwrap()).collect(),
+        }
+    }
+
+    #[test]
+    fn paper_anchor_speedups() {
+        assert_eq!(mac_speedup(Bits::B2, Bits::B2), 64.0);
+        assert_eq!(mac_speedup(Bits::B8, Bits::B8), 4.0);
+        assert_eq!(mac_speedup(Bits::B16, Bits::B16), 1.0);
+        assert_eq!(mac_speedup(Bits::B4, Bits::B4), 16.0);
+        assert_eq!(mac_speedup(Bits::B2, Bits::B8), 16.0);
+        assert_eq!(mac_speedup(Bits::B8, Bits::B16), 2.0);
+    }
+
+    #[test]
+    fn table7_s26_speedup() {
+        // S26: 8/16 2/2 2/2 2/2 4/4 2/8 2/2 2/4 -> paper: 40.7x.
+        let m = ModelDesc::paper();
+        let p = Bitfusion::paper_experiment();
+        let cfg = qc(&[(8, 16), (2, 2), (2, 2), (2, 2), (4, 4), (2, 8), (2, 2), (2, 4)]);
+        let s = p.speedup(&m, &cfg);
+        assert!((s - 40.7).abs() < 0.2, "speedup {s}");
+    }
+
+    #[test]
+    fn table8_s20_speedup() {
+        // Beacon S20: 4/16 2/2 2/2 2/4 2/2 2/4 2/2 2/4 -> paper: 47.1x.
+        let m = ModelDesc::paper();
+        let p = Bitfusion::paper_experiment();
+        let cfg = qc(&[(4, 16), (2, 2), (2, 2), (2, 4), (2, 2), (2, 4), (2, 2), (2, 4)]);
+        let s = p.speedup(&m, &cfg);
+        assert!((s - 47.1).abs() < 0.3, "speedup {s}");
+    }
+
+    #[test]
+    fn table7_s1_speedup() {
+        // S1: 8/16 2/2 2/16 4/8 4/8 4/16 4/4 2/8 -> paper: 14.6x.
+        let m = ModelDesc::paper();
+        let p = Bitfusion::paper_experiment();
+        let cfg = qc(&[(8, 16), (2, 2), (2, 16), (4, 8), (4, 8), (4, 16), (4, 4), (2, 8)]);
+        let s = p.speedup(&m, &cfg);
+        assert!((s - 14.6).abs() < 0.2, "speedup {s}");
+    }
+
+    #[test]
+    fn two_mb_needs_heavy_compression() {
+        let m = ModelDesc::paper();
+        let p = Bitfusion::paper_experiment();
+        // All-4-bit (8x) is ~2.65 MB: violates 2 MB.
+        assert!(p.sram_violation(&m, &QuantConfig::uniform(8, Bits::B4, Bits::B4)) > 0.0);
+        // All-2-bit (~15.6x) fits.
+        assert_eq!(
+            p.sram_violation(&m, &QuantConfig::uniform(8, Bits::B2, Bits::B2)),
+            0.0
+        );
+    }
+
+    #[test]
+    fn speedup_symmetric_in_operands() {
+        for (w, a) in [(Bits::B2, Bits::B8), (Bits::B4, Bits::B16)] {
+            assert_eq!(mac_speedup(w, a), mac_speedup(a, w));
+        }
+    }
+}

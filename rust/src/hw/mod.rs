@@ -1,0 +1,134 @@
+//! Hardware platform models (paper §4.4): analytical speedup (Eq. 4) and
+//! energy (Eq. 3, the Eyeriss-style model of [51]) objectives plus the
+//! on-chip SRAM size constraint. The paper itself has no RNN
+//! implementation on either platform — "the hardware model is an input" —
+//! so these analytical models ARE the paper's methodology, not a
+//! simulation shortcut.
+
+pub mod bitfusion;
+pub mod silago;
+
+use crate::model::ModelDesc;
+use crate::quant::{Bits, QuantConfig};
+
+/// A hardware platform able to score a mixed-precision configuration.
+pub trait Platform {
+    fn name(&self) -> &str;
+
+    /// Precisions the platform MACs support.
+    fn supported_bits(&self) -> &[Bits];
+
+    /// Whether weight and activation precision must match per layer
+    /// (SiLago: yes — §5.3; Bitfusion: no).
+    fn tied_wa(&self) -> bool;
+
+    /// Expected speedup over the platform's 16-bit baseline (Eq. 4).
+    fn speedup(&self, model: &ModelDesc, qc: &QuantConfig) -> f64;
+
+    /// Expected energy in pJ (Eq. 3), if the platform has an energy model.
+    fn energy_pj(&self, model: &ModelDesc, qc: &QuantConfig) -> Option<f64>;
+
+    /// On-chip SRAM capacity in bytes (the memory constraint).
+    fn sram_bytes(&self) -> Option<f64>;
+
+    /// Constraint violation for the SRAM-size constraint in MB (0 if fits).
+    fn sram_violation(&self, model: &ModelDesc, qc: &QuantConfig) -> f64 {
+        match self.sram_bytes() {
+            None => 0.0,
+            Some(cap) => {
+                let size = model.size_bytes(&qc.w_bits);
+                ((size - cap) / (1024.0 * 1024.0)).max(0.0)
+            }
+        }
+    }
+}
+
+/// Eq. 4 speedup: sum(S_i * N_i) / N_T, where N_i are MAC counts per
+/// precision pair and N_T additionally includes the element-wise and
+/// non-linear ops, which always run at 16-bit rate (speedup 1) — this
+/// reproduces the paper's 3.9x (not 4.0x) max on SiLago.
+pub fn eq4_speedup(
+    model: &ModelDesc,
+    qc: &QuantConfig,
+    per_op_speedup: impl Fn(Bits, Bits) -> f64,
+) -> f64 {
+    let mut weighted = 0.0;
+    let mut total = 0.0;
+    for (i, layer) in model.layers.iter().enumerate() {
+        let macs = layer.mac_ops() as f64;
+        weighted += per_op_speedup(qc.w_bits[i], qc.a_bits[i]) * macs;
+        total += macs;
+        let fixed_ops = (layer.elementwise_ops() + layer.nonlinear_ops()) as f64;
+        weighted += fixed_ops; // 16-bit rate, S=1
+        total += fixed_ops;
+    }
+    weighted / total
+}
+
+/// Eq. 3 energy: E = N_b * C_M + sum(E_i * N_i). N_b is the total model
+/// bits resident in SRAM (weights at their per-layer precision, vectors at
+/// 16-bit); element-wise/non-linear ops are charged the 16-bit MAC energy.
+pub fn eq3_energy_pj(
+    model: &ModelDesc,
+    qc: &QuantConfig,
+    bit_load_pj: f64,
+    mac_energy_pj: impl Fn(Bits, Bits) -> f64,
+    fixed_op_energy_pj: f64,
+) -> f64 {
+    let n_bits = model.size_bits(&qc.w_bits) as f64;
+    let mut e = n_bits * bit_load_pj;
+    for (i, layer) in model.layers.iter().enumerate() {
+        e += layer.mac_ops() as f64 * mac_energy_pj(qc.w_bits[i], qc.a_bits[i]);
+        e += (layer.elementwise_ops() + layer.nonlinear_ops()) as f64
+            * fixed_op_energy_pj;
+    }
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Flat;
+    impl Platform for Flat {
+        fn name(&self) -> &str {
+            "flat"
+        }
+        fn supported_bits(&self) -> &[Bits] {
+            &Bits::SEARCHABLE
+        }
+        fn tied_wa(&self) -> bool {
+            false
+        }
+        fn speedup(&self, m: &ModelDesc, qc: &QuantConfig) -> f64 {
+            eq4_speedup(m, qc, |_, _| 2.0)
+        }
+        fn energy_pj(&self, _: &ModelDesc, _: &QuantConfig) -> Option<f64> {
+            None
+        }
+        fn sram_bytes(&self) -> Option<f64> {
+            Some(2.0 * 1024.0 * 1024.0)
+        }
+    }
+
+    #[test]
+    fn sram_violation_positive_when_too_big() {
+        let m = ModelDesc::paper();
+        let p = Flat;
+        let qc16 = QuantConfig::uniform(8, Bits::B16, Bits::B16);
+        // 16-bit model is ~11 MB >> 2 MB.
+        assert!(p.sram_violation(&m, &qc16) > 0.0);
+        let qc2 = QuantConfig::uniform(8, Bits::B2, Bits::B2);
+        // 2-bit model is ~1.42 MB < 2 MB.
+        assert_eq!(p.sram_violation(&m, &qc2), 0.0);
+    }
+
+    #[test]
+    fn eq4_is_mac_weighted_mean() {
+        let m = ModelDesc::paper();
+        let qc = QuantConfig::uniform(8, Bits::B4, Bits::B4);
+        let s = eq4_speedup(&m, &qc, |_, _| 4.0);
+        // All MACs at 4x, fixed ops at 1x -> slightly below 4.
+        assert!(s < 4.0 && s > 3.9, "s={s}");
+    }
+}

@@ -1,0 +1,146 @@
+//! SiLago CGRA model (paper §2.5.1, Table 2).
+//!
+//! The DRRA NACU MAC is reconfigurable via Vedic-multiplier splitting:
+//! 1x 16-bit, 2x 8-bit or 4x 4-bit MACs per cycle — hence W and A share a
+//! precision per layer and only {4, 8, 16} are supported (§5.3). Energy
+//! comes from the post-layout Table 2 numbers (28nm): MAC energy per
+//! precision plus 0.08 pJ per bit loaded from the DiMArch SRAM macros.
+
+use super::{eq3_energy_pj, eq4_speedup, Platform};
+use crate::model::ModelDesc;
+use crate::quant::{Bits, QuantConfig};
+
+#[derive(Debug, Clone)]
+pub struct SiLago {
+    /// DiMArch scratchpad capacity (experiment 2 uses 6 MB — §5.3).
+    pub sram_bytes: Option<f64>,
+}
+
+/// Table 2 row "MAC speedup".
+pub fn mac_speedup(bits: Bits) -> f64 {
+    match bits {
+        Bits::B4 => 4.0,
+        Bits::B8 => 2.0,
+        _ => 1.0, // 16-bit baseline (B2/B32 unsupported on SiLago)
+    }
+}
+
+/// Table 2 row "MAC energy cost (pJ)".
+pub fn mac_energy_pj(bits: Bits) -> f64 {
+    match bits {
+        Bits::B4 => 0.153,
+        Bits::B8 => 0.542,
+        _ => 1.666,
+    }
+}
+
+/// Table 2 row "Loading 1-bit energy cost (pJ)".
+pub const BIT_LOAD_PJ: f64 = 0.08;
+
+impl SiLago {
+    pub fn new(sram_bytes: Option<f64>) -> Self {
+        SiLago { sram_bytes }
+    }
+
+    /// The §5.3 configuration: 6 MB SRAM constraint.
+    pub fn paper_experiment() -> Self {
+        SiLago { sram_bytes: Some(6.0 * 1024.0 * 1024.0) }
+    }
+}
+
+impl Platform for SiLago {
+    fn name(&self) -> &str {
+        "SiLago"
+    }
+
+    fn supported_bits(&self) -> &[Bits] {
+        &[Bits::B4, Bits::B8, Bits::B16]
+    }
+
+    fn tied_wa(&self) -> bool {
+        true
+    }
+
+    fn speedup(&self, model: &ModelDesc, qc: &QuantConfig) -> f64 {
+        // W == A per layer on SiLago; the MAC runs at the layer precision.
+        eq4_speedup(model, qc, |w, _a| mac_speedup(w))
+    }
+
+    fn energy_pj(&self, model: &ModelDesc, qc: &QuantConfig) -> Option<f64> {
+        // Eq. 3 counts MAC energy + bit loading only (the paper's Base_S
+        // 16.4 uJ and S7 2.6 uJ anchors hold exactly without charging the
+        // element-wise/non-linear ops, so the fixed-op term is zero here).
+        Some(eq3_energy_pj(model, qc, BIT_LOAD_PJ, |w, _a| mac_energy_pj(w), 0.0))
+    }
+
+    fn sram_bytes(&self) -> Option<f64> {
+        self.sram_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_qc(bits: &[u32]) -> QuantConfig {
+        let b: Vec<Bits> = bits.iter().map(|&x| Bits::from_bits(x).unwrap()).collect();
+        QuantConfig { w_bits: b.clone(), a_bits: b }
+    }
+
+    #[test]
+    fn base16_energy_matches_table6() {
+        // Base_S row: 16-bit full implementation = 16.4 uJ.
+        let m = ModelDesc::paper();
+        let p = SiLago::paper_experiment();
+        let qc = paper_qc(&[16; 8]);
+        let uj = p.energy_pj(&m, &qc).unwrap() / 1e6;
+        assert!((uj - 16.4).abs() < 0.2, "energy {uj} uJ");
+        assert!((p.speedup(&m, &qc) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn all4_matches_table6_s7() {
+        // S7 row: all 4-bit -> 3.9x speedup, 2.6 uJ.
+        let m = ModelDesc::paper();
+        let p = SiLago::paper_experiment();
+        let qc = paper_qc(&[4; 8]);
+        let s = p.speedup(&m, &qc);
+        let uj = p.energy_pj(&m, &qc).unwrap() / 1e6;
+        // Paper reports 3.9x; its own Table 4 element-wise total (88000)
+        // is inconsistent with its per-layer rows (4 x 15400 = 61600),
+        // which shifts the fixed-op share slightly — accept 3.9..4.0.
+        assert!((3.85..4.0).contains(&s), "speedup {s}");
+        assert!((uj - 2.6).abs() < 0.15, "energy {uj} uJ");
+    }
+
+    #[test]
+    fn s1_row_matches_table6() {
+        // S1: 16 4 8 8 4 16 4 8 -> 2.6x speedup, ~5.8 uJ (we allow 6%:
+        // the paper's unlisted accounting of non-MxV ops differs slightly).
+        let m = ModelDesc::paper();
+        let p = SiLago::paper_experiment();
+        let qc = paper_qc(&[16, 4, 8, 8, 4, 16, 4, 8]);
+        let s = p.speedup(&m, &qc);
+        let uj = p.energy_pj(&m, &qc).unwrap() / 1e6;
+        assert!((s - 2.6).abs() < 0.06, "speedup {s}");
+        assert!((uj - 5.8).abs() < 0.35, "energy {uj} uJ");
+    }
+
+    #[test]
+    fn energy_monotone_in_precision() {
+        let m = ModelDesc::paper();
+        let p = SiLago::new(None);
+        let e4 = p.energy_pj(&m, &paper_qc(&[4; 8])).unwrap();
+        let e8 = p.energy_pj(&m, &paper_qc(&[8; 8])).unwrap();
+        let e16 = p.energy_pj(&m, &paper_qc(&[16; 8])).unwrap();
+        assert!(e4 < e8 && e8 < e16);
+    }
+
+    #[test]
+    fn six_mb_constraint_allows_mixed_but_not_16bit() {
+        let m = ModelDesc::paper();
+        let p = SiLago::paper_experiment();
+        assert!(p.sram_violation(&m, &paper_qc(&[16; 8])) > 0.0);
+        assert_eq!(p.sram_violation(&m, &paper_qc(&[8; 8])), 0.0); // 5.3MB
+    }
+}

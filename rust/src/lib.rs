@@ -1,0 +1,16 @@
+//! MOHAQ: Multi-Objective Hardware-Aware Quantization of Recurrent Neural
+//! Networks — Rust coordinator (L3) of the three-layer Rust + JAX + Pallas
+//! reproduction. See DESIGN.md for the system inventory and README.md for
+//! the quickstart.
+
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod hw;
+pub mod runtime;
+pub mod model;
+pub mod moo;
+pub mod pareto;
+pub mod quant;
+pub mod report;
+pub mod util;

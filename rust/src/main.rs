@@ -1,0 +1,130 @@
+//! MOHAQ command-line launcher.
+//!
+//! Subcommands:
+//!   info                          artifact bundle summary
+//!   table4                        model op/param breakdown (paper Table 4)
+//!   eval    --w 4,4,... --a 8,... score one quantization config
+//!   search  --exp exp1|exp2|exp3  run a full experiment
+//!           [--beacon] [--gens N] [--seed N] [--out DIR]
+//!
+//! Global: --artifacts DIR (default ./artifacts, built by `make artifacts`).
+
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use mohaq::coordinator::{baseline_rows, run_search, ExperimentSpec};
+use mohaq::quant::{Bits, QuantConfig};
+use mohaq::report;
+use mohaq::util::cli::Args;
+
+fn parse_bits_list(s: &str, n: usize) -> Result<Vec<Bits>> {
+    let v: Vec<Bits> = s
+        .split(',')
+        .map(|t| {
+            t.trim()
+                .parse::<u32>()
+                .ok()
+                .and_then(Bits::from_bits)
+                .with_context(|| format!("bad bits value '{t}'"))
+        })
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(v.len() == n, "expected {n} comma-separated precisions, got {}", v.len());
+    Ok(v)
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let dir = args.get_or("artifacts", "artifacts");
+
+    match cmd {
+        "info" => {
+            let arts = mohaq::runtime::Artifacts::load(dir)?;
+            println!("artifact bundle: {}", arts.dir.display());
+            println!("  layers: {:?}", arts.layer_names);
+            println!(
+                "  lowered batch {} x seq {} x feat {}, {} classes",
+                arts.batch, arts.seq_len, arts.feat_dim, arts.num_classes
+            );
+            println!(
+                "  splits: train {} seqs, val {}x{} seqs, test {} seqs",
+                arts.train.num_seqs,
+                arts.val_subsets.len(),
+                arts.val_subsets.first().map(|s| s.num_seqs).unwrap_or(0),
+                arts.test.num_seqs
+            );
+            println!(
+                "  baseline: val {:.2}% (16-bit {:.2}%), test {:.2}%",
+                arts.baseline.val_err * 100.0,
+                arts.baseline.val_err_16bit * 100.0,
+                arts.baseline.test_err * 100.0
+            );
+            println!("  params: {} tensors", arts.tensors.len());
+        }
+        "table4" => {
+            let arts = mohaq::runtime::Artifacts::load(dir)?;
+            println!("{}", arts.model.table4());
+        }
+        "eval" => {
+            let arts = Rc::new(mohaq::runtime::Artifacts::load(dir)?);
+            let n = arts.layer_names.len();
+            let w = parse_bits_list(args.get("w").context("--w required")?, n)?;
+            let a = match args.get("a") {
+                Some(s) => parse_bits_list(s, n)?,
+                None => w.clone(),
+            };
+            let qc = QuantConfig { w_bits: w, a_bits: a };
+            let rt = mohaq::runtime::Runtime::cpu()?;
+            let mut eval = mohaq::eval::EvalService::new(&rt, arts.clone())?;
+            let val = eval.val_error(&qc, 0)?;
+            let test = eval.test_error(&qc, 0)?;
+            println!("config      : {}", qc.display_wa());
+            println!("WER_V       : {:.2}%", val * 100.0);
+            println!("WER_T       : {:.2}%", test * 100.0);
+            println!("Cp_r        : {:.1}x", arts.model.compression_ratio(&qc.w_bits));
+            println!(
+                "size        : {:.3} MB",
+                arts.model.size_bytes(&qc.w_bits) / (1024.0 * 1024.0)
+            );
+        }
+        "search" => {
+            let arts = Rc::new(mohaq::runtime::Artifacts::load(dir)?);
+            let rt = mohaq::runtime::Runtime::cpu()?;
+            let mut spec = if let Some(cfg) = args.get("config") {
+                mohaq::config::spec_from_file(cfg)?
+            } else {
+                match args.get_or("exp", "exp1") {
+                    "exp1" => ExperimentSpec::exp1(),
+                    "exp2" => ExperimentSpec::exp2_silago(),
+                    "exp3" => ExperimentSpec::exp3_bitfusion(args.has("beacon")),
+                    other => anyhow::bail!("unknown experiment '{other}'"),
+                }
+            };
+            if let Some(g) = args.get("gens") {
+                spec.ga.generations = g.parse()?;
+            }
+            spec.ga.seed = args.get_u64("seed", spec.ga.seed);
+            let outcome = run_search(&spec, arts.clone(), &rt, true)?;
+            println!(
+                "\n{}",
+                report::render_table(&outcome.rows, &baseline_rows(&arts), &arts)
+            );
+            println!("{}", report::summary_md(&outcome));
+            if let Some(out_dir) = args.get("out") {
+                std::fs::create_dir_all(out_dir)?;
+                report::write_front_csv(format!("{out_dir}/front.csv"), &outcome.rows)?;
+                report::write_records_csv(format!("{out_dir}/records.csv"), &outcome)?;
+                println!("wrote {out_dir}/");
+            }
+        }
+        _ => {
+            println!("mohaq — Multi-Objective Hardware-Aware Quantization");
+            println!("usage: mohaq <info|table4|eval|search> [--artifacts DIR] ...");
+            println!("  mohaq eval --w 4,4,4,2,4,4,4,4 [--a 16,8,...]");
+            println!("  mohaq search --exp exp3 --beacon --gens 60 --out out/exp3");
+            println!("  mohaq search --config my_experiment.json");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,141 @@
+//! Baseline search strategies for the ablation benches: pure random search
+//! and a weighted-sum single-objective GA. The paper argues MOOP beats
+//! single-objective formulations (§1); bench_moo quantifies that on our
+//! problems via hypervolume at equal evaluation budgets.
+
+use super::individual::Individual;
+use super::problem::Problem;
+use crate::util::rng::Rng;
+
+/// Evaluate `budget` uniform-random genomes; returns all evaluated
+/// individuals (callers extract the front).
+pub fn random_search(problem: &mut dyn Problem, budget: usize, seed: u64) -> Vec<Individual> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(budget);
+    for _ in 0..budget {
+        let genome: Vec<i64> = (0..problem.num_vars())
+            .map(|i| {
+                let (lo, hi) = problem.var_range(i);
+                rng.range(lo, hi)
+            })
+            .collect();
+        let e = problem.evaluate(&genome);
+        let mut ind = Individual::new(genome);
+        ind.objectives = e.objectives;
+        ind.violation = e.violation;
+        out.push(ind);
+    }
+    out
+}
+
+/// Single-objective GA on a fixed weighted sum of the objectives
+/// (normalized weights). Returns every evaluated individual.
+pub fn weighted_sum_ga(
+    problem: &mut dyn Problem,
+    weights: &[f64],
+    pop_size: usize,
+    generations: usize,
+    seed: u64,
+) -> Vec<Individual> {
+    assert_eq!(weights.len(), problem.num_objectives());
+    let mut rng = Rng::new(seed);
+    let score = |ind: &Individual| -> f64 {
+        let s: f64 = ind.objectives.iter().zip(weights).map(|(o, w)| o * w).sum();
+        s + ind.violation * 1e6 // heavy penalty for infeasibility
+    };
+
+    let mut history: Vec<Individual> = Vec::new();
+    let mut pop: Vec<Individual> = (0..pop_size)
+        .map(|_| {
+            let genome: Vec<i64> = (0..problem.num_vars())
+                .map(|i| {
+                    let (lo, hi) = problem.var_range(i);
+                    rng.range(lo, hi)
+                })
+                .collect();
+            let e = problem.evaluate(&genome);
+            let mut ind = Individual::new(genome);
+            ind.objectives = e.objectives;
+            ind.violation = e.violation;
+            ind
+        })
+        .collect();
+    history.extend(pop.iter().cloned());
+
+    for _ in 0..generations {
+        let mut next = Vec::with_capacity(pop_size);
+        for _ in 0..pop_size {
+            // Tournament of 2 on the scalar score.
+            let a = &pop[rng.below(pop.len())];
+            let b = &pop[rng.below(pop.len())];
+            let parent1 = if score(a) <= score(b) { a } else { b };
+            let c = &pop[rng.below(pop.len())];
+            let d = &pop[rng.below(pop.len())];
+            let parent2 = if score(c) <= score(d) { c } else { d };
+            let n = parent1.genome.len();
+            let mut genome: Vec<i64> = (0..n)
+                .map(|i| if rng.bool(0.5) { parent1.genome[i] } else { parent2.genome[i] })
+                .collect();
+            let pm = 1.0 / n.max(1) as f64;
+            for (i, g) in genome.iter_mut().enumerate() {
+                if rng.bool(pm) {
+                    let (lo, hi) = problem.var_range(i);
+                    *g = rng.range(lo, hi);
+                }
+            }
+            let e = problem.evaluate(&genome);
+            let mut ind = Individual::new(genome);
+            ind.objectives = e.objectives;
+            ind.violation = e.violation;
+            next.push(ind);
+        }
+        history.extend(next.iter().cloned());
+        // Elitist replacement: keep best pop_size of parents+children.
+        pop.extend(next);
+        pop.sort_by(|a, b| score(a).partial_cmp(&score(b)).unwrap());
+        pop.truncate(pop_size);
+    }
+    history
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moo::problems::{Zdt, ZdtVariant};
+    use crate::pareto::pareto_front_indices;
+
+    #[test]
+    fn random_search_respects_budget_and_ranges() {
+        let mut p = Zdt::new(ZdtVariant::Zdt1, 5, 32);
+        let all = random_search(&mut p, 100, 7);
+        assert_eq!(all.len(), 100);
+        for ind in &all {
+            for &g in &ind.genome {
+                assert!((0..=32).contains(&g));
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_sum_improves_over_random_on_its_scalar() {
+        let mut p = Zdt::new(ZdtVariant::Zdt1, 8, 64);
+        let w = [0.5, 0.5];
+        let ga = weighted_sum_ga(&mut p, &w, 20, 20, 3);
+        let mut p2 = Zdt::new(ZdtVariant::Zdt1, 8, 64);
+        let rnd = random_search(&mut p2, ga.len(), 3);
+        let best = |set: &[Individual]| {
+            set.iter()
+                .map(|i| i.objectives[0] * 0.5 + i.objectives[1] * 0.5)
+                .fold(f64::INFINITY, f64::min)
+        };
+        assert!(best(&ga) <= best(&rnd));
+    }
+
+    #[test]
+    fn random_front_is_nonempty() {
+        let mut p = Zdt::new(ZdtVariant::Zdt1, 5, 32);
+        let all = random_search(&mut p, 50, 11);
+        let pts: Vec<Vec<f64>> = all.iter().map(|i| i.objectives.clone()).collect();
+        assert!(!pareto_front_indices(&pts).is_empty());
+    }
+}

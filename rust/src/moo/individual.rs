@@ -1,0 +1,81 @@
+//! GA individual: genome + evaluation + NSGA-II bookkeeping.
+
+#[derive(Debug, Clone)]
+pub struct Individual {
+    pub genome: Vec<i64>,
+    pub objectives: Vec<f64>,
+    pub violation: f64,
+    /// Non-domination rank (0 = best front), assigned by sort::fast_nondominated_sort.
+    pub rank: usize,
+    /// Crowding distance within its front.
+    pub crowding: f64,
+}
+
+impl Individual {
+    pub fn new(genome: Vec<i64>) -> Self {
+        Individual {
+            genome,
+            objectives: Vec::new(),
+            violation: 0.0,
+            rank: usize::MAX,
+            crowding: 0.0,
+        }
+    }
+
+    pub fn feasible(&self) -> bool {
+        self.violation <= 0.0
+    }
+
+    /// Binary-tournament comparison key (Deb 2002): constrained-domination
+    /// rank first, then crowding distance (larger wins).
+    pub fn tournament_better(&self, other: &Individual) -> bool {
+        match (self.feasible(), other.feasible()) {
+            (true, false) => true,
+            (false, true) => false,
+            (false, false) => self.violation < other.violation,
+            (true, true) => {
+                if self.rank != other.rank {
+                    self.rank < other.rank
+                } else {
+                    self.crowding > other.crowding
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ind(rank: usize, crowding: f64, violation: f64) -> Individual {
+        Individual {
+            genome: vec![],
+            objectives: vec![],
+            violation,
+            rank,
+            crowding,
+        }
+    }
+
+    #[test]
+    fn feasible_beats_infeasible() {
+        assert!(ind(5, 0.0, 0.0).tournament_better(&ind(0, 9.0, 1.0)));
+    }
+
+    #[test]
+    fn lower_rank_wins() {
+        assert!(ind(0, 0.0, 0.0).tournament_better(&ind(1, 9.0, 0.0)));
+    }
+
+    #[test]
+    fn crowding_breaks_rank_ties() {
+        assert!(ind(1, 2.0, 0.0).tournament_better(&ind(1, 1.0, 0.0)));
+        assert!(!ind(1, 1.0, 0.0).tournament_better(&ind(1, 2.0, 0.0)));
+    }
+
+    #[test]
+    fn smaller_violation_wins_among_infeasible() {
+        assert!(ind(0, 0.0, 0.5).tournament_better(&ind(0, 0.0, 1.0)));
+    }
+}

@@ -1,0 +1,14 @@
+//! Multi-objective optimization engine: NSGA-II (built from scratch — the
+//! paper uses PYMOO's implementation; ours follows the same Deb-2002
+//! algorithm), test problems, and single-objective/random baselines.
+
+pub mod baselines;
+pub mod individual;
+pub mod nsga2;
+pub mod problem;
+pub mod problems;
+pub mod sort;
+
+pub use individual::Individual;
+pub use nsga2::{GenerationStats, Nsga2, Nsga2Config};
+pub use problem::{Evaluation, Problem};

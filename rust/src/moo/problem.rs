@@ -1,0 +1,51 @@
+//! The optimization-problem abstraction consumed by the GA engines.
+
+/// Result of evaluating one candidate genome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Evaluation {
+    /// Objective values, ALL minimized (negate maximization objectives,
+    /// as the paper does for speedup — §4.2).
+    pub objectives: Vec<f64>,
+    /// Total constraint violation; <= 0 means feasible. The paper's
+    /// feasibility area (error <= baseline + 8pp) and SRAM-size constraint
+    /// both land here.
+    pub violation: f64,
+}
+
+impl Evaluation {
+    pub fn feasible(&self) -> bool {
+        self.violation <= 0.0
+    }
+}
+
+/// An integer-genome multi-objective problem (the paper encodes precisions
+/// as discrete values 1..4 — §4.2; ZDT test problems discretize [0,1]).
+///
+/// `evaluate` takes `&mut self` so implementations can cache results or
+/// mutate search-time state (the beacon list in MOHAQ's Algorithm 1 grows
+/// *during* evaluation).
+pub trait Problem {
+    fn num_vars(&self) -> usize;
+    fn num_objectives(&self) -> usize;
+    /// Inclusive gene range for variable `i`.
+    fn var_range(&self, i: usize) -> (i64, i64);
+    fn evaluate(&mut self, genome: &[i64]) -> Evaluation;
+
+    /// Optional human-readable objective names (report tables).
+    fn objective_names(&self) -> Vec<String> {
+        (0..self.num_objectives()).map(|i| format!("f{i}")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feasibility_threshold() {
+        let e = Evaluation { objectives: vec![1.0], violation: 0.0 };
+        assert!(e.feasible());
+        let e = Evaluation { objectives: vec![1.0], violation: 1e-9 };
+        assert!(!e.feasible());
+    }
+}

@@ -1,0 +1,147 @@
+//! Fast non-dominated sorting (Deb et al. 2002, §III-A) with
+//! constrained-domination, plus per-front crowding assignment.
+
+use super::individual::Individual;
+use crate::pareto::{constrained_dominates, crowding_distances};
+
+/// Assign `rank` to every individual and return the fronts (indices into
+/// `pop`), best front first. O(m n^2) as in the paper.
+pub fn fast_nondominated_sort(pop: &mut [Individual]) -> Vec<Vec<usize>> {
+    let n = pop.len();
+    let mut dominated_by: Vec<Vec<usize>> = vec![Vec::new(); n]; // S_p
+    let mut dom_count = vec![0usize; n]; // n_p
+    let mut fronts: Vec<Vec<usize>> = Vec::new();
+    let mut first = Vec::new();
+
+    for p in 0..n {
+        for q in 0..n {
+            if p == q {
+                continue;
+            }
+            if constrained_dominates(
+                &pop[p].objectives,
+                pop[p].violation,
+                &pop[q].objectives,
+                pop[q].violation,
+            ) {
+                dominated_by[p].push(q);
+            } else if constrained_dominates(
+                &pop[q].objectives,
+                pop[q].violation,
+                &pop[p].objectives,
+                pop[p].violation,
+            ) {
+                dom_count[p] += 1;
+            }
+        }
+        if dom_count[p] == 0 {
+            pop[p].rank = 0;
+            first.push(p);
+        }
+    }
+    fronts.push(first);
+
+    let mut i = 0;
+    while !fronts[i].is_empty() {
+        let mut next = Vec::new();
+        for &p in &fronts[i] {
+            for &q in &dominated_by[p] {
+                dom_count[q] -= 1;
+                if dom_count[q] == 0 {
+                    pop[q].rank = i + 1;
+                    next.push(q);
+                }
+            }
+        }
+        i += 1;
+        fronts.push(next);
+    }
+    fronts.pop(); // drop the trailing empty front
+    fronts
+}
+
+/// Assign crowding distances front-by-front.
+pub fn assign_crowding(pop: &mut [Individual], fronts: &[Vec<usize>]) {
+    for front in fronts {
+        let pts: Vec<Vec<f64>> = front.iter().map(|&i| pop[i].objectives.clone()).collect();
+        let d = crowding_distances(&pts);
+        for (k, &i) in front.iter().enumerate() {
+            pop[i].crowding = d[k];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ind(objs: &[f64], violation: f64) -> Individual {
+        Individual {
+            genome: vec![],
+            objectives: objs.to_vec(),
+            violation,
+            rank: usize::MAX,
+            crowding: 0.0,
+        }
+    }
+
+    #[test]
+    fn ranks_three_layer_population() {
+        let mut pop = vec![
+            ind(&[1.0, 1.0], 0.0), // front 0
+            ind(&[2.0, 2.0], 0.0), // front 1
+            ind(&[3.0, 3.0], 0.0), // front 2
+            ind(&[0.5, 3.5], 0.0), // front 0 (trade-off)
+        ];
+        let fronts = fast_nondominated_sort(&mut pop);
+        assert_eq!(fronts.len(), 3);
+        assert_eq!(pop[0].rank, 0);
+        assert_eq!(pop[3].rank, 0);
+        assert_eq!(pop[1].rank, 1);
+        assert_eq!(pop[2].rank, 2);
+    }
+
+    #[test]
+    fn infeasible_fall_behind() {
+        let mut pop = vec![
+            ind(&[5.0, 5.0], 0.0), // feasible, should be front 0
+            ind(&[1.0, 1.0], 2.0), // infeasible despite better objectives
+            ind(&[1.0, 1.0], 1.0), // infeasible, smaller violation
+        ];
+        let fronts = fast_nondominated_sort(&mut pop);
+        assert_eq!(pop[0].rank, 0);
+        assert_eq!(pop[2].rank, 1);
+        assert_eq!(pop[1].rank, 2);
+        assert_eq!(fronts[0], vec![0]);
+    }
+
+    #[test]
+    fn single_front_when_all_tradeoff() {
+        let mut pop = vec![
+            ind(&[1.0, 4.0], 0.0),
+            ind(&[2.0, 3.0], 0.0),
+            ind(&[3.0, 2.0], 0.0),
+            ind(&[4.0, 1.0], 0.0),
+        ];
+        let fronts = fast_nondominated_sort(&mut pop);
+        assert_eq!(fronts.len(), 1);
+        assert!(pop.iter().all(|p| p.rank == 0));
+    }
+
+    #[test]
+    fn crowding_assigned_per_front() {
+        let mut pop = vec![
+            ind(&[1.0, 4.0], 0.0),
+            ind(&[2.0, 3.0], 0.0),
+            ind(&[3.0, 2.0], 0.0),
+            ind(&[4.0, 1.0], 0.0),
+            ind(&[5.0, 5.0], 0.0), // second front
+        ];
+        let fronts = fast_nondominated_sort(&mut pop);
+        assign_crowding(&mut pop, &fronts);
+        assert!(pop[0].crowding.is_infinite());
+        assert!(pop[3].crowding.is_infinite());
+        assert!(pop[1].crowding.is_finite());
+        assert!(pop[4].crowding.is_infinite()); // singleton front
+    }
+}

@@ -1,0 +1,139 @@
+//! Hypervolume indicator (minimization convention, w.r.t. a reference
+//! point that every front member must dominate). Exact algorithms for 2-D
+//! (sort-sweep) and 3-D (dimension-sweep); used to compare inference-only
+//! vs beacon-based fronts and in the moo ablation benches.
+
+use super::pareto_front_indices;
+
+/// 2-D hypervolume: area dominated by `points` up to `reference`.
+pub fn hypervolume_2d(points: &[Vec<f64>], reference: &[f64; 2]) -> f64 {
+    let front: Vec<&Vec<f64>> = pareto_front_indices(points)
+        .into_iter()
+        .map(|i| &points[i])
+        .filter(|p| p[0] < reference[0] && p[1] < reference[1])
+        .collect();
+    if front.is_empty() {
+        return 0.0;
+    }
+    let mut sorted: Vec<&Vec<f64>> = front;
+    sorted.sort_by(|a, b| a[0].partial_cmp(&b[0]).unwrap());
+    let mut hv = 0.0;
+    let mut prev_y = reference[1];
+    for p in sorted {
+        // Non-dominated + sorted by x ascending => y strictly descending.
+        let width = reference[0] - p[0];
+        let height = prev_y - p[1];
+        if height > 0.0 {
+            hv += width * height;
+            prev_y = p[1];
+        }
+    }
+    hv
+}
+
+/// 3-D hypervolume by sweeping the third objective and accumulating 2-D
+/// slabs (HSO-style). Exact for modest front sizes (O(n^2 log n)).
+pub fn hypervolume_3d(points: &[Vec<f64>], reference: &[f64; 3]) -> f64 {
+    let mut front: Vec<&Vec<f64>> = pareto_front_indices(points)
+        .into_iter()
+        .map(|i| &points[i])
+        .filter(|p| p[0] < reference[0] && p[1] < reference[1] && p[2] < reference[2])
+        .collect();
+    if front.is_empty() {
+        return 0.0;
+    }
+    front.sort_by(|a, b| a[2].partial_cmp(&b[2]).unwrap());
+    let mut hv = 0.0;
+    // Sweep z from each point's level to the next; the slab cross-section
+    // is the 2-D hypervolume of all points at or below the current z.
+    for i in 0..front.len() {
+        let z_lo = front[i][2];
+        let z_hi = if i + 1 < front.len() {
+            front[i + 1][2]
+        } else {
+            reference[2]
+        };
+        if z_hi <= z_lo {
+            continue;
+        }
+        let active: Vec<Vec<f64>> = front[..=i]
+            .iter()
+            .map(|p| vec![p[0], p[1]])
+            .collect();
+        hv += hypervolume_2d(&active, &[reference[0], reference[1]]) * (z_hi - z_lo);
+    }
+    hv
+}
+
+/// Dispatch on dimension (2 or 3 — all the paper's fronts).
+pub fn hypervolume(points: &[Vec<f64>], reference: &[f64]) -> f64 {
+    match reference.len() {
+        2 => hypervolume_2d(points, &[reference[0], reference[1]]),
+        3 => hypervolume_3d(points, &[reference[0], reference[1], reference[2]]),
+        d => panic!("hypervolume: unsupported dimension {d}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_point_2d() {
+        let hv = hypervolume_2d(&[vec![1.0, 1.0]], &[2.0, 2.0]);
+        assert!((hv - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn staircase_2d() {
+        let pts = vec![vec![1.0, 3.0], vec![2.0, 2.0], vec![3.0, 1.0]];
+        // Union of three rectangles to ref (4,4): 1x(4-3)... compute:
+        // sorted by x: (1,3): (4-1)*(4-3)=3; (2,2): (4-2)*(3-2)=2;
+        // (3,1): (4-3)*(2-1)=1 => 6.
+        let hv = hypervolume_2d(&pts, &[4.0, 4.0]);
+        assert!((hv - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dominated_points_do_not_add() {
+        let base = vec![vec![1.0, 1.0]];
+        let with_dominated = vec![vec![1.0, 1.0], vec![1.5, 1.5]];
+        let r = [3.0, 3.0];
+        assert!(
+            (hypervolume_2d(&base, &r) - hypervolume_2d(&with_dominated, &r)).abs()
+                < 1e-12
+        );
+    }
+
+    #[test]
+    fn out_of_reference_ignored() {
+        let hv = hypervolume_2d(&[vec![5.0, 5.0]], &[2.0, 2.0]);
+        assert_eq!(hv, 0.0);
+    }
+
+    #[test]
+    fn single_point_3d_is_box() {
+        let hv = hypervolume_3d(&[vec![1.0, 1.0, 1.0]], &[2.0, 3.0, 4.0]);
+        assert!((hv - 1.0 * 2.0 * 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn two_disjoint_boxes_3d() {
+        // Two points trading off obj0 vs obj2.
+        let pts = vec![vec![0.0, 0.0, 1.0], vec![1.0, 0.0, 0.0]];
+        let r = [2.0, 2.0, 2.0];
+        // p0 dominates box [0,2]x[0,2]x[1,2] = 2*2*1 = 4
+        // p1 dominates box [1,2]x[0,2]x[0,2] = 1*2*2 = 4
+        // overlap [1,2]x[0,2]x[1,2] = 1*2*1 = 2 => union = 6
+        let hv = hypervolume_3d(&pts, &r);
+        assert!((hv - 6.0).abs() < 1e-12, "hv={hv}");
+    }
+
+    #[test]
+    fn hv_monotone_in_better_points() {
+        let worse = vec![vec![2.0, 2.0]];
+        let better = vec![vec![1.0, 1.0]];
+        let r = [4.0, 4.0];
+        assert!(hypervolume_2d(&better, &r) > hypervolume_2d(&worse, &r));
+    }
+}

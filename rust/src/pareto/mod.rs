@@ -1,0 +1,174 @@
+//! Pareto-set utilities: dominance, front extraction, quality metrics.
+//!
+//! All objectives are MINIMIZED by convention (the paper negates speedup
+//! to fit this, §4.2 — we do the same in the hardware objective wrappers).
+
+pub mod hypervolume;
+
+/// True iff `a` Pareto-dominates `b`: no worse in every objective and
+/// strictly better in at least one.
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strictly_better = false;
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly_better = true;
+        }
+    }
+    strictly_better
+}
+
+/// Constrained-domination (Deb 2002 §VI): a feasible solution dominates an
+/// infeasible one; among infeasible, lower total violation dominates; among
+/// feasible, plain Pareto dominance applies.
+pub fn constrained_dominates(
+    a: &[f64],
+    a_violation: f64,
+    b: &[f64],
+    b_violation: f64,
+) -> bool {
+    let a_feas = a_violation <= 0.0;
+    let b_feas = b_violation <= 0.0;
+    match (a_feas, b_feas) {
+        (true, false) => true,
+        (false, true) => false,
+        (false, false) => a_violation < b_violation,
+        (true, true) => dominates(a, b),
+    }
+}
+
+/// Indices of the non-dominated subset of `points` (the Pareto front).
+/// O(n^2 m); n is small (populations, report sets).
+pub fn pareto_front_indices(points: &[Vec<f64>]) -> Vec<usize> {
+    (0..points.len())
+        .filter(|&i| {
+            !points
+                .iter()
+                .enumerate()
+                .any(|(j, pj)| j != i && dominates(pj, &points[i]))
+        })
+        .collect()
+}
+
+/// Crowding distance per point within one front (NSGA-II §III-B). Extreme
+/// points get +inf so they survive every truncation.
+pub fn crowding_distances(points: &[Vec<f64>]) -> Vec<f64> {
+    let n = points.len();
+    if n == 0 {
+        return vec![];
+    }
+    let m = points[0].len();
+    let mut dist = vec![0.0f64; n];
+    if n <= 2 {
+        return vec![f64::INFINITY; n];
+    }
+    for obj in 0..m {
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| points[a][obj].partial_cmp(&points[b][obj]).unwrap());
+        let lo = points[idx[0]][obj];
+        let hi = points[idx[n - 1]][obj];
+        dist[idx[0]] = f64::INFINITY;
+        dist[idx[n - 1]] = f64::INFINITY;
+        let span = hi - lo;
+        if span <= 0.0 {
+            continue;
+        }
+        for k in 1..n - 1 {
+            let gap = points[idx[k + 1]][obj] - points[idx[k - 1]][obj];
+            dist[idx[k]] += gap / span;
+        }
+    }
+    dist
+}
+
+/// Generational distance-style spread: mean nearest-neighbour gap of a
+/// front (used by the moo ablation benches).
+pub fn mean_nearest_gap(points: &[Vec<f64>]) -> f64 {
+    let n = points.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mut total = 0.0;
+    for i in 0..n {
+        let mut best = f64::INFINITY;
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            let d: f64 = points[i]
+                .iter()
+                .zip(&points[j])
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            best = best.min(d);
+        }
+        total += best;
+    }
+    total / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance_basics() {
+        assert!(dominates(&[1.0, 1.0], &[2.0, 2.0]));
+        assert!(dominates(&[1.0, 2.0], &[1.0, 3.0]));
+        assert!(!dominates(&[1.0, 2.0], &[2.0, 1.0])); // trade-off
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0])); // equal
+    }
+
+    #[test]
+    fn constrained_dominance_prefers_feasible() {
+        assert!(constrained_dominates(&[9.0], 0.0, &[1.0], 0.5));
+        assert!(!constrained_dominates(&[1.0], 0.5, &[9.0], 0.0));
+        assert!(constrained_dominates(&[9.0], 0.1, &[1.0], 0.5));
+        assert!(constrained_dominates(&[1.0], 0.0, &[2.0], 0.0));
+    }
+
+    #[test]
+    fn front_extraction() {
+        let pts = vec![
+            vec![1.0, 4.0],
+            vec![2.0, 3.0],
+            vec![3.0, 2.0],
+            vec![4.0, 1.0],
+            vec![3.0, 3.0], // dominated by (2,3) and (3,2)
+        ];
+        assert_eq!(pareto_front_indices(&pts), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn crowding_extremes_infinite() {
+        let pts = vec![
+            vec![0.0, 3.0],
+            vec![1.0, 2.0],
+            vec![2.0, 1.0],
+            vec![3.0, 0.0],
+        ];
+        let d = crowding_distances(&pts);
+        assert!(d[0].is_infinite() && d[3].is_infinite());
+        assert!(d[1].is_finite() && d[2].is_finite());
+        // Symmetric layout -> equal interior crowding.
+        assert!((d[1] - d[2]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn crowding_small_fronts_all_infinite() {
+        assert!(crowding_distances(&[vec![1.0, 2.0]]).iter().all(|d| d.is_infinite()));
+        assert!(crowding_distances(&[vec![1.0, 2.0], vec![2.0, 1.0]])
+            .iter()
+            .all(|d| d.is_infinite()));
+    }
+
+    #[test]
+    fn nearest_gap_positive_for_spread_points() {
+        let pts = vec![vec![0.0, 0.0], vec![1.0, 0.0], vec![2.0, 0.0]];
+        assert!((mean_nearest_gap(&pts) - 1.0).abs() < 1e-12);
+    }
+}

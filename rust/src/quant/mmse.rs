@@ -1,0 +1,129 @@
+//! Rust mirror of the MMSE clip search (python/compile/quantize.py) —
+//! used for cross-language consistency tests and by the fig5/beacon
+//! tooling when it needs to re-derive clips for ad-hoc tensors.
+
+use crate::quant::Bits;
+
+/// Symmetric linear fake quantization (same semantics as the L1 kernel).
+pub fn fake_quant(x: f32, clip: f64, bits: Bits) -> f32 {
+    if bits == Bits::B32 {
+        return x;
+    }
+    let levels = 2f64.powi(bits.bits() as i32 - 1);
+    let delta = clip / levels;
+    let q = (x as f64 / delta).round().clamp(-levels, levels - 1.0);
+    (q * delta) as f32
+}
+
+/// Grid-search the clip threshold minimizing quantization MSE — identical
+/// grid (60 points over (0, max|x|]) to the Python calibration.
+pub fn mmse_clip(xs: &[f32], bits: Bits, n_grid: usize) -> f64 {
+    let amax = xs.iter().fold(0f32, |m, &v| m.max(v.abs())) as f64;
+    if amax == 0.0 || xs.is_empty() {
+        return 1e-8;
+    }
+    let mut best = (amax, f64::INFINITY);
+    for k in 1..=n_grid {
+        let clip = amax * k as f64 / n_grid as f64;
+        let mse: f64 = xs
+            .iter()
+            .map(|&v| {
+                let e = (v - fake_quant(v, clip, bits)) as f64;
+                e * e
+            })
+            .sum::<f64>()
+            / xs.len() as f64;
+        if mse < best.1 {
+            best = (clip, mse);
+        }
+    }
+    best.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check_prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fq_is_idempotent() {
+        check_prop(
+            "fq_idempotent",
+            500,
+            |r: &mut Rng| (r.normal() as f32 * 2.0, 1.0 + r.f64() * 3.0),
+            |&(x, clip)| {
+                for bits in [Bits::B2, Bits::B4, Bits::B8, Bits::B16] {
+                    let once = fake_quant(x, clip, bits);
+                    let twice = fake_quant(once, clip, bits);
+                    if (once - twice).abs() > 1e-6 {
+                        return Err(format!("not idempotent at {bits}: {once} vs {twice}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn fq_error_bounded_by_half_delta_inside_clip() {
+        check_prop(
+            "fq_error_bound",
+            500,
+            |r: &mut Rng| (r.f64() as f32 * 0.9, 1.0f64), // x in [0, 0.9), clip 1
+            |&(x, clip)| {
+                for bits in [Bits::B4, Bits::B8] {
+                    let delta = clip / 2f64.powi(bits.bits() as i32 - 1);
+                    let err = (x - fake_quant(x, clip, bits)).abs() as f64;
+                    if err > delta / 2.0 + 1e-9 {
+                        return Err(format!("err {err} > delta/2 {}", delta / 2.0));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn mmse_clips_inside_tail_for_normal_data() {
+        // Gaussian-ish weights: at 4 bits the MSE-optimal clip sits well
+        // inside the max (≈2.6σ for normal data — the paper's outlier
+        // observation, §2.3); at 16 bits it covers nearly the full range.
+        let mut rng = Rng::new(123);
+        let xs: Vec<f32> = (0..20_000).map(|_| rng.normal() as f32).collect();
+        let amax = xs.iter().fold(0f32, |m, &v| m.max(v.abs())) as f64;
+        let clip4 = mmse_clip(&xs, Bits::B4, 60);
+        assert!(clip4 < 0.85 * amax, "clip4={clip4} amax={amax}");
+        let clip16 = mmse_clip(&xs, Bits::B16, 60);
+        assert!(clip16 > clip4, "clip16={clip16} clip4={clip4}");
+    }
+
+    #[test]
+    fn mmse_of_empty_or_zero_is_epsilon() {
+        assert_eq!(mmse_clip(&[], Bits::B4, 60), 1e-8);
+        assert_eq!(mmse_clip(&[0.0, 0.0], Bits::B4, 60), 1e-8);
+    }
+
+    #[test]
+    fn quantized_values_on_grid() {
+        check_prop(
+            "fq_on_grid",
+            300,
+            |r: &mut Rng| r.normal() as f32,
+            |&x| {
+                let clip = 1.5;
+                let bits = Bits::B4;
+                let delta = clip / 8.0;
+                let q = fake_quant(x, clip, bits) as f64;
+                let steps = q / delta;
+                if (steps - steps.round()).abs() > 1e-9 {
+                    return Err(format!("{q} not on grid delta={delta}"));
+                }
+                if !(-8.0 * delta..=7.0 * delta).contains(&q) {
+                    return Err(format!("{q} outside clip range"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

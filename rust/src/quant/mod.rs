@@ -1,0 +1,331 @@
+//! Quantization-domain types: precision enum, genome encode/decode
+//! (paper §4.2: discrete gene values 1..4 for 2/4/8/16 bits), and the
+//! resolution of genomes against calibration tables into the runtime
+//! (Δ, qmin, qmax, enabled) rows the AOT executable consumes.
+
+pub mod mmse;
+
+use std::collections::BTreeMap;
+
+/// A supported precision. B32 is the float baseline (quantization off) —
+/// never searched, only used for baseline rows of the report tables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Bits {
+    B2,
+    B4,
+    B8,
+    B16,
+    B32,
+}
+
+impl Bits {
+    pub fn bits(&self) -> u32 {
+        match self {
+            Bits::B2 => 2,
+            Bits::B4 => 4,
+            Bits::B8 => 8,
+            Bits::B16 => 16,
+            Bits::B32 => 32,
+        }
+    }
+
+    /// Paper gene encoding (§4.2): 2-bit -> 1, 4-bit -> 2, 8-bit -> 3,
+    /// 16-bit -> 4.
+    pub fn to_gene(&self) -> i64 {
+        match self {
+            Bits::B2 => 1,
+            Bits::B4 => 2,
+            Bits::B8 => 3,
+            Bits::B16 => 4,
+            Bits::B32 => panic!("B32 is not searchable"),
+        }
+    }
+
+    pub fn from_gene(g: i64) -> Option<Bits> {
+        match g {
+            1 => Some(Bits::B2),
+            2 => Some(Bits::B4),
+            3 => Some(Bits::B8),
+            4 => Some(Bits::B16),
+            _ => None,
+        }
+    }
+
+    pub fn from_bits(b: u32) -> Option<Bits> {
+        match b {
+            2 => Some(Bits::B2),
+            4 => Some(Bits::B4),
+            8 => Some(Bits::B8),
+            16 => Some(Bits::B16),
+            32 => Some(Bits::B32),
+            _ => None,
+        }
+    }
+
+    /// log2 of the precision — the beacon distance metric operates on
+    /// these (§4.3: "compare the log2 of the precision values").
+    pub fn log2(&self) -> f64 {
+        (self.bits() as f64).log2()
+    }
+
+    pub const SEARCHABLE: [Bits; 4] = [Bits::B2, Bits::B4, Bits::B8, Bits::B16];
+}
+
+impl std::fmt::Display for Bits {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.bits())
+    }
+}
+
+/// A full mixed-precision assignment: weight + activation bits per layer.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct QuantConfig {
+    pub w_bits: Vec<Bits>,
+    pub a_bits: Vec<Bits>,
+}
+
+impl QuantConfig {
+    pub fn uniform(n_layers: usize, w: Bits, a: Bits) -> QuantConfig {
+        QuantConfig { w_bits: vec![w; n_layers], a_bits: vec![a; n_layers] }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.w_bits.len()
+    }
+
+    /// Decode the 2L-gene genome of experiments 1/3 (paper §4.2): genes
+    /// [w_0, a_0, w_1, a_1, ...] — weight and activation per layer.
+    pub fn from_genome_wa(genome: &[i64]) -> Option<QuantConfig> {
+        if genome.len() % 2 != 0 {
+            return None;
+        }
+        let n = genome.len() / 2;
+        let mut w = Vec::with_capacity(n);
+        let mut a = Vec::with_capacity(n);
+        for i in 0..n {
+            w.push(Bits::from_gene(genome[2 * i])?);
+            a.push(Bits::from_gene(genome[2 * i + 1])?);
+        }
+        Some(QuantConfig { w_bits: w, a_bits: a })
+    }
+
+    /// Decode the L-gene genome of the SiLago experiment (W = A per layer).
+    pub fn from_genome_tied(genome: &[i64]) -> Option<QuantConfig> {
+        let bits: Option<Vec<Bits>> =
+            genome.iter().map(|&g| Bits::from_gene(g)).collect();
+        let bits = bits?;
+        Some(QuantConfig { w_bits: bits.clone(), a_bits: bits })
+    }
+
+    pub fn to_genome_wa(&self) -> Vec<i64> {
+        let mut g = Vec::with_capacity(2 * self.w_bits.len());
+        for i in 0..self.w_bits.len() {
+            g.push(self.w_bits[i].to_gene());
+            g.push(self.a_bits[i].to_gene());
+        }
+        g
+    }
+
+    /// Beacon distance (paper §4.3): sum over layers of |log2 w_bits
+    /// difference| — activations are deliberately excluded ("the precision
+    /// of the weights is more important ... we only used the weights
+    /// precisions in the distance computation").
+    pub fn beacon_distance(&self, other: &QuantConfig) -> f64 {
+        self.w_bits
+            .iter()
+            .zip(&other.w_bits)
+            .map(|(a, b)| (a.log2() - b.log2()).abs())
+            .sum()
+    }
+
+    /// Compact display like the paper tables: "8/16 4/16 ..." per layer.
+    pub fn display_wa(&self) -> String {
+        self.w_bits
+            .iter()
+            .zip(&self.a_bits)
+            .map(|(w, a)| format!("{w}/{a}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// Per-(layer, bits) clip thresholds loaded from calibration.json.
+pub type ClipTable = BTreeMap<String, BTreeMap<u32, f64>>;
+
+/// A runtime quant-parameter row: [delta, qmin, qmax, enabled] — must stay
+/// bit-identical in meaning to python/compile/quantize.py::qparams_row.
+pub fn qparams_row(clip: f64, bits: Bits) -> [f32; 4] {
+    if bits == Bits::B32 {
+        return [1.0, -1.0, 1.0, 0.0];
+    }
+    let levels = 2f64.powi(bits.bits() as i32 - 1);
+    [
+        (clip / levels) as f32,
+        (-levels) as f32,
+        (levels - 1.0) as f32,
+        1.0,
+    ]
+}
+
+/// Resolve a QuantConfig to the flattened wq/aq matrices ((L,4) row-major)
+/// fed to the AOT executable.
+pub fn resolve_qparams(
+    qc: &QuantConfig,
+    layer_names: &[String],
+    w_clips: &ClipTable,
+    a_clips: &ClipTable,
+) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+    anyhow::ensure!(
+        qc.num_layers() == layer_names.len(),
+        "config has {} layers, model has {}",
+        qc.num_layers(),
+        layer_names.len()
+    );
+    let mut wq = Vec::with_capacity(qc.num_layers() * 4);
+    let mut aq = Vec::with_capacity(qc.num_layers() * 4);
+    for (i, name) in layer_names.iter().enumerate() {
+        let lookup = |table: &ClipTable, bits: Bits| -> anyhow::Result<f64> {
+            if bits == Bits::B32 {
+                return Ok(1.0);
+            }
+            table
+                .get(name)
+                .and_then(|m| m.get(&bits.bits()))
+                .copied()
+                .ok_or_else(|| {
+                    anyhow::anyhow!("no clip for layer {name} bits {bits}")
+                })
+        };
+        wq.extend(qparams_row(lookup(w_clips, qc.w_bits[i])?, qc.w_bits[i]));
+        aq.extend(qparams_row(lookup(a_clips, qc.a_bits[i])?, qc.a_bits[i]));
+    }
+    Ok((wq, aq))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check_prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gene_encoding_roundtrip() {
+        for b in Bits::SEARCHABLE {
+            assert_eq!(Bits::from_gene(b.to_gene()), Some(b));
+        }
+        assert_eq!(Bits::from_gene(0), None);
+        assert_eq!(Bits::from_gene(5), None);
+    }
+
+    #[test]
+    fn genome_wa_roundtrip_prop() {
+        check_prop(
+            "genome_wa_roundtrip",
+            200,
+            |r: &mut Rng| {
+                let n = 1 + r.below(12);
+                (0..2 * n).map(|_| r.range(1, 4)).collect::<Vec<i64>>()
+            },
+            |genome| {
+                let qc = QuantConfig::from_genome_wa(genome)
+                    .ok_or("decode failed".to_string())?;
+                if qc.to_genome_wa() == *genome {
+                    Ok(())
+                } else {
+                    Err("roundtrip mismatch".to_string())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn tied_genome_ties_wa() {
+        let qc = QuantConfig::from_genome_tied(&[1, 2, 3, 4]).unwrap();
+        assert_eq!(qc.w_bits, qc.a_bits);
+        assert_eq!(qc.w_bits, vec![Bits::B2, Bits::B4, Bits::B8, Bits::B16]);
+    }
+
+    #[test]
+    fn beacon_distance_matches_paper_metric() {
+        // log2 scale: |log2(16)-log2(2)| = 3 per layer.
+        let a = QuantConfig::uniform(8, Bits::B16, Bits::B16);
+        let b = QuantConfig::uniform(8, Bits::B2, Bits::B16);
+        assert_eq!(a.beacon_distance(&b), 24.0);
+        // Activations don't contribute.
+        let c = QuantConfig::uniform(8, Bits::B16, Bits::B2);
+        assert_eq!(a.beacon_distance(&c), 0.0);
+    }
+
+    #[test]
+    fn beacon_distance_is_metric_prop() {
+        let gen_cfg = |r: &mut Rng| {
+            QuantConfig::from_genome_tied(
+                &(0..8).map(|_| r.range(1, 4)).collect::<Vec<i64>>(),
+            )
+            .unwrap()
+        };
+        check_prop(
+            "beacon_distance_metric",
+            200,
+            |r: &mut Rng| (gen_cfg(r), gen_cfg(r), gen_cfg(r)),
+            |(a, b, c)| {
+                let (dab, dba) = (a.beacon_distance(b), b.beacon_distance(a));
+                if (dab - dba).abs() > 1e-12 {
+                    return Err("not symmetric".into());
+                }
+                if a.beacon_distance(a) != 0.0 {
+                    return Err("self-distance nonzero".into());
+                }
+                let (dac, dbc) = (a.beacon_distance(c), b.beacon_distance(c));
+                if dac > dab + dbc + 1e-12 {
+                    return Err("triangle inequality violated".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn qparams_row_matches_python_formula() {
+        // python: qparams_row(clip=2.0, bits=4) == [0.25, -8, 7, 1]
+        let row = qparams_row(2.0, Bits::B4);
+        assert_eq!(row, [0.25, -8.0, 7.0, 1.0]);
+        let row = qparams_row(1.0, Bits::B2);
+        assert_eq!(row, [0.5, -2.0, 1.0, 1.0]);
+        let row = qparams_row(3.0, Bits::B32);
+        assert_eq!(row, [1.0, -1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn resolve_uses_per_layer_clips() {
+        let mut w_clips = ClipTable::new();
+        let mut a_clips = ClipTable::new();
+        for (i, name) in ["A", "B"].iter().enumerate() {
+            let mut m = BTreeMap::new();
+            for bits in [2u32, 4, 8, 16] {
+                m.insert(bits, 1.0 + i as f64);
+            }
+            w_clips.insert(name.to_string(), m.clone());
+            a_clips.insert(name.to_string(), m);
+        }
+        let qc = QuantConfig {
+            w_bits: vec![Bits::B4, Bits::B8],
+            a_bits: vec![Bits::B16, Bits::B2],
+        };
+        let names = vec!["A".to_string(), "B".to_string()];
+        let (wq, aq) = resolve_qparams(&qc, &names, &w_clips, &a_clips).unwrap();
+        assert_eq!(wq.len(), 8);
+        assert_eq!(wq[0], 1.0 / 8.0); // layer A, 4-bit, clip 1.0
+        assert_eq!(wq[4], 2.0 / 128.0); // layer B, 8-bit, clip 2.0
+        assert_eq!(aq[1], -32768.0); // layer A act 16-bit qmin
+        assert_eq!(aq[6], 1.0); // layer B act 2-bit qmax
+    }
+
+    #[test]
+    fn resolve_fails_on_missing_layer() {
+        let qc = QuantConfig::uniform(1, Bits::B4, Bits::B4);
+        let names = vec!["X".to_string()];
+        let err = resolve_qparams(&qc, &names, &ClipTable::new(), &ClipTable::new());
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,185 @@
+//! Paper-style reporting: render solution tables (Tables 5-8), emit CSV
+//! series for the figures (5, 7-10), and markdown summaries for
+//! EXPERIMENTS.md.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::coordinator::{SearchOutcome, SolutionRow};
+use crate::runtime::Artifacts;
+
+/// Render a Table-5/6/7/8-style table. Columns adapt to which metrics the
+/// experiment produced (speedup/energy columns appear when present).
+pub fn render_table(rows: &[SolutionRow], baselines: &[SolutionRow], arts: &Artifacts) -> String {
+    let has_speedup = rows.iter().any(|r| r.speedup.is_some());
+    let has_energy = rows.iter().any(|r| r.energy_uj.is_some());
+    let mut s = String::new();
+
+    // Header: layer names then metrics.
+    s.push_str(&format!("{:<10}", "Sol."));
+    for name in &arts.layer_names {
+        s.push_str(&format!("{:>8}", name));
+    }
+    s.push_str(&format!("{:>9}{:>7}", "WER_V", "Cp_r"));
+    if has_speedup {
+        s.push_str(&format!("{:>9}", "Speedup"));
+    }
+    if has_energy {
+        s.push_str(&format!("{:>10}", "Energy"));
+    }
+    s.push_str(&format!("{:>9}{:>11}\n", "WER_T", "params"));
+
+    let mut write_row = |label: &str, r: &SolutionRow| {
+        s.push_str(&format!("{label:<10}"));
+        for i in 0..r.qc.w_bits.len() {
+            s.push_str(&format!(
+                "{:>8}",
+                format!("{}/{}", r.qc.w_bits[i], r.qc.a_bits[i])
+            ));
+        }
+        s.push_str(&format!("{:>8.1}%{:>6.1}x", r.wer_v * 100.0, r.cp_r));
+        if has_speedup {
+            match r.speedup {
+                Some(v) => s.push_str(&format!("{:>8.1}x", v)),
+                None => s.push_str(&format!("{:>9}", "-")),
+            }
+        }
+        if has_energy {
+            match r.energy_uj {
+                Some(v) => s.push_str(&format!("{:>7.2} uJ", v)),
+                None => s.push_str(&format!("{:>10}", "-")),
+            }
+        }
+        s.push_str(&format!("{:>8.1}%{:>11}\n", r.wer_t * 100.0, r.param_set));
+    };
+
+    for (i, r) in baselines.iter().enumerate() {
+        let label = if i == 0 { "Base".to_string() } else { "Base16".to_string() };
+        write_row(&label, r);
+    }
+    for (i, r) in rows.iter().enumerate() {
+        write_row(&format!("S{}", i + 1), r);
+    }
+    s
+}
+
+/// CSV of the Pareto set (figures 7/8/9/10 series).
+pub fn write_front_csv(path: impl AsRef<Path>, rows: &[SolutionRow]) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "wer_v,wer_t,cp_r,size_mb,speedup,energy_uj,genome")?;
+    for r in rows {
+        writeln!(
+            f,
+            "{:.6},{:.6},{:.4},{:.6},{},{},{}",
+            r.wer_v,
+            r.wer_t,
+            r.cp_r,
+            r.size_mb,
+            r.speedup.map(|v| format!("{v:.4}")).unwrap_or_default(),
+            r.energy_uj.map(|v| format!("{v:.6}")).unwrap_or_default(),
+            r.qc.display_wa().replace(' ', "|"),
+        )?;
+    }
+    Ok(())
+}
+
+/// CSV of every evaluated candidate (scatter behind the front).
+pub fn write_records_csv(path: impl AsRef<Path>, outcome: &SearchOutcome) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "base_err,err,set_idx,violation,objectives")?;
+    for r in &outcome.records {
+        writeln!(
+            f,
+            "{:.6},{:.6},{},{:.4},{}",
+            r.base_err,
+            r.err,
+            r.set_idx,
+            r.violation,
+            r.objectives
+                .iter()
+                .map(|o| format!("{o:.5}"))
+                .collect::<Vec<_>>()
+                .join("|")
+        )?;
+    }
+    Ok(())
+}
+
+/// Markdown summary block appended to experiment logs.
+pub fn summary_md(outcome: &SearchOutcome) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("### {}\n\n", outcome.spec_name));
+    s.push_str(&format!(
+        "- evaluations: {} (exec calls {}, cache hits {})\n",
+        outcome.evaluations, outcome.exec_calls, outcome.cache_hits
+    ));
+    s.push_str(&format!("- wall time: {:.1}s\n", outcome.wall_secs));
+    s.push_str(&format!("- pareto solutions: {}\n", outcome.rows.len()));
+    if !outcome.beacons.is_empty() {
+        s.push_str(&format!("- beacons created: {}\n", outcome.beacons.len()));
+        for (qc, steps) in &outcome.beacons {
+            s.push_str(&format!("  - `{qc}` ({steps} steps)\n"));
+        }
+    }
+    if let Some(best) = outcome.rows.first() {
+        s.push_str(&format!(
+            "- best error: {:.2}% (baseline {:.2}%)\n",
+            best.wer_v * 100.0,
+            outcome.baseline_val_err * 100.0
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{Bits, QuantConfig};
+
+    fn row() -> SolutionRow {
+        SolutionRow {
+            qc: QuantConfig::uniform(2, Bits::B4, Bits::B8),
+            wer_v: 0.171,
+            wer_t: 0.183,
+            cp_r: 8.1,
+            size_mb: 0.66,
+            speedup: Some(14.6),
+            energy_uj: None,
+            param_set: "baseline".into(),
+        }
+    }
+
+    fn tiny_arts_names() -> Vec<String> {
+        vec!["L0".into(), "FC".into()]
+    }
+
+    #[test]
+    fn table_renders_all_columns() {
+        // Fake a minimal Artifacts-compatible layer list via ModelDesc.
+        let arts_names = tiny_arts_names();
+        // render_table only uses layer_names; build a fake Artifacts is
+        // heavy, so test the row formatting through a tiny shim:
+        let mut s = String::new();
+        s.push_str(&format!("{:<10}", "Sol."));
+        for n in &arts_names {
+            s.push_str(&format!("{:>8}", n));
+        }
+        assert!(s.contains("L0"));
+        let r = row();
+        assert_eq!(r.qc.display_wa(), "4/8 4/8");
+    }
+
+    #[test]
+    fn csv_writers_produce_files() {
+        let dir = std::env::temp_dir().join("mohaq_report_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("front.csv");
+        write_front_csv(&p, &[row()]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("wer_v,"));
+        assert!(text.contains("14.6"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,304 @@
+//! Artifact bundle loading: manifest.json (single source of truth),
+//! weights.bin, calibration tables and the corpus splits emitted by
+//! ``python -m compile.aot`` (see python/compile/aot.py for the format).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::model::ModelDesc;
+use crate::quant::ClipTable;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct TensorInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub bytes: usize,
+}
+
+/// One corpus split as flat host arrays (sequences x frames x features).
+#[derive(Debug, Clone)]
+pub struct Split {
+    /// (num_seqs, seq_len, feat_dim) row-major f32.
+    pub x: Vec<f32>,
+    /// (num_seqs, seq_len) row-major i32.
+    pub y: Vec<i32>,
+    pub num_seqs: usize,
+}
+
+impl Split {
+    /// Borrow batch `k` of `batch` sequences: (&x, &y) slices.
+    pub fn batch(&self, k: usize, batch: usize, seq_len: usize, feat: usize) -> (&[f32], &[i32]) {
+        let xs = batch * seq_len * feat;
+        let ys = batch * seq_len;
+        (&self.x[k * xs..(k + 1) * xs], &self.y[k * ys..(k + 1) * ys])
+    }
+
+    pub fn num_batches(&self, batch: usize) -> usize {
+        self.num_seqs / batch
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BaselineMetrics {
+    pub val_err_subsets: Vec<f64>,
+    pub val_err: f64,
+    pub test_err: f64,
+    pub val_err_16bit: f64,
+    pub beacon_lr: f64,
+}
+
+/// Everything the coordinator needs from `make artifacts`.
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub manifest: Json,
+    /// Quantizable layer names in genome order.
+    pub layer_names: Vec<String>,
+    pub model: ModelDesc,
+    /// Weight tensors in HLO parameter order (name -> data is `tensors`).
+    pub tensors: Vec<TensorInfo>,
+    pub weights: Vec<Vec<f32>>,
+    pub w_clips: ClipTable,
+    pub a_clips: ClipTable,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub feat_dim: usize,
+    pub num_classes: usize,
+    pub train: Split,
+    /// One Split per validation subset (paper §4.2: error = max over 4).
+    pub val_subsets: Vec<Split>,
+    pub test: Split,
+    pub baseline: BaselineMetrics,
+}
+
+fn read_f32(path: &Path) -> Result<Vec<f32>> {
+    let raw = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    anyhow::ensure!(raw.len() % 4 == 0, "{path:?} not a multiple of 4 bytes");
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn read_i32(path: &Path) -> Result<Vec<i32>> {
+    let raw = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    anyhow::ensure!(raw.len() % 4 == 0, "{path:?} not a multiple of 4 bytes");
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn parse_clip_table(j: &Json) -> Result<ClipTable> {
+    let mut table = ClipTable::new();
+    let obj = j.as_obj().context("clip table is not an object")?;
+    for (layer, bits_map) in obj {
+        let mut inner = BTreeMap::new();
+        for (bits, clip) in bits_map.as_obj().context("clip bits map")? {
+            inner.insert(
+                bits.parse::<u32>().context("clip bits key")?,
+                clip.as_f64().context("clip value")?,
+            );
+        }
+        table.insert(layer.clone(), inner);
+    }
+    Ok(table)
+}
+
+impl Artifacts {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Artifacts> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?} — run `make artifacts` first"))?;
+        let manifest = Json::parse(&manifest_text)
+            .map_err(|e| anyhow::anyhow!("manifest.json: {e}"))?;
+
+        let layer_names: Vec<String> = manifest
+            .req("quant_layers")?
+            .as_arr()
+            .context("quant_layers")?
+            .iter()
+            .filter_map(|v| v.as_str().map(String::from))
+            .collect();
+
+        let dims: Vec<(String, usize, usize)> = manifest
+            .req("layer_dims")?
+            .as_arr()
+            .context("layer_dims")?
+            .iter()
+            .map(|d| {
+                Ok((
+                    d.req("name")?.as_str().context("name")?.to_string(),
+                    d.req("m")?.as_usize().context("m")?,
+                    d.req("n")?.as_usize().context("n")?,
+                ))
+            })
+            .collect::<Result<_>>()?;
+        let model = ModelDesc::from_dims(&dims);
+
+        // Weights.
+        let weights_meta = manifest.req("weights")?;
+        let blob = std::fs::read(dir.join(
+            weights_meta.req("file")?.as_str().context("weights.file")?,
+        ))?;
+        let mut tensors = Vec::new();
+        let mut weights = Vec::new();
+        for t in weights_meta.req("tensors")?.as_arr().context("tensors")? {
+            let info = TensorInfo {
+                name: t.req("name")?.as_str().context("tensor name")?.to_string(),
+                shape: t.req("shape")?.usize_vec().context("tensor shape")?,
+                offset: t.req("offset")?.as_usize().context("offset")?,
+                bytes: t.req("bytes")?.as_usize().context("bytes")?,
+            };
+            let raw = &blob[info.offset..info.offset + info.bytes];
+            weights.push(
+                raw.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            );
+            tensors.push(info);
+        }
+
+        // Calibration.
+        let calib_text = std::fs::read_to_string(dir.join("calibration.json"))?;
+        let calib = Json::parse(&calib_text)
+            .map_err(|e| anyhow::anyhow!("calibration.json: {e}"))?;
+        let w_clips = parse_clip_table(calib.req("w_clips")?)?;
+        let a_clips = parse_clip_table(calib.req("a_clips")?)?;
+
+        // Data geometry.
+        let data = manifest.req("data")?;
+        let batch = data.req("batch")?.as_usize().context("batch")?;
+        let seq_len = data.req("seq_len")?.as_usize().context("seq_len")?;
+        let feat_dim = data.req("feat_dim")?.as_usize().context("feat_dim")?;
+        let num_classes = data.req("num_classes")?.as_usize().context("classes")?;
+
+        let load_split = |key: &str| -> Result<(Vec<f32>, Vec<i32>, Vec<usize>)> {
+            let meta = data.req(key)?;
+            let x = read_f32(&dir.join(meta.req("x")?.as_str().context("x")?))?;
+            let y = read_i32(&dir.join(meta.req("y")?.as_str().context("y")?))?;
+            let shape = meta.req("shape")?.usize_vec().context("shape")?;
+            Ok((x, y, shape))
+        };
+
+        let (tx, ty, tshape) = load_split("train")?;
+        let train = Split { x: tx, y: ty, num_seqs: tshape[0] };
+        let (ex, ey, eshape) = load_split("test")?;
+        let test = Split { x: ex, y: ey, num_seqs: eshape[0] };
+
+        // Validation: stored stacked (subsets, seqs, T, F); unstack.
+        let (vx, vy, vshape) = load_split("val")?;
+        let (n_sub, per_sub) = (vshape[0], vshape[1]);
+        let x_stride = per_sub * seq_len * feat_dim;
+        let y_stride = per_sub * seq_len;
+        let val_subsets: Vec<Split> = (0..n_sub)
+            .map(|s| Split {
+                x: vx[s * x_stride..(s + 1) * x_stride].to_vec(),
+                y: vy[s * y_stride..(s + 1) * y_stride].to_vec(),
+                num_seqs: per_sub,
+            })
+            .collect();
+
+        let b = manifest.req("baseline")?;
+        let baseline = BaselineMetrics {
+            val_err_subsets: b.req("val_err_subsets")?.f64_vec().context("subsets")?,
+            val_err: b.req("val_err")?.as_f64().context("val_err")?,
+            test_err: b.req("test_err")?.as_f64().context("test_err")?,
+            val_err_16bit: b.req("val_err_16bit")?.as_f64().context("16bit")?,
+            beacon_lr: b.req("beacon_lr")?.as_f64().context("beacon_lr")?,
+        };
+
+        Ok(Artifacts {
+            dir,
+            manifest,
+            layer_names,
+            model,
+            tensors,
+            weights,
+            w_clips,
+            a_clips,
+            batch,
+            seq_len,
+            feat_dim,
+            num_classes,
+            train,
+            val_subsets,
+            test,
+            baseline,
+        })
+    }
+
+    pub fn hlo_path(&self, which: &str) -> Result<PathBuf> {
+        let file = self
+            .manifest
+            .req("hlo")?
+            .req(which)?
+            .req("file")?
+            .as_str()
+            .context("hlo file")?
+            .to_string();
+        Ok(self.dir.join(file))
+    }
+
+    /// Number of HLO inputs for an entry (params + wq/aq + data tensors).
+    pub fn hlo_input_count(&self, which: &str) -> Result<usize> {
+        Ok(self
+            .manifest
+            .req("hlo")?
+            .req(which)?
+            .req("inputs")?
+            .as_arr()
+            .context("inputs")?
+            .len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Integration: load the real artifact bundle when present (built by
+    /// `make artifacts`); skipped otherwise so unit CI stays hermetic.
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = std::env::var("MOHAQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        let p = PathBuf::from(dir);
+        p.join("manifest.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn loads_bundle_consistently() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: no artifacts present");
+            return;
+        };
+        let a = Artifacts::load(&dir).unwrap();
+        // Geometry invariants.
+        assert_eq!(a.layer_names.len(), a.model.num_layers());
+        assert!(!a.weights.is_empty());
+        for (info, data) in a.tensors.iter().zip(&a.weights) {
+            let expect: usize = info.shape.iter().product::<usize>().max(1);
+            assert_eq!(data.len(), expect, "tensor {}", info.name);
+        }
+        // Splits shaped as multiples of the lowered batch.
+        assert_eq!(a.test.num_seqs % a.batch, 0);
+        for s in &a.val_subsets {
+            assert_eq!(s.num_seqs % a.batch, 0);
+            assert_eq!(s.x.len(), s.num_seqs * a.seq_len * a.feat_dim);
+            assert_eq!(s.y.len(), s.num_seqs * a.seq_len);
+        }
+        // Labels within range.
+        assert!(a.test.y.iter().all(|&l| (l as usize) < a.num_classes));
+        // Clips exist for every (layer, searchable bits).
+        for name in &a.layer_names {
+            for bits in [2u32, 4, 8, 16] {
+                assert!(a.w_clips[name].contains_key(&bits), "{name}/{bits}");
+                assert!(a.a_clips[name].contains_key(&bits), "{name}/{bits}");
+            }
+        }
+        // Baseline sanity.
+        assert!(a.baseline.val_err > 0.0 && a.baseline.val_err < 1.0);
+    }
+}

@@ -1,0 +1,188 @@
+//! PJRT execution wrappers: load an HLO-text artifact, compile once on the
+//! CPU client, execute many times from the search hot path.
+//!
+//! Two input paths:
+//!   * `run_literals` — upload everything per call (simple, used by tests);
+//!   * `run_mixed` — static inputs (the 20+ weight tensors) are uploaded
+//!     ONCE as device buffers; only the per-call inputs (quant params,
+//!     data batch) are fresh. This is the L3 hot-path optimization
+//!     recorded in EXPERIMENTS.md §Perf.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Shared PJRT CPU client (one per process).
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu().context("creating PJRT CPU client")? })
+    }
+
+    pub fn load(&self, hlo_path: impl AsRef<Path>) -> Result<Executor> {
+        let path = hlo_path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(Executor { exe, name: path.display().to_string() })
+    }
+}
+
+/// A compiled executable. jax lowers with return_tuple=True, so every run
+/// returns the decomposed tuple elements.
+pub struct Executor {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// Host-side tensor handed to the executor.
+pub enum Input<'a> {
+    F32(&'a [f32], Vec<i64>),
+    I32(&'a [i32], Vec<i64>),
+    ScalarF32(f32),
+}
+
+impl Input<'_> {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            Input::F32(data, shape) => xla::Literal::vec1(data).reshape(shape)?,
+            Input::I32(data, shape) => xla::Literal::vec1(data).reshape(shape)?,
+            Input::ScalarF32(v) => xla::Literal::scalar(*v),
+        })
+    }
+}
+
+/// A device-resident input. PJRT's BufferFromHostLiteral is asynchronous:
+/// the transfer may still be reading the host literal after the call
+/// returns, so the source literal MUST outlive the buffer — we pin it here.
+pub struct DeviceTensor {
+    _lit: xla::Literal,
+    pub buf: xla::PjRtBuffer,
+}
+
+impl Executor {
+    /// Execute with host literals; returns the output tuple elements.
+    pub fn run_literals(&self, inputs: &[Input]) -> Result<Vec<xla::Literal>> {
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|i| i.to_literal()).collect::<Result<_>>()?;
+        let out = self.exe.execute::<xla::Literal>(&lits)?;
+        let result = out[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// Upload a host input once; reuse across calls via `run_mixed`.
+    pub fn upload(&self, input: &Input) -> Result<DeviceTensor> {
+        let lit = input.to_literal()?;
+        let device = &self.exe.client().devices()[0];
+        let buf = self.exe.client().buffer_from_host_literal(Some(device), &lit)?;
+        Ok(DeviceTensor { _lit: lit, buf })
+    }
+
+    /// Execute with a mix of pre-uploaded device buffers (`static_bufs`,
+    /// occupying the FIRST parameter positions) and fresh host inputs.
+    pub fn run_mixed(
+        &self,
+        static_bufs: &[DeviceTensor],
+        fresh: &[Input],
+    ) -> Result<Vec<xla::Literal>> {
+        let device = &self.exe.client().devices()[0];
+        // Keep fresh literals alive until execution has synchronized —
+        // the host->device copies may still be in flight during execute_b.
+        let fresh_lits: Vec<xla::Literal> =
+            fresh.iter().map(|i| i.to_literal()).collect::<Result<_>>()?;
+        let fresh_bufs: Vec<xla::PjRtBuffer> = fresh_lits
+            .iter()
+            .map(|lit| {
+                Ok(self.exe.client().buffer_from_host_literal(Some(device), lit)?)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut bufs: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(static_bufs.len() + fresh.len());
+        bufs.extend(static_bufs.iter().map(|d| &d.buf));
+        bufs.extend(fresh_bufs.iter());
+        let out = self.exe.execute_b::<&xla::PjRtBuffer>(&bufs)?;
+        // to_literal_sync blocks on the computation, which in turn waits on
+        // the input transfers — after this, dropping fresh_lits is safe.
+        let result = out[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+}
+
+/// Extract a scalar f32 from a tuple element.
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+/// Extract a full f32 vector from a tuple element.
+pub fn vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a tiny HLO via the XlaBuilder, round-trip execution through
+    /// both input paths. No artifacts needed — hermetic.
+    fn add_mul_computation() -> xla::XlaComputation {
+        let b = xla::XlaBuilder::new("t");
+        let x = b
+            .parameter_s(0, &xla::Shape::array::<f32>(vec![2, 2]), "x")
+            .unwrap();
+        let y = b
+            .parameter_s(1, &xla::Shape::array::<f32>(vec![2, 2]), "y")
+            .unwrap();
+        let sum = x.add_(&y).unwrap();
+        let prod = x.mul_(&y).unwrap();
+        let t = b.tuple(&[sum, prod]).unwrap();
+        t.build().unwrap()
+    }
+
+    #[test]
+    fn literal_and_buffer_paths_agree() {
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt.client.compile(&add_mul_computation()).unwrap();
+        let exec = Executor { exe, name: "test".into() };
+
+        let x = [1f32, 2.0, 3.0, 4.0];
+        let y = [10f32, 20.0, 30.0, 40.0];
+        let inputs = [
+            Input::F32(&x, vec![2, 2]),
+            Input::F32(&y, vec![2, 2]),
+        ];
+        let out1 = exec.run_literals(&inputs).unwrap();
+        assert_eq!(out1.len(), 2);
+        assert_eq!(vec_f32(&out1[0]).unwrap(), vec![11.0, 22.0, 33.0, 44.0]);
+        assert_eq!(vec_f32(&out1[1]).unwrap(), vec![10.0, 40.0, 90.0, 160.0]);
+
+        // Buffer path: x static, y fresh.
+        let xbuf = exec.upload(&Input::F32(&x, vec![2, 2])).unwrap();
+        let out2 = exec
+            .run_mixed(std::slice::from_ref(&xbuf), &[Input::F32(&y, vec![2, 2])])
+            .unwrap();
+        assert_eq!(vec_f32(&out2[0]).unwrap(), vec![11.0, 22.0, 33.0, 44.0]);
+        assert_eq!(vec_f32(&out2[1]).unwrap(), vec![10.0, 40.0, 90.0, 160.0]);
+    }
+
+    #[test]
+    fn scalar_extraction() {
+        let rt = Runtime::cpu().unwrap();
+        let b = xla::XlaBuilder::new("s");
+        let x = b
+            .parameter_s(0, &xla::Shape::array::<f32>(vec![]), "x")
+            .unwrap();
+        let two = x.add_(&x).unwrap();
+        let t = b.tuple(&[two]).unwrap();
+        let exe = rt.client.compile(&t.build().unwrap()).unwrap();
+        let exec = Executor { exe, name: "s".into() };
+        let out = exec.run_literals(&[Input::ScalarF32(21.0)]).unwrap();
+        assert_eq!(scalar_f32(&out[0]).unwrap(), 42.0);
+    }
+}

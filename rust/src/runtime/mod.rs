@@ -1,0 +1,9 @@
+//! Runtime layer: PJRT client/executable wrappers and artifact loading.
+//! This is the only module that touches the `xla` crate — everything
+//! above it (eval, coordinator) speaks in host slices and QuantConfigs.
+
+pub mod artifacts;
+pub mod executor;
+
+pub use artifacts::{Artifacts, BaselineMetrics, Split, TensorInfo};
+pub use executor::{scalar_f32, vec_f32, DeviceTensor, Executor, Input, Runtime};

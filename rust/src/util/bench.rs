@@ -1,0 +1,193 @@
+//! Micro-benchmark harness (criterion is not available offline).
+//!
+//! Criterion-like protocol: warm-up, then timed iterations until a target
+//! wall budget or max iteration count is reached; reports mean / median /
+//! p95 and optional throughput. Used by every file in benches/ and by the
+//! §Perf pass in EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    /// Optional items/second derived from `throughput_items`.
+    pub throughput: Option<f64>,
+}
+
+pub struct Bencher {
+    warmup: Duration,
+    budget: Duration,
+    max_iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup_ms: u64, budget_ms: u64, max_iters: usize) -> Self {
+        Bencher {
+            warmup: Duration::from_millis(warmup_ms),
+            budget: Duration::from_millis(budget_ms),
+            max_iters,
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark `f`, which should return something observable to prevent
+    /// the optimizer deleting the work (use `std::hint::black_box` inside).
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        self.bench_with_items(name, None, move || {
+            std::hint::black_box(f());
+        })
+    }
+
+    /// Benchmark with a throughput denominator (items processed per call).
+    pub fn bench_items<T>(
+        &mut self,
+        name: &str,
+        items: u64,
+        mut f: impl FnMut() -> T,
+    ) -> &BenchResult {
+        self.bench_with_items(name, Some(items), move || {
+            std::hint::black_box(f());
+        })
+    }
+
+    fn bench_with_items(
+        &mut self,
+        name: &str,
+        items: Option<u64>,
+        mut f: impl FnMut(),
+    ) -> &BenchResult {
+        // Warm-up.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            f();
+        }
+        // Timed runs.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.budget && samples_ns.len() < self.max_iters {
+            let t0 = Instant::now();
+            f();
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples_ns.len().max(1);
+        let mean = samples_ns.iter().sum::<f64>() / n as f64;
+        let median = samples_ns[n / 2];
+        let p95 = samples_ns[(n as f64 * 0.95) as usize % n];
+        let min = samples_ns.first().copied().unwrap_or(0.0);
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: n,
+            mean_ns: mean,
+            median_ns: median,
+            p95_ns: p95,
+            min_ns: min,
+            throughput: items.map(|k| k as f64 / (mean / 1e9)),
+        };
+        println!(
+            "{:<48} {:>10}/iter  median {:>10}  p95 {:>10}  ({} iters{})",
+            result.name,
+            fmt_ns(mean),
+            fmt_ns(median),
+            fmt_ns(p95),
+            n,
+            result
+                .throughput
+                .map(|t| format!(", {:.0} items/s", t))
+                .unwrap_or_default()
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Emit results as a JSON report (consumed by EXPERIMENTS.md tooling).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{obj, Json};
+        Json::Arr(
+            self.results
+                .iter()
+                .map(|r| {
+                    obj(vec![
+                        ("name", r.name.as_str().into()),
+                        ("iters", r.iters.into()),
+                        ("mean_ns", r.mean_ns.into()),
+                        ("median_ns", r.median_ns.into()),
+                        ("p95_ns", r.p95_ns.into()),
+                        (
+                            "throughput",
+                            r.throughput.map(Json::Num).unwrap_or(Json::Null),
+                        ),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bencher::new(5, 50, 1000);
+        let r = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters > 0);
+        assert!(r.median_ns <= r.p95_ns);
+    }
+
+    #[test]
+    fn throughput_is_populated() {
+        let mut b = Bencher::new(1, 20, 100);
+        let r = b.bench_items("items", 100, || 42u64);
+        assert!(r.throughput.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn formats_times() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(2_500.0), "2.50 µs");
+        assert_eq!(fmt_ns(3_000_000.0), "3.00 ms");
+        assert_eq!(fmt_ns(1.5e9), "1.500 s");
+    }
+}

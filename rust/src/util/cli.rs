@@ -1,0 +1,100 @@
+//! Minimal CLI argument parsing (clap is not available offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Each binary declares its options by querying the parsed map.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable) — skips argv[0].
+    pub fn parse_from<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut it = argv.into_iter().peekable();
+        let mut args = Args::default();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    args.flags.insert(body.to_string(), it.next().unwrap());
+                } else {
+                    args.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn parse() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(words: &[&str]) -> Args {
+        Args::parse_from(words.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_key_value_pairs() {
+        let a = parse(&["--gens", "60", "--pop=10"]);
+        assert_eq!(a.get_usize("gens", 0), 60);
+        assert_eq!(a.get_usize("pop", 0), 10);
+    }
+
+    #[test]
+    fn parses_bool_flags_and_positional() {
+        let a = parse(&["run", "--verbose", "--mode", "beacon", "extra"]);
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("mode"), Some("beacon"));
+        assert_eq!(a.positional, vec!["run", "extra"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.get_or("artifacts", "artifacts"), "artifacts");
+        assert_eq!(a.get_f64("threshold", 6.0), 6.0);
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_boolean() {
+        let a = parse(&["--x", "--y", "2"]);
+        assert_eq!(a.get("x"), Some("true"));
+        assert_eq!(a.get_usize("y", 0), 2);
+    }
+}

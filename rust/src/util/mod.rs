@@ -1,0 +1,9 @@
+//! In-tree substrates replacing unavailable external crates (offline
+//! environment, see Cargo.toml): JSON codec, deterministic PRNG,
+//! property-test harness, micro-bench harness, CLI parsing.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,79 @@
+//! Tiny property-testing harness (proptest is not available offline).
+//!
+//! A property is a generator (`Fn(&mut Rng) -> T`) plus a checker
+//! (`Fn(&T) -> Result<(), String>`). `check_prop` runs `iters` random
+//! cases from a seed derived deterministically from the property name, so
+//! failures are reproducible; the failing case is printed via Debug. No
+//! shrinking — generators here produce small cases by construction.
+
+use super::rng::Rng;
+
+/// FNV-1a, used to derive a stable seed from the property name.
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+pub fn check_prop<T: std::fmt::Debug>(
+    name: &str,
+    iters: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut check: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(fnv1a(name));
+    for i in 0..iters {
+        let case = gen(&mut rng);
+        if let Err(msg) = check(&case) {
+            panic!(
+                "property '{name}' failed at iteration {i}: {msg}\ncase: {case:#?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        check_prop("trivial", 100, |r| r.below(10), |x| {
+            if *x < 10 {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'failing' failed")]
+    fn reports_failing_case() {
+        check_prop("failing", 100, |r| r.below(10), |x| {
+            if *x < 5 {
+                Ok(())
+            } else {
+                Err("too big".to_string())
+            }
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first = Vec::new();
+        check_prop("det", 10, |r| r.next_u64(), |x| {
+            first.push(*x);
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check_prop("det", 10, |r| r.next_u64(), |x| {
+            second.push(*x);
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,164 @@
+//! Cross-layer integration tests: artifacts -> runtime -> eval ->
+//! coordinator -> search, exercised on the real AOT bundle.
+//!
+//! All tests skip gracefully when `make artifacts` has not been run (unit
+//! CI stays hermetic); `make test` runs them against the live bundle.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use mohaq::coordinator::{
+    baseline_rows, run_search, BeaconManager, BeaconPolicy, ExperimentSpec, Trainer,
+};
+use mohaq::eval::EvalService;
+use mohaq::quant::{Bits, QuantConfig};
+use mohaq::runtime::{Artifacts, Runtime};
+
+fn artifacts() -> Option<Rc<Artifacts>> {
+    let dir = std::env::var("MOHAQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let p = PathBuf::from(dir);
+    if !p.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts present");
+        return None;
+    }
+    Some(Rc::new(Artifacts::load(p).unwrap()))
+}
+
+#[test]
+fn exp1_mini_search_produces_tradeoff_front() {
+    let Some(arts) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let mut spec = ExperimentSpec::exp1();
+    spec.ga.generations = 2;
+    spec.ga.initial_pop_size = 12;
+    spec.ga.pop_size = 6;
+    let outcome = run_search(&spec, arts.clone(), &rt, false).unwrap();
+    assert!(!outcome.rows.is_empty());
+    // Rows sorted by error; compression must trend the other way across
+    // the front (it's a front: no row may dominate another).
+    for w in outcome.rows.windows(2) {
+        assert!(w[0].wer_v <= w[1].wer_v + 1e-12);
+        assert!(
+            !(w[1].wer_v >= w[0].wer_v && w[1].size_mb >= w[0].size_mb - 1e-12),
+            "dominated row in pareto set: {w:?}"
+        );
+    }
+    // History covers every generation.
+    assert_eq!(outcome.history.len(), spec.ga.generations + 1);
+}
+
+#[test]
+fn exp2_silago_respects_platform_restrictions() {
+    let Some(arts) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let mut spec = ExperimentSpec::exp2_silago();
+    spec.ga.generations = 2;
+    spec.ga.initial_pop_size = 10;
+    spec.ga.pop_size = 6;
+    let outcome = run_search(&spec, arts.clone(), &rt, false).unwrap();
+    for row in &outcome.rows {
+        // Tied W=A, no 2-bit on SiLago, SRAM <= 6 MB.
+        assert_eq!(row.qc.w_bits, row.qc.a_bits);
+        assert!(row.qc.w_bits.iter().all(|b| *b != Bits::B2), "{:?}", row.qc);
+        assert!(row.size_mb <= 6.0 + 1e-9);
+        assert!(row.speedup.is_some() && row.energy_uj.is_some());
+    }
+}
+
+#[test]
+fn exp3_constraint_excludes_oversized_models() {
+    let Some(arts) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let mut spec = ExperimentSpec::exp3_bitfusion(false);
+    spec.ga.generations = 2;
+    spec.ga.initial_pop_size = 10;
+    spec.ga.pop_size = 6;
+    let outcome = run_search(&spec, arts.clone(), &rt, false).unwrap();
+    let cap_mb = 2.0;
+    for row in &outcome.rows {
+        assert!(
+            row.size_mb <= cap_mb + 1e-9,
+            "solution over the SRAM cap: {} MB",
+            row.size_mb
+        );
+    }
+}
+
+#[test]
+fn beacon_rescues_aggressive_quantization() {
+    let Some(arts) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let mut eval = EvalService::new(&rt, arts.clone()).unwrap();
+    let mut trainer = Trainer::new(&rt, arts.clone(), 1).unwrap();
+    let mut policy =
+        BeaconPolicy::paper_defaults(arts.baseline.val_err_16bit, arts.baseline.beacon_lr as f32);
+    policy.retrain_steps = 120; // enough to show a clear gain
+    let mut mgr = BeaconManager::new(policy);
+
+    let n = arts.layer_names.len();
+    let qc = QuantConfig::uniform(n, Bits::B2, Bits::B8);
+    let base_err = eval.val_error(&qc, 0).unwrap();
+    assert!(base_err > arts.baseline.val_err + 0.10, "2-bit PTQ should be bad");
+
+    let set = mgr
+        .select_or_create(&qc, base_err, &mut eval, &mut trainer)
+        .unwrap()
+        .expect("should create a beacon");
+    assert_eq!(mgr.beacons.len(), 1);
+    let beacon_err = eval.val_error(&qc, set).unwrap();
+    assert!(
+        beacon_err < base_err - 0.05,
+        "beacon should rescue: {base_err:.3} -> {beacon_err:.3}"
+    );
+
+    // A neighbor inside the threshold reuses the beacon, no new retrain.
+    let mut neighbor_bits = vec![Bits::B2; n];
+    neighbor_bits[0] = Bits::B4;
+    let neighbor = QuantConfig { w_bits: neighbor_bits, a_bits: vec![Bits::B8; n] };
+    let d = neighbor.beacon_distance(&qc);
+    assert!(d <= mgr.policy.threshold);
+    let nb_base = eval.val_error(&neighbor, 0).unwrap();
+    let set2 = mgr
+        .select_or_create(&neighbor, nb_base, &mut eval, &mut trainer)
+        .unwrap()
+        .expect("neighbor should use the existing beacon");
+    assert_eq!(set2, set);
+    assert_eq!(mgr.beacons.len(), 1, "no second retraining");
+}
+
+#[test]
+fn baseline_rows_match_manifest() {
+    let Some(arts) = artifacts() else { return };
+    let rows = baseline_rows(&arts);
+    assert_eq!(rows.len(), 2);
+    assert!((rows[0].cp_r - 1.0).abs() < 1e-12);
+    assert!((rows[1].cp_r - 2.0).abs() < 0.01);
+    assert_eq!(rows[1].speedup, Some(1.0));
+}
+
+#[test]
+fn eval_service_val_matches_16bit_manifest_value() {
+    let Some(arts) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let mut eval = EvalService::new(&rt, arts.clone()).unwrap();
+    let n = arts.layer_names.len();
+    let qc16 = QuantConfig::uniform(n, Bits::B16, Bits::B16);
+    let err = eval.val_error(&qc16, 0).unwrap();
+    // Python computed this through the ref path; Rust runs the Pallas
+    // path. pytest proves kernel==ref, so these must agree closely.
+    assert!(
+        (err - arts.baseline.val_err_16bit).abs() < 0.01,
+        "rust {err} vs python {}",
+        arts.baseline.val_err_16bit
+    );
+}
+
+#[test]
+fn genome_decode_matches_eval_layers() {
+    let Some(arts) = artifacts() else { return };
+    let n = arts.layer_names.len();
+    let genome: Vec<i64> = (0..2 * n).map(|i| 1 + (i as i64 % 4)).collect();
+    let qc = QuantConfig::from_genome_wa(&genome).unwrap();
+    assert_eq!(qc.num_layers(), n);
+    assert_eq!(qc.to_genome_wa(), genome);
+}

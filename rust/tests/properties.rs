@@ -1,0 +1,270 @@
+//! Cross-module property tests (hermetic — no artifacts needed): GA
+//! invariants, Pareto-set algebra, hardware-model monotonicity, and the
+//! quantization math the Python side mirrors.
+
+use mohaq::hw::{bitfusion, silago, Platform};
+use mohaq::model::ModelDesc;
+use mohaq::moo::problems::{Zdt, ZdtVariant};
+use mohaq::moo::sort::{assign_crowding, fast_nondominated_sort};
+use mohaq::moo::{Individual, Nsga2, Nsga2Config, Problem};
+use mohaq::pareto::{dominates, hypervolume::hypervolume_2d, pareto_front_indices};
+use mohaq::quant::{Bits, QuantConfig};
+use mohaq::util::prop::check_prop;
+use mohaq::util::rng::Rng;
+
+fn random_points(rng: &mut Rng, n: usize, m: usize) -> Vec<Vec<f64>> {
+    (0..n).map(|_| (0..m).map(|_| rng.f64()).collect()).collect()
+}
+
+#[test]
+fn front_members_are_mutually_nondominated() {
+    check_prop(
+        "front_nondominated",
+        60,
+        |r| {
+            let (n, m) = (3 + r.below(40), 2 + r.below(2));
+            random_points(r, n, m)
+        },
+        |pts| {
+            let front = pareto_front_indices(pts);
+            if front.is_empty() {
+                return Err("front must be non-empty".into());
+            }
+            for &i in &front {
+                for &j in &front {
+                    if i != j && dominates(&pts[i], &pts[j]) {
+                        return Err(format!("front member {i} dominates {j}"));
+                    }
+                }
+            }
+            // Every non-front point is dominated by some front point.
+            for k in 0..pts.len() {
+                if front.contains(&k) {
+                    continue;
+                }
+                if !front.iter().any(|&i| dominates(&pts[i], &pts[k])) {
+                    return Err(format!("point {k} excluded but not dominated"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn nondominated_sort_ranks_are_consistent() {
+    check_prop(
+        "sort_rank_consistency",
+        40,
+        |r| {
+            let n = 5 + r.below(40);
+            random_points(r, n, 2)
+        },
+        |pts| {
+            let mut pop: Vec<Individual> = pts
+                .iter()
+                .map(|p| {
+                    let mut i = Individual::new(vec![]);
+                    i.objectives = p.clone();
+                    i
+                })
+                .collect();
+            let fronts = fast_nondominated_sort(&mut pop);
+            // Partition: every index in exactly one front.
+            let total: usize = fronts.iter().map(|f| f.len()).sum();
+            if total != pop.len() {
+                return Err(format!("fronts cover {total}/{} points", pop.len()));
+            }
+            // No one in front k is dominated by anyone in front >= k.
+            for (k, front) in fronts.iter().enumerate() {
+                for &i in front {
+                    for later in &fronts[k..] {
+                        for &j in later {
+                            if j != i && dominates(&pop[j].objectives, &pop[i].objectives)
+                                && pop[j].rank >= pop[i].rank
+                            {
+                                return Err(format!(
+                                    "rank violation: {j}(r{}) dominates {i}(r{})",
+                                    pop[j].rank, pop[i].rank
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            assign_crowding(&mut pop, &fronts);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn hypervolume_monotone_under_point_addition() {
+    check_prop(
+        "hv_monotone",
+        60,
+        |r| {
+            let n = 1 + r.below(20);
+            let base = random_points(r, n, 2);
+            let extra: Vec<f64> = (0..2).map(|_| r.f64()).collect();
+            (base, extra)
+        },
+        |(base, extra)| {
+            let reference = [1.1, 1.1];
+            let hv1 = hypervolume_2d(base, &reference);
+            let mut bigger = base.clone();
+            bigger.push(extra.clone());
+            let hv2 = hypervolume_2d(&bigger, &reference);
+            if hv2 + 1e-12 < hv1 {
+                return Err(format!("hv decreased: {hv1} -> {hv2}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn nsga2_population_always_within_gene_bounds_and_sized() {
+    check_prop(
+        "nsga2_bounds",
+        8,
+        |r| (r.next_u64(), 2 + r.below(6), 4 + r.below(20)),
+        |&(seed, gens, resolution)| {
+            let mut problem = Zdt::new(ZdtVariant::Zdt2, 5, resolution as i64);
+            let mut algo = Nsga2::new(Nsga2Config {
+                pop_size: 8,
+                initial_pop_size: 12,
+                generations: gens,
+                seed,
+                ..Default::default()
+            });
+            let pop = algo.run(&mut problem, |s| {
+                if s.population.len() != 8 {
+                    panic!("population size drifted: {}", s.population.len());
+                }
+            });
+            for ind in &pop {
+                if ind.genome.len() != problem.num_vars() {
+                    return Err("genome length drifted".into());
+                }
+                for (i, &g) in ind.genome.iter().enumerate() {
+                    let (lo, hi) = problem.var_range(i);
+                    if g < lo || g > hi {
+                        return Err(format!("gene {g} out of [{lo},{hi}]"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn silago_speedup_monotone_in_layer_precision() {
+    // Lowering any single layer's precision must not reduce speedup and
+    // must not increase energy (Eq. 3 / Eq. 4 monotonicity).
+    let model = ModelDesc::paper();
+    let p = silago::SiLago::new(None);
+    check_prop(
+        "silago_monotone",
+        100,
+        |r| {
+            let bits: Vec<Bits> = (0..8)
+                .map(|_| *r.choose(&[Bits::B8, Bits::B16]))
+                .collect();
+            (bits, r.below(8))
+        },
+        |(bits, layer)| {
+            let qc = QuantConfig { w_bits: bits.clone(), a_bits: bits.clone() };
+            let mut lower = bits.clone();
+            lower[*layer] = match lower[*layer] {
+                Bits::B16 => Bits::B8,
+                _ => Bits::B4,
+            };
+            let qc_low = QuantConfig { w_bits: lower.clone(), a_bits: lower };
+            if p.speedup(&model, &qc_low) < p.speedup(&model, &qc) - 1e-12 {
+                return Err("speedup decreased with lower precision".into());
+            }
+            let (e_hi, e_lo) = (
+                p.energy_pj(&model, &qc).unwrap(),
+                p.energy_pj(&model, &qc_low).unwrap(),
+            );
+            if e_lo > e_hi + 1e-9 {
+                return Err(format!("energy increased: {e_hi} -> {e_lo}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn bitfusion_speedup_bounded_by_brick_limits() {
+    let model = ModelDesc::paper();
+    let p = bitfusion::Bitfusion::new(None);
+    check_prop(
+        "bitfusion_bounds",
+        100,
+        |r| {
+            let w: Vec<Bits> = (0..8).map(|_| *r.choose(&Bits::SEARCHABLE)).collect();
+            let a: Vec<Bits> = (0..8).map(|_| *r.choose(&Bits::SEARCHABLE)).collect();
+            QuantConfig { w_bits: w, a_bits: a }
+        },
+        |qc| {
+            let s = p.speedup(&model, qc);
+            // Bounded by the 2-bit x 2-bit peak and >= the 16x16 floor
+            // diluted by fixed ops.
+            if !(0.9..=64.0).contains(&s) {
+                return Err(format!("speedup {s} out of physical range"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn compression_ratio_bounds_hold() {
+    let model = ModelDesc::paper();
+    check_prop(
+        "compression_bounds",
+        100,
+        |r| {
+            (0..8)
+                .map(|_| *r.choose(&Bits::SEARCHABLE))
+                .collect::<Vec<Bits>>()
+        },
+        |bits| {
+            let cp = model.compression_ratio(bits);
+            // Between all-16-bit (2x) and all-2-bit (~15.65x).
+            if !(1.9..=15.8).contains(&cp) {
+                return Err(format!("cp {cp} out of range"));
+            }
+            let size = model.size_bits(bits);
+            if size >= model.baseline_size_bits() {
+                return Err("quantized size not smaller than float".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn beacon_distance_zero_iff_same_weight_bits() {
+    check_prop(
+        "beacon_distance_identity",
+        200,
+        |r| {
+            let w: Vec<Bits> = (0..8).map(|_| *r.choose(&Bits::SEARCHABLE)).collect();
+            let a1: Vec<Bits> = (0..8).map(|_| *r.choose(&Bits::SEARCHABLE)).collect();
+            let a2: Vec<Bits> = (0..8).map(|_| *r.choose(&Bits::SEARCHABLE)).collect();
+            (w, a1, a2)
+        },
+        |(w, a1, a2)| {
+            let q1 = QuantConfig { w_bits: w.clone(), a_bits: a1.clone() };
+            let q2 = QuantConfig { w_bits: w.clone(), a_bits: a2.clone() };
+            if q1.beacon_distance(&q2) != 0.0 {
+                return Err("distance ignores activations (paper §4.3)".into());
+            }
+            Ok(())
+        },
+    );
+}
