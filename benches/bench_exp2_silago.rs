@@ -2,9 +2,9 @@
 //! 3-objective SiLago search, plus micro-benches of the analytical
 //! hardware objectives (Eq. 3 / Eq. 4) that price every candidate.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
-use mohaq::coordinator::{run_search, ExperimentSpec};
+use mohaq::coordinator::{ExperimentSpec, SearchSession};
 use mohaq::hw::{silago::SiLago, Platform};
 use mohaq::model::ModelDesc;
 use mohaq::quant::{Bits, QuantConfig};
@@ -45,13 +45,14 @@ fn main() -> anyhow::Result<()> {
         return Ok(());
     }
     let rt = Runtime::cpu()?;
-    let arts = Rc::new(Artifacts::load(&dir)?);
+    let arts = Arc::new(Artifacts::load(&dir)?);
+    let session = SearchSession::with_runtime(arts.clone(), rt);
 
     println!("\n== bench_exp2: SiLago 3-objective search (scaled: 5 generations) ==");
     let mut spec = ExperimentSpec::exp2_silago();
     spec.ga.generations = 5;
     let t0 = std::time::Instant::now();
-    let outcome = run_search(&spec, arts, &rt, false)?;
+    let outcome = session.run(&spec)?;
     let secs = t0.elapsed().as_secs_f64();
     println!(
         "evaluations {:>6} ({:.1}/s)   execs {:>6}   pareto {}   wall {:.1}s",

@@ -3,9 +3,9 @@
 //! beacon retraining step cost (the expensive operation Algorithm 1
 //! rations).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
-use mohaq::coordinator::{run_search, ExperimentSpec, Trainer};
+use mohaq::coordinator::{ExperimentSpec, SearchSession, Trainer};
 use mohaq::hw::{bitfusion::Bitfusion, Platform};
 use mohaq::model::ModelDesc;
 use mohaq::quant::{Bits, QuantConfig};
@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
         return Ok(());
     }
     let rt = Runtime::cpu()?;
-    let arts = Rc::new(Artifacts::load(&dir)?);
+    let arts = Arc::new(Artifacts::load(&dir)?);
 
     // Beacon retraining step cost (binary-connect SGD via AOT train step).
     let mut trainer = Trainer::new(&rt, arts.clone(), 7)?;
@@ -57,7 +57,8 @@ fn main() -> anyhow::Result<()> {
     let mut spec = ExperimentSpec::exp3_bitfusion(false);
     spec.ga.generations = 5;
     let t0 = std::time::Instant::now();
-    let outcome = run_search(&spec, arts, &rt, false)?;
+    let session = SearchSession::with_runtime(arts.clone(), rt);
+    let outcome = session.run(&spec)?;
     let secs = t0.elapsed().as_secs_f64();
     println!(
         "evaluations {:>6} ({:.1}/s)   execs {:>6}   pareto {}   wall {:.1}s",

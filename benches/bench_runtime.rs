@@ -1,25 +1,88 @@
-//! Runtime hot-path benches: the PJRT inference call (literal vs
+//! Runtime hot-path benches: parallel generation evaluation (1 thread vs
+//! one-per-core — hermetic, the perf-trajectory number for the
+//! SearchSession thread pool), then the PJRT inference call (literal vs
 //! pre-uploaded-buffer input paths), parameter-set upload, qparam
 //! resolution and the full val_error evaluation — the numbers behind
 //! EXPERIMENTS.md §Perf L3.
 //!
-//! Needs `make artifacts`; exits 0 with a notice otherwise.
+//! The PJRT sections need the AOT artifact bundle; they are skipped with a
+//! notice otherwise.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use mohaq::eval::EvalService;
+use mohaq::moo::{Evaluation, Parallel, Problem, SyncProblem};
 use mohaq::quant::{resolve_qparams, Bits, QuantConfig};
 use mohaq::runtime::{Artifacts, Input, Runtime};
 use mohaq::util::bench::Bencher;
+use mohaq::util::pool;
+
+/// Stand-in for one candidate evaluation: a genome-dependent compute spin
+/// roughly shaped like a small inference call, so the 1-vs-N-thread ratio
+/// reflects real generation-evaluation scaling.
+struct SyntheticEval {
+    spin: u64,
+}
+
+impl SyncProblem for SyntheticEval {
+    fn vars(&self) -> usize {
+        16
+    }
+    fn objectives(&self) -> usize {
+        2
+    }
+    fn gene_range(&self, _i: usize) -> (i64, i64) {
+        (1, 4)
+    }
+    fn eval(&self, genome: &[i64]) -> Evaluation {
+        let mut acc = 0x5eedu64;
+        for _ in 0..self.spin {
+            for &g in genome {
+                acc = acc.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(g as u64);
+            }
+        }
+        let h = std::hint::black_box(acc);
+        let f1 = (h % 1000) as f64 / 1000.0;
+        Evaluation { objectives: vec![f1, 1.0 - f1], violation: 0.0 }
+    }
+}
+
+/// 1-thread vs N-thread evaluation of one generation (pop 40), tracking
+/// the SearchSession speedup in the perf trajectory.
+fn bench_parallel_eval(b: &mut Bencher) {
+    println!("== parallel generation evaluation (hermetic) ==");
+    let problem = SyntheticEval { spin: 12_000 };
+    let genomes: Vec<Vec<i64>> = (0..40)
+        .map(|i| (0..16).map(|j| 1 + ((i + j) % 4) as i64).collect())
+        .collect();
+    let threads = pool::default_threads();
+
+    let r1 = b
+        .bench_items("generation eval, 1 thread (pop 40)", 40, || {
+            Parallel::new(&problem, 1).evaluate_batch(&genomes)
+        })
+        .mean_ns;
+    let rn = b
+        .bench_items(
+            &format!("generation eval, {threads} threads (pop 40)"),
+            40,
+            || Parallel::new(&problem, threads).evaluate_batch(&genomes),
+        )
+        .mean_ns;
+    println!("parallel eval speedup: {:.2}x on {threads} threads\n", r1 / rn);
+}
 
 fn main() -> anyhow::Result<()> {
+    let mut hb = Bencher::new(200, 2000, 10_000);
+    bench_parallel_eval(&mut hb);
+
     let dir = std::env::var("MOHAQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     if !std::path::Path::new(&dir).join("manifest.json").exists() {
-        println!("bench_runtime: no artifacts at {dir}; run `make artifacts` first");
+        println!("bench_runtime: no artifacts at {dir}; skipping the PJRT sections");
         return Ok(());
     }
     let rt = Runtime::cpu()?;
-    let arts = Rc::new(Artifacts::load(&dir)?);
+    let arts = Arc::new(Artifacts::load(&dir)?);
     let mut b = Bencher::new(300, 3000, 10_000);
     println!("== runtime hot-path benchmarks ==");
 
@@ -91,7 +154,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // Full candidate evaluation (4 subsets, max rule) through EvalService.
-    let mut svc = EvalService::new(&rt, arts.clone())?;
+    let svc = EvalService::new(&rt, arts.clone())?;
     let mut rng = mohaq::util::rng::Rng::new(0xeea1);
     let mut bc = Bencher::new(300, 4000, 12);
     bc.bench("EvalService::val_error (uncached candidate)", || {

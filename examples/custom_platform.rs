@@ -1,0 +1,125 @@
+//! Register a custom hardware platform WITHOUT touching `coordinator/` —
+//! the point of the registry redesign. The toy backend below models a
+//! DSP-style accelerator with 8-bit-native MACs, registers itself under
+//! `"dsp8"`, scores paper-model configs analytically, and (when an
+//! artifact bundle is present) runs a full `SearchSession` against it.
+//!
+//!     cargo run --release --example custom_platform -- \
+//!         [--gens 8] [--sram-mb 3] [--artifacts artifacts]
+
+use std::sync::Arc;
+
+use mohaq::coordinator::{baseline_rows, ExperimentSpec, ObjectiveKind, SearchEvent, SearchSession};
+use mohaq::hw::registry::{self, PlatformSpec};
+use mohaq::hw::{eq3_energy_pj, eq4_speedup, Platform};
+use mohaq::model::ModelDesc;
+use mohaq::quant::{Bits, QuantConfig};
+use mohaq::report;
+use mohaq::util::cli::Args;
+
+/// A DSP-style accelerator: 8-bit MACs are native, 4-bit packs two ops per
+/// cycle, 16-bit splits over two cycles. Ships its own (made-up) 28nm
+/// energy table, so the 3-objective energy search works on it too.
+#[derive(Debug, Clone)]
+struct Dsp8 {
+    sram_bytes: Option<f64>,
+}
+
+fn dsp8_mac_speedup(w: Bits) -> f64 {
+    match w {
+        Bits::B2 | Bits::B4 => 4.0,
+        Bits::B8 => 2.0,
+        _ => 1.0,
+    }
+}
+
+impl Platform for Dsp8 {
+    fn name(&self) -> &str {
+        "DSP8"
+    }
+
+    fn supported_bits(&self) -> &[Bits] {
+        &[Bits::B4, Bits::B8, Bits::B16]
+    }
+
+    fn tied_wa(&self) -> bool {
+        false
+    }
+
+    fn has_energy_model(&self) -> bool {
+        true
+    }
+
+    fn speedup(&self, model: &ModelDesc, qc: &QuantConfig) -> f64 {
+        eq4_speedup(model, qc, |w, _a| dsp8_mac_speedup(w))
+    }
+
+    fn energy_pj(&self, model: &ModelDesc, qc: &QuantConfig) -> Option<f64> {
+        let mac = |w: Bits, _a: Bits| match w {
+            Bits::B2 | Bits::B4 => 0.21,
+            Bits::B8 => 0.48,
+            _ => 1.35,
+        };
+        Some(eq3_energy_pj(model, qc, 0.06, mac, 0.0))
+    }
+
+    fn sram_bytes(&self) -> Option<f64> {
+        self.sram_bytes
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+
+    // One registry call makes the backend available to specs, config
+    // files and the CLI alike.
+    registry::register("dsp8", |spec: &PlatformSpec| {
+        let mb = spec.f64("sram_mb").unwrap_or(3.0);
+        Ok(Arc::new(Dsp8 { sram_bytes: Some(mb * 1024.0 * 1024.0) }))
+    });
+    println!("registered platforms: {:?}", registry::known_platforms());
+
+    // The builder validates against the registry like any built-in.
+    let spec = ExperimentSpec::builder()
+        .name("dsp8-search")
+        .platform("dsp8")
+        .sram_mb(args.get_f64("sram-mb", 3.0))
+        .objective(ObjectiveKind::Error)
+        .objective(ObjectiveKind::NegSpeedup)
+        .objective(ObjectiveKind::EnergyUj)
+        .generations(args.get_usize("gens", 8))
+        .build()?;
+    println!("spec validates: {}\n", spec.name);
+
+    // Analytical scoring needs no artifacts.
+    let platform = spec.resolve_platform()?.expect("dsp8 resolves");
+    let model = ModelDesc::paper();
+    println!("== DSP8 analytical scores (paper-dims model) ==");
+    println!("{:<14}{:>10}{:>12}{:>10}", "config", "speedup", "energy uJ", "fits?");
+    for (w, a) in [(Bits::B16, Bits::B16), (Bits::B8, Bits::B8), (Bits::B4, Bits::B8)] {
+        let qc = QuantConfig::uniform(model.num_layers(), w, a);
+        println!(
+            "{:<14}{:>9.2}x{:>12.2}{:>10}",
+            format!("W{w}/A{a}"),
+            platform.speedup(&model, &qc),
+            platform.energy_pj(&model, &qc).unwrap() / 1e6,
+            if platform.sram_violation(&model, &qc) == 0.0 { "yes" } else { "no" },
+        );
+    }
+
+    // Full search when the AOT bundle exists (hermetic exit otherwise).
+    let dir = args.get_or("artifacts", "artifacts").to_string();
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        println!("\nno artifacts at {dir}; skipping the live search (run the AOT pipeline first)");
+        return Ok(());
+    }
+    let arts = Arc::new(mohaq::runtime::Artifacts::load(&dir)?);
+    let session = SearchSession::new(arts.clone())?;
+    let outcome = session.run_with(&spec, |event| {
+        if let SearchEvent::Generation(log) = event {
+            println!("{log}");
+        }
+    })?;
+    println!("\n{}", report::render_table(&outcome.rows, &baseline_rows(&arts), &arts));
+    Ok(())
+}

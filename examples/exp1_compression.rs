@@ -6,9 +6,9 @@
 //!     cargo run --release --example exp1_compression -- \
 //!         [--gens 60] [--seed N] [--out out/exp1] [--artifacts artifacts]
 
-use std::rc::Rc;
+use std::sync::Arc;
 
-use mohaq::coordinator::{baseline_rows, run_search, ExperimentSpec};
+use mohaq::coordinator::{baseline_rows, ExperimentSpec, SearchEvent, SearchSession};
 use mohaq::report;
 use mohaq::util::cli::Args;
 
@@ -17,8 +17,8 @@ fn main() -> anyhow::Result<()> {
     let dir = args.get_or("artifacts", "artifacts");
     let out_dir = args.get_or("out", "out/exp1").to_string();
 
-    let arts = Rc::new(mohaq::runtime::Artifacts::load(dir)?);
-    let rt = mohaq::runtime::Runtime::cpu()?;
+    let arts = Arc::new(mohaq::runtime::Artifacts::load(dir)?);
+    let session = SearchSession::new(arts.clone())?.threads(args.get_usize("threads", 0));
 
     let mut spec = ExperimentSpec::exp1();
     spec.ga.generations = args.get_usize("gens", spec.ga.generations);
@@ -29,7 +29,11 @@ fn main() -> anyhow::Result<()> {
         2 * arts.layer_names.len(),
         spec.ga.generations
     );
-    let outcome = run_search(&spec, arts.clone(), &rt, true)?;
+    let outcome = session.run_with(&spec, |event| {
+        if let SearchEvent::Generation(log) = event {
+            println!("{log}");
+        }
+    })?;
 
     println!("\n== Pareto set (paper Table 5 analog) ==\n");
     println!(

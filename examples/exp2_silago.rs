@@ -8,9 +8,10 @@
 //!     cargo run --release --example exp2_silago -- \
 //!         [--gens 15] [--seed N] [--sram-mb 6] [--out out/exp2]
 
-use std::rc::Rc;
+use std::sync::Arc;
 
-use mohaq::coordinator::{baseline_rows, run_search, ExperimentSpec, PlatformChoice};
+use mohaq::coordinator::{baseline_rows, ExperimentSpec, SearchEvent, SearchSession};
+use mohaq::hw::registry::PlatformSpec;
 use mohaq::hw::{silago::SiLago, Platform};
 use mohaq::quant::{Bits, QuantConfig};
 use mohaq::report;
@@ -21,20 +22,25 @@ fn main() -> anyhow::Result<()> {
     let dir = args.get_or("artifacts", "artifacts");
     let out_dir = args.get_or("out", "out/exp2").to_string();
 
-    let arts = Rc::new(mohaq::runtime::Artifacts::load(dir)?);
-    let rt = mohaq::runtime::Runtime::cpu()?;
+    let arts = Arc::new(mohaq::runtime::Artifacts::load(dir)?);
+    let session = SearchSession::new(arts.clone())?.threads(args.get_usize("threads", 0));
 
     let mut spec = ExperimentSpec::exp2_silago();
     spec.ga.generations = args.get_usize("gens", spec.ga.generations);
     spec.ga.seed = args.get_u64("seed", spec.ga.seed);
-    spec.platform = PlatformChoice::SiLago { sram_mb: args.get_f64("sram-mb", 6.0) };
+    spec.platform =
+        Some(PlatformSpec::new("silago").with_f64("sram_mb", args.get_f64("sram-mb", 6.0)));
 
     println!(
         "== Experiment 2: SiLago, 3 objectives, {} vars, {} gens ==",
         arts.layer_names.len(),
         spec.ga.generations
     );
-    let outcome = run_search(&spec, arts.clone(), &rt, true)?;
+    let outcome = session.run_with(&spec, |event| {
+        if let SearchEvent::Generation(log) = event {
+            println!("{log}");
+        }
+    })?;
 
     println!("\n== Pareto set (paper Table 6 analog) ==\n");
     println!(

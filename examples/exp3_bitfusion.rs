@@ -9,10 +9,12 @@
 //!         [--mode inference|beacon|both] [--gens 60] [--seed N]
 //!         [--threshold 6] [--retrain-steps 250] [--out out/exp3]
 
-use std::rc::Rc;
+use std::sync::Arc;
 
-use mohaq::coordinator::search::BeaconPolicyOverrides;
-use mohaq::coordinator::{baseline_rows, run_search, ExperimentSpec, SearchOutcome};
+use mohaq::coordinator::{
+    baseline_rows, BeaconPolicyOverrides, ExperimentSpec, SearchEvent, SearchOutcome,
+    SearchSession,
+};
 use mohaq::pareto::hypervolume::hypervolume_2d;
 use mohaq::report;
 use mohaq::util::cli::Args;
@@ -34,8 +36,8 @@ fn main() -> anyhow::Result<()> {
     let gens = args.get_usize("gens", 60);
     let seed = args.get_u64("seed", 0x5eed);
 
-    let arts = Rc::new(mohaq::runtime::Artifacts::load(dir)?);
-    let rt = mohaq::runtime::Runtime::cpu()?;
+    let arts = Arc::new(mohaq::runtime::Artifacts::load(dir)?);
+    let session = SearchSession::new(arts.clone())?.threads(args.get_usize("threads", 0));
     std::fs::create_dir_all(&out_dir)?;
     let baselines = baseline_rows(&arts);
 
@@ -47,7 +49,13 @@ fn main() -> anyhow::Result<()> {
         spec.ga.generations = gens;
         spec.ga.seed = seed;
         println!("== Experiment 3a: Bitfusion, inference-only search ==");
-        let outcome = run_search(&spec, arts.clone(), &rt, true)?;
+        let outcome = session.run_with(&spec, |event| match event {
+            SearchEvent::Generation(log) => println!("{log}"),
+            SearchEvent::BeaconCreated { name, retrain_steps } => {
+                println!("  beacon created: {name} ({retrain_steps} steps)")
+            }
+            _ => {}
+        })?;
         println!("\n== Pareto set (paper Table 7 analog) ==\n");
         println!("{}", report::render_table(&outcome.rows, &baselines, &arts));
         report::write_front_csv(format!("{out_dir}/front_inference.csv"), &outcome.rows)?;
@@ -65,7 +73,13 @@ fn main() -> anyhow::Result<()> {
             max_beacons: Some(args.get_usize("max-beacons", 4)),
         });
         println!("\n== Experiment 3b: Bitfusion, beacon-based search ==");
-        let outcome = run_search(&spec, arts.clone(), &rt, true)?;
+        let outcome = session.run_with(&spec, |event| match event {
+            SearchEvent::Generation(log) => println!("{log}"),
+            SearchEvent::BeaconCreated { name, retrain_steps } => {
+                println!("  beacon created: {name} ({retrain_steps} steps)")
+            }
+            _ => {}
+        })?;
         println!("\n== Pareto set (paper Table 8 analog) ==\n");
         println!("{}", report::render_table(&outcome.rows, &baselines, &arts));
         println!("beacons created: {}", outcome.beacons.len());

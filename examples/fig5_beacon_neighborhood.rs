@@ -12,7 +12,7 @@
 //!         [--neighbors 24] [--retrain-steps 250] [--max-distance 6]
 
 use std::io::Write;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use mohaq::coordinator::Trainer;
 use mohaq::eval::EvalService;
@@ -28,9 +28,9 @@ fn main() -> anyhow::Result<()> {
     let steps = args.get_usize("retrain-steps", 250);
     let max_d = args.get_f64("max-distance", 6.0);
 
-    let arts = Rc::new(mohaq::runtime::Artifacts::load(dir)?);
+    let arts = Arc::new(mohaq::runtime::Artifacts::load(dir)?);
     let rt = mohaq::runtime::Runtime::cpu()?;
-    let mut eval = EvalService::new(&rt, arts.clone())?;
+    let eval = EvalService::new(&rt, arts.clone())?;
     let mut trainer = Trainer::new(&rt, arts.clone(), 99)?;
     let n = arts.layer_names.len();
 

@@ -4,7 +4,7 @@
 //!
 //!     cargo run --release --example quickstart [-- --artifacts artifacts]
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use mohaq::hw::{bitfusion::Bitfusion, silago::SiLago, Platform};
 use mohaq::quant::{Bits, QuantConfig};
@@ -14,9 +14,9 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse();
     let dir = args.get_or("artifacts", "artifacts");
 
-    let arts = Rc::new(mohaq::runtime::Artifacts::load(dir)?);
+    let arts = Arc::new(mohaq::runtime::Artifacts::load(dir)?);
     let rt = mohaq::runtime::Runtime::cpu()?;
-    let mut eval = mohaq::eval::EvalService::new(&rt, arts.clone())?;
+    let eval = mohaq::eval::EvalService::new(&rt, arts.clone())?;
 
     println!("== Model breakdown (paper Table 4 formulas) ==\n");
     println!("{}", arts.model.table4());

@@ -1,113 +1,48 @@
 //! JSON experiment configs: a file-driven way to define searches beyond
-//! the three paper presets (used by `mohaq search --config FILE`).
+//! the three paper presets (used by `mohaq search --config FILE`). This is
+//! a thin file-IO wrapper over `ExperimentSpec::from_json`, so a config
+//! file can express everything the builder can — and goes through the
+//! exact same validation.
 //!
 //! Example:
 //! ```json
 //! {
 //!   "name": "custom-bitfusion",
-//!   "platform": {"kind": "bitfusion", "sram_mb": 1.5},
+//!   "platform": {"name": "bitfusion", "params": {"sram_mb": 1.5}},
 //!   "objectives": ["error", "neg_speedup"],
 //!   "ga": {"pop_size": 10, "initial_pop_size": 40, "generations": 30, "seed": 7},
 //!   "beacon": {"threshold": 5.0, "retrain_steps": 200, "max_beacons": 3},
 //!   "err_feasible_pp": 8.0
 //! }
 //! ```
+//!
+//! The legacy flat platform shape `{"kind": "bitfusion", "sram_mb": 1.5}`
+//! is still accepted (see `hw::registry::PlatformSpec::from_json`).
 
-use anyhow::{Context, Result};
-
-use crate::coordinator::{BeaconPolicyOverrides, ExperimentSpec, ObjectiveKind, PlatformChoice};
-use crate::moo::Nsga2Config;
-use crate::util::json::Json;
-
-fn parse_objective(name: &str) -> Result<ObjectiveKind> {
-    Ok(match name {
-        "error" | "wer" => ObjectiveKind::Error,
-        "size" | "size_mb" => ObjectiveKind::SizeMb,
-        "neg_speedup" | "speedup" => ObjectiveKind::NegSpeedup,
-        "energy" | "energy_uj" => ObjectiveKind::EnergyUj,
-        other => anyhow::bail!("unknown objective '{other}'"),
-    })
-}
-
-fn parse_platform(j: Option<&Json>) -> Result<PlatformChoice> {
-    let Some(j) = j else { return Ok(PlatformChoice::None) };
-    let kind = j.req("kind")?.as_str().context("platform.kind")?;
-    let sram_mb = j.get("sram_mb").and_then(|v| v.as_f64());
-    Ok(match kind {
-        "none" => PlatformChoice::None,
-        "silago" => PlatformChoice::SiLago { sram_mb: sram_mb.unwrap_or(6.0) },
-        "bitfusion" => PlatformChoice::Bitfusion { sram_mb: sram_mb.unwrap_or(2.0) },
-        other => anyhow::bail!("unknown platform '{other}'"),
-    })
-}
+use crate::coordinator::{ExperimentSpec, SearchError};
 
 /// Parse an ExperimentSpec from JSON text.
-pub fn spec_from_json(text: &str) -> Result<ExperimentSpec> {
-    let j = Json::parse(text).map_err(|e| anyhow::anyhow!("config: {e}"))?;
-    let name = j.req("name")?.as_str().context("name")?.to_string();
-    let platform = parse_platform(j.get("platform"))?;
-    let objectives = j
-        .req("objectives")?
-        .as_arr()
-        .context("objectives")?
-        .iter()
-        .map(|v| parse_objective(v.as_str().unwrap_or("")))
-        .collect::<Result<Vec<_>>>()?;
-    anyhow::ensure!(!objectives.is_empty(), "at least one objective required");
-
-    let mut ga = Nsga2Config::default();
-    if let Some(g) = j.get("ga") {
-        if let Some(v) = g.get("pop_size").and_then(Json::as_usize) {
-            ga.pop_size = v;
-        }
-        if let Some(v) = g.get("initial_pop_size").and_then(Json::as_usize) {
-            ga.initial_pop_size = v;
-        }
-        if let Some(v) = g.get("generations").and_then(Json::as_usize) {
-            ga.generations = v;
-        }
-        if let Some(v) = g.get("seed").and_then(Json::as_i64) {
-            ga.seed = v as u64;
-        }
-        if let Some(v) = g.get("crossover_prob").and_then(Json::as_f64) {
-            ga.crossover_prob = v;
-        }
-        if let Some(v) = g.get("mutation_prob").and_then(Json::as_f64) {
-            ga.mutation_prob = Some(v);
-        }
-    }
-
-    let beacon = j.get("beacon").map(|b| BeaconPolicyOverrides {
-        threshold: b.get("threshold").and_then(Json::as_f64),
-        retrain_steps: b.get("retrain_steps").and_then(Json::as_usize),
-        max_beacons: b.get("max_beacons").and_then(Json::as_usize),
-    });
-
-    Ok(ExperimentSpec {
-        name,
-        platform,
-        objectives,
-        beacon,
-        ga,
-        err_feasible_pp: j.get("err_feasible_pp").and_then(Json::as_f64).unwrap_or(8.0),
-    })
+pub fn spec_from_json(text: &str) -> Result<ExperimentSpec, SearchError> {
+    ExperimentSpec::from_json_str(text)
 }
 
-pub fn spec_from_file(path: &str) -> Result<ExperimentSpec> {
-    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+pub fn spec_from_file(path: &str) -> Result<ExperimentSpec, SearchError> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| SearchError::Config(format!("reading {path}: {e}")))?;
     spec_from_json(&text)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::ObjectiveKind;
 
     #[test]
     fn parses_full_config() {
         let spec = spec_from_json(
             r#"{
               "name": "custom",
-              "platform": {"kind": "bitfusion", "sram_mb": 1.5},
+              "platform": {"name": "bitfusion", "params": {"sram_mb": 1.5}},
               "objectives": ["error", "neg_speedup"],
               "ga": {"pop_size": 12, "generations": 30, "seed": 7},
               "beacon": {"threshold": 5.0, "retrain_steps": 200},
@@ -116,7 +51,9 @@ mod tests {
         )
         .unwrap();
         assert_eq!(spec.name, "custom");
-        assert!(matches!(spec.platform, PlatformChoice::Bitfusion { sram_mb } if sram_mb == 1.5));
+        let platform = spec.platform.as_ref().unwrap();
+        assert_eq!(platform.name, "bitfusion");
+        assert_eq!(platform.f64("sram_mb"), Some(1.5));
         assert_eq!(spec.objectives.len(), 2);
         assert_eq!(spec.ga.pop_size, 12);
         assert_eq!(spec.ga.generations, 30);
@@ -125,12 +62,28 @@ mod tests {
     }
 
     #[test]
+    fn accepts_legacy_platform_shape() {
+        let spec = spec_from_json(
+            r#"{
+              "name": "legacy",
+              "platform": {"kind": "silago", "sram_mb": 4.0},
+              "objectives": ["error", "speedup"]
+            }"#,
+        )
+        .unwrap();
+        let platform = spec.platform.as_ref().unwrap();
+        assert_eq!(platform.name, "silago");
+        assert_eq!(platform.f64("sram_mb"), Some(4.0));
+        assert_eq!(spec.objectives[1], ObjectiveKind::NegSpeedup);
+    }
+
+    #[test]
     fn defaults_without_platform_or_beacon() {
         let spec = spec_from_json(
             r#"{"name": "plain", "objectives": ["error", "size"]}"#,
         )
         .unwrap();
-        assert!(matches!(spec.platform, PlatformChoice::None));
+        assert!(spec.platform.is_none());
         assert!(spec.beacon.is_none());
         assert_eq!(spec.ga.pop_size, 10);
         assert_eq!(spec.err_feasible_pp, 8.0);
@@ -141,9 +94,13 @@ mod tests {
         assert!(spec_from_json("{").is_err());
         assert!(spec_from_json(r#"{"name": "x", "objectives": []}"#).is_err());
         assert!(spec_from_json(r#"{"name": "x", "objectives": ["bogus"]}"#).is_err());
-        assert!(spec_from_json(
-            r#"{"name": "x", "objectives": ["error"], "platform": {"kind": "tpu"}}"#
+        // Unknown platform -> typed error naming the registered platforms.
+        let err = spec_from_json(
+            r#"{"name": "x", "objectives": ["error"], "platform": {"kind": "tpu"}}"#,
         )
-        .is_err());
+        .unwrap_err();
+        assert!(matches!(err, SearchError::UnknownPlatform { .. }), "{err}");
+        // Hardware objective without a platform.
+        assert!(spec_from_json(r#"{"name": "x", "objectives": ["neg_speedup"]}"#).is_err());
     }
 }

@@ -7,11 +7,17 @@
 //! a handful of retrainings. When a candidate in the "beacon-feasible
 //! area" has no beacon within the threshold, it becomes one.
 
+use std::sync::{Arc, Mutex};
+
 use anyhow::Result;
 
 use super::trainer::{RetrainReport, Trainer};
 use crate::eval::EvalService;
 use crate::quant::QuantConfig;
+
+/// Shared sink the search session drains to stream `BeaconCreated` events
+/// while the GA engine holds the problem mutably.
+pub type BeaconSink = Arc<Mutex<Vec<(String, usize)>>>;
 
 #[derive(Debug, Clone)]
 pub struct BeaconPolicy {
@@ -60,11 +66,25 @@ pub struct BeaconManager {
     /// Telemetry: (genome display, distance, created) per lookup.
     pub lookups: usize,
     pub created_log: Vec<String>,
+    /// Optional live event sink: (beacon name, retrain steps) per creation.
+    sink: Option<BeaconSink>,
 }
 
 impl BeaconManager {
     pub fn new(policy: BeaconPolicy) -> BeaconManager {
-        BeaconManager { policy, beacons: Vec::new(), lookups: 0, created_log: Vec::new() }
+        BeaconManager {
+            policy,
+            beacons: Vec::new(),
+            lookups: 0,
+            created_log: Vec::new(),
+            sink: None,
+        }
+    }
+
+    /// Attach a live event sink (see `SearchSession`).
+    pub fn with_sink(mut self, sink: BeaconSink) -> BeaconManager {
+        self.sink = Some(sink);
+        self
     }
 
     /// Nearest beacon by the weights-only log2 distance.
@@ -83,7 +103,7 @@ impl BeaconManager {
         &mut self,
         qc: &QuantConfig,
         base_err: f64,
-        eval: &mut EvalService,
+        eval: &EvalService,
         trainer: &mut Trainer,
     ) -> Result<Option<usize>> {
         self.lookups += 1;
@@ -110,6 +130,11 @@ impl BeaconManager {
                 )?;
                 let name = format!("beacon{}[{}]", self.beacons.len(), qc.display_wa());
                 let set_idx = eval.add_param_set(&name, params)?;
+                if let Some(sink) = &self.sink {
+                    sink.lock()
+                        .expect("beacon sink poisoned")
+                        .push((name.clone(), report.steps));
+                }
                 self.created_log.push(name);
                 self.beacons.push(Beacon { qc: qc.clone(), set_idx, report });
                 Ok(Some(set_idx))

@@ -1,0 +1,87 @@
+//! Typed errors at the public search API boundary. Internals keep using
+//! `anyhow` for context-rich plumbing; `SearchSession` and the
+//! `ExperimentSpec` builder translate to `SearchError` so callers can
+//! match on failure classes instead of parsing strings.
+
+use std::fmt;
+
+use crate::hw::registry::RegistryError;
+
+#[derive(Debug)]
+pub enum SearchError {
+    /// The spec names a platform the registry doesn't know.
+    UnknownPlatform { name: String, known: Vec<String> },
+    /// The spec is internally inconsistent (objective/platform mismatch,
+    /// tied-W=A violation, empty objectives, ...).
+    InvalidSpec(String),
+    /// A config file failed to parse into a spec.
+    Config(String),
+    /// Artifact loading, PJRT execution or retraining failed; the message
+    /// carries the flattened cause chain.
+    Eval(String),
+}
+
+impl SearchError {
+    /// Wrap an internal `anyhow` failure, keeping its full cause chain.
+    pub fn eval(e: anyhow::Error) -> SearchError {
+        SearchError::Eval(format!("{e:#}"))
+    }
+
+    pub fn invalid(msg: impl Into<String>) -> SearchError {
+        SearchError::InvalidSpec(msg.into())
+    }
+}
+
+impl fmt::Display for SearchError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SearchError::UnknownPlatform { name, known } => write!(
+                f,
+                "unknown platform '{name}' — registered platforms: {}",
+                known.join(", ")
+            ),
+            SearchError::InvalidSpec(msg) => write!(f, "invalid experiment spec: {msg}"),
+            SearchError::Config(msg) => write!(f, "config: {msg}"),
+            SearchError::Eval(msg) => write!(f, "evaluation failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SearchError {}
+
+impl From<RegistryError> for SearchError {
+    fn from(e: RegistryError) -> SearchError {
+        match e {
+            RegistryError::Unknown { name, known } => SearchError::UnknownPlatform { name, known },
+            RegistryError::Invalid(msg) => SearchError::InvalidSpec(msg),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_errors_map_to_typed_variants() {
+        let e: SearchError = RegistryError::Unknown {
+            name: "tpu".into(),
+            known: vec!["silago".into(), "bitfusion".into()],
+        }
+        .into();
+        assert!(matches!(e, SearchError::UnknownPlatform { .. }));
+        assert!(e.to_string().contains("silago"));
+    }
+
+    #[test]
+    fn eval_wrapper_keeps_cause_chain() {
+        use anyhow::Context;
+        let inner: anyhow::Result<()> =
+            Err(anyhow::anyhow!("device lost")).context("running generation 3");
+        let e = SearchError::eval(inner.unwrap_err());
+        assert_eq!(
+            e.to_string(),
+            "evaluation failed: running generation 3: device lost"
+        );
+    }
+}

@@ -1,16 +1,26 @@
 //! L3 coordinator — the paper's system contribution: the MOHAQ search
 //! (Fig. 4) over AOT-compiled evaluation, with beacon-based retraining
 //! (Algorithm 1) orchestrated entirely from Rust.
+//!
+//! Public API shape (see DESIGN.md):
+//!   * `ExperimentSpec::builder()` — validated, serializable experiment
+//!     descriptions; platforms named by `hw::registry` string.
+//!   * `SearchSession` — owns `Arc<Artifacts>` + runtime, evaluates
+//!     populations across a thread pool, streams `SearchEvent`s, returns
+//!     typed `SearchError`s.
 
 pub mod beacon;
+pub mod error;
 pub mod problem;
-pub mod search;
+pub mod session;
+pub mod spec;
 pub mod trainer;
 
 pub use beacon::{Beacon, BeaconManager, BeaconPolicy};
+pub use error::SearchError;
 pub use problem::{EvalRecord, MohaqProblem, ObjectiveKind};
-pub use search::{
-    baseline_rows, run_search, BeaconPolicyOverrides, ExperimentSpec, GenerationLog,
-    PlatformChoice, SearchOutcome, SolutionRow,
+pub use session::{
+    baseline_rows, GenerationLog, SearchEvent, SearchOutcome, SearchSession, SolutionRow,
 };
+pub use spec::{BeaconPolicyOverrides, ExperimentSpec, ExperimentSpecBuilder};
 pub use trainer::{RetrainReport, Trainer};

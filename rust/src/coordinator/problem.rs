@@ -2,16 +2,25 @@
 //! evaluation (with optional beacon search), the analytical hardware
 //! objectives and the SRAM constraint into a `moo::Problem` NSGA-II can
 //! drive (paper Fig. 4).
+//!
+//! Generations are evaluated in two phases: the post-training-quantization
+//! errors (the expensive PJRT executions) fan out across the session's
+//! thread pool, then the order-dependent beacon logic (Algorithm 1) runs
+//! sequentially over the precomputed errors. Both phases are deterministic
+//! per seed, so the front is bitwise-identical for any thread count.
 
-use std::rc::Rc;
+use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::coordinator::beacon::BeaconManager;
 use crate::coordinator::trainer::Trainer;
 use crate::eval::EvalService;
+use crate::hw::registry::SharedPlatform;
 use crate::hw::Platform;
 use crate::moo::{Evaluation, Problem};
 use crate::quant::QuantConfig;
 use crate::runtime::Artifacts;
+use crate::util::pool::map_parallel;
 
 /// Objectives supported by the experiments (all minimized; speedup is
 /// negated per paper §4.2).
@@ -36,6 +45,32 @@ impl ObjectiveKind {
             ObjectiveKind::EnergyUj => "energy_uJ",
         }
     }
+
+    /// Canonical config-file identifier (what `to_json` emits).
+    pub fn id(&self) -> &'static str {
+        match self {
+            ObjectiveKind::Error => "error",
+            ObjectiveKind::SizeMb => "size_mb",
+            ObjectiveKind::NegSpeedup => "neg_speedup",
+            ObjectiveKind::EnergyUj => "energy_uj",
+        }
+    }
+
+    /// Parse a config-file identifier (several aliases accepted).
+    pub fn from_id(id: &str) -> Option<ObjectiveKind> {
+        Some(match id {
+            "error" | "wer" => ObjectiveKind::Error,
+            "size" | "size_mb" => ObjectiveKind::SizeMb,
+            "neg_speedup" | "speedup" => ObjectiveKind::NegSpeedup,
+            "energy" | "energy_uj" => ObjectiveKind::EnergyUj,
+            _ => return None,
+        })
+    }
+
+    /// Whether scoring this objective requires a hardware platform.
+    pub fn needs_platform(&self) -> bool {
+        matches!(self, ObjectiveKind::NegSpeedup | ObjectiveKind::EnergyUj)
+    }
 }
 
 /// Telemetry of one candidate evaluation (figures 5/9/10 inputs).
@@ -51,11 +86,11 @@ pub struct EvalRecord {
 }
 
 pub struct MohaqProblem {
-    pub arts: Rc<Artifacts>,
+    pub arts: Arc<Artifacts>,
     pub eval: EvalService,
     pub trainer: Option<Trainer>,
     pub beacons: Option<BeaconManager>,
-    pub platform: Option<Box<dyn Platform>>,
+    pub platform: Option<SharedPlatform>,
     pub objectives: Vec<ObjectiveKind>,
     /// W == A per layer (SiLago) halves the genome.
     pub tied: bool,
@@ -63,6 +98,8 @@ pub struct MohaqProblem {
     pub err_limit: f64,
     /// Minimum gene value (SiLago lacks 2-bit => 2).
     pub gene_min: i64,
+    /// Worker threads for the PTQ evaluation phase (1 = sequential).
+    pub threads: usize,
     /// Every evaluation, in order (telemetry).
     pub records: Vec<EvalRecord>,
 }
@@ -77,22 +114,69 @@ impl MohaqProblem {
         qc.unwrap_or_else(|| panic!("invalid genome {genome:?}"))
     }
 
-    /// Evaluate the error objective with beacon logic (Algorithm 1).
-    fn error_of(&mut self, qc: &QuantConfig) -> anyhow::Result<(f64, f64, usize)> {
-        let base_err = self.eval.val_error(qc, 0)?;
+    /// Sequential half of Algorithm 1: given the (possibly parallel)
+    /// precomputed baseline error, decide whether a beacon parameter set
+    /// applies and return (err, set_idx).
+    fn refine_with_beacons(&mut self, qc: &QuantConfig, base_err: f64) -> anyhow::Result<(f64, usize)> {
         if let (Some(beacons), Some(trainer)) = (self.beacons.as_mut(), self.trainer.as_mut()) {
-            if let Some(set) = beacons.select_or_create(qc, base_err, &mut self.eval, trainer)? {
+            if let Some(set) = beacons.select_or_create(qc, base_err, &self.eval, trainer)? {
                 let err = self.eval.val_error(qc, set)?;
                 // A beacon can only help; keep the better of the two
                 // (retraining a *different* genome can occasionally hurt
                 // an easy solution — the paper keeps such solutions via
                 // the baseline parameters).
                 if err < base_err {
-                    return Ok((base_err, err, set));
+                    return Ok((err, set));
                 }
             }
         }
-        Ok((base_err, base_err, 0))
+        Ok((base_err, 0))
+    }
+
+    fn score(&mut self, genome: &[i64], qc: &QuantConfig, base_err: f64) -> Evaluation {
+        let (err, set_idx) = self
+            .refine_with_beacons(qc, base_err)
+            .unwrap_or_else(|e| panic!("candidate evaluation failed: {e:#}"));
+
+        let mut objectives = Vec::with_capacity(self.objectives.len());
+        for kind in &self.objectives {
+            let v = match kind {
+                ObjectiveKind::Error => err,
+                ObjectiveKind::SizeMb => {
+                    self.arts.model.size_bytes(&qc.w_bits) / (1024.0 * 1024.0)
+                }
+                ObjectiveKind::NegSpeedup => {
+                    let p = self.platform.as_ref().expect("speedup needs a platform");
+                    -p.speedup(&self.arts.model, qc)
+                }
+                ObjectiveKind::EnergyUj => {
+                    let p = self.platform.as_ref().expect("energy needs a platform");
+                    p.energy_pj(&self.arts.model, qc).expect("platform lacks energy model")
+                        / 1e6
+                }
+            };
+            objectives.push(v);
+        }
+
+        // Constraints: SRAM capacity (MB over) + error feasibility area
+        // (paper §4.2: solutions > baseline+8pp are excluded from the
+        // pool). Error violation is scaled so a few pp of excess error
+        // compares to MBs of memory excess.
+        let mut violation = 0.0;
+        if let Some(p) = self.platform.as_ref() {
+            violation += p.sram_violation(&self.arts.model, qc);
+        }
+        violation += (err - self.err_limit).max(0.0) * 10.0;
+
+        self.records.push(EvalRecord {
+            genome: genome.to_vec(),
+            base_err,
+            err,
+            set_idx,
+            objectives: objectives.clone(),
+            violation,
+        });
+        Evaluation { objectives, violation }
     }
 }
 
@@ -119,50 +203,41 @@ impl Problem for MohaqProblem {
     }
 
     fn evaluate(&mut self, genome: &[i64]) -> Evaluation {
-        let qc = self.decode(genome);
-        let (base_err, err, set_idx) = self
-            .error_of(&qc)
-            .unwrap_or_else(|e| panic!("candidate evaluation failed: {e:#}"));
+        self.evaluate_batch(std::slice::from_ref(&genome.to_vec()))
+            .pop()
+            .expect("batch of one returned nothing")
+    }
 
-        let mut objectives = Vec::with_capacity(self.objectives.len());
-        for kind in &self.objectives {
-            let v = match kind {
-                ObjectiveKind::Error => err,
-                ObjectiveKind::SizeMb => {
-                    self.arts.model.size_bytes(&qc.w_bits) / (1024.0 * 1024.0)
-                }
-                ObjectiveKind::NegSpeedup => {
-                    let p = self.platform.as_ref().expect("speedup needs a platform");
-                    -p.speedup(&self.arts.model, &qc)
-                }
-                ObjectiveKind::EnergyUj => {
-                    let p = self.platform.as_ref().expect("energy needs a platform");
-                    p.energy_pj(&self.arts.model, &qc).expect("platform lacks energy model")
-                        / 1e6
-                }
-            };
-            objectives.push(v);
+    fn evaluate_batch(&mut self, genomes: &[Vec<i64>]) -> Vec<Evaluation> {
+        let qcs: Vec<QuantConfig> = genomes.iter().map(|g| self.decode(g)).collect();
+
+        // Phase 1 (parallel): baseline-parameter PTQ error per UNIQUE
+        // genome. Deduplication keeps the execution count (and the shared
+        // cache's interaction pattern) identical for every thread count.
+        let mut unique: Vec<usize> = Vec::new();
+        let mut slot_of: HashMap<&[i64], usize> = HashMap::new();
+        for (i, g) in genomes.iter().enumerate() {
+            if !slot_of.contains_key(g.as_slice()) {
+                slot_of.insert(g.as_slice(), unique.len());
+                unique.push(i);
+            }
         }
+        let eval = &self.eval;
+        let base_results: Vec<anyhow::Result<f64>> =
+            map_parallel(self.threads, &unique, |_, &i| eval.val_error(&qcs[i], 0));
+        let base_errs: Vec<f64> = base_results
+            .into_iter()
+            .map(|r| r.unwrap_or_else(|e| panic!("candidate evaluation failed: {e:#}")))
+            .collect();
 
-        // Constraints: SRAM capacity (MB over) + error feasibility area
-        // (paper §4.2: solutions > baseline+8pp are excluded from the
-        // pool). Error violation is scaled so a few pp of excess error
-        // compares to MBs of memory excess.
-        let mut violation = 0.0;
-        if let Some(p) = self.platform.as_ref() {
-            violation += p.sram_violation(&self.arts.model, &qc);
-        }
-        violation += (err - self.err_limit).max(0.0) * 10.0;
-
-        let record = EvalRecord {
-            genome: genome.to_vec(),
-            base_err,
-            err,
-            set_idx,
-            objectives: objectives.clone(),
-            violation,
-        };
-        self.records.push(record);
-        Evaluation { objectives, violation }
+        // Phase 2 (sequential, input order): beacon logic + objectives.
+        genomes
+            .iter()
+            .zip(&qcs)
+            .map(|(genome, qc)| {
+                let base_err = base_errs[slot_of[genome.as_slice()]];
+                self.score(genome, qc, base_err)
+            })
+            .collect()
     }
 }

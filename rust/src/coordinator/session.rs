@@ -1,0 +1,352 @@
+//! `SearchSession`: the public entry point of the MOHAQ search. A session
+//! owns the shared artifacts (`Arc<Artifacts>`) and the PJRT runtime,
+//! evaluates each generation's population in parallel across a thread
+//! pool, streams progress through a `SearchEvent` callback, and returns a
+//! typed `SearchError` at the API boundary. It replaces the old one-shot
+//! `run_search` free function; re-running `run` on the same session reuses
+//! the runtime (each run compiles its own executable against the shared
+//! client).
+//!
+//! Determinism contract: for a fixed spec (including seed), the resulting
+//! front is bitwise-identical for ANY thread count — the parallel phase
+//! computes order-independent pure values and the order-dependent beacon
+//! phase stays sequential (see `MohaqProblem::evaluate_batch`).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Context;
+
+use super::beacon::{BeaconManager, BeaconPolicy};
+use super::error::SearchError;
+use super::problem::MohaqProblem;
+use super::spec::ExperimentSpec;
+use super::trainer::Trainer;
+use crate::eval::EvalService;
+use crate::hw::Platform;
+use crate::moo::{Individual, Nsga2, Nsga2Config, Parallel, Problem, SyncProblem};
+use crate::quant::{Bits, QuantConfig};
+use crate::runtime::{Artifacts, Runtime};
+use crate::util::pool;
+
+/// One row of a paper-style solutions table.
+#[derive(Debug, Clone)]
+pub struct SolutionRow {
+    pub qc: QuantConfig,
+    pub wer_v: f64,
+    pub wer_t: f64,
+    pub cp_r: f64,
+    pub size_mb: f64,
+    pub speedup: Option<f64>,
+    pub energy_uj: Option<f64>,
+    /// Which parameter set produced wer_v ("baseline" or a beacon name).
+    pub param_set: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct GenerationLog {
+    pub generation: usize,
+    pub evaluations: usize,
+    pub best_err: f64,
+    pub feasible: usize,
+    pub pop_size: usize,
+}
+
+/// One-line progress rendering shared by the CLI and every example driver.
+impl std::fmt::Display for GenerationLog {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "  gen {:>3}  evals {:>4}  feasible {:>2}/{}  best WER_V {:.4}",
+            self.generation, self.evaluations, self.feasible, self.pop_size, self.best_err
+        )
+    }
+}
+
+/// Progress notifications streamed to the `run_with` callback, in order.
+#[derive(Debug, Clone)]
+pub enum SearchEvent {
+    Started { name: String, num_vars: usize, objectives: Vec<String>, threads: usize },
+    /// A beacon was retrained and registered (name, retrain steps).
+    BeaconCreated { name: String, retrain_steps: usize },
+    Generation(GenerationLog),
+    Finished { evaluations: usize, pareto: usize, wall_secs: f64 },
+}
+
+pub struct SearchOutcome {
+    pub spec_name: String,
+    pub rows: Vec<SolutionRow>,
+    pub history: Vec<GenerationLog>,
+    pub evaluations: usize,
+    pub exec_calls: usize,
+    pub cache_hits: usize,
+    pub beacons: Vec<(String, usize)>,
+    /// All evaluation records (figures 9/10 scatter data).
+    pub records: Vec<super::problem::EvalRecord>,
+    pub baseline_val_err: f64,
+    pub baseline_test_err: f64,
+    pub wall_secs: f64,
+}
+
+/// A reusable handle for running MOHAQ searches over one artifact bundle.
+pub struct SearchSession {
+    arts: Arc<Artifacts>,
+    rt: Runtime,
+    threads: usize,
+}
+
+impl SearchSession {
+    /// Create a session with its own PJRT CPU runtime and an auto-sized
+    /// evaluation thread pool (one worker per core).
+    pub fn new(arts: Arc<Artifacts>) -> Result<SearchSession, SearchError> {
+        let rt = Runtime::cpu().map_err(SearchError::eval)?;
+        Ok(SearchSession::with_runtime(arts, rt))
+    }
+
+    /// Create a session around an existing runtime.
+    pub fn with_runtime(arts: Arc<Artifacts>, rt: Runtime) -> SearchSession {
+        SearchSession { arts, rt, threads: pool::default_threads() }
+    }
+
+    /// Set the evaluation worker count (0 = auto; 1 = sequential). The
+    /// front is identical for every value — this only trades wall clock.
+    pub fn threads(mut self, threads: usize) -> SearchSession {
+        self.threads = if threads == 0 { pool::default_threads() } else { threads };
+        self
+    }
+
+    pub fn artifacts(&self) -> &Arc<Artifacts> {
+        &self.arts
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    /// Run a search, discarding progress events.
+    pub fn run(&self, spec: &ExperimentSpec) -> Result<SearchOutcome, SearchError> {
+        self.run_with(spec, |_| {})
+    }
+
+    /// Run a search, streaming `SearchEvent`s to `on_event` as the search
+    /// progresses (generation lines, beacon creations).
+    pub fn run_with(
+        &self,
+        spec: &ExperimentSpec,
+        mut on_event: impl FnMut(&SearchEvent),
+    ) -> Result<SearchOutcome, SearchError> {
+        let t0 = std::time::Instant::now();
+        let arts = self.arts.clone();
+        let eval = EvalService::new(&self.rt, arts.clone())
+            .context("creating eval service")
+            .map_err(SearchError::eval)?;
+        let platform = spec.resolve_platform()?;
+        let tied = spec
+            .tied
+            .unwrap_or_else(|| platform.as_ref().map(|p| p.tied_wa()).unwrap_or(false));
+        let gene_min = platform
+            .as_ref()
+            .map(|p| p.supported_bits().iter().map(|b| b.to_gene()).min().unwrap())
+            .unwrap_or(1);
+        let err_limit = arts.baseline.val_err_16bit + spec.err_feasible_pp / 100.0;
+
+        let beacon_sink = Arc::new(Mutex::new(Vec::new()));
+        let (trainer, beacons) = if let Some(ov) = &spec.beacon {
+            let mut policy = BeaconPolicy::paper_defaults(
+                arts.baseline.val_err_16bit,
+                arts.baseline.beacon_lr as f32,
+            );
+            if let Some(t) = ov.threshold {
+                policy.threshold = t;
+            }
+            if let Some(s) = ov.retrain_steps {
+                policy.retrain_steps = s;
+            }
+            if let Some(m) = ov.max_beacons {
+                policy.max_beacons = m;
+            }
+            let trainer = Trainer::new(&self.rt, arts.clone(), spec.ga.seed ^ 0xbeac0)
+                .map_err(SearchError::eval)?;
+            (
+                Some(trainer),
+                Some(BeaconManager::new(policy).with_sink(beacon_sink.clone())),
+            )
+        } else {
+            (None, None)
+        };
+
+        let mut problem = MohaqProblem {
+            arts: arts.clone(),
+            eval,
+            trainer,
+            beacons,
+            platform,
+            objectives: spec.objectives.clone(),
+            tied,
+            err_limit,
+            gene_min,
+            threads: self.threads,
+            records: Vec::new(),
+        };
+
+        on_event(&SearchEvent::Started {
+            name: spec.name.clone(),
+            num_vars: problem.num_vars(),
+            objectives: problem.objective_names(),
+            threads: self.threads,
+        });
+
+        let mut algo = Nsga2::new(spec.ga.clone());
+        let mut history: Vec<GenerationLog> = Vec::new();
+        // The GA engine's Problem interface is infallible, so evaluation
+        // failures surface as panics deep in the generation loop; catch
+        // them here and honor the typed-error contract of the public API.
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            algo.run(&mut problem, |stats| {
+                // Beacons created during this generation stream first, so
+                // the callback sees them before the generation summary
+                // they shaped.
+                let created: Vec<(String, usize)> = beacon_sink
+                    .lock()
+                    .expect("beacon sink poisoned")
+                    .drain(..)
+                    .collect();
+                for (name, steps) in created {
+                    on_event(&SearchEvent::BeaconCreated { name, retrain_steps: steps });
+                }
+                let best_err = stats
+                    .population
+                    .iter()
+                    .filter(|i| i.feasible())
+                    .map(|i| i.objectives[0])
+                    .fold(f64::INFINITY, f64::min);
+                let feasible = stats.population.iter().filter(|i| i.feasible()).count();
+                let log = GenerationLog {
+                    generation: stats.generation,
+                    evaluations: stats.evaluations,
+                    best_err,
+                    feasible,
+                    pop_size: stats.population.len(),
+                };
+                on_event(&SearchEvent::Generation(log.clone()));
+                history.push(log);
+            })
+        }));
+        let pop = match run {
+            Ok(pop) => pop,
+            Err(payload) => {
+                let msg = payload
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "search evaluation panicked".into());
+                return Err(SearchError::Eval(msg));
+            }
+        };
+
+        // ---- Post-process the Pareto set into report rows ----------------
+        let set = Nsga2::pareto_set(&pop);
+        // Latest record per genome tells us which parameter set scored it.
+        let mut set_of: HashMap<Vec<i64>, usize> = HashMap::new();
+        for r in &problem.records {
+            set_of.insert(r.genome.clone(), r.set_idx);
+        }
+
+        let mut rows = Vec::with_capacity(set.len());
+        for ind in &set {
+            let qc = problem.decode(&ind.genome);
+            let set_idx = *set_of.get(&ind.genome).unwrap_or(&0);
+            let wer_v = problem.eval.val_error(&qc, set_idx).map_err(SearchError::eval)?;
+            let wer_t = problem.eval.test_error(&qc, set_idx).map_err(SearchError::eval)?;
+            let model = &problem.arts.model;
+            rows.push(SolutionRow {
+                cp_r: model.compression_ratio(&qc.w_bits),
+                size_mb: model.size_bytes(&qc.w_bits) / (1024.0 * 1024.0),
+                speedup: problem.platform.as_ref().map(|p| p.speedup(model, &qc)),
+                energy_uj: problem
+                    .platform
+                    .as_ref()
+                    .and_then(|p| p.energy_pj(model, &qc))
+                    .map(|pj| pj / 1e6),
+                param_set: problem.eval.param_set(set_idx).name.clone(),
+                qc,
+                wer_v,
+                wer_t,
+            });
+        }
+        rows.sort_by(|a, b| a.wer_v.partial_cmp(&b.wer_v).unwrap());
+
+        let stats = problem.eval.stats();
+        let outcome = SearchOutcome {
+            spec_name: spec.name.clone(),
+            rows,
+            history,
+            evaluations: algo.evaluations(),
+            exec_calls: stats.executions,
+            cache_hits: stats.cache_hits,
+            beacons: problem
+                .beacons
+                .as_ref()
+                .map(|b| {
+                    b.beacons
+                        .iter()
+                        .map(|bc| (bc.qc.display_wa(), bc.report.steps))
+                        .collect()
+                })
+                .unwrap_or_default(),
+            records: problem.records,
+            baseline_val_err: arts.baseline.val_err_16bit,
+            baseline_test_err: arts.baseline.test_err,
+            wall_secs: t0.elapsed().as_secs_f64(),
+        };
+        on_event(&SearchEvent::Finished {
+            evaluations: outcome.evaluations,
+            pareto: outcome.rows.len(),
+            wall_secs: outcome.wall_secs,
+        });
+        Ok(outcome)
+    }
+
+    /// Run NSGA-II over any artifact-free `SyncProblem` with `threads`
+    /// evaluation workers — the generic half of the session's parallel
+    /// plumbing, exposed for smoke tests and engine benchmarks.
+    pub fn run_generic<P: SyncProblem>(
+        problem: &P,
+        ga: Nsga2Config,
+        threads: usize,
+    ) -> Vec<Individual> {
+        let mut wrapped = Parallel::new(problem, threads.max(1));
+        let mut algo = Nsga2::new(ga);
+        let pop = algo.run(&mut wrapped, |_| {});
+        Nsga2::pareto_set(&pop)
+    }
+}
+
+/// Baseline rows (Base / Base_16bit) for the report tables.
+pub fn baseline_rows(arts: &Artifacts) -> Vec<SolutionRow> {
+    let n = arts.layer_names.len();
+    let float_qc = QuantConfig::uniform(n, Bits::B32, Bits::B32);
+    let qc16 = QuantConfig::uniform(n, Bits::B16, Bits::B16);
+    vec![
+        SolutionRow {
+            qc: float_qc,
+            wer_v: arts.baseline.val_err,
+            wer_t: arts.baseline.test_err,
+            cp_r: 1.0,
+            size_mb: arts.model.baseline_size_bits() as f64 / 8.0 / (1024.0 * 1024.0),
+            speedup: None,
+            energy_uj: None,
+            param_set: "baseline".into(),
+        },
+        SolutionRow {
+            qc: qc16.clone(),
+            wer_v: arts.baseline.val_err_16bit,
+            wer_t: arts.baseline.test_err,
+            cp_r: arts.model.compression_ratio(&qc16.w_bits),
+            size_mb: arts.model.size_bytes(&qc16.w_bits) / (1024.0 * 1024.0),
+            speedup: Some(1.0),
+            energy_uj: None,
+            param_set: "baseline".into(),
+        },
+    ]
+}

@@ -1,0 +1,484 @@
+//! Experiment specifications: what to search, on which platform, with
+//! which objectives and GA/beacon settings. Specs are built through a
+//! validating builder (`ExperimentSpec::builder()`), round-trip through
+//! JSON (so `mohaq search --config FILE` covers everything the presets
+//! do), and name platforms by registry string — adding a backend never
+//! touches this module.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::error::SearchError;
+use crate::coordinator::problem::ObjectiveKind;
+use crate::hw::registry::{self, PlatformSpec, SharedPlatform};
+use crate::hw::Platform;
+use crate::moo::Nsga2Config;
+use crate::util::json::Json;
+
+/// Beacon policy knobs exposed to drivers; unset fields use paper defaults.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BeaconPolicyOverrides {
+    pub threshold: Option<f64>,
+    pub retrain_steps: Option<usize>,
+    pub max_beacons: Option<usize>,
+}
+
+/// A validated experiment description. Construct via `builder()` (or the
+/// paper presets, which go through the builder); direct field edits after
+/// that are the driver's responsibility.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentSpec {
+    pub name: String,
+    /// Registry reference; `None` = no hardware model (experiment 1).
+    pub platform: Option<PlatformSpec>,
+    pub objectives: Vec<ObjectiveKind>,
+    /// Enable beacon-based search with this policy (None = inference-only).
+    pub beacon: Option<BeaconPolicyOverrides>,
+    pub ga: Nsga2Config,
+    /// Feasibility area width above the 16-bit baseline error (paper: 8pp).
+    pub err_feasible_pp: f64,
+    /// Force tied W=A genomes even without a platform that requires it.
+    /// `None` defers to the platform (`tied_wa()`).
+    pub tied: Option<bool>,
+}
+
+impl ExperimentSpec {
+    pub fn builder() -> ExperimentSpecBuilder {
+        ExperimentSpecBuilder::default()
+    }
+
+    /// Experiment 1 (§5.2): WER vs memory size, no hardware model.
+    pub fn exp1() -> ExperimentSpec {
+        ExperimentSpec::builder()
+            .name("exp1-compression")
+            .objective(ObjectiveKind::Error)
+            .objective(ObjectiveKind::SizeMb)
+            .generations(60)
+            .build()
+            .expect("exp1 preset is valid")
+    }
+
+    /// Experiment 2 (§5.3): SiLago, 3 objectives, 6 MB SRAM, tied W=A.
+    pub fn exp2_silago() -> ExperimentSpec {
+        ExperimentSpec::builder()
+            .name("exp2-silago")
+            .platform("silago")
+            .sram_mb(6.0)
+            .objective(ObjectiveKind::Error)
+            .objective(ObjectiveKind::NegSpeedup)
+            .objective(ObjectiveKind::EnergyUj)
+            .generations(15)
+            .build()
+            .expect("exp2 preset is valid")
+    }
+
+    /// Experiment 3 (§5.4): Bitfusion, 2 MB SRAM; beacon optional.
+    pub fn exp3_bitfusion(beacon: bool) -> ExperimentSpec {
+        let b = ExperimentSpec::builder()
+            .name(if beacon { "exp3-bitfusion-beacon" } else { "exp3-bitfusion" })
+            .platform("bitfusion")
+            .sram_mb(2.0)
+            .objective(ObjectiveKind::Error)
+            .objective(ObjectiveKind::NegSpeedup)
+            .generations(60);
+        let b = if beacon { b.beacon(BeaconPolicyOverrides::default()) } else { b };
+        b.build().expect("exp3 preset is valid")
+    }
+
+    /// Resolve the platform reference against the registry (None when the
+    /// spec has no hardware model).
+    pub fn resolve_platform(&self) -> Result<Option<SharedPlatform>, SearchError> {
+        match &self.platform {
+            None => Ok(None),
+            Some(spec) => Ok(Some(registry::resolve(spec)?)),
+        }
+    }
+
+    // ------------------------------------------------------------- serde
+
+    pub fn to_json(&self) -> Json {
+        let mut obj: BTreeMap<String, Json> = BTreeMap::new();
+        obj.insert("name".into(), Json::Str(self.name.clone()));
+        if let Some(p) = &self.platform {
+            obj.insert("platform".into(), p.to_json());
+        }
+        obj.insert(
+            "objectives".into(),
+            Json::Arr(self.objectives.iter().map(|o| Json::Str(o.id().into())).collect()),
+        );
+        let mut ga: BTreeMap<String, Json> = BTreeMap::new();
+        ga.insert("pop_size".into(), self.ga.pop_size.into());
+        ga.insert("initial_pop_size".into(), self.ga.initial_pop_size.into());
+        ga.insert("generations".into(), self.ga.generations.into());
+        ga.insert("crossover_prob".into(), Json::Num(self.ga.crossover_prob));
+        if let Some(pm) = self.ga.mutation_prob {
+            ga.insert("mutation_prob".into(), Json::Num(pm));
+        }
+        // Seeds are full u64s; JSON numbers are f64 and would silently
+        // corrupt values >= 2^53, so emit as a decimal string.
+        ga.insert("seed".into(), Json::Str(self.ga.seed.to_string()));
+        obj.insert("ga".into(), Json::Obj(ga));
+        if let Some(b) = &self.beacon {
+            let mut bm: BTreeMap<String, Json> = BTreeMap::new();
+            if let Some(t) = b.threshold {
+                bm.insert("threshold".into(), Json::Num(t));
+            }
+            if let Some(s) = b.retrain_steps {
+                bm.insert("retrain_steps".into(), s.into());
+            }
+            if let Some(m) = b.max_beacons {
+                bm.insert("max_beacons".into(), m.into());
+            }
+            obj.insert("beacon".into(), Json::Obj(bm));
+        }
+        obj.insert("err_feasible_pp".into(), Json::Num(self.err_feasible_pp));
+        if let Some(t) = self.tied {
+            obj.insert("tied".into(), Json::Bool(t));
+        }
+        Json::Obj(obj)
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string_pretty()
+    }
+
+    /// Parse from JSON, running the same validation as the builder.
+    pub fn from_json(j: &Json) -> Result<ExperimentSpec, SearchError> {
+        let mut b = ExperimentSpec::builder();
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| SearchError::Config("missing 'name'".into()))?;
+        b = b.name(name);
+
+        if let Some(p) = j.get("platform") {
+            let spec = PlatformSpec::from_json(p).map_err(SearchError::from)?;
+            // Config-file escape hatch: {"kind": "none"} means no platform.
+            if spec.name != "none" {
+                b = b.platform_spec(spec);
+            }
+        }
+
+        let objectives = j
+            .get("objectives")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| SearchError::Config("missing 'objectives' array".into()))?;
+        for o in objectives {
+            let id = o
+                .as_str()
+                .ok_or_else(|| SearchError::Config("objectives must be strings".into()))?;
+            let kind = ObjectiveKind::from_id(id)
+                .ok_or_else(|| SearchError::Config(format!("unknown objective '{id}'")))?;
+            b = b.objective(kind);
+        }
+
+        if let Some(g) = j.get("ga") {
+            let mut ga = Nsga2Config::default();
+            if let Some(v) = g.get("pop_size").and_then(Json::as_usize) {
+                ga.pop_size = v;
+            }
+            if let Some(v) = g.get("initial_pop_size").and_then(Json::as_usize) {
+                ga.initial_pop_size = v;
+            }
+            if let Some(v) = g.get("generations").and_then(Json::as_usize) {
+                ga.generations = v;
+            }
+            // Decimal-string form is canonical (lossless u64); bare JSON
+            // numbers are accepted for hand-written configs.
+            if let Some(s) = g.get("seed") {
+                if let Some(v) = s.as_str().map(str::parse::<u64>) {
+                    ga.seed = v.map_err(|e| {
+                        SearchError::Config(format!("ga.seed: {e}"))
+                    })?;
+                } else if let Some(v) = s.as_i64() {
+                    ga.seed = v as u64;
+                }
+            }
+            if let Some(v) = g.get("crossover_prob").and_then(Json::as_f64) {
+                ga.crossover_prob = v;
+            }
+            if let Some(v) = g.get("mutation_prob").and_then(Json::as_f64) {
+                ga.mutation_prob = Some(v);
+            }
+            b = b.ga(ga);
+        }
+
+        if let Some(bj) = j.get("beacon") {
+            b = b.beacon(BeaconPolicyOverrides {
+                threshold: bj.get("threshold").and_then(Json::as_f64),
+                retrain_steps: bj.get("retrain_steps").and_then(Json::as_usize),
+                max_beacons: bj.get("max_beacons").and_then(Json::as_usize),
+            });
+        }
+
+        if let Some(v) = j.get("err_feasible_pp").and_then(Json::as_f64) {
+            b = b.err_feasible_pp(v);
+        }
+        if let Some(t) = j.get("tied").and_then(Json::as_bool) {
+            b = b.tied(t);
+        }
+        b.build()
+    }
+
+    pub fn from_json_str(text: &str) -> Result<ExperimentSpec, SearchError> {
+        let j = Json::parse(text).map_err(|e| SearchError::Config(e.to_string()))?;
+        ExperimentSpec::from_json(&j)
+    }
+}
+
+/// Builder collecting spec fields; all validation happens in `build()`.
+#[derive(Debug, Clone, Default)]
+pub struct ExperimentSpecBuilder {
+    name: Option<String>,
+    platform: Option<PlatformSpec>,
+    pending_sram_mb: Option<f64>,
+    objectives: Vec<ObjectiveKind>,
+    beacon: Option<BeaconPolicyOverrides>,
+    ga: Option<Nsga2Config>,
+    err_feasible_pp: Option<f64>,
+    tied: Option<bool>,
+}
+
+impl ExperimentSpecBuilder {
+    pub fn name(mut self, name: impl Into<String>) -> Self {
+        self.name = Some(name.into());
+        self
+    }
+
+    /// Name a platform from the registry (parameters via `sram_mb` or
+    /// `platform_spec` for anything richer).
+    pub fn platform(mut self, name: impl Into<String>) -> Self {
+        self.platform = Some(PlatformSpec::new(name));
+        self
+    }
+
+    pub fn platform_spec(mut self, spec: PlatformSpec) -> Self {
+        self.platform = Some(spec);
+        self
+    }
+
+    /// Shorthand for the one parameter every built-in takes.
+    pub fn sram_mb(mut self, mb: f64) -> Self {
+        match self.platform.take() {
+            Some(p) => self.platform = Some(p.with_f64("sram_mb", mb)),
+            None => self.pending_sram_mb = Some(mb),
+        }
+        self
+    }
+
+    pub fn objective(mut self, kind: ObjectiveKind) -> Self {
+        self.objectives.push(kind);
+        self
+    }
+
+    pub fn beacon(mut self, overrides: BeaconPolicyOverrides) -> Self {
+        self.beacon = Some(overrides);
+        self
+    }
+
+    pub fn ga(mut self, ga: Nsga2Config) -> Self {
+        self.ga = Some(ga);
+        self
+    }
+
+    pub fn generations(mut self, n: usize) -> Self {
+        self.ga.get_or_insert_with(Nsga2Config::default).generations = n;
+        self
+    }
+
+    pub fn pop_size(mut self, n: usize) -> Self {
+        self.ga.get_or_insert_with(Nsga2Config::default).pop_size = n;
+        self
+    }
+
+    pub fn initial_pop_size(mut self, n: usize) -> Self {
+        self.ga.get_or_insert_with(Nsga2Config::default).initial_pop_size = n;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.ga.get_or_insert_with(Nsga2Config::default).seed = seed;
+        self
+    }
+
+    pub fn err_feasible_pp(mut self, pp: f64) -> Self {
+        self.err_feasible_pp = Some(pp);
+        self
+    }
+
+    pub fn tied(mut self, tied: bool) -> Self {
+        self.tied = Some(tied);
+        self
+    }
+
+    /// Validate and assemble. Checks: objectives present and unique,
+    /// platform resolvable from the registry, hardware objectives only
+    /// with a capable platform, and tied-W=A consistency (a platform that
+    /// ties precisions, like SiLago, cannot be overridden to untied).
+    pub fn build(self) -> Result<ExperimentSpec, SearchError> {
+        if self.objectives.is_empty() {
+            return Err(SearchError::invalid("at least one objective required"));
+        }
+        for (i, a) in self.objectives.iter().enumerate() {
+            if self.objectives[..i].contains(a) {
+                return Err(SearchError::invalid(format!("duplicate objective '{}'", a.id())));
+            }
+        }
+        if self.platform.is_none() && self.pending_sram_mb.is_some() {
+            return Err(SearchError::invalid("sram_mb set but no platform named"));
+        }
+
+        let platform_spec = self.platform.map(|p| match self.pending_sram_mb {
+            Some(mb) if p.f64("sram_mb").is_none() => p.with_f64("sram_mb", mb),
+            _ => p,
+        });
+
+        // Resolving validates the name against the registry and lets us
+        // interrogate capabilities; the handle is dropped (SearchSession
+        // re-resolves at run time so late registrations are honored).
+        let platform = match &platform_spec {
+            None => None,
+            Some(spec) => Some(registry::resolve(spec)?),
+        };
+
+        for kind in &self.objectives {
+            if kind.needs_platform() && platform.is_none() {
+                return Err(SearchError::invalid(format!(
+                    "objective '{}' requires a hardware platform",
+                    kind.id()
+                )));
+            }
+            if *kind == ObjectiveKind::EnergyUj
+                && !platform.as_ref().is_some_and(|p| p.has_energy_model())
+            {
+                return Err(SearchError::invalid(
+                    "objective 'energy_uj' requires a platform with an energy model",
+                ));
+            }
+        }
+
+        if let (Some(p), Some(false)) = (&platform, self.tied) {
+            if p.tied_wa() {
+                return Err(SearchError::invalid(format!(
+                    "platform '{}' ties weight and activation precision per layer; \
+                     tied(false) is not satisfiable",
+                    p.name()
+                )));
+            }
+        }
+
+        Ok(ExperimentSpec {
+            name: self.name.unwrap_or_else(|| "custom".into()),
+            platform: platform_spec,
+            objectives: self.objectives,
+            beacon: self.beacon,
+            ga: self.ga.unwrap_or_default(),
+            err_feasible_pp: self.err_feasible_pp.unwrap_or(8.0),
+            tied: self.tied,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper_setups() {
+        let e1 = ExperimentSpec::exp1();
+        assert!(e1.platform.is_none());
+        assert_eq!(e1.objectives, vec![ObjectiveKind::Error, ObjectiveKind::SizeMb]);
+        assert_eq!(e1.ga.generations, 60);
+
+        let e2 = ExperimentSpec::exp2_silago();
+        assert_eq!(e2.platform.as_ref().unwrap().name, "silago");
+        assert_eq!(e2.platform.as_ref().unwrap().f64("sram_mb"), Some(6.0));
+        assert_eq!(e2.objectives.len(), 3);
+        assert_eq!(e2.ga.generations, 15);
+
+        let e3 = ExperimentSpec::exp3_bitfusion(true);
+        assert!(e3.beacon.is_some());
+        assert!(ExperimentSpec::exp3_bitfusion(false).beacon.is_none());
+    }
+
+    #[test]
+    fn builder_rejects_invalid_combinations() {
+        // No objectives.
+        assert!(ExperimentSpec::builder().build().is_err());
+        // Duplicate objective.
+        assert!(ExperimentSpec::builder()
+            .objective(ObjectiveKind::Error)
+            .objective(ObjectiveKind::Error)
+            .build()
+            .is_err());
+        // Hardware objective without platform.
+        assert!(ExperimentSpec::builder()
+            .objective(ObjectiveKind::NegSpeedup)
+            .build()
+            .is_err());
+        // Energy on a platform without an energy model.
+        assert!(ExperimentSpec::builder()
+            .platform("bitfusion")
+            .objective(ObjectiveKind::Error)
+            .objective(ObjectiveKind::EnergyUj)
+            .build()
+            .is_err());
+        // Untying a tied platform.
+        assert!(ExperimentSpec::builder()
+            .platform("silago")
+            .objective(ObjectiveKind::Error)
+            .tied(false)
+            .build()
+            .is_err());
+        // Unknown platform surfaces the registry's helpful error.
+        let err = ExperimentSpec::builder()
+            .platform("tpu")
+            .objective(ObjectiveKind::Error)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, SearchError::UnknownPlatform { .. }), "{err}");
+        // sram_mb without a platform.
+        assert!(ExperimentSpec::builder()
+            .sram_mb(4.0)
+            .objective(ObjectiveKind::Error)
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn sram_mb_applies_before_or_after_platform() {
+        let a = ExperimentSpec::builder()
+            .platform("silago")
+            .sram_mb(4.0)
+            .objective(ObjectiveKind::Error)
+            .build()
+            .unwrap();
+        assert_eq!(a.platform.unwrap().f64("sram_mb"), Some(4.0));
+    }
+
+    #[test]
+    fn large_seeds_roundtrip_losslessly() {
+        // f64 JSON numbers lose precision above 2^53; the string encoding
+        // must carry the full u64 so a saved config reproduces its search.
+        let spec = ExperimentSpec::builder()
+            .objective(ObjectiveKind::Error)
+            .seed(u64::MAX - 12345)
+            .build()
+            .unwrap();
+        let back = ExperimentSpec::from_json_str(&spec.to_json_string()).unwrap();
+        assert_eq!(back.ga.seed, u64::MAX - 12345);
+        assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn json_roundtrip_is_identity_for_presets() {
+        for spec in [
+            ExperimentSpec::exp1(),
+            ExperimentSpec::exp2_silago(),
+            ExperimentSpec::exp3_bitfusion(false),
+            ExperimentSpec::exp3_bitfusion(true),
+        ] {
+            let back = ExperimentSpec::from_json_str(&spec.to_json_string()).unwrap();
+            assert_eq!(spec, back, "roundtrip changed {}", spec.name);
+        }
+    }
+}

@@ -2,7 +2,7 @@
 //! (paper §4.3) from Rust. Python is NOT involved — the train-step graph
 //! was lowered once at `make artifacts`.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -11,7 +11,7 @@ use crate::runtime::{scalar_f32, vec_f32, Artifacts, Executor, Input, Runtime};
 use crate::util::rng::Rng;
 
 pub struct Trainer {
-    arts: Rc<Artifacts>,
+    arts: Arc<Artifacts>,
     exec: Executor,
     rng: Rng,
     /// Scratch for gathering non-contiguous training batches.
@@ -29,7 +29,7 @@ pub struct RetrainReport {
 }
 
 impl Trainer {
-    pub fn new(rt: &Runtime, arts: Rc<Artifacts>, seed: u64) -> Result<Trainer> {
+    pub fn new(rt: &Runtime, arts: Arc<Artifacts>, seed: u64) -> Result<Trainer> {
         let exec = rt.load(arts.hlo_path("train_step")?)?;
         Ok(Trainer {
             arts,
@@ -134,7 +134,7 @@ mod tests {
             eprintln!("skipping: no artifacts present");
             return;
         }
-        let arts = Rc::new(Artifacts::load(p).unwrap());
+        let arts = Arc::new(Artifacts::load(p).unwrap());
         let rt = Runtime::cpu().unwrap();
         let mut trainer = Trainer::new(&rt, arts.clone(), 42).unwrap();
         let qc = QuantConfig::uniform(arts.layer_names.len(), Bits::B2, Bits::B8);

@@ -7,13 +7,20 @@
 //! trick). Results are memoized per (parameter-set, genome) — NSGA-II
 //! revisits genomes often with pop 10 x 60 generations.
 //!
+//! The service is `Send + Sync`: the result cache, execution counters and
+//! parameter-set table all use interior mutability, so one instance can
+//! score candidates from every worker of the coordinator's thread pool
+//! concurrently (the `SearchSession` dedupes in-flight genomes, keeping
+//! execution counts thread-count-independent).
+//!
 //! Parameter sets: index 0 is the baseline pre-trained model; beacon
 //! retraining registers additional sets (paper §4.3). All sets stay
 //! resident on the PJRT device so per-eval upload cost is only the quant
 //! params + data batch.
 
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{Context, Result};
 
@@ -37,16 +44,16 @@ pub struct EvalStats {
 }
 
 pub struct EvalService {
-    pub arts: Rc<Artifacts>,
+    pub arts: Arc<Artifacts>,
     exec: Executor,
-    param_sets: Vec<ParamSet>,
-    cache: HashMap<CacheKey, f64>,
-    executions: usize,
-    cache_hits: usize,
+    param_sets: RwLock<Vec<Arc<ParamSet>>>,
+    cache: Mutex<HashMap<CacheKey, f64>>,
+    executions: AtomicUsize,
+    cache_hits: AtomicUsize,
 }
 
 impl EvalService {
-    pub fn new(rt: &Runtime, arts: Rc<Artifacts>) -> Result<EvalService> {
+    pub fn new(rt: &Runtime, arts: Arc<Artifacts>) -> Result<EvalService> {
         // Two lowerings of the SAME computation exist in the bundle:
         // `infer` (Pallas kernels, the TPU-shaped artifact) and
         // `infer_ref` (XLA-native ops). pytest proves them numerically
@@ -59,13 +66,13 @@ impl EvalService {
             _ => "infer_ref",
         };
         let exec = rt.load(arts.hlo_path(which).or_else(|_| arts.hlo_path("infer"))?)?;
-        let mut svc = EvalService {
+        let svc = EvalService {
             arts: arts.clone(),
             exec,
-            param_sets: Vec::new(),
-            cache: HashMap::new(),
-            executions: 0,
-            cache_hits: 0,
+            param_sets: RwLock::new(Vec::new()),
+            cache: Mutex::new(HashMap::new()),
+            executions: AtomicUsize::new(0),
+            cache_hits: AtomicUsize::new(0),
         };
         let baseline = arts.weights.clone();
         svc.add_param_set("baseline", baseline)?;
@@ -73,7 +80,7 @@ impl EvalService {
     }
 
     /// Register a parameter set (e.g. a retrained beacon); returns its id.
-    pub fn add_param_set(&mut self, name: &str, host: Vec<Vec<f32>>) -> Result<usize> {
+    pub fn add_param_set(&self, name: &str, host: Vec<Vec<f32>>) -> Result<usize> {
         anyhow::ensure!(
             host.len() == self.arts.tensors.len(),
             "param set has {} tensors, artifact expects {}",
@@ -86,23 +93,24 @@ impl EvalService {
             // Scalars/1-D keep their manifest shape.
             bufs.push(self.exec.upload(&Input::F32(data, shape))?);
         }
-        self.param_sets.push(ParamSet { name: name.to_string(), host, bufs });
-        Ok(self.param_sets.len() - 1)
+        let mut sets = self.param_sets.write().expect("param sets poisoned");
+        sets.push(Arc::new(ParamSet { name: name.to_string(), host, bufs }));
+        Ok(sets.len() - 1)
     }
 
-    pub fn param_set(&self, idx: usize) -> &ParamSet {
-        &self.param_sets[idx]
+    pub fn param_set(&self, idx: usize) -> Arc<ParamSet> {
+        self.param_sets.read().expect("param sets poisoned")[idx].clone()
     }
 
     pub fn num_param_sets(&self) -> usize {
-        self.param_sets.len()
+        self.param_sets.read().expect("param sets poisoned").len()
     }
 
     pub fn stats(&self) -> EvalStats {
         EvalStats {
-            executions: self.executions,
-            cache_hits: self.cache_hits,
-            unique_solutions: self.cache.len(),
+            executions: self.executions.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            unique_solutions: self.cache.lock().expect("cache poisoned").len(),
         }
     }
 
@@ -111,11 +119,15 @@ impl EvalService {
     }
 
     /// (err_count, total, loss_sum) accumulated over every batch of a split.
-    fn run_split(&mut self, qc: &QuantConfig, set: usize, split: &Split) -> Result<(f64, f64, f64)> {
+    fn run_split(&self, qc: &QuantConfig, set: usize, split: &Split) -> Result<(f64, f64, f64)> {
         let a = &self.arts;
         let (b, t, f) = (a.batch, a.seq_len, a.feat_dim);
         let n_layers = a.layer_names.len() as i64;
         let (wq, aq) = self.qparams(qc)?;
+        // Arc clone only — the lock is NOT held across executions, so
+        // beacon registrations from the sequential phase never contend
+        // with in-flight parallel evaluations.
+        let params = self.param_set(set);
         let (mut err, mut total, mut loss) = (0.0, 0.0, 0.0);
         for k in 0..split.num_batches(b) {
             let (x, y) = split.batch(k, b, t, f);
@@ -127,48 +139,44 @@ impl EvalService {
             ];
             let out = self
                 .exec
-                .run_mixed(&self.param_sets[set].bufs, &fresh)
+                .run_mixed(&params.bufs, &fresh)
                 .with_context(|| format!("infer exec, set {set}"))?;
             err += scalar_f32(&out[0])? as f64;
             total += scalar_f32(&out[1])? as f64;
             loss += scalar_f32(&out[2])? as f64;
-            self.executions += 1;
+            self.executions.fetch_add(1, Ordering::Relaxed);
         }
         Ok((err, total, loss))
     }
 
     /// Validation error = max over the subsets (paper §4.2). Cached.
-    pub fn val_error(&mut self, qc: &QuantConfig, set: usize) -> Result<f64> {
+    pub fn val_error(&self, qc: &QuantConfig, set: usize) -> Result<f64> {
         let key: CacheKey = (set, qc.w_bits.clone(), qc.a_bits.clone());
-        if let Some(&v) = self.cache.get(&key) {
-            self.cache_hits += 1;
+        if let Some(&v) = self.cache.lock().expect("cache poisoned").get(&key) {
+            self.cache_hits.fetch_add(1, Ordering::Relaxed);
             return Ok(v);
         }
         let mut worst: f64 = 0.0;
-        // Rc clone only — never deep-copy the split data on the hot path.
-        let arts = Rc::clone(&self.arts);
-        for split in &arts.val_subsets {
+        for split in &self.arts.val_subsets {
             let (e, t, _) = self.run_split(qc, set, split)?;
             worst = worst.max(e / t.max(1.0));
         }
-        self.cache.insert(key, worst);
+        self.cache.lock().expect("cache poisoned").insert(key, worst);
         Ok(worst)
     }
 
     /// Test-set error (final report column WER_T). Uncached — called once
     /// per Pareto solution.
-    pub fn test_error(&mut self, qc: &QuantConfig, set: usize) -> Result<f64> {
-        let arts = Rc::clone(&self.arts);
-        let (e, t, _) = self.run_split(qc, set, &arts.test)?;
+    pub fn test_error(&self, qc: &QuantConfig, set: usize) -> Result<f64> {
+        let (e, t, _) = self.run_split(qc, set, &self.arts.test)?;
         Ok(e / t.max(1.0))
     }
 
     /// Mean validation loss (beacon diagnostics).
-    pub fn val_loss(&mut self, qc: &QuantConfig, set: usize) -> Result<f64> {
-        let arts = Rc::clone(&self.arts);
+    pub fn val_loss(&self, qc: &QuantConfig, set: usize) -> Result<f64> {
         let mut sum = 0.0;
         let mut n = 0usize;
-        for split in &arts.val_subsets {
+        for split in &self.arts.val_subsets {
             let (_, _, l) = self.run_split(qc, set, split)?;
             n += split.num_batches(self.arts.batch);
             sum += l;
@@ -182,21 +190,27 @@ mod tests {
     use super::*;
     use std::path::PathBuf;
 
-    fn artifacts() -> Option<Rc<Artifacts>> {
+    fn artifacts() -> Option<Arc<Artifacts>> {
         let dir = std::env::var("MOHAQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
         let p = PathBuf::from(dir);
         if !p.join("manifest.json").exists() {
             eprintln!("skipping: no artifacts present");
             return None;
         }
-        Some(Rc::new(Artifacts::load(p).unwrap()))
+        Some(Arc::new(Artifacts::load(p).unwrap()))
+    }
+
+    #[test]
+    fn service_is_send_sync() {
+        fn check<T: Send + Sync>() {}
+        check::<EvalService>();
     }
 
     #[test]
     fn float_baseline_error_matches_manifest() {
         let Some(arts) = artifacts() else { return };
         let rt = Runtime::cpu().unwrap();
-        let mut svc = EvalService::new(&rt, arts.clone()).unwrap();
+        let svc = EvalService::new(&rt, arts.clone()).unwrap();
         // B32 disables quantization -> must reproduce the float val error
         // computed by the Python pipeline (bit-for-bit same graph modulo
         // the Pallas kernels, which pytest proves equivalent).
@@ -213,7 +227,7 @@ mod tests {
     fn quantized_error_ordered_and_cached() {
         let Some(arts) = artifacts() else { return };
         let rt = Runtime::cpu().unwrap();
-        let mut svc = EvalService::new(&rt, arts.clone()).unwrap();
+        let svc = EvalService::new(&rt, arts.clone()).unwrap();
         let n = arts.layer_names.len();
         let e16 = svc.val_error(&QuantConfig::uniform(n, Bits::B16, Bits::B16), 0).unwrap();
         let e2 = svc.val_error(&QuantConfig::uniform(n, Bits::B2, Bits::B8), 0).unwrap();
@@ -224,5 +238,21 @@ mod tests {
         assert_eq!(again, e16);
         assert_eq!(svc.stats().executions, before);
         assert!(svc.stats().cache_hits > 0);
+    }
+
+    #[test]
+    fn concurrent_evaluations_agree_with_sequential() {
+        let Some(arts) = artifacts() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let svc = EvalService::new(&rt, arts.clone()).unwrap();
+        let n = arts.layer_names.len();
+        let qcs: Vec<QuantConfig> = [Bits::B16, Bits::B8, Bits::B4]
+            .iter()
+            .map(|&b| QuantConfig::uniform(n, b, Bits::B8))
+            .collect();
+        let seq: Vec<f64> = qcs.iter().map(|qc| svc.val_error(qc, 0).unwrap()).collect();
+        let svc2 = EvalService::new(&rt, arts.clone()).unwrap();
+        let par = crate::util::pool::map_parallel(3, &qcs, |_, qc| svc2.val_error(qc, 0).unwrap());
+        assert_eq!(seq, par);
     }
 }

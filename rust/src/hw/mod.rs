@@ -6,12 +6,19 @@
 //! simulation shortcut.
 
 pub mod bitfusion;
+pub mod registry;
 pub mod silago;
+
+pub use registry::{register, resolve, PlatformSpec};
 
 use crate::model::ModelDesc;
 use crate::quant::{Bits, QuantConfig};
 
 /// A hardware platform able to score a mixed-precision configuration.
+///
+/// Implementations must be `Send + Sync` to be registrable (the search
+/// shares one platform handle across its evaluation thread pool); the
+/// built-ins are plain data structs, so this is automatic.
 pub trait Platform {
     fn name(&self) -> &str;
 
@@ -21,6 +28,12 @@ pub trait Platform {
     /// Whether weight and activation precision must match per layer
     /// (SiLago: yes — §5.3; Bitfusion: no).
     fn tied_wa(&self) -> bool;
+
+    /// Whether `energy_pj` returns a value — used by spec validation to
+    /// reject energy objectives on platforms without an energy model.
+    fn has_energy_model(&self) -> bool {
+        false
+    }
 
     /// Expected speedup over the platform's 16-bit baseline (Eq. 4).
     fn speedup(&self, model: &ModelDesc, qc: &QuantConfig) -> f64;

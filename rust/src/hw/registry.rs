@@ -1,0 +1,247 @@
+//! Platform registry: configs and experiment specs name platforms by
+//! string, and backends register themselves here — adding a hardware model
+//! no longer touches `coordinator/`. SiLago and Bitfusion are registered
+//! as built-ins; `examples/custom_platform.rs` shows a third backend
+//! registered entirely from user code.
+//!
+//! A `PlatformSpec` is the serializable half (name + free-form parameter
+//! map, round-tripping through the in-tree JSON codec); `resolve` turns it
+//! into a live `Arc<dyn Platform + Send + Sync>` via the registered
+//! factory.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::{Arc, OnceLock, RwLock};
+
+use super::{bitfusion::Bitfusion, silago::SiLago, Platform};
+use crate::util::json::{Json, JsonError};
+
+/// A platform resolved from the registry: shared, thread-safe, immutable.
+pub type SharedPlatform = Arc<dyn Platform + Send + Sync>;
+
+/// Factory building a platform instance from a spec's parameters.
+pub type PlatformFactory =
+    Arc<dyn Fn(&PlatformSpec) -> Result<SharedPlatform, RegistryError> + Send + Sync>;
+
+/// Serializable platform reference: a registry name plus free-form
+/// parameters (e.g. `{"name": "silago", "params": {"sram_mb": 6.0}}`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlatformSpec {
+    pub name: String,
+    pub params: BTreeMap<String, Json>,
+}
+
+impl PlatformSpec {
+    pub fn new(name: impl Into<String>) -> PlatformSpec {
+        PlatformSpec { name: name.into().to_lowercase(), params: BTreeMap::new() }
+    }
+
+    pub fn with_f64(mut self, key: impl Into<String>, value: f64) -> PlatformSpec {
+        self.params.insert(key.into(), Json::Num(value));
+        self
+    }
+
+    pub fn f64(&self, key: &str) -> Option<f64> {
+        self.params.get(key).and_then(Json::as_f64)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("name".to_string(), Json::Str(self.name.clone()));
+        if !self.params.is_empty() {
+            obj.insert("params".to_string(), Json::Obj(self.params.clone()));
+        }
+        Json::Obj(obj)
+    }
+
+    /// Parse from JSON. Accepts the canonical `{"name", "params": {..}}`
+    /// shape and, for config-file compatibility, the legacy flat shape
+    /// `{"kind": "bitfusion", "sram_mb": 1.5}` (any key besides
+    /// `name`/`kind`/`params` is treated as a parameter).
+    pub fn from_json(j: &Json) -> Result<PlatformSpec, RegistryError> {
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| RegistryError::Invalid("platform must be a JSON object".into()))?;
+        let name = j
+            .get("name")
+            .or_else(|| j.get("kind"))
+            .and_then(Json::as_str)
+            .ok_or_else(|| RegistryError::Invalid("platform needs a 'name' field".into()))?;
+        let mut spec = PlatformSpec::new(name);
+        if let Some(params) = j.get("params").and_then(Json::as_obj) {
+            spec.params = params.clone();
+        }
+        for (k, v) in obj {
+            if k != "name" && k != "kind" && k != "params" {
+                spec.params.insert(k.clone(), v.clone());
+            }
+        }
+        Ok(spec)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<PlatformSpec, RegistryError> {
+        let j = Json::parse(text).map_err(RegistryError::from)?;
+        PlatformSpec::from_json(&j)
+    }
+}
+
+/// Errors from registry lookup or platform construction.
+#[derive(Debug, Clone)]
+pub enum RegistryError {
+    /// No factory registered under this name; `known` lists what is.
+    Unknown { name: String, known: Vec<String> },
+    /// The spec or its parameters were malformed.
+    Invalid(String),
+}
+
+impl fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RegistryError::Unknown { name, known } => write!(
+                f,
+                "unknown platform '{name}' — registered platforms: {} \
+                 (register custom backends via hw::registry::register)",
+                known.join(", ")
+            ),
+            RegistryError::Invalid(msg) => write!(f, "invalid platform spec: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {}
+
+impl From<JsonError> for RegistryError {
+    fn from(e: JsonError) -> RegistryError {
+        RegistryError::Invalid(e.to_string())
+    }
+}
+
+type Registry = RwLock<BTreeMap<String, PlatformFactory>>;
+
+fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(|| {
+        let mut map: BTreeMap<String, PlatformFactory> = BTreeMap::new();
+        map.insert(
+            "silago".to_string(),
+            Arc::new(|spec: &PlatformSpec| {
+                // Experiment 2 default: 6 MB DiMArch scratchpad (§5.3).
+                let mb = spec.f64("sram_mb").unwrap_or(6.0);
+                Ok(Arc::new(SiLago::new(Some(mb * 1024.0 * 1024.0))) as SharedPlatform)
+            }),
+        );
+        map.insert(
+            "bitfusion".to_string(),
+            Arc::new(|spec: &PlatformSpec| {
+                // Experiment 3 default: 2 MB SRAM (§5.4).
+                let mb = spec.f64("sram_mb").unwrap_or(2.0);
+                Ok(Arc::new(Bitfusion::new(Some(mb * 1024.0 * 1024.0))) as SharedPlatform)
+            }),
+        );
+        RwLock::new(map)
+    })
+}
+
+/// Register (or replace) a platform factory under `name`. Names are
+/// case-insensitive.
+pub fn register<F>(name: &str, factory: F)
+where
+    F: Fn(&PlatformSpec) -> Result<SharedPlatform, RegistryError> + Send + Sync + 'static,
+{
+    registry()
+        .write()
+        .expect("platform registry poisoned")
+        .insert(name.to_lowercase(), Arc::new(factory));
+}
+
+/// Resolve a spec into a live platform, or a helpful error naming the
+/// registered platforms.
+pub fn resolve(spec: &PlatformSpec) -> Result<SharedPlatform, RegistryError> {
+    let factory = {
+        let map = registry().read().expect("platform registry poisoned");
+        map.get(&spec.name.to_lowercase()).cloned()
+    };
+    match factory {
+        Some(f) => f(spec),
+        None => Err(RegistryError::Unknown { name: spec.name.clone(), known: known_platforms() }),
+    }
+}
+
+/// Names currently registered, sorted.
+pub fn known_platforms() -> Vec<String> {
+    registry()
+        .read()
+        .expect("platform registry poisoned")
+        .keys()
+        .cloned()
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelDesc;
+    use crate::quant::{Bits, QuantConfig};
+
+    #[test]
+    fn builtins_resolve_with_default_and_custom_sram() {
+        let p = resolve(&PlatformSpec::new("silago")).unwrap();
+        assert_eq!(p.name(), "SiLago");
+        assert_eq!(p.sram_bytes(), Some(6.0 * 1024.0 * 1024.0));
+        assert!(p.tied_wa());
+
+        let p = resolve(&PlatformSpec::new("Bitfusion").with_f64("sram_mb", 1.5)).unwrap();
+        assert_eq!(p.name(), "Bitfusion");
+        assert_eq!(p.sram_bytes(), Some(1.5 * 1024.0 * 1024.0));
+        assert!(!p.has_energy_model());
+    }
+
+    #[test]
+    fn unknown_platform_lists_known_names() {
+        let err = resolve(&PlatformSpec::new("tpu")).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown platform 'tpu'"), "{msg}");
+        assert!(msg.contains("silago") && msg.contains("bitfusion"), "{msg}");
+    }
+
+    #[test]
+    fn custom_registration_from_outside() {
+        struct Flat;
+        impl Platform for Flat {
+            fn name(&self) -> &str {
+                "flat-test"
+            }
+            fn supported_bits(&self) -> &[Bits] {
+                &Bits::SEARCHABLE
+            }
+            fn tied_wa(&self) -> bool {
+                false
+            }
+            fn speedup(&self, m: &ModelDesc, qc: &QuantConfig) -> f64 {
+                super::super::eq4_speedup(m, qc, |_, _| 2.0)
+            }
+            fn energy_pj(&self, _: &ModelDesc, _: &QuantConfig) -> Option<f64> {
+                None
+            }
+            fn sram_bytes(&self) -> Option<f64> {
+                None
+            }
+        }
+        register("flat-test", |_| Ok(Arc::new(Flat)));
+        let p = resolve(&PlatformSpec::new("flat-test")).unwrap();
+        assert_eq!(p.name(), "flat-test");
+        assert!(known_platforms().contains(&"flat-test".to_string()));
+    }
+
+    #[test]
+    fn spec_json_roundtrip_and_legacy_shape() {
+        let spec = PlatformSpec::new("silago").with_f64("sram_mb", 4.5);
+        let back = PlatformSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(spec, back);
+
+        let legacy =
+            PlatformSpec::from_json_str(r#"{"kind": "bitfusion", "sram_mb": 1.5}"#).unwrap();
+        assert_eq!(legacy.name, "bitfusion");
+        assert_eq!(legacy.f64("sram_mb"), Some(1.5));
+    }
+}

@@ -61,6 +61,10 @@ impl Platform for SiLago {
         true
     }
 
+    fn has_energy_model(&self) -> bool {
+        true
+    }
+
     fn speedup(&self, model: &ModelDesc, qc: &QuantConfig) -> f64 {
         // W == A per layer on SiLago; the MAC runs at the layer precision.
         eq4_speedup(model, qc, |w, _a| mac_speedup(w))

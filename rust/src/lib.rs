@@ -2,6 +2,15 @@
 //! Networks — Rust coordinator (L3) of the three-layer Rust + JAX + Pallas
 //! reproduction. See DESIGN.md for the system inventory and README.md for
 //! the quickstart.
+//!
+//! Public API in three pieces (PR 2 redesign):
+//!   * [`hw::registry`] — string-named platform registry; SiLago and
+//!     Bitfusion built in, custom backends registered from user code.
+//!   * [`ExperimentSpec::builder`] — validated, JSON-round-trippable
+//!     experiment descriptions.
+//!   * [`SearchSession`] — owns `Arc<Artifacts>`, evaluates populations
+//!     across a thread pool (deterministic per seed for any thread
+//!     count), streams [`SearchEvent`]s, returns typed [`SearchError`]s.
 
 pub mod config;
 pub mod coordinator;
@@ -14,3 +23,8 @@ pub mod pareto;
 pub mod quant;
 pub mod report;
 pub mod util;
+
+pub use coordinator::{
+    ExperimentSpec, ObjectiveKind, SearchError, SearchEvent, SearchOutcome, SearchSession,
+};
+pub use hw::registry::PlatformSpec;

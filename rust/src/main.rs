@@ -1,25 +1,74 @@
 //! MOHAQ command-line launcher.
 //!
-//! Subcommands:
+//! Subcommands (each supports `--help`):
 //!   info                          artifact bundle summary
 //!   table4                        model op/param breakdown (paper Table 4)
-//!   eval    --w 4,4,... --a 8,... score one quantization config
-//!   search  --exp exp1|exp2|exp3  run a full experiment
-//!           [--beacon] [--gens N] [--seed N] [--out DIR]
+//!   platforms                     list registered hardware platforms
+//!   eval                          score one quantization config
+//!   search                        run a full experiment (preset or config)
 //!
-//! Global: --artifacts DIR (default ./artifacts, built by `make artifacts`).
+//! Global: --artifacts DIR (default ./artifacts, built by the Python AOT
+//! pipeline — see README.md).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use mohaq::coordinator::{baseline_rows, run_search, ExperimentSpec};
+use mohaq::coordinator::{baseline_rows, ExperimentSpec, SearchEvent, SearchSession};
+use mohaq::hw::registry;
+use mohaq::hw::Platform;
 use mohaq::quant::{Bits, QuantConfig};
 use mohaq::report;
 use mohaq::util::cli::Args;
 
+const USAGE: &str = "\
+mohaq — Multi-Objective Hardware-Aware Quantization
+
+usage: mohaq <command> [options]
+
+commands:
+  info        artifact bundle summary
+  table4      model op/param breakdown (paper Table 4)
+  platforms   list registered hardware platforms
+  eval        score one quantization config
+  search      run a full experiment through a SearchSession
+  help        show this message
+
+global options:
+  --artifacts DIR   artifact bundle directory (default: artifacts)
+
+run `mohaq <command> --help` for per-command options.";
+
+const EVAL_USAGE: &str = "\
+usage: mohaq eval --w BITS[,BITS...] [--a BITS[,BITS...]] [--artifacts DIR]
+
+Score one quantization config on the AOT inference executable.
+
+options:
+  --w BITS    weight precisions: either one value broadcast to all layers
+              (e.g. --w 4) or a comma-separated per-layer list
+              (e.g. --w 4,4,4,2,4,4,4,4)
+  --a BITS    activation precisions, same format (default: same as --w)";
+
+const SEARCH_USAGE: &str = "\
+usage: mohaq search [--exp exp1|exp2|exp3] [--config FILE] [options]
+
+Run a full MOHAQ experiment through a SearchSession.
+
+options:
+  --exp NAME        paper preset: exp1 (compression), exp2 (SiLago),
+                    exp3 (Bitfusion)  [default: exp1]
+  --config FILE     JSON experiment config instead of a preset
+                    (covers everything the presets do; see config module)
+  --beacon          enable beacon-based retraining (exp3 preset only)
+  --gens N          override the number of generations
+  --seed N          override the GA seed
+  --threads N       evaluation worker threads (0 = one per core; the
+                    front is identical for any value)
+  --out DIR         write front.csv / records.csv to DIR";
+
 fn parse_bits_list(s: &str, n: usize) -> Result<Vec<Bits>> {
-    let v: Vec<Bits> = s
+    let parsed: Vec<Bits> = s
         .split(',')
         .map(|t| {
             t.trim()
@@ -29,102 +78,168 @@ fn parse_bits_list(s: &str, n: usize) -> Result<Vec<Bits>> {
                 .with_context(|| format!("bad bits value '{t}'"))
         })
         .collect::<Result<_>>()?;
-    anyhow::ensure!(v.len() == n, "expected {n} comma-separated precisions, got {}", v.len());
-    Ok(v)
+    // A single value broadcasts to every layer: `--w 4` == `--w 4,4,...`.
+    if parsed.len() == 1 && n > 1 {
+        return Ok(vec![parsed[0]; n]);
+    }
+    anyhow::ensure!(
+        parsed.len() == n,
+        "expected 1 or {n} comma-separated precisions, got {}",
+        parsed.len()
+    );
+    Ok(parsed)
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    if args.has("help") {
+        println!("usage: mohaq info [--artifacts DIR]\n\nPrint a summary of the artifact bundle.");
+        return Ok(());
+    }
+    let arts = mohaq::runtime::Artifacts::load(args.get_or("artifacts", "artifacts"))?;
+    println!("artifact bundle: {}", arts.dir.display());
+    println!("  layers: {:?}", arts.layer_names);
+    println!(
+        "  lowered batch {} x seq {} x feat {}, {} classes",
+        arts.batch, arts.seq_len, arts.feat_dim, arts.num_classes
+    );
+    println!(
+        "  splits: train {} seqs, val {}x{} seqs, test {} seqs",
+        arts.train.num_seqs,
+        arts.val_subsets.len(),
+        arts.val_subsets.first().map(|s| s.num_seqs).unwrap_or(0),
+        arts.test.num_seqs
+    );
+    println!(
+        "  baseline: val {:.2}% (16-bit {:.2}%), test {:.2}%",
+        arts.baseline.val_err * 100.0,
+        arts.baseline.val_err_16bit * 100.0,
+        arts.baseline.test_err * 100.0
+    );
+    println!("  params: {} tensors", arts.tensors.len());
+    Ok(())
+}
+
+fn cmd_table4(args: &Args) -> Result<()> {
+    if args.has("help") {
+        println!(
+            "usage: mohaq table4 [--artifacts DIR]\n\nPrint the model op/param breakdown (paper Table 4)."
+        );
+        return Ok(());
+    }
+    let arts = mohaq::runtime::Artifacts::load(args.get_or("artifacts", "artifacts"))?;
+    println!("{}", arts.model.table4());
+    Ok(())
+}
+
+fn cmd_platforms() -> Result<()> {
+    println!("registered platforms (hw::registry):");
+    for name in registry::known_platforms() {
+        let p = registry::resolve(&registry::PlatformSpec::new(&name))
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        println!(
+            "  {name:<12} tied W=A: {:<5}  energy model: {:<5}  default SRAM: {}",
+            p.tied_wa(),
+            p.has_energy_model(),
+            p.sram_bytes()
+                .map(|b| format!("{:.1} MB", b / (1024.0 * 1024.0)))
+                .unwrap_or_else(|| "-".into()),
+        );
+    }
+    println!("\nregister custom backends via mohaq::hw::registry::register");
+    println!("(see examples/custom_platform.rs)");
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    if args.has("help") {
+        println!("{EVAL_USAGE}");
+        return Ok(());
+    }
+    let arts = Arc::new(mohaq::runtime::Artifacts::load(args.get_or("artifacts", "artifacts"))?);
+    let n = arts.layer_names.len();
+    let w = parse_bits_list(args.get("w").context("--w required (see --help)")?, n)?;
+    let a = match args.get("a") {
+        Some(s) => parse_bits_list(s, n)?,
+        None => w.clone(),
+    };
+    let qc = QuantConfig { w_bits: w, a_bits: a };
+    let rt = mohaq::runtime::Runtime::cpu()?;
+    let eval = mohaq::eval::EvalService::new(&rt, arts.clone())?;
+    let val = eval.val_error(&qc, 0)?;
+    let test = eval.test_error(&qc, 0)?;
+    println!("config      : {}", qc.display_wa());
+    println!("WER_V       : {:.2}%", val * 100.0);
+    println!("WER_T       : {:.2}%", test * 100.0);
+    println!("Cp_r        : {:.1}x", arts.model.compression_ratio(&qc.w_bits));
+    println!(
+        "size        : {:.3} MB",
+        arts.model.size_bytes(&qc.w_bits) / (1024.0 * 1024.0)
+    );
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    if args.has("help") {
+        println!("{SEARCH_USAGE}");
+        return Ok(());
+    }
+    let arts = Arc::new(mohaq::runtime::Artifacts::load(args.get_or("artifacts", "artifacts"))?);
+    let mut spec = if let Some(cfg) = args.get("config") {
+        mohaq::config::spec_from_file(cfg)?
+    } else {
+        match args.get_or("exp", "exp1") {
+            "exp1" => ExperimentSpec::exp1(),
+            "exp2" => ExperimentSpec::exp2_silago(),
+            "exp3" => ExperimentSpec::exp3_bitfusion(args.has("beacon")),
+            other => anyhow::bail!("unknown experiment '{other}' (see --help)"),
+        }
+    };
+    if let Some(g) = args.get("gens") {
+        spec.ga.generations = g.parse()?;
+    }
+    spec.ga.seed = args.get_u64("seed", spec.ga.seed);
+
+    let session = SearchSession::new(arts.clone())?.threads(args.get_usize("threads", 0));
+    let outcome = session.run_with(&spec, |event| match event {
+        SearchEvent::Started { name, num_vars, threads, .. } => {
+            println!("search '{name}': {num_vars} vars, {threads} eval threads");
+        }
+        SearchEvent::BeaconCreated { name, retrain_steps } => {
+            println!("  beacon created: {name} ({retrain_steps} steps)");
+        }
+        SearchEvent::Generation(log) => println!("{log}"),
+        SearchEvent::Finished { .. } => {}
+    })?;
+    println!(
+        "\n{}",
+        report::render_table(&outcome.rows, &baseline_rows(&arts), &arts)
+    );
+    println!("{}", report::summary_md(&outcome));
+    if let Some(out_dir) = args.get("out") {
+        std::fs::create_dir_all(out_dir)?;
+        report::write_front_csv(format!("{out_dir}/front.csv"), &outcome.rows)?;
+        report::write_records_csv(format!("{out_dir}/records.csv"), &outcome)?;
+        println!("wrote {out_dir}/");
+    }
+    Ok(())
 }
 
 fn main() -> Result<()> {
     let args = Args::parse();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
-    let dir = args.get_or("artifacts", "artifacts");
-
     match cmd {
-        "info" => {
-            let arts = mohaq::runtime::Artifacts::load(dir)?;
-            println!("artifact bundle: {}", arts.dir.display());
-            println!("  layers: {:?}", arts.layer_names);
-            println!(
-                "  lowered batch {} x seq {} x feat {}, {} classes",
-                arts.batch, arts.seq_len, arts.feat_dim, arts.num_classes
-            );
-            println!(
-                "  splits: train {} seqs, val {}x{} seqs, test {} seqs",
-                arts.train.num_seqs,
-                arts.val_subsets.len(),
-                arts.val_subsets.first().map(|s| s.num_seqs).unwrap_or(0),
-                arts.test.num_seqs
-            );
-            println!(
-                "  baseline: val {:.2}% (16-bit {:.2}%), test {:.2}%",
-                arts.baseline.val_err * 100.0,
-                arts.baseline.val_err_16bit * 100.0,
-                arts.baseline.test_err * 100.0
-            );
-            println!("  params: {} tensors", arts.tensors.len());
+        "info" => cmd_info(&args),
+        "table4" => cmd_table4(&args),
+        "platforms" => cmd_platforms(),
+        "eval" => cmd_eval(&args),
+        "search" => cmd_search(&args),
+        "help" => {
+            println!("{USAGE}");
+            Ok(())
         }
-        "table4" => {
-            let arts = mohaq::runtime::Artifacts::load(dir)?;
-            println!("{}", arts.model.table4());
-        }
-        "eval" => {
-            let arts = Rc::new(mohaq::runtime::Artifacts::load(dir)?);
-            let n = arts.layer_names.len();
-            let w = parse_bits_list(args.get("w").context("--w required")?, n)?;
-            let a = match args.get("a") {
-                Some(s) => parse_bits_list(s, n)?,
-                None => w.clone(),
-            };
-            let qc = QuantConfig { w_bits: w, a_bits: a };
-            let rt = mohaq::runtime::Runtime::cpu()?;
-            let mut eval = mohaq::eval::EvalService::new(&rt, arts.clone())?;
-            let val = eval.val_error(&qc, 0)?;
-            let test = eval.test_error(&qc, 0)?;
-            println!("config      : {}", qc.display_wa());
-            println!("WER_V       : {:.2}%", val * 100.0);
-            println!("WER_T       : {:.2}%", test * 100.0);
-            println!("Cp_r        : {:.1}x", arts.model.compression_ratio(&qc.w_bits));
-            println!(
-                "size        : {:.3} MB",
-                arts.model.size_bytes(&qc.w_bits) / (1024.0 * 1024.0)
-            );
-        }
-        "search" => {
-            let arts = Rc::new(mohaq::runtime::Artifacts::load(dir)?);
-            let rt = mohaq::runtime::Runtime::cpu()?;
-            let mut spec = if let Some(cfg) = args.get("config") {
-                mohaq::config::spec_from_file(cfg)?
-            } else {
-                match args.get_or("exp", "exp1") {
-                    "exp1" => ExperimentSpec::exp1(),
-                    "exp2" => ExperimentSpec::exp2_silago(),
-                    "exp3" => ExperimentSpec::exp3_bitfusion(args.has("beacon")),
-                    other => anyhow::bail!("unknown experiment '{other}'"),
-                }
-            };
-            if let Some(g) = args.get("gens") {
-                spec.ga.generations = g.parse()?;
-            }
-            spec.ga.seed = args.get_u64("seed", spec.ga.seed);
-            let outcome = run_search(&spec, arts.clone(), &rt, true)?;
-            println!(
-                "\n{}",
-                report::render_table(&outcome.rows, &baseline_rows(&arts), &arts)
-            );
-            println!("{}", report::summary_md(&outcome));
-            if let Some(out_dir) = args.get("out") {
-                std::fs::create_dir_all(out_dir)?;
-                report::write_front_csv(format!("{out_dir}/front.csv"), &outcome.rows)?;
-                report::write_records_csv(format!("{out_dir}/records.csv"), &outcome)?;
-                println!("wrote {out_dir}/");
-            }
-        }
-        _ => {
-            println!("mohaq — Multi-Objective Hardware-Aware Quantization");
-            println!("usage: mohaq <info|table4|eval|search> [--artifacts DIR] ...");
-            println!("  mohaq eval --w 4,4,4,2,4,4,4,4 [--a 16,8,...]");
-            println!("  mohaq search --exp exp3 --beacon --gens 60 --out out/exp3");
-            println!("  mohaq search --config my_experiment.json");
+        other => {
+            eprintln!("unknown command '{other}'\n\n{USAGE}");
+            std::process::exit(2);
         }
     }
-    Ok(())
 }

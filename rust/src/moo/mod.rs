@@ -5,10 +5,12 @@
 pub mod baselines;
 pub mod individual;
 pub mod nsga2;
+pub mod parallel;
 pub mod problem;
 pub mod problems;
 pub mod sort;
 
 pub use individual::Individual;
 pub use nsga2::{GenerationStats, Nsga2, Nsga2Config};
+pub use parallel::{Parallel, SyncProblem};
 pub use problem::{Evaluation, Problem};

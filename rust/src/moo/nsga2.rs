@@ -12,7 +12,7 @@ use super::problem::Problem;
 use super::sort::{assign_crowding, fast_nondominated_sort};
 use crate::util::rng::Rng;
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Nsga2Config {
     /// Individuals per generation (paper: 10).
     pub pop_size: usize,
@@ -71,12 +71,25 @@ impl Nsga2 {
             .collect()
     }
 
-    fn evaluate(&mut self, problem: &mut dyn Problem, ind: &mut Individual) {
-        let e = problem.evaluate(&ind.genome);
-        debug_assert_eq!(e.objectives.len(), problem.num_objectives());
-        ind.objectives = e.objectives;
-        ind.violation = e.violation;
-        self.evaluations += 1;
+    /// Evaluate a batch of genomes through the problem's (possibly
+    /// parallel) batch path and wrap them as individuals. Genome creation
+    /// never consumes RNG state during evaluation, so batching whole
+    /// generations is stream-identical to the old one-at-a-time loop.
+    fn evaluate_all(&mut self, problem: &mut dyn Problem, genomes: Vec<Vec<i64>>) -> Vec<Individual> {
+        let evals = problem.evaluate_batch(&genomes);
+        debug_assert_eq!(evals.len(), genomes.len());
+        self.evaluations += genomes.len();
+        genomes
+            .into_iter()
+            .zip(evals)
+            .map(|(genome, e)| {
+                debug_assert_eq!(e.objectives.len(), problem.num_objectives());
+                let mut ind = Individual::new(genome);
+                ind.objectives = e.objectives;
+                ind.violation = e.violation;
+                ind
+            })
+            .collect()
     }
 
     /// Binary tournament on (feasibility, rank, crowding).
@@ -90,8 +103,9 @@ impl Nsga2 {
         }
     }
 
-    /// Uniform crossover + random-reset mutation.
-    fn make_child(&mut self, problem: &dyn Problem, pop: &[Individual]) -> Individual {
+    /// Uniform crossover + random-reset mutation; returns the bare genome
+    /// (evaluation happens batched, once the whole generation exists).
+    fn make_child(&mut self, problem: &dyn Problem, pop: &[Individual]) -> Vec<i64> {
         let p1 = self.select(pop).genome.clone();
         let p2 = self.select(pop).genome.clone();
         let n = p1.len();
@@ -109,7 +123,7 @@ impl Nsga2 {
                 *g = self.rng.range(lo, hi);
             }
         }
-        Individual::new(genome)
+        genome
     }
 
     /// (mu+lambda) survival: fill from best fronts; split the boundary
@@ -151,24 +165,20 @@ impl Nsga2 {
         problem: &mut dyn Problem,
         mut observer: impl FnMut(&GenerationStats),
     ) -> Vec<Individual> {
-        // Generation 0: the paper's enlarged initial population.
-        let mut pop: Vec<Individual> = (0..self.config.initial_pop_size)
-            .map(|_| Individual::new(vec![]))
+        // Generation 0: the paper's enlarged initial population, evaluated
+        // as one batch (the problem may fan it out across threads).
+        let genomes: Vec<Vec<i64>> = (0..self.config.initial_pop_size)
+            .map(|_| self.random_genome(problem))
             .collect();
-        for ind in pop.iter_mut() {
-            ind.genome = self.random_genome(problem);
-            self.evaluate(problem, ind);
-        }
+        let mut pop = self.evaluate_all(problem, genomes);
         pop = self.survive(pop, self.config.pop_size.min(self.config.initial_pop_size));
         observer(&GenerationStats { generation: 0, evaluations: self.evaluations, population: &pop });
 
         for gen in 1..=self.config.generations {
-            let mut offspring: Vec<Individual> = Vec::with_capacity(self.config.pop_size);
-            for _ in 0..self.config.pop_size {
-                let mut child = self.make_child(problem, &pop);
-                self.evaluate(problem, &mut child);
-                offspring.push(child);
-            }
+            let children: Vec<Vec<i64>> = (0..self.config.pop_size)
+                .map(|_| self.make_child(problem, &pop))
+                .collect();
+            let offspring = self.evaluate_all(problem, children);
             let mut pool = pop;
             pool.extend(offspring);
             pop = self.survive(pool, self.config.pop_size);

@@ -31,6 +31,16 @@ pub trait Problem {
     fn var_range(&self, i: usize) -> (i64, i64);
     fn evaluate(&mut self, genome: &[i64]) -> Evaluation;
 
+    /// Evaluate one generation's worth of genomes. The engine always calls
+    /// this (never `evaluate` directly), so implementations that can fan
+    /// evaluation out — `coordinator::MohaqProblem` across its PJRT thread
+    /// pool, `moo::parallel::Parallel` for any `SyncProblem` — override it.
+    /// Results MUST come back in input order and be independent of any
+    /// internal scheduling, or seed determinism breaks.
+    fn evaluate_batch(&mut self, genomes: &[Vec<i64>]) -> Vec<Evaluation> {
+        genomes.iter().map(|g| self.evaluate(g)).collect()
+    }
+
     /// Optional human-readable objective names (report tables).
     fn objective_names(&self) -> Vec<String> {
         (0..self.num_objectives()).map(|i| format!("f{i}")).collect()

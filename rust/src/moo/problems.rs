@@ -2,6 +2,7 @@
 //! validate the NSGA-II engine independently of MOHAQ, mirroring how the
 //! original NSGA-II paper was evaluated.
 
+use super::parallel::SyncProblem;
 use super::problem::{Evaluation, Problem};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -27,6 +28,22 @@ impl Zdt {
     fn decode(&self, genome: &[i64]) -> Vec<f64> {
         genome.iter().map(|&g| g as f64 / self.resolution as f64).collect()
     }
+
+    /// Pure evaluation — shared by the `Problem` and `SyncProblem` impls.
+    fn score(&self, genome: &[i64]) -> Evaluation {
+        let x = self.decode(genome);
+        let n = x.len();
+        let f1 = x[0];
+        let g = 1.0 + 9.0 * x[1..].iter().sum::<f64>() / (n - 1) as f64;
+        let f2 = match self.variant {
+            ZdtVariant::Zdt1 => g * (1.0 - (f1 / g).sqrt()),
+            ZdtVariant::Zdt2 => g * (1.0 - (f1 / g).powi(2)),
+            ZdtVariant::Zdt3 => {
+                g * (1.0 - (f1 / g).sqrt() - (f1 / g) * (10.0 * std::f64::consts::PI * f1).sin())
+            }
+        };
+        Evaluation { objectives: vec![f1, f2], violation: 0.0 }
+    }
 }
 
 impl Problem for Zdt {
@@ -43,18 +60,25 @@ impl Problem for Zdt {
     }
 
     fn evaluate(&mut self, genome: &[i64]) -> Evaluation {
-        let x = self.decode(genome);
-        let n = x.len();
-        let f1 = x[0];
-        let g = 1.0 + 9.0 * x[1..].iter().sum::<f64>() / (n - 1) as f64;
-        let f2 = match self.variant {
-            ZdtVariant::Zdt1 => g * (1.0 - (f1 / g).sqrt()),
-            ZdtVariant::Zdt2 => g * (1.0 - (f1 / g).powi(2)),
-            ZdtVariant::Zdt3 => {
-                g * (1.0 - (f1 / g).sqrt() - (f1 / g) * (10.0 * std::f64::consts::PI * f1).sin())
-            }
-        };
-        Evaluation { objectives: vec![f1, f2], violation: 0.0 }
+        self.score(genome)
+    }
+}
+
+impl SyncProblem for Zdt {
+    fn vars(&self) -> usize {
+        self.num_vars
+    }
+
+    fn objectives(&self) -> usize {
+        2
+    }
+
+    fn gene_range(&self, _i: usize) -> (i64, i64) {
+        (0, self.resolution)
+    }
+
+    fn eval(&self, genome: &[i64]) -> Evaluation {
+        self.score(genome)
     }
 }
 

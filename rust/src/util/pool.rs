@@ -1,0 +1,109 @@
+//! Scoped thread-pool fan-out (rayon is not available offline).
+//!
+//! `map_parallel` evaluates a function over a slice on N worker threads and
+//! returns results in input order, so callers observe exactly the same
+//! result vector regardless of thread count — the property the coordinator
+//! relies on for seed-deterministic parallel population evaluation.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Default worker count: one per available core.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Apply `f` to every item on up to `threads` workers; results come back in
+/// input order. `threads <= 1` runs inline (no spawn overhead). Worker
+/// panics propagate to the caller.
+pub fn map_parallel<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let threads = threads.clamp(1, items.len().max(1));
+    if threads <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let workers: Vec<_> = (0..threads)
+            .map(|_| {
+                scope.spawn(|| {
+                    // Work-stealing by atomic index: threads drain the slice
+                    // without any per-item locking.
+                    let mut local: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= items.len() {
+                            break;
+                        }
+                        local.push((i, f(i, &items[i])));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for w in workers {
+            match w.join() {
+                // Re-raise with the original payload so the root cause
+                // (e.g. "candidate evaluation failed: ...") survives to
+                // whoever catches the panic.
+                Err(payload) => std::panic::resume_unwind(payload),
+                Ok(local) => {
+                    for (i, r) in local {
+                        slots[i] = Some(r);
+                    }
+                }
+            }
+        }
+    });
+    slots.into_iter().map(|s| s.expect("worker skipped an item")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<usize> = (0..100).collect();
+        for threads in [1, 2, 8] {
+            let out = map_parallel(threads, &items, |i, &x| {
+                assert_eq!(i, x);
+                x * 2
+            });
+            assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn handles_empty_and_tiny_inputs() {
+        let empty: Vec<u32> = vec![];
+        assert!(map_parallel(4, &empty, |_, &x| x).is_empty());
+        assert_eq!(map_parallel(8, &[7u32], |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let items: Vec<u64> = (0..257).collect();
+        let f = |_: usize, &x: &u64| x.wrapping_mul(0x9E3779B97F4A7C15) >> 7;
+        let seq = map_parallel(1, &items, f);
+        let par = map_parallel(default_threads().max(2), &items, f);
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn worker_panics_propagate_with_original_payload() {
+        let items: Vec<u32> = (0..32).collect();
+        map_parallel(4, &items, |_, &x| {
+            if x == 13 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+}

@@ -1,38 +1,39 @@
 //! Cross-layer integration tests: artifacts -> runtime -> eval ->
-//! coordinator -> search, exercised on the real AOT bundle.
+//! coordinator -> SearchSession, exercised on the real AOT bundle.
 //!
-//! All tests skip gracefully when `make artifacts` has not been run (unit
-//! CI stays hermetic); `make test` runs them against the live bundle.
+//! All tests skip gracefully when the artifact bundle has not been built
+//! (unit CI stays hermetic); `make test` runs them against the live
+//! bundle.
 
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use mohaq::coordinator::{
-    baseline_rows, run_search, BeaconManager, BeaconPolicy, ExperimentSpec, Trainer,
+    baseline_rows, BeaconManager, BeaconPolicy, ExperimentSpec, SearchSession, Trainer,
 };
 use mohaq::eval::EvalService;
 use mohaq::quant::{Bits, QuantConfig};
 use mohaq::runtime::{Artifacts, Runtime};
 
-fn artifacts() -> Option<Rc<Artifacts>> {
+fn artifacts() -> Option<Arc<Artifacts>> {
     let dir = std::env::var("MOHAQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     let p = PathBuf::from(dir);
     if !p.join("manifest.json").exists() {
         eprintln!("skipping: no artifacts present");
         return None;
     }
-    Some(Rc::new(Artifacts::load(p).unwrap()))
+    Some(Arc::new(Artifacts::load(p).unwrap()))
 }
 
 #[test]
 fn exp1_mini_search_produces_tradeoff_front() {
     let Some(arts) = artifacts() else { return };
-    let rt = Runtime::cpu().unwrap();
     let mut spec = ExperimentSpec::exp1();
     spec.ga.generations = 2;
     spec.ga.initial_pop_size = 12;
     spec.ga.pop_size = 6;
-    let outcome = run_search(&spec, arts.clone(), &rt, false).unwrap();
+    let session = SearchSession::new(arts.clone()).unwrap();
+    let outcome = session.run(&spec).unwrap();
     assert!(!outcome.rows.is_empty());
     // Rows sorted by error; compression must trend the other way across
     // the front (it's a front: no row may dominate another).
@@ -48,14 +49,35 @@ fn exp1_mini_search_produces_tradeoff_front() {
 }
 
 #[test]
+fn search_front_is_identical_for_any_thread_count() {
+    let Some(arts) = artifacts() else { return };
+    let mut spec = ExperimentSpec::exp3_bitfusion(false);
+    spec.ga.generations = 2;
+    spec.ga.initial_pop_size = 10;
+    spec.ga.pop_size = 6;
+    spec.ga.seed = 0xD15C0;
+
+    let front = |threads: usize| {
+        let session = SearchSession::new(arts.clone()).unwrap().threads(threads);
+        let outcome = session.run(&spec).unwrap();
+        outcome
+            .rows
+            .iter()
+            .map(|r| (r.qc.clone(), r.wer_v.to_bits(), r.speedup.map(f64::to_bits)))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(front(1), front(4), "parallel evaluation changed the front");
+}
+
+#[test]
 fn exp2_silago_respects_platform_restrictions() {
     let Some(arts) = artifacts() else { return };
-    let rt = Runtime::cpu().unwrap();
     let mut spec = ExperimentSpec::exp2_silago();
     spec.ga.generations = 2;
     spec.ga.initial_pop_size = 10;
     spec.ga.pop_size = 6;
-    let outcome = run_search(&spec, arts.clone(), &rt, false).unwrap();
+    let session = SearchSession::new(arts.clone()).unwrap();
+    let outcome = session.run(&spec).unwrap();
     for row in &outcome.rows {
         // Tied W=A, no 2-bit on SiLago, SRAM <= 6 MB.
         assert_eq!(row.qc.w_bits, row.qc.a_bits);
@@ -68,12 +90,12 @@ fn exp2_silago_respects_platform_restrictions() {
 #[test]
 fn exp3_constraint_excludes_oversized_models() {
     let Some(arts) = artifacts() else { return };
-    let rt = Runtime::cpu().unwrap();
     let mut spec = ExperimentSpec::exp3_bitfusion(false);
     spec.ga.generations = 2;
     spec.ga.initial_pop_size = 10;
     spec.ga.pop_size = 6;
-    let outcome = run_search(&spec, arts.clone(), &rt, false).unwrap();
+    let session = SearchSession::new(arts.clone()).unwrap();
+    let outcome = session.run(&spec).unwrap();
     let cap_mb = 2.0;
     for row in &outcome.rows {
         assert!(
@@ -88,7 +110,7 @@ fn exp3_constraint_excludes_oversized_models() {
 fn beacon_rescues_aggressive_quantization() {
     let Some(arts) = artifacts() else { return };
     let rt = Runtime::cpu().unwrap();
-    let mut eval = EvalService::new(&rt, arts.clone()).unwrap();
+    let eval = EvalService::new(&rt, arts.clone()).unwrap();
     let mut trainer = Trainer::new(&rt, arts.clone(), 1).unwrap();
     let mut policy =
         BeaconPolicy::paper_defaults(arts.baseline.val_err_16bit, arts.baseline.beacon_lr as f32);
@@ -101,7 +123,7 @@ fn beacon_rescues_aggressive_quantization() {
     assert!(base_err > arts.baseline.val_err + 0.10, "2-bit PTQ should be bad");
 
     let set = mgr
-        .select_or_create(&qc, base_err, &mut eval, &mut trainer)
+        .select_or_create(&qc, base_err, &eval, &mut trainer)
         .unwrap()
         .expect("should create a beacon");
     assert_eq!(mgr.beacons.len(), 1);
@@ -119,7 +141,7 @@ fn beacon_rescues_aggressive_quantization() {
     assert!(d <= mgr.policy.threshold);
     let nb_base = eval.val_error(&neighbor, 0).unwrap();
     let set2 = mgr
-        .select_or_create(&neighbor, nb_base, &mut eval, &mut trainer)
+        .select_or_create(&neighbor, nb_base, &eval, &mut trainer)
         .unwrap()
         .expect("neighbor should use the existing beacon");
     assert_eq!(set2, set);
@@ -140,7 +162,7 @@ fn baseline_rows_match_manifest() {
 fn eval_service_val_matches_16bit_manifest_value() {
     let Some(arts) = artifacts() else { return };
     let rt = Runtime::cpu().unwrap();
-    let mut eval = EvalService::new(&rt, arts.clone()).unwrap();
+    let eval = EvalService::new(&rt, arts.clone()).unwrap();
     let n = arts.layer_names.len();
     let qc16 = QuantConfig::uniform(n, Bits::B16, Bits::B16);
     let err = eval.val_error(&qc16, 0).unwrap();

@@ -1,0 +1,466 @@
+//! Vendored reference backend exposing the subset of the `xla-rs` PJRT API
+//! that `mohaq::runtime` consumes. Two capabilities:
+//!
+//! * **Builder graphs** (`XlaBuilder` → `XlaComputation` → compile →
+//!   execute) are evaluated by a tiny elementwise interpreter — enough for
+//!   the hermetic runtime tests and any in-process computation built from
+//!   `parameter`/`add`/`mul`/`tuple` nodes.
+//! * **HLO text artifacts** (`HloModuleProto::from_text_file`) are loaded
+//!   and carried, but `compile` reports that this build cannot execute
+//!   lowered HLO. Swapping this path dependency for the real `xla-rs`
+//!   bindings (same API) enables the AOT artifact path; nothing above the
+//!   runtime layer changes.
+//!
+//! Every type here is `Send + Sync`, which is what lets the coordinator
+//! evaluate populations across a thread pool.
+
+use std::fmt;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+// --------------------------------------------------------------------------
+// Errors
+// --------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct XlaError {
+    pub msg: String,
+}
+
+impl XlaError {
+    fn new(msg: impl Into<String>) -> XlaError {
+        XlaError { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.msg)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+// --------------------------------------------------------------------------
+// Literals
+// --------------------------------------------------------------------------
+
+/// Element storage for a literal: flat typed buffers or a tuple of literals.
+#[derive(Debug, Clone, PartialEq)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host tensor: typed flat data plus dimensions (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+/// Native element types a literal can hold.
+pub trait NativeType: Copy {
+    fn wrap(v: Vec<Self>) -> Data;
+    fn slice(d: &Data) -> Option<&[Self]>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::F32(v)
+    }
+    fn slice(d: &Data) -> Option<&[Self]> {
+        match d {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::I32(v)
+    }
+    fn slice(d: &Data) -> Option<&[Self]> {
+        match d {
+            Data::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+fn element_count(dims: &[i64]) -> i64 {
+    // An empty product is 1, which is exactly the rank-0 element count.
+    dims.iter().product()
+}
+
+impl Literal {
+    /// 1-D literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: T::wrap(data.to_vec()) }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { dims: vec![], data: T::wrap(vec![v]) }
+    }
+
+    /// Reinterpret with new dimensions; the element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let have = match &self.data {
+            Data::F32(v) => v.len() as i64,
+            Data::I32(v) => v.len() as i64,
+            Data::Tuple(_) => return Err(XlaError::new("cannot reshape a tuple literal")),
+        };
+        let want = element_count(dims);
+        if have != want {
+            return Err(XlaError::new(format!(
+                "reshape to {dims:?} ({want} elems) from {have} elems"
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Data::Tuple(v) => Ok(v),
+            _ => Err(XlaError::new("literal is not a tuple")),
+        }
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::slice(&self.data)
+            .and_then(|s| s.first().copied())
+            .ok_or_else(|| XlaError::new("first element: wrong type or empty"))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::slice(&self.data)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| XlaError::new("to_vec: element type mismatch"))
+    }
+}
+
+// --------------------------------------------------------------------------
+// Builder graphs
+// --------------------------------------------------------------------------
+
+/// Array shape (element type checked only at execution in this backend).
+#[derive(Debug, Clone)]
+pub struct Shape {
+    pub dims: Vec<i64>,
+}
+
+impl Shape {
+    pub fn array<T: NativeType>(dims: Vec<i64>) -> Shape {
+        Shape { dims }
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Node {
+    Parameter(usize),
+    Add(usize, usize),
+    Mul(usize, usize),
+    Tuple(Vec<usize>),
+}
+
+type Graph = Arc<Mutex<Vec<Node>>>;
+
+/// Records an elementwise computation graph node-by-node.
+#[derive(Clone)]
+pub struct XlaBuilder {
+    nodes: Graph,
+}
+
+/// Handle to one node of a builder's graph.
+#[derive(Clone)]
+pub struct XlaOp {
+    nodes: Graph,
+    id: usize,
+}
+
+impl XlaBuilder {
+    pub fn new(_name: &str) -> XlaBuilder {
+        XlaBuilder { nodes: Arc::new(Mutex::new(Vec::new())) }
+    }
+
+    fn push(&self, node: Node) -> XlaOp {
+        let mut nodes = self.nodes.lock().expect("builder poisoned");
+        nodes.push(node);
+        XlaOp { nodes: self.nodes.clone(), id: nodes.len() - 1 }
+    }
+
+    pub fn parameter_s(&self, index: i64, _shape: &Shape, _name: &str) -> Result<XlaOp> {
+        if index < 0 {
+            return Err(XlaError::new("negative parameter index"));
+        }
+        Ok(self.push(Node::Parameter(index as usize)))
+    }
+
+    pub fn tuple(&self, elems: &[XlaOp]) -> Result<XlaOp> {
+        let ids = elems.iter().map(|e| e.id).collect();
+        Ok(self.push(Node::Tuple(ids)))
+    }
+}
+
+impl XlaOp {
+    fn binary(&self, rhs: &XlaOp, make: impl FnOnce(usize, usize) -> Node) -> Result<XlaOp> {
+        let mut nodes = self.nodes.lock().expect("builder poisoned");
+        nodes.push(make(self.id, rhs.id));
+        Ok(XlaOp { nodes: self.nodes.clone(), id: nodes.len() - 1 })
+    }
+
+    pub fn add_(&self, rhs: &XlaOp) -> Result<XlaOp> {
+        self.binary(rhs, Node::Add)
+    }
+
+    pub fn mul_(&self, rhs: &XlaOp) -> Result<XlaOp> {
+        self.binary(rhs, Node::Mul)
+    }
+
+    /// Finalize the graph with this op as the root.
+    pub fn build(&self) -> Result<XlaComputation> {
+        let nodes = self.nodes.lock().expect("builder poisoned").clone();
+        Ok(XlaComputation { kind: Arc::new(CompKind::Graph { nodes, root: self.id }) })
+    }
+}
+
+// --------------------------------------------------------------------------
+// Computations and HLO artifacts
+// --------------------------------------------------------------------------
+
+/// Opaque carrier for a lowered HLO-text module.
+pub struct HloModuleProto {
+    text: String,
+    path: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| XlaError::new(format!("reading {path:?}: {e}")))?;
+        Ok(HloModuleProto { text, path: path.display().to_string() })
+    }
+}
+
+enum CompKind {
+    Graph { nodes: Vec<Node>, root: usize },
+    Hlo { path: String, bytes: usize },
+}
+
+/// A computation ready to compile: a builder graph or a lowered HLO module.
+#[derive(Clone)]
+pub struct XlaComputation {
+    kind: Arc<CompKind>,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            kind: Arc::new(CompKind::Hlo { path: proto.path.clone(), bytes: proto.text.len() }),
+        }
+    }
+}
+
+// --------------------------------------------------------------------------
+// PJRT client / executable / buffers
+// --------------------------------------------------------------------------
+
+#[derive(Clone)]
+pub struct Device;
+
+#[derive(Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn devices(&self) -> Vec<Device> {
+        vec![Device]
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        if let CompKind::Hlo { path, bytes } = &*comp.kind {
+            return Err(XlaError::new(format!(
+                "the bundled reference backend cannot execute lowered HLO \
+                 ({path}, {bytes} bytes); build against the real xla-rs PJRT \
+                 bindings (swap the vendor/xla path dependency) to run AOT \
+                 artifacts"
+            )));
+        }
+        Ok(PjRtLoadedExecutable { comp: comp.clone(), client: self.clone() })
+    }
+
+    /// Copy a host literal into a device-resident buffer.
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<&Device>,
+        lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer { lit: lit.clone() })
+    }
+}
+
+/// Device buffer; in this backend a pinned host literal.
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    /// Synchronize and copy back to host.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.lit.clone())
+    }
+}
+
+/// Argument kinds `execute`/`execute_b` accept: host literals or references
+/// to device buffers.
+pub trait ExecuteArg {
+    fn literal(&self) -> &Literal;
+}
+
+impl ExecuteArg for Literal {
+    fn literal(&self) -> &Literal {
+        self
+    }
+}
+
+impl ExecuteArg for &PjRtBuffer {
+    fn literal(&self) -> &Literal {
+        &self.lit
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    comp: XlaComputation,
+    client: PjRtClient,
+}
+
+fn elementwise(
+    a: &Literal,
+    b: &Literal,
+    f32_op: impl Fn(f32, f32) -> f32,
+    i32_op: impl Fn(i32, i32) -> i32,
+) -> Result<Literal> {
+    match (&a.data, &b.data) {
+        (Data::F32(x), Data::F32(y)) if x.len() == y.len() => Ok(Literal {
+            data: Data::F32(x.iter().zip(y).map(|(p, q)| f32_op(*p, *q)).collect()),
+            dims: a.dims.clone(),
+        }),
+        (Data::I32(x), Data::I32(y)) if x.len() == y.len() => Ok(Literal {
+            data: Data::I32(x.iter().zip(y).map(|(p, q)| i32_op(*p, *q)).collect()),
+            dims: a.dims.clone(),
+        }),
+        _ => Err(XlaError::new("elementwise op on mismatched operands")),
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    fn run<T: ExecuteArg>(&self, args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let (nodes, root) = match &*self.comp.kind {
+            CompKind::Graph { nodes, root } => (nodes, *root),
+            CompKind::Hlo { path, .. } => {
+                return Err(XlaError::new(format!("HLO module {path} is not executable here")))
+            }
+        };
+        // Builder ids are append-ordered, so operands always precede users.
+        let mut values: Vec<Literal> = Vec::with_capacity(nodes.len());
+        for node in nodes {
+            let v = match node {
+                Node::Parameter(i) => args
+                    .get(*i)
+                    .map(|a| a.literal().clone())
+                    .ok_or_else(|| XlaError::new(format!("missing argument {i}")))?,
+                Node::Add(a, b) => {
+                    elementwise(&values[*a], &values[*b], |x, y| x + y, |x, y| x + y)?
+                }
+                Node::Mul(a, b) => {
+                    elementwise(&values[*a], &values[*b], |x, y| x * y, |x, y| x * y)?
+                }
+                Node::Tuple(ids) => Literal {
+                    data: Data::Tuple(ids.iter().map(|&i| values[i].clone()).collect()),
+                    dims: vec![],
+                },
+            };
+            values.push(v);
+        }
+        let out = values.swap_remove(root);
+        Ok(vec![vec![PjRtBuffer { lit: out }]])
+    }
+
+    /// Execute with host literals.
+    pub fn execute<T: ExecuteArg>(&self, args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        self.run(args)
+    }
+
+    /// Execute with device-resident buffers.
+    pub fn execute_b<T: ExecuteArg>(&self, args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        self.run(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert_eq!(Literal::scalar(7i32).get_first_element::<i32>().unwrap(), 7);
+    }
+
+    #[test]
+    fn builder_graph_executes() {
+        let b = XlaBuilder::new("t");
+        let shape = Shape::array::<f32>(vec![2]);
+        let x = b.parameter_s(0, &shape, "x").unwrap();
+        let y = b.parameter_s(1, &shape, "y").unwrap();
+        let sum = x.add_(&y).unwrap();
+        let prod = x.mul_(&y).unwrap();
+        let comp = b.tuple(&[sum, prod]).unwrap().build().unwrap();
+        let client = PjRtClient::cpu().unwrap();
+        let exe = client.compile(&comp).unwrap();
+        let args = [Literal::vec1(&[1f32, 2.0]), Literal::vec1(&[10f32, 20.0])];
+        let out = exe.execute::<Literal>(&args).unwrap();
+        let t = out[0][0].to_literal_sync().unwrap().to_tuple().unwrap();
+        assert_eq!(t[0].to_vec::<f32>().unwrap(), vec![11.0, 22.0]);
+        assert_eq!(t[1].to_vec::<f32>().unwrap(), vec![10.0, 40.0]);
+    }
+
+    #[test]
+    fn hlo_modules_load_but_refuse_to_compile() {
+        let dir = std::env::temp_dir().join("xla_shim_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.hlo.txt");
+        std::fs::write(&p, "HloModule m").unwrap();
+        let proto = HloModuleProto::from_text_file(&p).unwrap();
+        let comp = XlaComputation::from_proto(&proto);
+        let err = PjRtClient::cpu().unwrap().compile(&comp).unwrap_err();
+        assert!(err.to_string().contains("reference backend"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn types_are_send_sync() {
+        fn check<T: Send + Sync>() {}
+        check::<Literal>();
+        check::<PjRtBuffer>();
+        check::<PjRtClient>();
+        check::<PjRtLoadedExecutable>();
+        check::<XlaComputation>();
+    }
+}
