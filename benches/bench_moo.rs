@@ -6,7 +6,7 @@
 use mohaq::moo::baselines::{random_search, weighted_sum_ga};
 use mohaq::moo::problems::{Zdt, ZdtVariant};
 use mohaq::moo::sort::{assign_crowding, fast_nondominated_sort};
-use mohaq::moo::{Individual, Nsga2, Nsga2Config};
+use mohaq::moo::{Individual, IslandConfig, IslandModel, Nsga2, Nsga2Config, Topology};
 use mohaq::pareto::crowding_distances;
 use mohaq::pareto::hypervolume::{hypervolume_2d, hypervolume_3d};
 use mohaq::util::bench::Bencher;
@@ -66,6 +66,28 @@ fn main() {
         algo.run(&mut problem, |_| {}).len()
     });
 
+    // Island-model engine overhead (migration + merge bookkeeping on top
+    // of the same evaluation count as a 4x10 archipelago).
+    b.bench_items("island 4x ring zdt1 30gens pop10/isl", 4 * (10 + 30 * 10), || {
+        let mut problem = Zdt::new(ZdtVariant::Zdt1, 12, 64);
+        let mut model = IslandModel::new(
+            Nsga2Config {
+                pop_size: 10,
+                initial_pop_size: 10,
+                generations: 30,
+                seed: 7,
+                ..Default::default()
+            },
+            IslandConfig {
+                islands: 4,
+                migration_interval: 5,
+                topology: Topology::Ring,
+                migrants: 2,
+            },
+        );
+        model.run(&mut problem, |_| {}).len()
+    });
+
     // ---- Ablation: search quality at equal budgets ----------------------
     println!("\n== ablation: front quality (hypervolume, ZDT1, budget 2440, ref (1.1, 7)) ==");
     let hv_of = |inds: &[Individual]| {
@@ -96,5 +118,26 @@ fn main() {
     let mut p = Zdt::new(ZdtVariant::Zdt1, 12, 64);
     let ws = weighted_sum_ga(&mut p, &[0.5, 0.5], 40, 60, 11);
     println!("  weighted-sum   hv = {:.4} (single-objective GA)", hv_of(&ws));
+
+    let mut p = Zdt::new(ZdtVariant::Zdt1, 12, 64);
+    let mut model = IslandModel::new(
+        Nsga2Config {
+            pop_size: 10,
+            initial_pop_size: 10,
+            generations: 60,
+            seed: 11,
+            ..Default::default()
+        },
+        IslandConfig::default(),
+    );
+    let merged = Nsga2::pareto_set(&model.run(&mut p, |_| {}));
+    println!(
+        "  island 4x10    hv = {:.4} ({} solutions, {} evals)",
+        hv_of(&merged),
+        merged.len(),
+        model.evaluations()
+    );
     println!("\n(the MOOP front should dominate both baselines)");
+
+    b.emit_json("bench_moo").expect("write bench json report");
 }

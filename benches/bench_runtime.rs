@@ -75,6 +75,7 @@ fn bench_parallel_eval(b: &mut Bencher) {
 fn main() -> anyhow::Result<()> {
     let mut hb = Bencher::new(200, 2000, 10_000);
     bench_parallel_eval(&mut hb);
+    hb.emit_json("bench_runtime_parallel_eval")?;
 
     let dir = std::env::var("MOHAQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     if !std::path::Path::new(&dir).join("manifest.json").exists() {
@@ -199,6 +200,10 @@ fn main() -> anyhow::Result<()> {
             inputs.push(Input::I32(y, vec![bsz as i64, t as i64]));
             exec_ref.run_literals(&inputs).unwrap()
         });
+        bg.emit_json("bench_runtime_l2_graphs")?;
     }
+
+    b.emit_json("bench_runtime_pjrt")?;
+    bc.emit_json("bench_runtime_val_error")?;
     Ok(())
 }

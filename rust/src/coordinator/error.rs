@@ -19,6 +19,9 @@ pub enum SearchError {
     /// Artifact loading, PJRT execution or retraining failed; the message
     /// carries the flattened cause chain.
     Eval(String),
+    /// Shared evaluation state (e.g. the EvalService result cache) was
+    /// poisoned by a worker panic; partial results cannot be trusted.
+    Poisoned(String),
 }
 
 impl SearchError {
@@ -29,6 +32,18 @@ impl SearchError {
 
     pub fn invalid(msg: impl Into<String>) -> SearchError {
         SearchError::InvalidSpec(msg.into())
+    }
+
+    /// Classify a panic payload caught at the session boundary: poisoned
+    /// shared state gets its own variant so callers can distinguish
+    /// "a worker crashed and took the cache with it" from an evaluation
+    /// failure.
+    pub fn from_panic(msg: String) -> SearchError {
+        if msg.contains("poisoned") {
+            SearchError::Poisoned(msg)
+        } else {
+            SearchError::Eval(msg)
+        }
     }
 }
 
@@ -43,6 +58,7 @@ impl fmt::Display for SearchError {
             SearchError::InvalidSpec(msg) => write!(f, "invalid experiment spec: {msg}"),
             SearchError::Config(msg) => write!(f, "config: {msg}"),
             SearchError::Eval(msg) => write!(f, "evaluation failed: {msg}"),
+            SearchError::Poisoned(msg) => write!(f, "evaluation state poisoned: {msg}"),
         }
     }
 }
@@ -71,6 +87,14 @@ mod tests {
         .into();
         assert!(matches!(e, SearchError::UnknownPlatform { .. }));
         assert!(e.to_string().contains("silago"));
+    }
+
+    #[test]
+    fn panic_payloads_classify_poisoned_state() {
+        let e = SearchError::from_panic("candidate evaluation failed: eval cache poisoned".into());
+        assert!(matches!(e, SearchError::Poisoned(_)), "{e:?}");
+        let e = SearchError::from_panic("candidate evaluation failed: device lost".into());
+        assert!(matches!(e, SearchError::Eval(_)), "{e:?}");
     }
 
     #[test]

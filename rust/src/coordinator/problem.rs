@@ -8,6 +8,12 @@
 //! thread pool, then the order-dependent beacon logic (Algorithm 1) runs
 //! sequentially over the precomputed errors. Both phases are deterministic
 //! per seed, so the front is bitwise-identical for any thread count.
+//!
+//! Under the island model (`moo::island`) a "generation" is the
+//! concatenation of every island's offspring, delivered here as one
+//! `evaluate_batch` call: the in-batch dedup below collapses genomes bred
+//! independently on different islands, and the `EvalService` memo makes
+//! cross-generation repeats cache hits, so K islands share one PTQ cache.
 
 use std::collections::HashMap;
 use std::sync::Arc;

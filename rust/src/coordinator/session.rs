@@ -24,6 +24,7 @@ use super::spec::ExperimentSpec;
 use super::trainer::Trainer;
 use crate::eval::EvalService;
 use crate::hw::Platform;
+use crate::moo::island::{front_hypervolume, IslandConfig, IslandEvent, IslandModel};
 use crate::moo::{Individual, Nsga2, Nsga2Config, Parallel, Problem, SyncProblem};
 use crate::quant::{Bits, QuantConfig};
 use crate::runtime::{Artifacts, Runtime};
@@ -50,14 +51,21 @@ pub struct GenerationLog {
     pub best_err: f64,
     pub feasible: usize,
     pub pop_size: usize,
+    /// Which island produced this generation (`None` = single population).
+    pub island: Option<usize>,
 }
 
 /// One-line progress rendering shared by the CLI and every example driver.
 impl std::fmt::Display for GenerationLog {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if let Some(i) = self.island {
+            write!(f, "  [isl {i}] ")?;
+        } else {
+            write!(f, "  ")?;
+        }
         write!(
             f,
-            "  gen {:>3}  evals {:>4}  feasible {:>2}/{}  best WER_V {:.4}",
+            "gen {:>3}  evals {:>4}  feasible {:>2}/{}  best WER_V {:.4}",
             self.generation, self.evaluations, self.feasible, self.pop_size, self.best_err
         )
     }
@@ -66,11 +74,26 @@ impl std::fmt::Display for GenerationLog {
 /// Progress notifications streamed to the `run_with` callback, in order.
 #[derive(Debug, Clone)]
 pub enum SearchEvent {
-    Started { name: String, num_vars: usize, objectives: Vec<String>, threads: usize },
+    Started {
+        name: String,
+        num_vars: usize,
+        objectives: Vec<String>,
+        threads: usize,
+        /// Island count (1 = single population).
+        islands: usize,
+    },
     /// A beacon was retrained and registered (name, retrain steps).
     BeaconCreated { name: String, retrain_steps: usize },
     Generation(GenerationLog),
-    Finished { evaluations: usize, pareto: usize, wall_secs: f64 },
+    /// Island-model migration: elites copied between islands.
+    Migration { generation: usize, from: usize, to: usize, accepted: usize },
+    Finished {
+        evaluations: usize,
+        pareto: usize,
+        wall_secs: f64,
+        /// Nadir-referenced hypervolume of the final front (2/3 objectives).
+        hypervolume: Option<f64>,
+    },
 }
 
 pub struct SearchOutcome {
@@ -86,6 +109,9 @@ pub struct SearchOutcome {
     pub baseline_val_err: f64,
     pub baseline_test_err: f64,
     pub wall_secs: f64,
+    /// Nadir-referenced hypervolume of the final front (the deduplicated
+    /// non-dominated merge across islands); None for >3 objectives.
+    pub front_hypervolume: Option<f64>,
 }
 
 /// A reusable handle for running MOHAQ searches over one artifact bundle.
@@ -194,58 +220,77 @@ impl SearchSession {
             num_vars: problem.num_vars(),
             objectives: problem.objective_names(),
             threads: self.threads,
+            islands: spec.island.as_ref().map_or(1, |c| c.islands),
         });
 
-        let mut algo = Nsga2::new(spec.ga.clone());
         let mut history: Vec<GenerationLog> = Vec::new();
+        let island_cfg = spec.island.clone();
         // The GA engine's Problem interface is infallible, so evaluation
         // failures surface as panics deep in the generation loop; catch
         // them here and honor the typed-error contract of the public API.
         let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            algo.run(&mut problem, |stats| {
-                // Beacons created during this generation stream first, so
-                // the callback sees them before the generation summary
-                // they shaped.
-                let created: Vec<(String, usize)> = beacon_sink
-                    .lock()
-                    .expect("beacon sink poisoned")
-                    .drain(..)
-                    .collect();
-                for (name, steps) in created {
-                    on_event(&SearchEvent::BeaconCreated { name, retrain_steps: steps });
+            match &island_cfg {
+                // K > 1: island-model search over the same problem; all
+                // islands share the EvalService cache through it.
+                Some(cfg) if cfg.islands > 1 => {
+                    let mut model = IslandModel::new(spec.ga.clone(), cfg.clone());
+                    let pop = model.run(&mut problem, |event| match event {
+                        IslandEvent::Generation { island, stats } => emit_generation(
+                            &beacon_sink,
+                            &mut history,
+                            &mut on_event,
+                            Some(*island),
+                            stats.generation,
+                            stats.evaluations,
+                            stats.population,
+                        ),
+                        IslandEvent::Migration { generation, from, to, accepted } => {
+                            on_event(&SearchEvent::Migration {
+                                generation: *generation,
+                                from: *from,
+                                to: *to,
+                                accepted: *accepted,
+                            });
+                        }
+                    });
+                    (pop, model.evaluations())
                 }
-                let best_err = stats
-                    .population
-                    .iter()
-                    .filter(|i| i.feasible())
-                    .map(|i| i.objectives[0])
-                    .fold(f64::INFINITY, f64::min);
-                let feasible = stats.population.iter().filter(|i| i.feasible()).count();
-                let log = GenerationLog {
-                    generation: stats.generation,
-                    evaluations: stats.evaluations,
-                    best_err,
-                    feasible,
-                    pop_size: stats.population.len(),
-                };
-                on_event(&SearchEvent::Generation(log.clone()));
-                history.push(log);
-            })
+                _ => {
+                    let mut algo = Nsga2::new(spec.ga.clone());
+                    let pop = algo.run(&mut problem, |stats| {
+                        emit_generation(
+                            &beacon_sink,
+                            &mut history,
+                            &mut on_event,
+                            None,
+                            stats.generation,
+                            stats.evaluations,
+                            stats.population,
+                        );
+                    });
+                    (pop, algo.evaluations())
+                }
+            }
         }));
-        let pop = match run {
-            Ok(pop) => pop,
+        let (pop, evaluations) = match run {
+            Ok(result) => result,
             Err(payload) => {
                 let msg = payload
                     .downcast_ref::<String>()
                     .cloned()
                     .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
                     .unwrap_or_else(|| "search evaluation panicked".into());
-                return Err(SearchError::Eval(msg));
+                // A poisoned shared cache gets its own variant so callers
+                // can tell worker crashes from evaluation failures.
+                return Err(SearchError::from_panic(msg));
             }
         };
 
         // ---- Post-process the Pareto set into report rows ----------------
+        // The merged front: deduplicated non-dominated feasible subset of
+        // the concatenated island populations (or the single population).
         let set = Nsga2::pareto_set(&pop);
+        let front_hv = front_hypervolume(&set);
         // Latest record per genome tells us which parameter set scored it.
         let mut set_of: HashMap<Vec<i64>, usize> = HashMap::new();
         for r in &problem.records {
@@ -281,7 +326,7 @@ impl SearchSession {
             spec_name: spec.name.clone(),
             rows,
             history,
-            evaluations: algo.evaluations(),
+            evaluations,
             exec_calls: stats.executions,
             cache_hits: stats.cache_hits,
             beacons: problem
@@ -298,28 +343,86 @@ impl SearchSession {
             baseline_val_err: arts.baseline.val_err_16bit,
             baseline_test_err: arts.baseline.test_err,
             wall_secs: t0.elapsed().as_secs_f64(),
+            front_hypervolume: front_hv,
         };
         on_event(&SearchEvent::Finished {
             evaluations: outcome.evaluations,
             pareto: outcome.rows.len(),
             wall_secs: outcome.wall_secs,
+            hypervolume: outcome.front_hypervolume,
         });
         Ok(outcome)
     }
 
     /// Run NSGA-II over any artifact-free `SyncProblem` with `threads`
-    /// evaluation workers — the generic half of the session's parallel
-    /// plumbing, exposed for smoke tests and engine benchmarks.
+    /// evaluation workers (0 = one per core) — the generic half of the
+    /// session's parallel plumbing, exposed for smoke tests and engine
+    /// benchmarks.
     pub fn run_generic<P: SyncProblem>(
         problem: &P,
         ga: Nsga2Config,
         threads: usize,
     ) -> Vec<Individual> {
-        let mut wrapped = Parallel::new(problem, threads.max(1));
+        let mut wrapped =
+            if threads == 0 { Parallel::auto(problem) } else { Parallel::new(problem, threads) };
         let mut algo = Nsga2::new(ga);
         let pop = algo.run(&mut wrapped, |_| {});
         Nsga2::pareto_set(&pop)
     }
+
+    /// Island-model sibling of `run_generic`: K lockstep islands over any
+    /// `SyncProblem` with `threads` evaluation workers (0 = one per
+    /// core); returns the deduplicated merged front. Bitwise-identical
+    /// for any thread count at a fixed (seed, island config).
+    pub fn run_generic_islands<P: SyncProblem>(
+        problem: &P,
+        ga: Nsga2Config,
+        island: IslandConfig,
+        threads: usize,
+    ) -> Vec<Individual> {
+        let mut wrapped =
+            if threads == 0 { Parallel::auto(problem) } else { Parallel::new(problem, threads) };
+        let mut model = IslandModel::new(ga, island);
+        let pop = model.run(&mut wrapped, |_| {});
+        Nsga2::pareto_set(&pop)
+    }
+}
+
+/// Drain pending beacon notifications, then emit one generation summary
+/// and record it in the history — shared by the single-population and
+/// island paths so both stream identical event shapes.
+fn emit_generation(
+    beacon_sink: &Mutex<Vec<(String, usize)>>,
+    history: &mut Vec<GenerationLog>,
+    on_event: &mut dyn FnMut(&SearchEvent),
+    island: Option<usize>,
+    generation: usize,
+    evaluations: usize,
+    population: &[Individual],
+) {
+    // Beacons created during this generation stream first, so the
+    // callback sees them before the generation summary they shaped.
+    let created: Vec<(String, usize)> =
+        beacon_sink.lock().expect("beacon sink poisoned").drain(..).collect();
+    for (name, steps) in created {
+        on_event(&SearchEvent::BeaconCreated { name, retrain_steps: steps });
+    }
+    let best_err = population
+        .iter()
+        .filter(|i| i.feasible())
+        .map(|i| i.objectives[0])
+        .fold(f64::INFINITY, f64::min);
+    let feasible = population.iter().filter(|i| i.feasible()).count();
+    let log = GenerationLog {
+        generation,
+        evaluations,
+        best_err,
+        feasible,
+        pop_size: population.len(),
+        island,
+    };
+    on_event(&SearchEvent::Generation(log.clone()));
+    history.push(log);
 }
 
 /// Baseline rows (Base / Base_16bit) for the report tables.

@@ -11,6 +11,7 @@ use crate::coordinator::error::SearchError;
 use crate::coordinator::problem::ObjectiveKind;
 use crate::hw::registry::{self, PlatformSpec, SharedPlatform};
 use crate::hw::Platform;
+use crate::moo::island::{IslandConfig, Topology};
 use crate::moo::Nsga2Config;
 use crate::util::json::Json;
 
@@ -34,6 +35,9 @@ pub struct ExperimentSpec {
     /// Enable beacon-based search with this policy (None = inference-only).
     pub beacon: Option<BeaconPolicyOverrides>,
     pub ga: Nsga2Config,
+    /// Island-model settings (`ga` then describes EACH island);
+    /// `None` = single population.
+    pub island: Option<IslandConfig>,
     /// Feasibility area width above the 16-bit baseline error (paper: 8pp).
     pub err_feasible_pp: f64,
     /// Force tied W=A genomes even without a platform that requires it.
@@ -117,6 +121,14 @@ impl ExperimentSpec {
         // corrupt values >= 2^53, so emit as a decimal string.
         ga.insert("seed".into(), Json::Str(self.ga.seed.to_string()));
         obj.insert("ga".into(), Json::Obj(ga));
+        if let Some(isl) = &self.island {
+            let mut im: BTreeMap<String, Json> = BTreeMap::new();
+            im.insert("islands".into(), isl.islands.into());
+            im.insert("migration_interval".into(), isl.migration_interval.into());
+            im.insert("topology".into(), Json::Str(isl.topology.id().into()));
+            im.insert("migrants".into(), isl.migrants.into());
+            obj.insert("island".into(), Json::Obj(im));
+        }
         if let Some(b) = &self.beacon {
             let mut bm: BTreeMap<String, Json> = BTreeMap::new();
             if let Some(t) = b.threshold {
@@ -202,6 +214,24 @@ impl ExperimentSpec {
             b = b.ga(ga);
         }
 
+        if let Some(ij) = j.get("island") {
+            let mut isl = IslandConfig::default();
+            if let Some(v) = ij.get("islands").and_then(Json::as_usize) {
+                isl.islands = v;
+            }
+            if let Some(v) = ij.get("migration_interval").and_then(Json::as_usize) {
+                isl.migration_interval = v;
+            }
+            if let Some(t) = ij.get("topology").and_then(Json::as_str) {
+                isl.topology = Topology::from_id(t)
+                    .ok_or_else(|| SearchError::Config(format!("unknown topology '{t}'")))?;
+            }
+            if let Some(v) = ij.get("migrants").and_then(Json::as_usize) {
+                isl.migrants = v;
+            }
+            b = b.island(isl);
+        }
+
         if let Some(bj) = j.get("beacon") {
             b = b.beacon(BeaconPolicyOverrides {
                 threshold: bj.get("threshold").and_then(Json::as_f64),
@@ -234,6 +264,7 @@ pub struct ExperimentSpecBuilder {
     objectives: Vec<ObjectiveKind>,
     beacon: Option<BeaconPolicyOverrides>,
     ga: Option<Nsga2Config>,
+    island: Option<IslandConfig>,
     err_feasible_pp: Option<f64>,
     tied: Option<bool>,
 }
@@ -297,6 +328,37 @@ impl ExperimentSpecBuilder {
 
     pub fn seed(mut self, seed: u64) -> Self {
         self.ga.get_or_insert_with(Nsga2Config::default).seed = seed;
+        self
+    }
+
+    /// Split the search into `k` islands (island-model NSGA-II). The GA
+    /// settings then describe each island, so the archipelago evaluates
+    /// `k * pop_size` candidates per generation.
+    pub fn islands(mut self, k: usize) -> Self {
+        self.island.get_or_insert_with(IslandConfig::default).islands = k;
+        self
+    }
+
+    /// Exchange elites between islands every `m` generations.
+    pub fn migration_interval(mut self, m: usize) -> Self {
+        self.island.get_or_insert_with(IslandConfig::default).migration_interval = m;
+        self
+    }
+
+    pub fn topology(mut self, topology: Topology) -> Self {
+        self.island.get_or_insert_with(IslandConfig::default).topology = topology;
+        self
+    }
+
+    /// Elites each source island sends per migration event.
+    pub fn migrants(mut self, n: usize) -> Self {
+        self.island.get_or_insert_with(IslandConfig::default).migrants = n;
+        self
+    }
+
+    /// Set the whole island configuration at once (config files).
+    pub fn island(mut self, cfg: IslandConfig) -> Self {
+        self.island = Some(cfg);
         self
     }
 
@@ -366,12 +428,20 @@ impl ExperimentSpecBuilder {
             }
         }
 
+        let ga = self.ga.unwrap_or_default();
+        if let Some(island) = &self.island {
+            island
+                .validate(ga.pop_size)
+                .map_err(|e| SearchError::invalid(format!("island config: {e}")))?;
+        }
+
         Ok(ExperimentSpec {
             name: self.name.unwrap_or_else(|| "custom".into()),
             platform: platform_spec,
             objectives: self.objectives,
             beacon: self.beacon,
-            ga: self.ga.unwrap_or_default(),
+            ga,
+            island: self.island,
             err_feasible_pp: self.err_feasible_pp.unwrap_or(8.0),
             tied: self.tied,
         })
@@ -453,6 +523,54 @@ mod tests {
             .build()
             .unwrap();
         assert_eq!(a.platform.unwrap().f64("sram_mb"), Some(4.0));
+    }
+
+    #[test]
+    fn island_settings_validate_and_roundtrip() {
+        let spec = ExperimentSpec::builder()
+            .objective(ObjectiveKind::Error)
+            .objective(ObjectiveKind::SizeMb)
+            .islands(4)
+            .migration_interval(3)
+            .topology(Topology::FullyConnected)
+            .migrants(2)
+            .build()
+            .unwrap();
+        let isl = spec.island.as_ref().unwrap();
+        assert_eq!(isl.islands, 4);
+        assert_eq!(isl.migration_interval, 3);
+        assert_eq!(isl.topology, Topology::FullyConnected);
+        let back = ExperimentSpec::from_json_str(&spec.to_json_string()).unwrap();
+        assert_eq!(spec, back, "island settings lost in JSON roundtrip");
+
+        // migrants >= pop_size cannot be satisfied.
+        let err = ExperimentSpec::builder()
+            .objective(ObjectiveKind::Error)
+            .pop_size(4)
+            .islands(2)
+            .migrants(4)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, SearchError::InvalidSpec(_)), "{err}");
+
+        // Zero islands / zero interval rejected.
+        assert!(ExperimentSpec::builder()
+            .objective(ObjectiveKind::Error)
+            .islands(0)
+            .build()
+            .is_err());
+        assert!(ExperimentSpec::builder()
+            .objective(ObjectiveKind::Error)
+            .islands(2)
+            .migration_interval(0)
+            .build()
+            .is_err());
+
+        // Unknown topology in a config file is a Config error.
+        let bad = r#"{"name": "x", "objectives": ["error"],
+                      "island": {"islands": 4, "topology": "torus"}}"#;
+        let err = ExperimentSpec::from_json_str(bad).unwrap_err();
+        assert!(matches!(err, SearchError::Config(_)), "{err}");
     }
 
     #[test]

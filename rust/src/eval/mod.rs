@@ -37,6 +37,62 @@ pub struct ParamSet {
 
 type CacheKey = (usize, Vec<Bits>, Vec<Bits>);
 
+/// Shared memo map behind a poison-aware mutex. A worker that panics while
+/// holding the lock poisons it; every later access returns a typed error
+/// (carrying the "poisoned" marker `SearchSession` maps to
+/// `SearchError::Poisoned`) instead of raising a second panic inside the
+/// worker pool.
+pub struct ResultCache<K, V> {
+    inner: Mutex<HashMap<K, V>>,
+}
+
+impl<K: std::hash::Hash + Eq, V: Clone> ResultCache<K, V> {
+    pub fn new() -> ResultCache<K, V> {
+        ResultCache { inner: Mutex::new(HashMap::new()) }
+    }
+
+    fn guard(&self) -> Result<std::sync::MutexGuard<'_, HashMap<K, V>>> {
+        self.inner.lock().map_err(|_| {
+            anyhow::anyhow!("eval cache poisoned: a worker panicked while holding the lock")
+        })
+    }
+
+    pub fn get(&self, key: &K) -> Result<Option<V>> {
+        Ok(self.guard()?.get(key).cloned())
+    }
+
+    pub fn insert(&self, key: K, value: V) -> Result<()> {
+        self.guard()?.insert(key, value);
+        Ok(())
+    }
+
+    /// Entry count; 0 when the lock is poisoned (stats stay best-effort).
+    pub fn len(&self) -> usize {
+        self.inner.lock().map(|g| g.len()).unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Poison the lock by panicking while holding it — the regression
+    /// hook for the typed `SearchError::Poisoned` path. Test-only; the
+    /// panic it catches is confined to this call.
+    #[doc(hidden)]
+    pub fn poison_for_test(&self) {
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = self.inner.lock();
+            panic!("poisoning eval cache");
+        }));
+    }
+}
+
+impl<K: std::hash::Hash + Eq, V: Clone> Default for ResultCache<K, V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 pub struct EvalStats {
     pub executions: usize,
     pub cache_hits: usize,
@@ -47,7 +103,7 @@ pub struct EvalService {
     pub arts: Arc<Artifacts>,
     exec: Executor,
     param_sets: RwLock<Vec<Arc<ParamSet>>>,
-    cache: Mutex<HashMap<CacheKey, f64>>,
+    cache: ResultCache<CacheKey, f64>,
     executions: AtomicUsize,
     cache_hits: AtomicUsize,
 }
@@ -70,7 +126,7 @@ impl EvalService {
             arts: arts.clone(),
             exec,
             param_sets: RwLock::new(Vec::new()),
-            cache: Mutex::new(HashMap::new()),
+            cache: ResultCache::new(),
             executions: AtomicUsize::new(0),
             cache_hits: AtomicUsize::new(0),
         };
@@ -110,7 +166,7 @@ impl EvalService {
         EvalStats {
             executions: self.executions.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
-            unique_solutions: self.cache.lock().expect("cache poisoned").len(),
+            unique_solutions: self.cache.len(),
         }
     }
 
@@ -149,10 +205,13 @@ impl EvalService {
         Ok((err, total, loss))
     }
 
-    /// Validation error = max over the subsets (paper §4.2). Cached.
+    /// Validation error = max over the subsets (paper §4.2). Cached. A
+    /// poisoned cache lock surfaces as an `Err` (not a panic), so worker
+    /// threads fail cleanly and `SearchSession` can report
+    /// `SearchError::Poisoned`.
     pub fn val_error(&self, qc: &QuantConfig, set: usize) -> Result<f64> {
         let key: CacheKey = (set, qc.w_bits.clone(), qc.a_bits.clone());
-        if let Some(&v) = self.cache.lock().expect("cache poisoned").get(&key) {
+        if let Some(v) = self.cache.get(&key)? {
             self.cache_hits.fetch_add(1, Ordering::Relaxed);
             return Ok(v);
         }
@@ -161,7 +220,7 @@ impl EvalService {
             let (e, t, _) = self.run_split(qc, set, split)?;
             worst = worst.max(e / t.max(1.0));
         }
-        self.cache.lock().expect("cache poisoned").insert(key, worst);
+        self.cache.insert(key, worst)?;
         Ok(worst)
     }
 
@@ -204,6 +263,22 @@ mod tests {
     fn service_is_send_sync() {
         fn check<T: Send + Sync>() {}
         check::<EvalService>();
+    }
+
+    #[test]
+    fn result_cache_round_trips_until_poisoned() {
+        let cache: ResultCache<u32, f64> = ResultCache::new();
+        assert!(cache.is_empty());
+        cache.insert(7, 0.25).unwrap();
+        assert_eq!(cache.get(&7).unwrap(), Some(0.25));
+        assert_eq!(cache.get(&8).unwrap(), None);
+        assert_eq!(cache.len(), 1);
+
+        cache.poison_for_test();
+        let err = cache.get(&7).unwrap_err();
+        assert!(err.to_string().contains("poisoned"), "{err}");
+        assert!(cache.insert(9, 1.0).is_err());
+        assert_eq!(cache.len(), 0, "stats degrade to zero, not panic");
     }
 
     #[test]

@@ -17,6 +17,7 @@ use anyhow::{Context, Result};
 use mohaq::coordinator::{baseline_rows, ExperimentSpec, SearchEvent, SearchSession};
 use mohaq::hw::registry;
 use mohaq::hw::Platform;
+use mohaq::moo::Topology;
 use mohaq::quant::{Bits, QuantConfig};
 use mohaq::report;
 use mohaq::util::cli::Args;
@@ -65,7 +66,14 @@ options:
   --seed N          override the GA seed
   --threads N       evaluation worker threads (0 = one per core; the
                     front is identical for any value)
-  --out DIR         write front.csv / records.csv to DIR";
+  --out DIR         write front.csv / records.csv to DIR
+
+island model (population scaling; front is identical for any thread count):
+  --islands K            run K sub-populations in lockstep (default: spec's
+                         setting, or a single population)
+  --migration-interval M exchange elites every M generations (default 5)
+  --topology T           migration topology: ring | full (default ring)
+  --migrants N           elites sent per source island (default 2)";
 
 fn parse_bits_list(s: &str, n: usize) -> Result<Vec<Bits>> {
     let parsed: Vec<Bits> = s
@@ -199,21 +207,56 @@ fn cmd_search(args: &Args) -> Result<()> {
     }
     spec.ga.seed = args.get_u64("seed", spec.ga.seed);
 
+    if args.has("islands")
+        || args.has("migration-interval")
+        || args.has("topology")
+        || args.has("migrants")
+    {
+        // Without an explicit --islands (or a spec-provided config), tuning
+        // flags alone keep the single-population engine (islands = 1).
+        let mut cfg = spec
+            .island
+            .clone()
+            .unwrap_or_else(|| mohaq::moo::IslandConfig { islands: 1, ..Default::default() });
+        cfg.islands = args.get_usize("islands", cfg.islands);
+        cfg.migration_interval = args.get_usize("migration-interval", cfg.migration_interval);
+        cfg.migrants = args.get_usize("migrants", cfg.migrants);
+        if let Some(t) = args.get("topology") {
+            cfg.topology = Topology::from_id(t)
+                .with_context(|| format!("unknown topology '{t}' (ring|full)"))?;
+        }
+        cfg.validate(spec.ga.pop_size)
+            .map_err(|e| anyhow::anyhow!("island config: {e}"))?;
+        spec.island = Some(cfg);
+    }
+
     let session = SearchSession::new(arts.clone())?.threads(args.get_usize("threads", 0));
     let outcome = session.run_with(&spec, |event| match event {
-        SearchEvent::Started { name, num_vars, threads, .. } => {
-            println!("search '{name}': {num_vars} vars, {threads} eval threads");
+        SearchEvent::Started { name, num_vars, threads, islands, .. } => {
+            if *islands > 1 {
+                println!(
+                    "search '{name}': {num_vars} vars, {islands} islands, {threads} eval threads"
+                );
+            } else {
+                println!("search '{name}': {num_vars} vars, {threads} eval threads");
+            }
         }
         SearchEvent::BeaconCreated { name, retrain_steps } => {
             println!("  beacon created: {name} ({retrain_steps} steps)");
         }
         SearchEvent::Generation(log) => println!("{log}"),
+        SearchEvent::Migration { generation, from, to, accepted } => {
+            println!("  gen {generation:>3}  migration: island {from} -> island {to} ({accepted} elites)");
+        }
         SearchEvent::Finished { .. } => {}
     })?;
     println!(
         "\n{}",
         report::render_table(&outcome.rows, &baseline_rows(&arts), &arts)
     );
+    if let Some(hv) = outcome.front_hypervolume {
+        println!("front hypervolume (nadir-referenced): {hv:.4}\n");
+    }
     println!("{}", report::summary_md(&outcome));
     if let Some(out_dir) = args.get("out") {
         std::fs::create_dir_all(out_dir)?;

@@ -1,5 +1,7 @@
 //! GA individual: genome + evaluation + NSGA-II bookkeeping.
 
+use super::problem::Evaluation;
+
 #[derive(Debug, Clone)]
 pub struct Individual {
     pub genome: Vec<i64>,
@@ -20,6 +22,14 @@ impl Individual {
             rank: usize::MAX,
             crowding: 0.0,
         }
+    }
+
+    /// Wrap an externally evaluated genome (island model / batched paths).
+    pub fn evaluated(genome: Vec<i64>, eval: Evaluation) -> Self {
+        let mut ind = Individual::new(genome);
+        ind.objectives = eval.objectives;
+        ind.violation = eval.violation;
+        ind
     }
 
     pub fn feasible(&self) -> bool {

@@ -1,0 +1,500 @@
+//! Island-model NSGA-II: K independent sub-populations, each on its own
+//! `Rng::fork` stream, exchanging elites on a fixed topology every M
+//! generations (coarse-grained parallel GA, Cantú-Paz style).
+//!
+//! Scaling rationale: the paper's search uses populations of 10/40 because
+//! candidate evaluation is the bottleneck. The archipelago multiplies the
+//! population per wall-clock generation — every generation of every island
+//! is concatenated into ONE `Problem::evaluate_batch` call, so the K*pop
+//! genomes fan out across the coordinator's whole thread pool and share
+//! one PTQ cache (duplicate genomes bred on different islands are deduped
+//! by `MohaqProblem` and memoized by `EvalService`).
+//!
+//! Determinism contract: everything outside `evaluate_batch` is sequential
+//! and pure — island RNG streams are a function of (seed, island index),
+//! migration snapshots elites *before* any replacement, and elite/victim
+//! selection breaks ties on the genome (a total order). Because
+//! `evaluate_batch` must return order-independent values (see
+//! `moo::problem`), the merged front is bitwise-identical for any worker
+//! thread count at a fixed (seed, K, topology).
+
+use super::individual::Individual;
+use super::nsga2::{GenerationStats, Nsga2, Nsga2Config};
+use super::problem::Problem;
+use super::sort::{assign_crowding, fast_nondominated_sort};
+use crate::pareto::hypervolume::hypervolume;
+use crate::util::rng::Rng;
+
+/// Migration topology: who sends elites to whom.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    /// Island i receives from island (i - 1) mod K.
+    Ring,
+    /// Every island receives from every other island.
+    FullyConnected,
+}
+
+impl Topology {
+    /// Canonical config-file identifier.
+    pub fn id(&self) -> &'static str {
+        match self {
+            Topology::Ring => "ring",
+            Topology::FullyConnected => "full",
+        }
+    }
+
+    /// Parse a config-file identifier (aliases accepted).
+    pub fn from_id(id: &str) -> Option<Topology> {
+        Some(match id {
+            "ring" => Topology::Ring,
+            "full" | "fully_connected" | "fully-connected" => Topology::FullyConnected,
+            _ => return None,
+        })
+    }
+
+    /// Islands that send migrants TO island `to` in a K-island archipelago.
+    pub fn sources(&self, k: usize, to: usize) -> Vec<usize> {
+        match self {
+            Topology::Ring => {
+                if k <= 1 {
+                    Vec::new()
+                } else {
+                    vec![(to + k - 1) % k]
+                }
+            }
+            Topology::FullyConnected => (0..k).filter(|&s| s != to).collect(),
+        }
+    }
+}
+
+/// Archipelago shape + migration policy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IslandConfig {
+    /// Number of independent sub-populations (K).
+    pub islands: usize,
+    /// Exchange elites every M generations.
+    pub migration_interval: usize,
+    pub topology: Topology,
+    /// Elites each source island sends per migration event.
+    pub migrants: usize,
+}
+
+impl Default for IslandConfig {
+    fn default() -> Self {
+        IslandConfig {
+            islands: 4,
+            migration_interval: 5,
+            topology: Topology::Ring,
+            migrants: 2,
+        }
+    }
+}
+
+impl IslandConfig {
+    /// Shared validation (spec builder, CLI). `pop_size` is the per-island
+    /// population the migrants replace into.
+    pub fn validate(&self, pop_size: usize) -> Result<(), String> {
+        if self.islands == 0 {
+            return Err("islands must be >= 1".into());
+        }
+        if self.migration_interval == 0 {
+            return Err("migration_interval must be >= 1".into());
+        }
+        if self.migrants == 0 {
+            return Err("migrants must be >= 1".into());
+        }
+        if self.migrants >= pop_size {
+            return Err(format!(
+                "migrants ({}) must be smaller than the island population ({pop_size})",
+                self.migrants
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Progress notifications from `IslandModel::run`, in order. Within a
+/// generation, migrations (if due) are reported before the islands'
+/// generation summaries.
+pub enum IslandEvent<'a> {
+    /// One island finished a generation.
+    Generation { island: usize, stats: GenerationStats<'a> },
+    /// Elites were copied from island `from` into island `to`
+    /// (`accepted` counts migrants not already present on the target).
+    Migration { generation: usize, from: usize, to: usize, accepted: usize },
+}
+
+/// K lockstep NSGA-II engines over one shared `Problem`.
+pub struct IslandModel {
+    pub config: IslandConfig,
+    islands: Vec<Nsga2>,
+    evaluations: usize,
+}
+
+impl IslandModel {
+    /// `ga` is the PER-ISLAND configuration (pop_size individuals per
+    /// island per generation); `ga.seed` seeds the whole archipelago.
+    pub fn new(ga: Nsga2Config, config: IslandConfig) -> IslandModel {
+        assert!(config.islands > 0, "island model needs at least one island");
+        let mut base = Rng::new(ga.seed);
+        let islands = base
+            .split(config.islands)
+            .into_iter()
+            .map(|rng| Nsga2::with_rng(ga.clone(), rng))
+            .collect();
+        IslandModel { config, islands, evaluations: 0 }
+    }
+
+    /// Total evaluations across all islands.
+    pub fn evaluations(&self) -> usize {
+        self.evaluations
+    }
+
+    pub fn num_islands(&self) -> usize {
+        self.islands.len()
+    }
+
+    /// Evaluate every island's pending genomes as ONE problem batch and
+    /// hand each island back its slice (input order is preserved, so this
+    /// is scheduling-independent whenever `evaluate_batch` is).
+    fn evaluate_groups(
+        &mut self,
+        problem: &mut dyn Problem,
+        groups: Vec<Vec<Vec<i64>>>,
+    ) -> Vec<Vec<Individual>> {
+        let counts: Vec<usize> = groups.iter().map(Vec::len).collect();
+        let flat: Vec<Vec<i64>> = groups.into_iter().flatten().collect();
+        self.evaluations += flat.len();
+        let evals = problem.evaluate_batch(&flat);
+        debug_assert_eq!(evals.len(), flat.len());
+        let mut remaining: Vec<Individual> = flat
+            .into_iter()
+            .zip(evals)
+            .map(|(g, e)| Individual::evaluated(g, e))
+            .collect();
+        let mut out = Vec::with_capacity(counts.len());
+        for (i, &c) in counts.iter().enumerate() {
+            let tail = remaining.split_off(c);
+            self.islands[i].add_evaluations(remaining.len());
+            out.push(std::mem::replace(&mut remaining, tail));
+        }
+        out
+    }
+
+    /// Run the archipelago; returns the concatenation of the final island
+    /// populations (feed it to `Nsga2::pareto_set` / `merged_front` for
+    /// the deduplicated non-dominated merge).
+    pub fn run(
+        &mut self,
+        problem: &mut dyn Problem,
+        mut observer: impl FnMut(&IslandEvent),
+    ) -> Vec<Individual> {
+        let k = self.islands.len();
+        let (target0, pop_size, generations) = {
+            let c = &self.islands[0].config;
+            (c.pop_size.min(c.initial_pop_size), c.pop_size, c.generations)
+        };
+
+        // Generation 0: every island's enlarged initial population in one
+        // cross-island batch.
+        let mut seeds: Vec<Vec<Vec<i64>>> = Vec::with_capacity(k);
+        for isl in &mut self.islands {
+            seeds.push(isl.seed_genomes(&*problem));
+        }
+        let evaluated = self.evaluate_groups(problem, seeds);
+        let mut pops: Vec<Vec<Individual>> = Vec::with_capacity(k);
+        for (i, group) in evaluated.into_iter().enumerate() {
+            pops.push(self.islands[i].select_survivors(group, target0));
+        }
+        for (i, pop) in pops.iter().enumerate() {
+            observer(&IslandEvent::Generation {
+                island: i,
+                stats: GenerationStats {
+                    generation: 0,
+                    evaluations: self.islands[i].evaluations(),
+                    population: pop,
+                },
+            });
+        }
+
+        for gen in 1..=generations {
+            let mut children: Vec<Vec<Vec<i64>>> = Vec::with_capacity(k);
+            for (isl, pop) in self.islands.iter_mut().zip(&pops) {
+                children.push(isl.offspring_genomes(&*problem, pop));
+            }
+            let offspring = self.evaluate_groups(problem, children);
+            for (i, off) in offspring.into_iter().enumerate() {
+                let mut pool = std::mem::take(&mut pops[i]);
+                pool.extend(off);
+                pops[i] = self.islands[i].select_survivors(pool, pop_size);
+            }
+            if k > 1 && gen % self.config.migration_interval == 0 {
+                self.migrate(&mut pops, gen, &mut observer);
+            }
+            for (i, pop) in pops.iter().enumerate() {
+                observer(&IslandEvent::Generation {
+                    island: i,
+                    stats: GenerationStats {
+                        generation: gen,
+                        evaluations: self.islands[i].evaluations(),
+                        population: pop,
+                    },
+                });
+            }
+        }
+        pops.into_iter().flatten().collect()
+    }
+
+    /// One migration round. Elites are snapshotted from every island
+    /// BEFORE any replacement, so the exchange is computed from the
+    /// pre-migration state and the topology's iteration order can never
+    /// influence what is sent (determinism contract).
+    fn migrate(
+        &self,
+        pops: &mut [Vec<Individual>],
+        generation: usize,
+        observer: &mut impl FnMut(&IslandEvent),
+    ) {
+        let k = pops.len();
+        let elites: Vec<Vec<Individual>> = pops
+            .iter()
+            .map(|p| select_elites(p, self.config.migrants))
+            .collect();
+        for to in 0..k {
+            for from in self.config.topology.sources(k, to) {
+                let accepted = inject(&mut pops[to], &elites[from]);
+                if accepted > 0 {
+                    observer(&IslandEvent::Migration { generation, from, to, accepted });
+                }
+            }
+        }
+    }
+}
+
+/// Deduplicated non-dominated feasible merge of island populations — the
+/// front the session reports. Equivalent to `Nsga2::pareto_set` over the
+/// concatenated populations.
+pub fn merged_front(pops: &[Vec<Individual>]) -> Vec<Individual> {
+    let all: Vec<Individual> = pops.iter().flatten().cloned().collect();
+    Nsga2::pareto_set(&all)
+}
+
+/// Hypervolume of a front against a nadir-derived reference point (the
+/// worst objective value per dimension, padded by 10% of the span).
+/// `None` for empty fronts and for dimensions the exact algorithms do not
+/// cover (only 2-D and 3-D are wired).
+pub fn front_hypervolume(front: &[Individual]) -> Option<f64> {
+    if front.is_empty() {
+        return None;
+    }
+    let m = front[0].objectives.len();
+    if m != 2 && m != 3 {
+        return None;
+    }
+    let mut reference = vec![f64::NEG_INFINITY; m];
+    let mut best = vec![f64::INFINITY; m];
+    for ind in front {
+        for (d, &v) in ind.objectives.iter().enumerate() {
+            reference[d] = reference[d].max(v);
+            best[d] = best[d].min(v);
+        }
+    }
+    for d in 0..m {
+        let span = reference[d] - best[d];
+        reference[d] += (span * 0.1).max(1e-9);
+    }
+    let pts: Vec<Vec<f64>> = front.iter().map(|i| i.objectives.clone()).collect();
+    Some(hypervolume(&pts, &reference))
+}
+
+/// Deterministic quality order: feasible first, then rank, then crowding
+/// (descending), with the genome as a total-order tie-break.
+fn quality(a: &Individual, b: &Individual) -> std::cmp::Ordering {
+    b.feasible()
+        .cmp(&a.feasible())
+        .then(a.rank.cmp(&b.rank))
+        .then(
+            b.crowding
+                .partial_cmp(&a.crowding)
+                .unwrap_or(std::cmp::Ordering::Equal),
+        )
+        .then_with(|| a.genome.cmp(&b.genome))
+}
+
+/// The island's `n` best individuals under the deterministic order.
+fn select_elites(pop: &[Individual], n: usize) -> Vec<Individual> {
+    let mut idx: Vec<usize> = (0..pop.len()).collect();
+    idx.sort_by(|&x, &y| quality(&pop[x], &pop[y]));
+    idx.into_iter().take(n).map(|i| pop[i].clone()).collect()
+}
+
+/// Replace the worst individuals of `pop` with `incoming` elites (skipping
+/// genomes already present), then re-rank the island: migrant ranks and
+/// crowding were computed on their home island and are stale here.
+/// Returns the number of migrants accepted.
+fn inject(pop: &mut [Individual], incoming: &[Individual]) -> usize {
+    let fresh: Vec<Individual> = incoming
+        .iter()
+        .filter(|m| !pop.iter().any(|p| p.genome == m.genome))
+        .cloned()
+        .collect();
+    if fresh.is_empty() {
+        return 0;
+    }
+    let m = fresh.len().min(pop.len());
+    let mut order: Vec<usize> = (0..pop.len()).collect();
+    order.sort_by(|&x, &y| quality(&pop[x], &pop[y]));
+    for (&slot, ind) in order[pop.len() - m..].iter().zip(fresh) {
+        pop[slot] = ind;
+    }
+    let fronts = fast_nondominated_sort(pop);
+    assign_crowding(pop, &fronts);
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moo::problems::{Zdt, ZdtVariant};
+    use crate::pareto::hypervolume::hypervolume_2d;
+
+    fn ga(seed: u64, gens: usize) -> Nsga2Config {
+        Nsga2Config {
+            pop_size: 8,
+            initial_pop_size: 12,
+            generations: gens,
+            seed,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn topology_sources() {
+        assert_eq!(Topology::Ring.sources(4, 0), vec![3]);
+        assert_eq!(Topology::Ring.sources(4, 2), vec![1]);
+        assert!(Topology::Ring.sources(1, 0).is_empty());
+        assert_eq!(Topology::FullyConnected.sources(3, 1), vec![0, 2]);
+        assert_eq!(Topology::from_id("ring"), Some(Topology::Ring));
+        assert_eq!(Topology::from_id("full"), Some(Topology::FullyConnected));
+        assert_eq!(Topology::from_id("torus"), None);
+        for t in [Topology::Ring, Topology::FullyConnected] {
+            assert_eq!(Topology::from_id(t.id()), Some(t));
+        }
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(IslandConfig::default().validate(10).is_ok());
+        assert!(IslandConfig { islands: 0, ..Default::default() }.validate(10).is_err());
+        let c = IslandConfig { migration_interval: 0, ..Default::default() };
+        assert!(c.validate(10).is_err());
+        assert!(IslandConfig { migrants: 0, ..Default::default() }.validate(10).is_err());
+        assert!(IslandConfig { migrants: 10, ..Default::default() }.validate(10).is_err());
+    }
+
+    #[test]
+    fn run_is_deterministic_and_emits_migrations() {
+        let run = || {
+            let mut problem = Zdt::new(ZdtVariant::Zdt1, 6, 32);
+            let cfg = IslandConfig {
+                islands: 3,
+                migration_interval: 2,
+                topology: Topology::Ring,
+                migrants: 2,
+            };
+            let mut model = IslandModel::new(ga(9, 10), cfg);
+            let mut migrations = 0usize;
+            let pop = model.run(&mut problem, |e| {
+                if let IslandEvent::Migration { .. } = e {
+                    migrations += 1;
+                }
+            });
+            let genomes: Vec<Vec<i64>> = pop.iter().map(|i| i.genome.clone()).collect();
+            (genomes, migrations, model.evaluations())
+        };
+        let (a, ma, ea) = run();
+        let (b, mb, eb) = run();
+        assert_eq!(a, b, "same seed must reproduce the archipelago");
+        assert_eq!(ma, mb);
+        assert!(ma > 0, "ring migration should fire");
+        assert_eq!(ea, eb);
+        assert_eq!(ea, 3 * (12 + 10 * 8), "per-island budget accounting");
+    }
+
+    #[test]
+    fn merged_front_never_loses_hypervolume_vs_any_island() {
+        let mut problem = Zdt::new(ZdtVariant::Zdt3, 8, 32);
+        let mut model = IslandModel::new(ga(4, 15), IslandConfig::default());
+        let mut finals: Vec<Vec<Individual>> = vec![Vec::new(); 4];
+        let pop = model.run(&mut problem, |e| {
+            if let IslandEvent::Generation { island, stats } = e {
+                if stats.generation == 15 {
+                    finals[*island] = stats.population.to_vec();
+                }
+            }
+        });
+        let merged = Nsga2::pareto_set(&pop);
+        assert!(!merged.is_empty());
+        let hv = |front: &[Individual]| {
+            let pts: Vec<Vec<f64>> = front.iter().map(|i| i.objectives.clone()).collect();
+            hypervolume_2d(&pts, &[1.1, 7.0])
+        };
+        let merged_hv = hv(&merged);
+        for island_pop in &finals {
+            assert!(!island_pop.is_empty(), "observer missed a final population");
+            let front = Nsga2::pareto_set(island_pop);
+            assert!(
+                merged_hv + 1e-12 >= hv(&front),
+                "merged front lost hypervolume vs a constituent island"
+            );
+        }
+        // Merge is a front: mutually non-dominated, genome-deduplicated.
+        for a in &merged {
+            for b in &merged {
+                if a.genome != b.genome {
+                    assert!(!crate::pareto::dominates(&a.objectives, &b.objectives));
+                }
+            }
+        }
+        let mut genomes: Vec<&Vec<i64>> = merged.iter().map(|i| &i.genome).collect();
+        genomes.sort();
+        genomes.dedup();
+        assert_eq!(genomes.len(), merged.len(), "duplicate genome in merged front");
+    }
+
+    #[test]
+    fn merged_front_helper_matches_pareto_set_of_concatenation() {
+        let mut problem = Zdt::new(ZdtVariant::Zdt2, 6, 16);
+        let mut model = IslandModel::new(ga(11, 6), IslandConfig::default());
+        let pop = model.run(&mut problem, |_| {});
+        let via_pop = Nsga2::pareto_set(&pop);
+        // Rebuild per-island groups of equal size and merge through the
+        // helper; both paths must agree.
+        let per = pop.len() / 4;
+        let groups: Vec<Vec<Individual>> = pop.chunks(per).map(|c| c.to_vec()).collect();
+        let via_helper = merged_front(&groups);
+        let key = |f: &[Individual]| {
+            f.iter().map(|i| i.genome.clone()).collect::<Vec<_>>()
+        };
+        assert_eq!(key(&via_pop), key(&via_helper));
+    }
+
+    #[test]
+    fn front_hypervolume_scores_2d_fronts_only() {
+        let mk = |objs: Vec<Vec<f64>>| {
+            objs.into_iter()
+                .map(|o| {
+                    let mut i = Individual::new(vec![]);
+                    i.objectives = o;
+                    i
+                })
+                .collect::<Vec<Individual>>()
+        };
+        assert!(front_hypervolume(&[]).is_none());
+        let f = mk(vec![vec![0.0, 1.0], vec![1.0, 0.0]]);
+        let hv = front_hypervolume(&f).unwrap();
+        assert!(hv > 0.0, "hv {hv}");
+        let f4 = mk(vec![vec![0.0; 4]]);
+        assert!(front_hypervolume(&f4).is_none());
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod baselines;
 pub mod individual;
+pub mod island;
 pub mod nsga2;
 pub mod parallel;
 pub mod problem;
@@ -11,6 +12,7 @@ pub mod problems;
 pub mod sort;
 
 pub use individual::Individual;
+pub use island::{IslandConfig, IslandEvent, IslandModel, Topology};
 pub use nsga2::{GenerationStats, Nsga2, Nsga2Config};
 pub use parallel::{Parallel, SyncProblem};
 pub use problem::{Evaluation, Problem};

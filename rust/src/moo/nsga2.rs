@@ -58,8 +58,22 @@ impl Nsga2 {
         Nsga2 { config, rng, evaluations: 0 }
     }
 
+    /// Engine over an externally forked RNG stream. The island model gives
+    /// each sub-population its own `Rng::fork` stream so K islands are
+    /// reproducible as a set, independent of scheduling (`config.seed` is
+    /// ignored in favor of `rng`).
+    pub fn with_rng(config: Nsga2Config, rng: Rng) -> Self {
+        Nsga2 { config, rng, evaluations: 0 }
+    }
+
     pub fn evaluations(&self) -> usize {
         self.evaluations
+    }
+
+    /// Credit externally performed evaluations (island model: generations
+    /// are evaluated in one cross-island batch, outside this engine).
+    pub fn add_evaluations(&mut self, n: usize) {
+        self.evaluations += n;
     }
 
     fn random_genome(&mut self, problem: &dyn Problem) -> Vec<i64> {
@@ -84,12 +98,40 @@ impl Nsga2 {
             .zip(evals)
             .map(|(genome, e)| {
                 debug_assert_eq!(e.objectives.len(), problem.num_objectives());
-                let mut ind = Individual::new(genome);
-                ind.objectives = e.objectives;
-                ind.violation = e.violation;
-                ind
+                Individual::evaluated(genome, e)
             })
             .collect()
+    }
+
+    // ---- stepping API (the island model drives these externally) --------
+
+    /// Random genomes for generation 0 (`initial_pop_size` of them).
+    pub fn seed_genomes(&mut self, problem: &dyn Problem) -> Vec<Vec<i64>> {
+        (0..self.config.initial_pop_size)
+            .map(|_| self.random_genome(problem))
+            .collect()
+    }
+
+    /// One generation of children bred from `pop` (`pop_size` of them).
+    pub fn offspring_genomes(
+        &mut self,
+        problem: &dyn Problem,
+        pop: &[Individual],
+    ) -> Vec<Vec<i64>> {
+        (0..self.config.pop_size)
+            .map(|_| self.make_child(problem, pop))
+            .collect()
+    }
+
+    /// Public (mu+lambda) survival over an evaluated pool — the island
+    /// model evaluates genomes in cross-island batches and feeds the
+    /// results back through this.
+    pub fn select_survivors(
+        &mut self,
+        pool: Vec<Individual>,
+        target: usize,
+    ) -> Vec<Individual> {
+        self.survive(pool, target)
     }
 
     /// Binary tournament on (feasibility, rank, crowding).
@@ -167,17 +209,13 @@ impl Nsga2 {
     ) -> Vec<Individual> {
         // Generation 0: the paper's enlarged initial population, evaluated
         // as one batch (the problem may fan it out across threads).
-        let genomes: Vec<Vec<i64>> = (0..self.config.initial_pop_size)
-            .map(|_| self.random_genome(problem))
-            .collect();
+        let genomes = self.seed_genomes(problem);
         let mut pop = self.evaluate_all(problem, genomes);
         pop = self.survive(pop, self.config.pop_size.min(self.config.initial_pop_size));
         observer(&GenerationStats { generation: 0, evaluations: self.evaluations, population: &pop });
 
         for gen in 1..=self.config.generations {
-            let children: Vec<Vec<i64>> = (0..self.config.pop_size)
-                .map(|_| self.make_child(problem, &pop))
-                .collect();
+            let children = self.offspring_genomes(problem, &pop);
             let offspring = self.evaluate_all(problem, children);
             let mut pool = pop;
             pool.extend(offspring);

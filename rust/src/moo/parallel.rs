@@ -36,6 +36,12 @@ impl<'a, P: SyncProblem + ?Sized> Parallel<'a, P> {
     pub fn new(inner: &'a P, threads: usize) -> Self {
         Parallel { inner, threads }
     }
+
+    /// One worker per core (`util::pool::default_threads`, which honors
+    /// the `MOHAQ_THREADS` override).
+    pub fn auto(inner: &'a P) -> Self {
+        Parallel { inner, threads: crate::util::pool::default_threads() }
+    }
 }
 
 impl<P: SyncProblem + ?Sized> Problem for Parallel<'_, P> {

@@ -49,8 +49,22 @@ fn fmt_ns(ns: f64) -> String {
     }
 }
 
+/// True when `MOHAQ_BENCH_SMOKE` requests the reduced-iteration mode the
+/// CI bench-smoke job uses: every bench still runs (so regressions that
+/// ERROR are caught), but with tiny warmup/budget caps.
+pub fn smoke_mode() -> bool {
+    std::env::var("MOHAQ_BENCH_SMOKE")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false)
+}
+
 impl Bencher {
     pub fn new(warmup_ms: u64, budget_ms: u64, max_iters: usize) -> Self {
+        let (warmup_ms, budget_ms, max_iters) = if smoke_mode() {
+            (warmup_ms.min(5), budget_ms.min(50), max_iters.min(30))
+        } else {
+            (warmup_ms, budget_ms, max_iters)
+        };
         Bencher {
             warmup: Duration::from_millis(warmup_ms),
             budget: Duration::from_millis(budget_ms),
@@ -155,6 +169,28 @@ impl Bencher {
                 .collect(),
         )
     }
+
+    /// Merge this bencher's results into the JSON perf report named by
+    /// `MOHAQ_BENCH_JSON` under `section` (no-op when the variable is
+    /// unset). Existing sections are preserved, so several bench binaries
+    /// accrete one artifact (CI's `BENCH_ci.json`).
+    pub fn emit_json(&self, section: &str) -> std::io::Result<()> {
+        let Ok(path) = std::env::var("MOHAQ_BENCH_JSON") else {
+            return Ok(());
+        };
+        use crate::util::json::Json;
+        let mut root: std::collections::BTreeMap<String, Json> =
+            std::fs::read_to_string(&path)
+                .ok()
+                .and_then(|text| Json::parse(&text).ok())
+                .and_then(|j| match j {
+                    Json::Obj(m) => Some(m),
+                    _ => None,
+                })
+                .unwrap_or_default();
+        root.insert(section.to_string(), self.to_json());
+        std::fs::write(&path, Json::Obj(root).to_string_pretty())
+    }
 }
 
 #[cfg(test)]
@@ -181,6 +217,27 @@ mod tests {
         let mut b = Bencher::new(1, 20, 100);
         let r = b.bench_items("items", 100, || 42u64);
         assert!(r.throughput.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn emit_json_accretes_sections() {
+        let path = std::env::temp_dir().join(format!("mohaq_bench_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        std::env::set_var("MOHAQ_BENCH_JSON", &path);
+
+        let mut a = Bencher::new(1, 10, 10);
+        a.bench("alpha", || 1u64);
+        a.emit_json("section_a").unwrap();
+        let mut b = Bencher::new(1, 10, 10);
+        b.bench("beta", || 2u64);
+        b.emit_json("section_b").unwrap();
+
+        std::env::remove_var("MOHAQ_BENCH_JSON");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let root = crate::util::json::Json::parse(&text).unwrap();
+        assert!(root.get("section_a").is_some(), "first section lost: {text}");
+        assert!(root.get("section_b").is_some(), "second section lost: {text}");
     }
 
     #[test]

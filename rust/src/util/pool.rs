@@ -7,8 +7,16 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-/// Default worker count: one per available core.
+/// Default worker count: one per available core, or the `MOHAQ_THREADS`
+/// override (handy for CI runners and for pinning bench comparisons).
 pub fn default_threads() -> usize {
+    if let Some(n) = std::env::var("MOHAQ_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+    {
+        return n;
+    }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 

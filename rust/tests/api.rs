@@ -6,9 +6,11 @@
 use std::sync::Arc;
 
 use mohaq::coordinator::{ExperimentSpec, ObjectiveKind, SearchError, SearchSession};
+use mohaq::eval::ResultCache;
 use mohaq::hw::registry::{self, PlatformSpec};
 use mohaq::hw::Platform;
 use mohaq::model::ModelDesc;
+use mohaq::moo::island::{IslandConfig, Topology};
 use mohaq::moo::problems::{Zdt, ZdtVariant};
 use mohaq::moo::Nsga2Config;
 use mohaq::quant::{Bits, QuantConfig};
@@ -176,6 +178,61 @@ fn zdt_smoke_front_is_identical_for_one_and_many_threads() {
         let bo: Vec<u64> = b.objectives.iter().map(|v| v.to_bits()).collect();
         assert_eq!(ao, bo, "objectives not bitwise identical");
     }
+}
+
+#[test]
+fn island_session_smoke_merges_a_front() {
+    let problem = Zdt::new(ZdtVariant::Zdt1, 8, 32);
+    let ga = Nsga2Config {
+        pop_size: 10,
+        initial_pop_size: 12,
+        generations: 10,
+        seed: 0xF17ED,
+        ..Default::default()
+    };
+    let cfg = IslandConfig {
+        islands: 3,
+        migration_interval: 2,
+        topology: Topology::FullyConnected,
+        migrants: 2,
+    };
+    let front = SearchSession::run_generic_islands(&problem, ga, cfg, 4);
+    assert!(!front.is_empty());
+    // The merge deduplicates: genomes are unique.
+    let mut genomes: Vec<&Vec<i64>> = front.iter().map(|i| &i.genome).collect();
+    genomes.sort();
+    genomes.dedup();
+    assert_eq!(genomes.len(), front.len());
+}
+
+#[test]
+fn poisoned_eval_cache_surfaces_typed_error_not_panic() {
+    // Regression: a worker that panicked while holding the EvalService
+    // cache lock used to make every OTHER worker panic too ("cache
+    // poisoned" .expect), killing the pool. The cache now returns a typed
+    // error which the session boundary maps to SearchError::Poisoned.
+    let cache: ResultCache<u32, f64> = ResultCache::new();
+    cache.insert(1, 0.5).unwrap();
+    cache.poison_for_test();
+
+    let err = cache.get(&1).unwrap_err();
+    assert!(err.to_string().contains("poisoned"), "{err}");
+    assert!(cache.insert(2, 1.0).is_err(), "insert must fail once poisoned");
+
+    // The exact payload MohaqProblem produces from that error classifies
+    // as Poisoned at the session boundary (not a generic Eval failure).
+    let payload = format!("candidate evaluation failed: {err:#}");
+    match SearchError::from_panic(payload) {
+        SearchError::Poisoned(msg) => {
+            assert!(msg.contains("eval cache poisoned"), "{msg}")
+        }
+        other => panic!("expected SearchError::Poisoned, got {other:?}"),
+    }
+    // Unrelated panics still map to the evaluation-failure variant.
+    assert!(matches!(
+        SearchError::from_panic("candidate evaluation failed: device lost".into()),
+        SearchError::Eval(_)
+    ));
 }
 
 #[test]

@@ -70,6 +70,35 @@ fn search_front_is_identical_for_any_thread_count() {
 }
 
 #[test]
+fn island_search_front_is_identical_for_any_thread_count() {
+    let Some(arts) = artifacts() else { return };
+    let mut spec = ExperimentSpec::exp1();
+    spec.ga.generations = 2;
+    spec.ga.initial_pop_size = 6;
+    spec.ga.pop_size = 6;
+    spec.ga.seed = 0x15_1a2d;
+    spec.island = Some(mohaq::moo::IslandConfig {
+        islands: 3,
+        migration_interval: 1,
+        topology: mohaq::moo::Topology::Ring,
+        migrants: 2,
+    });
+
+    let front = |threads: usize| {
+        let session = SearchSession::new(arts.clone()).unwrap().threads(threads);
+        let outcome = session.run(&spec).unwrap();
+        outcome
+            .rows
+            .iter()
+            .map(|r| (r.qc.clone(), r.wer_v.to_bits()))
+            .collect::<Vec<_>>()
+    };
+    let one = front(1);
+    assert_eq!(one, front(2), "2 eval threads changed the merged island front");
+    assert_eq!(one, front(8), "8 eval threads changed the merged island front");
+}
+
+#[test]
 fn exp2_silago_respects_platform_restrictions() {
     let Some(arts) = artifacts() else { return };
     let mut spec = ExperimentSpec::exp2_silago();
