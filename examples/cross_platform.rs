@@ -1,0 +1,162 @@
+//! Cross-platform search demo (PR 4 typed objective pipeline) — hermetic:
+//! runs WITHOUT the artifact bundle. One NSGA-II search scores a single
+//! front against BOTH built-in platforms at once through platform-bound
+//! objectives (`neg_speedup@silago`, `neg_speedup@bitfusion`), with each
+//! binding contributing its own SRAM constraint. The joint front shows
+//! which quantization policies are robust across accelerators and which
+//! are specialization artifacts (HAQ's observation, exploited jointly).
+//!
+//! The error objective needs the AOT bundle, so the hermetic half drives
+//! the analytical metrics only (size + per-platform speedup); when an
+//! artifact bundle is present the full `cross_platform` preset runs too.
+//!
+//!     cargo run --release --example cross_platform -- \
+//!         [--gens 40] [--seed N] [--artifacts artifacts]
+
+use std::sync::Arc;
+
+use mohaq::coordinator::objective::sram_violation_mb;
+use mohaq::coordinator::{
+    baseline_rows, BoundObjective, ExperimentSpec, PlatformBinding, ScoredObjective, SearchEvent,
+    SearchSession,
+};
+use mohaq::hw::Platform;
+use mohaq::model::ModelDesc;
+use mohaq::moo::{Evaluation, Nsga2, Problem};
+use mohaq::quant::QuantConfig;
+use mohaq::report;
+use mohaq::util::cli::Args;
+
+/// Analytic cross-platform problem: size + per-platform speedups over the
+/// paper-dims model, scored through the SAME typed pipeline the live
+/// search uses (`BoundObjective::score` against resolved bindings).
+struct AnalyticCross {
+    model: ModelDesc,
+    objectives: Vec<BoundObjective>,
+    bindings: Vec<PlatformBinding>,
+    gene_min: i64,
+}
+
+impl Problem for AnalyticCross {
+    fn num_vars(&self) -> usize {
+        // SiLago in the binding table ties W=A: one gene per layer.
+        self.model.num_layers()
+    }
+
+    fn num_objectives(&self) -> usize {
+        self.objectives.len()
+    }
+
+    fn var_range(&self, _i: usize) -> (i64, i64) {
+        (self.gene_min, 4)
+    }
+
+    fn objective_names(&self) -> Vec<String> {
+        self.objectives.iter().map(|o| o.label.clone()).collect()
+    }
+
+    fn evaluate(&mut self, genome: &[i64]) -> Evaluation {
+        let qc = QuantConfig::from_genome_tied(genome).expect("tied genome");
+        let objectives = self
+            .objectives
+            .iter()
+            .map(|o| o.score(&self.bindings, &self.model, &qc, 0.0).expect("analytic metric"))
+            .collect();
+        // Both platforms' SRAM capacities constrain the same front.
+        let violation = sram_violation_mb(&self.bindings, &self.model, &qc);
+        Evaluation { objectives, violation }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let gens = args.get_usize("gens", 40);
+    let seed = args.get_u64("seed", 0xC405);
+
+    // The spec validates and resolves like any other: both platforms in
+    // the table, hardware objectives explicitly bound per platform.
+    let spec = ExperimentSpec::builder()
+        .name("cross-platform-analytic")
+        .platform("silago")
+        .sram_mb(6.0)
+        .platform("bitfusion")
+        .sram_mb(2.0)
+        .objective(ScoredObjective::size_mb())
+        .platform_objective("silago", ScoredObjective::neg_speedup())
+        .platform_objective("bitfusion", ScoredObjective::neg_speedup())
+        .pop_size(16)
+        .initial_pop_size(32)
+        .generations(gens)
+        .seed(seed)
+        .build()?;
+    let (objectives, bindings) = spec.resolve_objectives()?;
+    println!("== joint objectives (typed pipeline) ==");
+    for o in &objectives {
+        println!("  {}", o.label);
+    }
+
+    let model = ModelDesc::paper();
+    let gene_min = bindings
+        .iter()
+        .map(|b| b.platform.supported_bits().iter().map(|bit| bit.to_gene()).min().unwrap())
+        .max()
+        .unwrap_or(1);
+    let mut problem = AnalyticCross { model, objectives, bindings, gene_min };
+
+    let mut algo = Nsga2::new(spec.ga.clone());
+    let pop = algo.run(&mut problem, |_| {});
+    let front = Nsga2::pareto_set(&pop);
+
+    println!("\n== joint analytic front ({} solutions, seed {seed:#x}) ==\n", front.len());
+    println!("{:<22}{:>10}{:>14}{:>16}", "config (W=A)", "size MB", "spd@silago", "spd@bitfusion");
+    for ind in &front {
+        let qc = QuantConfig::from_genome_tied(&ind.genome).unwrap();
+        println!(
+            "{:<22}{:>10.3}{:>13.2}x{:>15.2}x",
+            qc.display_wa(),
+            ind.objectives[0],
+            -ind.objectives[1],
+            -ind.objectives[2]
+        );
+    }
+
+    // Robust vs specialized: the per-platform winners differ when a
+    // policy exploits one accelerator's precision sweet spot.
+    let best = |k: usize| {
+        front
+            .iter()
+            .min_by(|a, b| a.objectives[k].partial_cmp(&b.objectives[k]).unwrap())
+            .expect("non-empty front")
+    };
+    let (si, bf) = (best(1), best(2));
+    if si.genome == bf.genome {
+        println!("\nrobust: one policy maximizes speedup on BOTH platforms");
+    } else {
+        println!("\nspecialized: the per-platform speedup winners differ");
+        let si_qc = QuantConfig::from_genome_tied(&si.genome).unwrap();
+        let bf_qc = QuantConfig::from_genome_tied(&bf.genome).unwrap();
+        println!("  silago    favors {}", si_qc.display_wa());
+        println!("  bitfusion favors {}", bf_qc.display_wa());
+    }
+
+    // Full search (error objective included) when the AOT bundle exists.
+    let dir = args.get_or("artifacts", "artifacts").to_string();
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        println!("\nno artifacts at {dir}; skipping the live cross_platform preset search");
+        println!("(the preset spec JSON below runs via `mohaq search --config`)\n");
+        println!("{}", ExperimentSpec::cross_platform().to_json_string());
+        return Ok(());
+    }
+    let arts = Arc::new(mohaq::runtime::Artifacts::load(&dir)?);
+    let mut live = ExperimentSpec::cross_platform();
+    live.ga.generations = args.get_usize("live-gens", 10);
+    let session = SearchSession::new(arts.clone())?;
+    let outcome = session.run_with(&live, |event| {
+        if let SearchEvent::Generation(log) = event {
+            println!("{log}");
+        }
+    })?;
+    println!("\nobjectives: {}", outcome.objective_names.join(", "));
+    println!("{}", report::render_table(&outcome.rows, &baseline_rows(&arts), &arts));
+    Ok(())
+}

@@ -9,7 +9,9 @@
 
 use std::sync::Arc;
 
-use mohaq::coordinator::{baseline_rows, ExperimentSpec, ObjectiveKind, SearchEvent, SearchSession};
+use mohaq::coordinator::{
+    baseline_rows, ExperimentSpec, ScoredObjective, SearchEvent, SearchSession,
+};
 use mohaq::hw::registry::{self, PlatformSpec};
 use mohaq::hw::{eq3_energy_pj, eq4_speedup, Platform};
 use mohaq::model::ModelDesc;
@@ -84,15 +86,17 @@ fn main() -> anyhow::Result<()> {
         .name("dsp8-search")
         .platform("dsp8")
         .sram_mb(args.get_f64("sram-mb", 3.0))
-        .objective(ObjectiveKind::Error)
-        .objective(ObjectiveKind::NegSpeedup)
-        .objective(ObjectiveKind::EnergyUj)
+        .objective(ScoredObjective::error())
+        .objective(ScoredObjective::neg_speedup())
+        .objective(ScoredObjective::energy_uj())
         .generations(args.get_usize("gens", 8))
         .build()?;
     println!("spec validates: {}\n", spec.name);
 
-    // Analytical scoring needs no artifacts.
-    let platform = spec.resolve_platform()?.expect("dsp8 resolves");
+    // Analytical scoring needs no artifacts; the resolved binding table
+    // carries the live platform handle.
+    let (_, bindings) = spec.resolve_objectives()?;
+    let platform = &bindings[0].platform;
     let model = ModelDesc::paper();
     println!("== DSP8 analytical scores (paper-dims model) ==");
     println!("{:<14}{:>10}{:>12}{:>10}", "config", "speedup", "energy uJ", "fits?");

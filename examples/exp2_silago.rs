@@ -28,8 +28,8 @@ fn main() -> anyhow::Result<()> {
     let mut spec = ExperimentSpec::exp2_silago();
     spec.ga.generations = args.get_usize("gens", spec.ga.generations);
     spec.ga.seed = args.get_u64("seed", spec.ga.seed);
-    spec.platform =
-        Some(PlatformSpec::new("silago").with_f64("sram_mb", args.get_f64("sram-mb", 6.0)));
+    spec.platforms =
+        vec![PlatformSpec::new("silago").with_f64("sram_mb", args.get_f64("sram-mb", 6.0))];
 
     println!(
         "== Experiment 2: SiLago, 3 objectives, {} vars, {} gens ==",

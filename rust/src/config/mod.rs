@@ -17,7 +17,18 @@
 //! ```
 //!
 //! The legacy flat platform shape `{"kind": "bitfusion", "sram_mb": 1.5}`
-//! is still accepted (see `hw::registry::PlatformSpec::from_json`).
+//! is still accepted (see `hw::registry::PlatformSpec::from_json`), as is
+//! the singular `"platform"` key — the canonical form is a `"platforms"`
+//! table plus platform-bound objectives:
+//!
+//! ```json
+//! {
+//!   "name": "joint",
+//!   "platforms": [{"name": "silago", "params": {"sram_mb": 6.0}},
+//!                 {"name": "bitfusion", "params": {"sram_mb": 2.0}}],
+//!   "objectives": ["error", "neg_speedup@silago", "neg_speedup@bitfusion"]
+//! }
+//! ```
 
 use crate::coordinator::{ExperimentSpec, SearchError};
 
@@ -35,7 +46,6 @@ pub fn spec_from_file(path: &str) -> Result<ExperimentSpec, SearchError> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::ObjectiveKind;
 
     #[test]
     fn parses_full_config() {
@@ -51,10 +61,12 @@ mod tests {
         )
         .unwrap();
         assert_eq!(spec.name, "custom");
-        let platform = spec.platform.as_ref().unwrap();
+        let platform = &spec.platforms[0];
         assert_eq!(platform.name, "bitfusion");
         assert_eq!(platform.f64("sram_mb"), Some(1.5));
         assert_eq!(spec.objectives.len(), 2);
+        // The lone platform binds the hardware objective explicitly.
+        assert_eq!(spec.objectives[1].id(), "neg_speedup@bitfusion");
         assert_eq!(spec.ga.pop_size, 12);
         assert_eq!(spec.ga.generations, 30);
         assert_eq!(spec.beacon.as_ref().unwrap().threshold, Some(5.0));
@@ -71,10 +83,37 @@ mod tests {
             }"#,
         )
         .unwrap();
-        let platform = spec.platform.as_ref().unwrap();
+        let platform = &spec.platforms[0];
         assert_eq!(platform.name, "silago");
         assert_eq!(platform.f64("sram_mb"), Some(4.0));
-        assert_eq!(spec.objectives[1], ObjectiveKind::NegSpeedup);
+        assert_eq!(spec.objectives[1].id(), "neg_speedup@silago");
+    }
+
+    #[test]
+    fn parses_cross_platform_config() {
+        let spec = spec_from_json(
+            r#"{
+              "name": "joint",
+              "platforms": [{"name": "silago", "params": {"sram_mb": 6.0}},
+                            {"name": "bitfusion", "params": {"sram_mb": 2.0}}],
+              "objectives": ["error", "neg_speedup@silago", "neg_speedup@bitfusion"]
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(spec.platforms.len(), 2);
+        assert_eq!(spec.objectives[1].platform(), Some("silago"));
+        assert_eq!(spec.objectives[2].platform(), Some("bitfusion"));
+        // An unbound hardware objective with several platforms is
+        // rejected as ambiguous.
+        let err = spec_from_json(
+            r#"{
+              "name": "joint",
+              "platforms": [{"name": "silago"}, {"name": "bitfusion"}],
+              "objectives": ["error", "neg_speedup"]
+            }"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("ambiguous"), "{err}");
     }
 
     #[test]
@@ -83,7 +122,7 @@ mod tests {
             r#"{"name": "plain", "objectives": ["error", "size"]}"#,
         )
         .unwrap();
-        assert!(spec.platform.is_none());
+        assert!(spec.platforms.is_empty());
         assert!(spec.beacon.is_none());
         assert_eq!(spec.ga.pop_size, 10);
         assert_eq!(spec.err_feasible_pp, 8.0);

@@ -60,6 +60,17 @@ pub struct Beacon {
     pub report: RetrainReport,
 }
 
+/// Outcome of the pure eligibility half of Algorithm 1 (`decide`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BeaconDecision {
+    /// Evaluate with the baseline parameter set.
+    Baseline,
+    /// Re-evaluate with an existing beacon's parameter set.
+    Share { set_idx: usize },
+    /// Eligible to become a new beacon (retrain, then register).
+    Create,
+}
+
 pub struct BeaconManager {
     pub policy: BeaconPolicy,
     pub beacons: Vec<Beacon>,
@@ -96,6 +107,34 @@ impl BeaconManager {
             .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
     }
 
+    /// The pure half of Algorithm 1: decide what to do with a candidate
+    /// given its baseline error, WITHOUT touching the trainer or the
+    /// evaluation service (so every branch is unit-testable hermetically).
+    ///
+    /// Candidates strictly beyond `threshold` of every beacon always fall
+    /// back to the baseline — there is deliberately NO "borrow the
+    /// nearest beacon up to 1.5x the threshold" grace band (a dead branch
+    /// that once suggested otherwise is pinned removed by the tests).
+    pub fn decide(&self, qc: &QuantConfig, base_err: f64) -> BeaconDecision {
+        // Outside the (enlarged) beacon-feasible area: baseline evaluation.
+        if base_err > self.policy.feasible_err {
+            return BeaconDecision::Baseline;
+        }
+        // Low-error solutions don't benefit enough to justify retraining,
+        // but they may still share an existing nearby beacon.
+        let wants_beacon = base_err >= self.policy.min_err_for_retrain;
+        match self.nearest(qc) {
+            Some((idx, d)) if d <= self.policy.threshold => {
+                BeaconDecision::Share { set_idx: self.beacons[idx].set_idx }
+            }
+            _ if wants_beacon && self.beacons.len() < self.policy.max_beacons => {
+                BeaconDecision::Create
+            }
+            // No beacon close enough and not eligible to create one.
+            _ => BeaconDecision::Baseline,
+        }
+    }
+
     /// Algorithm 1: decide which parameter set to evaluate `qc` with.
     /// Returns None when the candidate should use the baseline set, or
     /// Some(set_idx) when a beacon applies (possibly freshly created).
@@ -107,20 +146,10 @@ impl BeaconManager {
         trainer: &mut Trainer,
     ) -> Result<Option<usize>> {
         self.lookups += 1;
-        // Outside the (enlarged) beacon-feasible area: baseline evaluation.
-        if base_err > self.policy.feasible_err {
-            return Ok(None);
-        }
-        // Low-error solutions don't benefit enough to justify retraining,
-        // but they may still share an existing nearby beacon.
-        let wants_beacon = base_err >= self.policy.min_err_for_retrain;
-        let nearest = self.nearest(qc);
-
-        match nearest {
-            Some((idx, d)) if d <= self.policy.threshold => {
-                Ok(Some(self.beacons[idx].set_idx))
-            }
-            _ if wants_beacon && self.beacons.len() < self.policy.max_beacons => {
+        match self.decide(qc, base_err) {
+            BeaconDecision::Baseline => Ok(None),
+            BeaconDecision::Share { set_idx } => Ok(Some(set_idx)),
+            BeaconDecision::Create => {
                 // Convert this solution into a beacon by retraining.
                 let (params, report) = trainer.retrain(
                     &eval.param_set(0).host.clone(),
@@ -139,15 +168,6 @@ impl BeaconManager {
                 self.beacons.push(Beacon { qc: qc.clone(), set_idx, report });
                 Ok(Some(set_idx))
             }
-            // No beacon close enough and not eligible to create one.
-            Some((idx, d)) if d <= self.policy.threshold * 1.5 && !wants_beacon => {
-                // Mildly-off solutions still borrow the nearest beacon in
-                // preference to nothing only when inside the threshold —
-                // here they fall back to the baseline.
-                let _ = (idx, d);
-                Ok(None)
-            }
-            _ => Ok(None),
         }
     }
 }
@@ -186,5 +206,67 @@ mod tests {
         let p = BeaconPolicy::paper_defaults(0.16, 1e-3);
         assert_eq!(p.threshold, 6.0);
         assert!(p.feasible_err > 0.16);
+    }
+
+    fn beacon_at(bits: &[u32], set_idx: usize) -> Beacon {
+        Beacon {
+            qc: qc(bits),
+            set_idx,
+            report: RetrainReport { steps: 0, lr: 0.0, loss_curve: vec![], wall_secs: 0.0 },
+        }
+    }
+
+    /// Eligibility branches of Algorithm 1, driven hermetically through
+    /// `decide` (the retraining half of `Create` is exercised against the
+    /// live bundle by `tests/integration.rs::beacon_rescues_aggressive_
+    /// quantization`, which registers a real parameter set).
+    #[test]
+    fn decide_covers_every_eligibility_branch() {
+        // baseline 16%: feasible_err 51%, min_err_for_retrain 20%.
+        let policy = BeaconPolicy::paper_defaults(0.16, 1e-3);
+        let mut mgr = BeaconManager::new(policy);
+
+        // Fresh creation: in the feasible area, wants a beacon, none near.
+        assert_eq!(mgr.decide(&qc(&[2; 8]), 0.30), BeaconDecision::Create);
+
+        // Outside the enlarged feasible area: baseline, never retrained.
+        assert_eq!(mgr.decide(&qc(&[2; 8]), 0.60), BeaconDecision::Baseline);
+
+        // Below min_err_for_retrain with no beacon near: baseline (low
+        // error solutions are not worth a retraining).
+        assert_eq!(mgr.decide(&qc(&[2; 8]), 0.17), BeaconDecision::Baseline);
+
+        // ...but the same low-error candidate SHARES an existing beacon
+        // within the threshold instead of retraining.
+        mgr.beacons.push(beacon_at(&[2; 8], 3));
+        let near = qc(&[2, 2, 2, 2, 2, 2, 2, 4]); // distance 1 <= 6
+        assert_eq!(mgr.decide(&near, 0.17), BeaconDecision::Share { set_idx: 3 });
+
+        // max_beacons cap: a want-to-create candidate far from every
+        // beacon falls back to the baseline once the cap is reached.
+        let far = qc(&[16; 8]); // distance 24 from the 2-bit beacon
+        assert_eq!(mgr.decide(&far, 0.30), BeaconDecision::Create, "under the cap");
+        for i in 0..3 {
+            mgr.beacons.push(beacon_at(&[4; 8], 4 + i));
+        }
+        assert_eq!(mgr.beacons.len(), mgr.policy.max_beacons);
+        assert_eq!(mgr.decide(&far, 0.30), BeaconDecision::Baseline, "cap reached");
+    }
+
+    /// Pins the removal of the dead "borrow at 1.5x threshold" arm: a
+    /// low-error candidate strictly beyond the threshold (but within
+    /// 1.5x of it) uses the BASELINE, not the nearest beacon.
+    #[test]
+    fn no_grace_band_beyond_the_threshold() {
+        let policy = BeaconPolicy::paper_defaults(0.16, 1e-3);
+        let mut mgr = BeaconManager::new(policy);
+        mgr.beacons.push(beacon_at(&[2; 8], 1));
+        // 7 layers moved one precision step + one unchanged: distance 7,
+        // inside (threshold, 1.5 * threshold] = (6, 9].
+        let candidate = qc(&[4, 4, 4, 4, 4, 4, 4, 2]);
+        let (_, d) = mgr.nearest(&candidate).unwrap();
+        assert!(d > mgr.policy.threshold && d <= mgr.policy.threshold * 1.5, "d={d}");
+        // Below min_err_for_retrain => not a Create candidate either.
+        assert_eq!(mgr.decide(&candidate, 0.17), BeaconDecision::Baseline);
     }
 }

@@ -5,20 +5,25 @@
 //! Public API shape (see DESIGN.md):
 //!   * `ExperimentSpec::builder()` — validated, serializable experiment
 //!     descriptions; platforms named by `hw::registry` string.
+//!   * `ScoredObjective` — typed objectives with explicit platform
+//!     bindings (`neg_speedup@silago`); one search can mix hardware
+//!     objectives bound to different platforms.
 //!   * `SearchSession` — owns `Arc<Artifacts>` + runtime, evaluates
 //!     populations across a thread pool, streams `SearchEvent`s, returns
 //!     typed `SearchError`s.
 
 pub mod beacon;
 pub mod error;
+pub mod objective;
 pub mod problem;
 pub mod session;
 pub mod spec;
 pub mod trainer;
 
-pub use beacon::{Beacon, BeaconManager, BeaconPolicy};
+pub use beacon::{Beacon, BeaconDecision, BeaconManager, BeaconPolicy};
 pub use error::SearchError;
-pub use problem::{EvalRecord, MohaqProblem, ObjectiveKind};
+pub use objective::{BoundObjective, Direction, HwMetrics, PlatformBinding, ScoredObjective};
+pub use problem::{EvalRecord, MohaqProblem};
 pub use session::{
     baseline_rows, GenerationLog, SearchEvent, SearchOutcome, SearchSession, SolutionRow,
 };

@@ -1,0 +1,360 @@
+//! Typed objective pipeline (PR 4 redesign): objectives are first-class
+//! values carrying their metric, reporting direction and an explicit
+//! platform binding — `error`, `size_mb`, `neg_speedup@silago` and
+//! `energy_uj@bitfusion` are all expressible, and ONE search can mix
+//! hardware objectives bound to different registered platforms (the
+//! paper runs experiments 2 and 3 as separate per-platform searches; a
+//! joint front over SiLago + Bitfusion exposes which solutions are
+//! robust across accelerators and which are specialization artifacts).
+//!
+//! Two layers:
+//!   * [`ScoredObjective`] — the serializable half stored in an
+//!     `ExperimentSpec`: a metric plus an optional platform *name*.
+//!     Canonical string form is `metric[@platform]` (lossless JSON
+//!     round-trip through `id()`/`parse()`).
+//!   * [`BoundObjective`] + [`PlatformBinding`] — the resolved half the
+//!     search scores against: bindings are resolved from `hw::registry`
+//!     once per run, each objective holds an index into the binding
+//!     table, and every binding contributes its own SRAM constraint
+//!     (violations are summed).
+
+use std::fmt;
+
+use crate::coordinator::error::SearchError;
+use crate::hw::registry::{PlatformSpec, SharedPlatform};
+use crate::hw::Platform;
+use crate::model::ModelDesc;
+use crate::quant::QuantConfig;
+
+/// Natural direction of a reported metric. Scores handed to the GA are
+/// ALWAYS minimized (maximization metrics are stored negated, as the
+/// paper does for speedup — §4.2); `Direction` records which way the
+/// underlying quantity improves so reports stay readable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    Minimize,
+    Maximize,
+}
+
+/// The measurable quantities the evaluation layer can produce. Kept
+/// private: the public surface is [`ScoredObjective`]'s constructors and
+/// `parse`, so callers never exhaustively match a closed enum.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Metric {
+    /// Validation error (max over subsets).
+    Error,
+    /// Model size in MB (experiment 1).
+    SizeMb,
+    /// Negated Eq.-4 speedup (experiments 2, 3).
+    NegSpeedup,
+    /// Eq.-3 energy in uJ (experiment 2).
+    EnergyUj,
+}
+
+impl Metric {
+    /// Canonical config-file identifier.
+    pub(crate) fn id(self) -> &'static str {
+        match self {
+            Metric::Error => "error",
+            Metric::SizeMb => "size_mb",
+            Metric::NegSpeedup => "neg_speedup",
+            Metric::EnergyUj => "energy_uj",
+        }
+    }
+
+    /// Human-readable report label.
+    pub(crate) fn label(self) -> &'static str {
+        match self {
+            Metric::Error => "WER_V",
+            Metric::SizeMb => "size_MB",
+            Metric::NegSpeedup => "-speedup",
+            Metric::EnergyUj => "energy_uJ",
+        }
+    }
+
+    fn from_id(id: &str) -> Option<Metric> {
+        Some(match id {
+            "error" | "wer" => Metric::Error,
+            "size" | "size_mb" => Metric::SizeMb,
+            "neg_speedup" | "speedup" => Metric::NegSpeedup,
+            "energy" | "energy_uj" => Metric::EnergyUj,
+            _ => return None,
+        })
+    }
+
+    fn direction(self) -> Direction {
+        match self {
+            Metric::NegSpeedup => Direction::Maximize,
+            Metric::Error | Metric::SizeMb | Metric::EnergyUj => Direction::Minimize,
+        }
+    }
+
+    fn needs_platform(self) -> bool {
+        matches!(self, Metric::NegSpeedup | Metric::EnergyUj)
+    }
+}
+
+/// A typed objective: what to measure plus which registered platform to
+/// measure it on. Construct via the named constructors and bind with
+/// [`ScoredObjective::on`]; the canonical string form (`neg_speedup@silago`)
+/// round-trips through [`ScoredObjective::id`] / [`ScoredObjective::parse`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScoredObjective {
+    pub(crate) metric: Metric,
+    /// Registry platform name this objective scores against; `None` for
+    /// platform-independent metrics, or "bind me to the spec's only
+    /// platform" before `ExperimentSpec::build()` normalizes it.
+    pub(crate) binding: Option<String>,
+}
+
+impl ScoredObjective {
+    fn new(metric: Metric) -> ScoredObjective {
+        ScoredObjective { metric, binding: None }
+    }
+
+    /// Validation error (max over subsets), minimized.
+    pub fn error() -> ScoredObjective {
+        ScoredObjective::new(Metric::Error)
+    }
+
+    /// Model size in MB, minimized.
+    pub fn size_mb() -> ScoredObjective {
+        ScoredObjective::new(Metric::SizeMb)
+    }
+
+    /// Eq.-4 speedup, maximized (stored negated).
+    pub fn neg_speedup() -> ScoredObjective {
+        ScoredObjective::new(Metric::NegSpeedup)
+    }
+
+    /// Eq.-3 energy in uJ, minimized.
+    pub fn energy_uj() -> ScoredObjective {
+        ScoredObjective::new(Metric::EnergyUj)
+    }
+
+    /// Bind this objective to a registry platform by name (lowercased,
+    /// like the registry itself).
+    pub fn on(mut self, platform: impl Into<String>) -> ScoredObjective {
+        self.binding = Some(platform.into().to_lowercase());
+        self
+    }
+
+    /// The bound platform name, if any.
+    pub fn platform(&self) -> Option<&str> {
+        self.binding.as_deref()
+    }
+
+    /// Whether scoring this objective requires a hardware platform.
+    pub fn needs_platform(&self) -> bool {
+        self.metric.needs_platform()
+    }
+
+    /// Whether the bound platform must provide an energy model.
+    pub fn needs_energy_model(&self) -> bool {
+        self.metric == Metric::EnergyUj
+    }
+
+    /// Natural direction of the reported metric (scores are always
+    /// minimized internally).
+    pub fn direction(&self) -> Direction {
+        self.metric.direction()
+    }
+
+    /// Canonical config-file identifier: `metric[@platform]`.
+    pub fn id(&self) -> String {
+        match &self.binding {
+            Some(p) => format!("{}@{p}", self.metric.id()),
+            None => self.metric.id().to_string(),
+        }
+    }
+
+    /// Report label: `label[@platform]` (e.g. `-speedup@silago`).
+    pub fn label(&self) -> String {
+        match &self.binding {
+            Some(p) => format!("{}@{p}", self.metric.label()),
+            None => self.metric.label().to_string(),
+        }
+    }
+
+    /// Parse the canonical string form. Accepts the same metric aliases
+    /// the config format always did (`wer`, `size`, `speedup`, `energy`)
+    /// plus an optional `@platform` binding.
+    pub fn parse(text: &str) -> Result<ScoredObjective, SearchError> {
+        let (metric_id, binding) = match text.split_once('@') {
+            Some((m, p)) => (m, Some(p)),
+            None => (text, None),
+        };
+        let metric = Metric::from_id(metric_id.trim())
+            .ok_or_else(|| SearchError::Config(format!("unknown objective '{text}'")))?;
+        let mut obj = ScoredObjective::new(metric);
+        if let Some(p) = binding {
+            let p = p.trim();
+            if p.is_empty() {
+                return Err(SearchError::Config(format!(
+                    "objective '{text}': empty platform binding after '@'"
+                )));
+            }
+            obj = obj.on(p);
+        }
+        Ok(obj)
+    }
+}
+
+/// Displays as the canonical id (`neg_speedup@silago`).
+impl fmt::Display for ScoredObjective {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.id())
+    }
+}
+
+/// A platform binding resolved from `hw::registry` for one search run:
+/// the registry name objectives reference, the serializable spec it was
+/// built from, and the live shared platform handle.
+pub struct PlatformBinding {
+    /// Registry name (`silago`, `bitfusion`, ...), the `@label` in
+    /// objective names.
+    pub name: String,
+    /// The spec the platform was resolved from (parameters included).
+    pub spec: PlatformSpec,
+    pub platform: SharedPlatform,
+}
+
+/// An objective resolved against a binding table: ready to score.
+pub struct BoundObjective {
+    /// Report label with the platform suffix (`-speedup@silago`).
+    pub label: String,
+    pub(crate) metric: Metric,
+    /// Index into the binding table; `None` for platform-independent
+    /// metrics.
+    pub(crate) binding: Option<usize>,
+}
+
+impl BoundObjective {
+    /// Natural direction of the reported metric.
+    pub fn direction(&self) -> Direction {
+        self.metric.direction()
+    }
+
+    /// The bound platform's registry name, if any.
+    pub fn platform<'a>(&self, bindings: &'a [PlatformBinding]) -> Option<&'a str> {
+        self.binding.map(|i| bindings[i].name.as_str())
+    }
+
+    /// Score this objective for one candidate. `err` is the evaluated
+    /// validation error (the only non-analytical metric — everything
+    /// else derives from the model description and the bindings).
+    pub fn score(
+        &self,
+        bindings: &[PlatformBinding],
+        model: &ModelDesc,
+        qc: &QuantConfig,
+        err: f64,
+    ) -> Result<f64, SearchError> {
+        Ok(match self.metric {
+            Metric::Error => err,
+            Metric::SizeMb => model.size_bytes(&qc.w_bits) / (1024.0 * 1024.0),
+            Metric::NegSpeedup => -self.bound_platform(bindings)?.speedup(model, qc),
+            Metric::EnergyUj => {
+                let pj = self.bound_platform(bindings)?.energy_pj(model, qc).ok_or_else(|| {
+                    SearchError::invalid(format!(
+                        "objective '{}': platform lacks an energy model",
+                        self.label
+                    ))
+                })?;
+                pj / 1e6
+            }
+        })
+    }
+
+    fn bound_platform<'a>(
+        &self,
+        bindings: &'a [PlatformBinding],
+    ) -> Result<&'a SharedPlatform, SearchError> {
+        self.binding.map(|i| &bindings[i].platform).ok_or_else(|| {
+            SearchError::invalid(format!("objective '{}' has no platform binding", self.label))
+        })
+    }
+}
+
+/// Analytical hardware metrics of one solution on one bound platform
+/// (carried per binding in `SolutionRow::hw`).
+#[derive(Debug, Clone)]
+pub struct HwMetrics {
+    /// Binding name — the `@label` in objective names.
+    pub platform: String,
+    pub speedup: f64,
+    /// `None` when the platform has no energy model.
+    pub energy_uj: Option<f64>,
+}
+
+/// Sum of per-binding SRAM constraint violations in MB (0 when the model
+/// fits every bound platform) — the per-platform half of the search's
+/// constraint.
+pub fn sram_violation_mb(bindings: &[PlatformBinding], model: &ModelDesc, qc: &QuantConfig) -> f64 {
+    bindings.iter().map(|b| b.platform.sram_violation(model, qc)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_ids_round_trip_through_parse() {
+        for id in [
+            "error",
+            "size_mb",
+            "neg_speedup",
+            "energy_uj",
+            "neg_speedup@silago",
+            "energy_uj@bitfusion",
+        ] {
+            let obj = ScoredObjective::parse(id).unwrap();
+            assert_eq!(obj.id(), id, "id not canonical after parse");
+            assert_eq!(ScoredObjective::parse(&obj.id()).unwrap(), obj);
+        }
+    }
+
+    #[test]
+    fn aliases_and_case_normalize() {
+        assert_eq!(ScoredObjective::parse("wer").unwrap(), ScoredObjective::error());
+        assert_eq!(ScoredObjective::parse("size").unwrap(), ScoredObjective::size_mb());
+        assert_eq!(
+            ScoredObjective::parse("speedup@SiLago").unwrap(),
+            ScoredObjective::neg_speedup().on("silago")
+        );
+        assert_eq!(
+            ScoredObjective::parse("energy@bitfusion").unwrap().id(),
+            "energy_uj@bitfusion"
+        );
+    }
+
+    #[test]
+    fn parse_rejects_unknown_and_empty_binding() {
+        assert!(ScoredObjective::parse("latency").is_err());
+        assert!(ScoredObjective::parse("neg_speedup@").is_err());
+        assert!(ScoredObjective::parse("").is_err());
+    }
+
+    #[test]
+    fn labels_carry_the_platform_suffix() {
+        assert_eq!(ScoredObjective::error().label(), "WER_V");
+        assert_eq!(ScoredObjective::neg_speedup().on("silago").label(), "-speedup@silago");
+        assert_eq!(ScoredObjective::energy_uj().on("bitfusion").label(), "energy_uJ@bitfusion");
+    }
+
+    #[test]
+    fn directions_match_the_paper_conventions() {
+        assert_eq!(ScoredObjective::error().direction(), Direction::Minimize);
+        assert_eq!(ScoredObjective::size_mb().direction(), Direction::Minimize);
+        assert_eq!(ScoredObjective::neg_speedup().direction(), Direction::Maximize);
+        assert_eq!(ScoredObjective::energy_uj().direction(), Direction::Minimize);
+    }
+
+    #[test]
+    fn platform_need_tracks_the_metric() {
+        assert!(!ScoredObjective::error().needs_platform());
+        assert!(!ScoredObjective::size_mb().needs_platform());
+        assert!(ScoredObjective::neg_speedup().needs_platform());
+        assert!(ScoredObjective::energy_uj().needs_platform());
+    }
+}

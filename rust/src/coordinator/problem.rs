@@ -1,7 +1,12 @@
 //! The MOHAQ optimization problem: glues genome decoding, the AOT error
 //! evaluation (with optional beacon search), the analytical hardware
-//! objectives and the SRAM constraint into a `moo::Problem` NSGA-II can
-//! drive (paper Fig. 4).
+//! objectives and the per-platform SRAM constraints into a `moo::Problem`
+//! NSGA-II can drive (paper Fig. 4).
+//!
+//! Objectives are typed [`BoundObjective`]s resolved against a
+//! [`PlatformBinding`] table (PR 4 redesign): one search can mix hardware
+//! objectives bound to DIFFERENT registered platforms, and every binding
+//! contributes its own SRAM constraint (violations are summed).
 //!
 //! Generations are evaluated in two phases: the post-training-quantization
 //! errors (the expensive PJRT executions) fan out across the session's
@@ -14,70 +19,31 @@
 //! `evaluate_batch` call: the in-batch dedup below collapses genomes bred
 //! independently on different islands, and the `EvalService` memo makes
 //! cross-generation repeats cache hits, so K islands share one PTQ cache.
+//!
+//! Failure contract: the GA engine's `Problem` interface is infallible, so
+//! evaluation failures cannot propagate through it directly. Instead the
+//! first failure trips an internal fuse — the typed `SearchError` is
+//! stored, every subsequent evaluation returns an instant infeasible
+//! sentinel (no further PJRT work), and `SearchSession` surfaces the
+//! stored error after the engine unwinds. No worker-pool panics.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::coordinator::beacon::BeaconManager;
+use crate::coordinator::error::SearchError;
+use crate::coordinator::objective::{sram_violation_mb, BoundObjective, PlatformBinding};
 use crate::coordinator::trainer::Trainer;
 use crate::eval::EvalService;
-use crate::hw::registry::SharedPlatform;
-use crate::hw::Platform;
 use crate::moo::{Evaluation, Problem};
 use crate::quant::QuantConfig;
 use crate::runtime::Artifacts;
 use crate::util::pool::map_parallel;
 
-/// Objectives supported by the experiments (all minimized; speedup is
-/// negated per paper §4.2).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum ObjectiveKind {
-    /// Validation error (max over subsets).
-    Error,
-    /// Model size in MB (experiment 1).
-    SizeMb,
-    /// Negated Eq.-4 speedup (experiments 2, 3).
-    NegSpeedup,
-    /// Eq.-3 energy in uJ (experiment 2).
-    EnergyUj,
-}
-
-impl ObjectiveKind {
-    pub fn name(&self) -> &'static str {
-        match self {
-            ObjectiveKind::Error => "WER_V",
-            ObjectiveKind::SizeMb => "size_MB",
-            ObjectiveKind::NegSpeedup => "-speedup",
-            ObjectiveKind::EnergyUj => "energy_uJ",
-        }
-    }
-
-    /// Canonical config-file identifier (what `to_json` emits).
-    pub fn id(&self) -> &'static str {
-        match self {
-            ObjectiveKind::Error => "error",
-            ObjectiveKind::SizeMb => "size_mb",
-            ObjectiveKind::NegSpeedup => "neg_speedup",
-            ObjectiveKind::EnergyUj => "energy_uj",
-        }
-    }
-
-    /// Parse a config-file identifier (several aliases accepted).
-    pub fn from_id(id: &str) -> Option<ObjectiveKind> {
-        Some(match id {
-            "error" | "wer" => ObjectiveKind::Error,
-            "size" | "size_mb" => ObjectiveKind::SizeMb,
-            "neg_speedup" | "speedup" => ObjectiveKind::NegSpeedup,
-            "energy" | "energy_uj" => ObjectiveKind::EnergyUj,
-            _ => return None,
-        })
-    }
-
-    /// Whether scoring this objective requires a hardware platform.
-    pub fn needs_platform(&self) -> bool {
-        matches!(self, ObjectiveKind::NegSpeedup | ObjectiveKind::EnergyUj)
-    }
-}
+/// Objective sentinel once the failure fuse has tripped: large but finite
+/// (crowding-distance math stays NaN-free), and infeasible so a sentinel
+/// can never enter a Pareto set even if the outcome were inspected.
+const FUSE_SENTINEL: f64 = 1e30;
 
 /// Telemetry of one candidate evaluation (figures 5/9/10 inputs).
 #[derive(Debug, Clone)]
@@ -96,8 +62,10 @@ pub struct MohaqProblem {
     pub eval: EvalService,
     pub trainer: Option<Trainer>,
     pub beacons: Option<BeaconManager>,
-    pub platform: Option<SharedPlatform>,
-    pub objectives: Vec<ObjectiveKind>,
+    /// Distinct platform bindings the objectives reference; EVERY binding
+    /// contributes its SRAM constraint.
+    pub bindings: Vec<PlatformBinding>,
+    pub objectives: Vec<BoundObjective>,
     /// W == A per layer (SiLago) halves the genome.
     pub tied: bool,
     /// Feasibility area: err <= err_limit (paper: baseline + 8pp => 24%).
@@ -108,22 +76,32 @@ pub struct MohaqProblem {
     pub threads: usize,
     /// Every evaluation, in order (telemetry).
     pub records: Vec<EvalRecord>,
+    /// First evaluation failure (the tripped fuse). `SearchSession` takes
+    /// it after the GA engine returns; populated instead of panicking.
+    pub failure: Option<SearchError>,
 }
 
 impl MohaqProblem {
-    pub fn decode(&self, genome: &[i64]) -> QuantConfig {
+    /// Decode a genome into a quantization config, or the typed error the
+    /// session will surface (malformed genomes indicate an engine bug or
+    /// a hand-built population, not a user mistake).
+    pub fn try_decode(&self, genome: &[i64]) -> Result<QuantConfig, SearchError> {
         let qc = if self.tied {
             QuantConfig::from_genome_tied(genome)
         } else {
             QuantConfig::from_genome_wa(genome)
         };
-        qc.unwrap_or_else(|| panic!("invalid genome {genome:?}"))
+        qc.ok_or_else(|| SearchError::Eval(format!("invalid genome {genome:?}")))
     }
 
     /// Sequential half of Algorithm 1: given the (possibly parallel)
     /// precomputed baseline error, decide whether a beacon parameter set
     /// applies and return (err, set_idx).
-    fn refine_with_beacons(&mut self, qc: &QuantConfig, base_err: f64) -> anyhow::Result<(f64, usize)> {
+    fn refine_with_beacons(
+        &mut self,
+        qc: &QuantConfig,
+        base_err: f64,
+    ) -> anyhow::Result<(f64, usize)> {
         if let (Some(beacons), Some(trainer)) = (self.beacons.as_mut(), self.trainer.as_mut()) {
             if let Some(set) = beacons.select_or_create(qc, base_err, &self.eval, trainer)? {
                 let err = self.eval.val_error(qc, set)?;
@@ -139,39 +117,24 @@ impl MohaqProblem {
         Ok((base_err, 0))
     }
 
-    fn score(&mut self, genome: &[i64], qc: &QuantConfig, base_err: f64) -> Evaluation {
-        let (err, set_idx) = self
-            .refine_with_beacons(qc, base_err)
-            .unwrap_or_else(|e| panic!("candidate evaluation failed: {e:#}"));
+    fn score(
+        &mut self,
+        genome: &[i64],
+        qc: &QuantConfig,
+        base_err: f64,
+    ) -> Result<Evaluation, SearchError> {
+        let (err, set_idx) = self.refine_with_beacons(qc, base_err).map_err(SearchError::eval)?;
 
         let mut objectives = Vec::with_capacity(self.objectives.len());
-        for kind in &self.objectives {
-            let v = match kind {
-                ObjectiveKind::Error => err,
-                ObjectiveKind::SizeMb => {
-                    self.arts.model.size_bytes(&qc.w_bits) / (1024.0 * 1024.0)
-                }
-                ObjectiveKind::NegSpeedup => {
-                    let p = self.platform.as_ref().expect("speedup needs a platform");
-                    -p.speedup(&self.arts.model, qc)
-                }
-                ObjectiveKind::EnergyUj => {
-                    let p = self.platform.as_ref().expect("energy needs a platform");
-                    p.energy_pj(&self.arts.model, qc).expect("platform lacks energy model")
-                        / 1e6
-                }
-            };
-            objectives.push(v);
+        for obj in &self.objectives {
+            objectives.push(obj.score(&self.bindings, &self.arts.model, qc, err)?);
         }
 
-        // Constraints: SRAM capacity (MB over) + error feasibility area
-        // (paper §4.2: solutions > baseline+8pp are excluded from the
-        // pool). Error violation is scaled so a few pp of excess error
-        // compares to MBs of memory excess.
-        let mut violation = 0.0;
-        if let Some(p) = self.platform.as_ref() {
-            violation += p.sram_violation(&self.arts.model, qc);
-        }
+        // Constraints: per-binding SRAM capacity (MB over, summed) + error
+        // feasibility area (paper §4.2: solutions > baseline+8pp are
+        // excluded from the pool). Error violation is scaled so a few pp
+        // of excess error compares to MBs of memory excess.
+        let mut violation = sram_violation_mb(&self.bindings, &self.arts.model, qc);
         violation += (err - self.err_limit).max(0.0) * 10.0;
 
         self.records.push(EvalRecord {
@@ -182,7 +145,52 @@ impl MohaqProblem {
             objectives: objectives.clone(),
             violation,
         });
-        Evaluation { objectives, violation }
+        Ok(Evaluation { objectives, violation })
+    }
+
+    /// The infeasible placeholder returned for every candidate after the
+    /// failure fuse has tripped (keeps the infallible engine loop moving
+    /// at zero evaluation cost; the outcome is discarded).
+    fn sentinel(&self) -> Evaluation {
+        Evaluation {
+            objectives: vec![FUSE_SENTINEL; self.objectives.len()],
+            violation: FUSE_SENTINEL,
+        }
+    }
+
+    /// Fallible batch evaluation; any error trips the fuse in the caller.
+    fn try_evaluate_batch(&mut self, genomes: &[Vec<i64>]) -> Result<Vec<Evaluation>, SearchError> {
+        let qcs: Vec<QuantConfig> =
+            genomes.iter().map(|g| self.try_decode(g)).collect::<Result<_, _>>()?;
+
+        // Phase 1 (parallel): baseline-parameter PTQ error per UNIQUE
+        // genome. Deduplication keeps the execution count (and the shared
+        // cache's interaction pattern) identical for every thread count.
+        let mut unique: Vec<usize> = Vec::new();
+        let mut slot_of: HashMap<&[i64], usize> = HashMap::new();
+        for (i, g) in genomes.iter().enumerate() {
+            if !slot_of.contains_key(g.as_slice()) {
+                slot_of.insert(g.as_slice(), unique.len());
+                unique.push(i);
+            }
+        }
+        let eval = &self.eval;
+        let base_results: Vec<anyhow::Result<f64>> =
+            map_parallel(self.threads, &unique, |_, &i| eval.val_error(&qcs[i], 0));
+        let base_errs: Vec<f64> = base_results
+            .into_iter()
+            .map(|r| r.map_err(SearchError::eval))
+            .collect::<Result<_, _>>()?;
+
+        // Phase 2 (sequential, input order): beacon logic + objectives.
+        genomes
+            .iter()
+            .zip(&qcs)
+            .map(|(genome, qc)| {
+                let base_err = base_errs[slot_of[genome.as_slice()]];
+                self.score(genome, qc, base_err)
+            })
+            .collect()
     }
 }
 
@@ -205,7 +213,7 @@ impl Problem for MohaqProblem {
     }
 
     fn objective_names(&self) -> Vec<String> {
-        self.objectives.iter().map(|o| o.name().to_string()).collect()
+        self.objectives.iter().map(|o| o.label.clone()).collect()
     }
 
     fn evaluate(&mut self, genome: &[i64]) -> Evaluation {
@@ -215,35 +223,30 @@ impl Problem for MohaqProblem {
     }
 
     fn evaluate_batch(&mut self, genomes: &[Vec<i64>]) -> Vec<Evaluation> {
-        let qcs: Vec<QuantConfig> = genomes.iter().map(|g| self.decode(g)).collect();
-
-        // Phase 1 (parallel): baseline-parameter PTQ error per UNIQUE
-        // genome. Deduplication keeps the execution count (and the shared
-        // cache's interaction pattern) identical for every thread count.
-        let mut unique: Vec<usize> = Vec::new();
-        let mut slot_of: HashMap<&[i64], usize> = HashMap::new();
-        for (i, g) in genomes.iter().enumerate() {
-            if !slot_of.contains_key(g.as_slice()) {
-                slot_of.insert(g.as_slice(), unique.len());
-                unique.push(i);
+        if self.failure.is_some() {
+            return genomes.iter().map(|_| self.sentinel()).collect();
+        }
+        match self.try_evaluate_batch(genomes) {
+            Ok(evals) => evals,
+            Err(e) => {
+                self.failure = Some(e);
+                genomes.iter().map(|_| self.sentinel()).collect()
             }
         }
-        let eval = &self.eval;
-        let base_results: Vec<anyhow::Result<f64>> =
-            map_parallel(self.threads, &unique, |_, &i| eval.val_error(&qcs[i], 0));
-        let base_errs: Vec<f64> = base_results
-            .into_iter()
-            .map(|r| r.unwrap_or_else(|e| panic!("candidate evaluation failed: {e:#}")))
-            .collect();
+    }
+}
 
-        // Phase 2 (sequential, input order): beacon logic + objectives.
-        genomes
-            .iter()
-            .zip(&qcs)
-            .map(|(genome, qc)| {
-                let base_err = base_errs[slot_of[genome.as_slice()]];
-                self.score(genome, qc, base_err)
-            })
-            .collect()
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fuse_sentinel_is_finite_and_infeasible() {
+        // NaN-free crowding math requires finite objectives; a positive
+        // violation keeps sentinels out of every feasible Pareto set.
+        assert!(FUSE_SENTINEL.is_finite());
+        let e = Evaluation { objectives: vec![FUSE_SENTINEL; 3], violation: FUSE_SENTINEL };
+        assert!(!e.feasible());
+        assert!(e.objectives.iter().all(|v| v.is_finite()));
     }
 }

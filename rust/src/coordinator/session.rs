@@ -7,6 +7,13 @@
 //! the runtime (each run compiles its own executable against the shared
 //! client).
 //!
+//! Objectives are resolved through the typed pipeline
+//! (`spec.resolve_objectives()`): each hardware objective is bound to a
+//! registry platform, a cross-platform spec scores one front against
+//! several platforms at once (the genome obeys the intersection of their
+//! restrictions; every binding contributes its SRAM constraint), and
+//! `SolutionRow::hw` carries the per-platform metrics.
+//!
 //! Determinism contract: for a fixed spec (including seed), the resulting
 //! front is bitwise-identical for ANY thread count — the parallel phase
 //! computes order-independent pure values and the order-dependent beacon
@@ -19,6 +26,7 @@ use anyhow::Context;
 
 use super::beacon::{BeaconManager, BeaconPolicy};
 use super::error::SearchError;
+use super::objective::HwMetrics;
 use super::problem::MohaqProblem;
 use super::spec::ExperimentSpec;
 use super::trainer::Trainer;
@@ -38,8 +46,13 @@ pub struct SolutionRow {
     pub wer_t: f64,
     pub cp_r: f64,
     pub size_mb: f64,
+    /// Convenience: the FIRST platform binding's speedup (`None` without
+    /// a platform). Cross-platform searches read `hw` instead.
     pub speedup: Option<f64>,
+    /// Convenience: the first binding's energy, when it has a model.
     pub energy_uj: Option<f64>,
+    /// Per-platform metrics, one entry per binding in table order.
+    pub hw: Vec<HwMetrics>,
     /// Which parameter set produced wer_v ("baseline" or a beacon name).
     pub param_set: String,
 }
@@ -98,6 +111,10 @@ pub enum SearchEvent {
 
 pub struct SearchOutcome {
     pub spec_name: String,
+    /// Report labels of the objectives, in order — platform-bound ones
+    /// carry their binding (`-speedup@silago`), so multi-platform fronts
+    /// stay interpretable.
+    pub objective_names: Vec<String>,
     pub rows: Vec<SolutionRow>,
     pub history: Vec<GenerationLog>,
     pub evaluations: usize,
@@ -166,13 +183,15 @@ impl SearchSession {
         let eval = EvalService::new(&self.rt, arts.clone())
             .context("creating eval service")
             .map_err(SearchError::eval)?;
-        let platform = spec.resolve_platform()?;
-        let tied = spec
-            .tied
-            .unwrap_or_else(|| platform.as_ref().map(|p| p.tied_wa()).unwrap_or(false));
-        let gene_min = platform
-            .as_ref()
-            .map(|p| p.supported_bits().iter().map(|b| b.to_gene()).min().unwrap())
+        let (objectives, bindings) = spec.resolve_objectives()?;
+        // The genome obeys the INTERSECTION of platform restrictions: any
+        // tying platform ties it, and the floor precision is the highest
+        // minimum across bindings (SiLago lacks 2-bit => 2).
+        let tied = spec.tied.unwrap_or_else(|| bindings.iter().any(|b| b.platform.tied_wa()));
+        let gene_min = bindings
+            .iter()
+            .map(|b| b.platform.supported_bits().iter().map(|bit| bit.to_gene()).min().unwrap())
+            .max()
             .unwrap_or(1);
         let err_limit = arts.baseline.val_err_16bit + spec.err_feasible_pp / 100.0;
 
@@ -206,13 +225,14 @@ impl SearchSession {
             eval,
             trainer,
             beacons,
-            platform,
-            objectives: spec.objectives.clone(),
+            bindings,
+            objectives,
             tied,
             err_limit,
             gene_min,
             threads: self.threads,
             records: Vec::new(),
+            failure: None,
         };
 
         on_event(&SearchEvent::Started {
@@ -225,9 +245,9 @@ impl SearchSession {
 
         let mut history: Vec<GenerationLog> = Vec::new();
         let island_cfg = spec.island.clone();
-        // The GA engine's Problem interface is infallible, so evaluation
-        // failures surface as panics deep in the generation loop; catch
-        // them here and honor the typed-error contract of the public API.
+        // Evaluation failures trip the problem's typed-error fuse (no
+        // worker-pool panics); the catch_unwind stays as a backstop for
+        // engine bugs and poisoned-lock classification.
         let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             match &island_cfg {
                 // K > 1: island-model search over the same problem; all
@@ -285,6 +305,12 @@ impl SearchSession {
                 return Err(SearchError::from_panic(msg));
             }
         };
+        // Evaluation failures trip the problem's fuse instead of
+        // panicking in the worker pool; surface the stored typed error
+        // now that the engine has unwound.
+        if let Some(e) = problem.failure.take() {
+            return Err(e);
+        }
 
         // ---- Post-process the Pareto set into report rows ----------------
         // The merged front: deduplicated non-dominated feasible subset of
@@ -299,21 +325,27 @@ impl SearchSession {
 
         let mut rows = Vec::with_capacity(set.len());
         for ind in &set {
-            let qc = problem.decode(&ind.genome);
+            let qc = problem.try_decode(&ind.genome)?;
             let set_idx = *set_of.get(&ind.genome).unwrap_or(&0);
             let wer_v = problem.eval.val_error(&qc, set_idx).map_err(SearchError::eval)?;
             let wer_t = problem.eval.test_error(&qc, set_idx).map_err(SearchError::eval)?;
             let model = &problem.arts.model;
+            let hw: Vec<HwMetrics> = problem
+                .bindings
+                .iter()
+                .map(|b| HwMetrics {
+                    platform: b.name.clone(),
+                    speedup: b.platform.speedup(model, &qc),
+                    energy_uj: b.platform.energy_pj(model, &qc).map(|pj| pj / 1e6),
+                })
+                .collect();
             rows.push(SolutionRow {
                 cp_r: model.compression_ratio(&qc.w_bits),
                 size_mb: model.size_bytes(&qc.w_bits) / (1024.0 * 1024.0),
-                speedup: problem.platform.as_ref().map(|p| p.speedup(model, &qc)),
-                energy_uj: problem
-                    .platform
-                    .as_ref()
-                    .and_then(|p| p.energy_pj(model, &qc))
-                    .map(|pj| pj / 1e6),
+                speedup: hw.first().map(|h| h.speedup),
+                energy_uj: hw.first().and_then(|h| h.energy_uj),
                 param_set: problem.eval.param_set(set_idx).name.clone(),
+                hw,
                 qc,
                 wer_v,
                 wer_t,
@@ -324,6 +356,7 @@ impl SearchSession {
         let stats = problem.eval.stats();
         let outcome = SearchOutcome {
             spec_name: spec.name.clone(),
+            objective_names: problem.objective_names(),
             rows,
             history,
             evaluations,
@@ -439,6 +472,7 @@ pub fn baseline_rows(arts: &Artifacts) -> Vec<SolutionRow> {
             size_mb: arts.model.baseline_size_bits() as f64 / 8.0 / (1024.0 * 1024.0),
             speedup: None,
             energy_uj: None,
+            hw: Vec::new(),
             param_set: "baseline".into(),
         },
         SolutionRow {
@@ -449,6 +483,7 @@ pub fn baseline_rows(arts: &Artifacts) -> Vec<SolutionRow> {
             size_mb: arts.model.size_bytes(&qc16.w_bits) / (1024.0 * 1024.0),
             speedup: Some(1.0),
             energy_uj: None,
+            hw: Vec::new(),
             param_set: "baseline".into(),
         },
     ]

@@ -1,14 +1,21 @@
-//! Experiment specifications: what to search, on which platform, with
+//! Experiment specifications: what to search, on which platforms, with
 //! which objectives and GA/beacon settings. Specs are built through a
 //! validating builder (`ExperimentSpec::builder()`), round-trip through
 //! JSON (so `mohaq search --config FILE` covers everything the presets
 //! do), and name platforms by registry string — adding a backend never
 //! touches this module.
+//!
+//! Objectives are typed [`ScoredObjective`]s (PR 4): each carries an
+//! optional platform binding (`neg_speedup@silago`), the spec holds a
+//! *table* of platforms, and one search can score hardware objectives
+//! against several platforms at once. `build()` normalizes implicit
+//! bindings (a lone platform binds every hardware objective) so the JSON
+//! form is always explicit and round-trips losslessly.
 
 use std::collections::BTreeMap;
 
 use crate::coordinator::error::SearchError;
-use crate::coordinator::problem::ObjectiveKind;
+use crate::coordinator::objective::{BoundObjective, PlatformBinding, ScoredObjective};
 use crate::hw::registry::{self, PlatformSpec, SharedPlatform};
 use crate::hw::Platform;
 use crate::moo::island::{IslandConfig, Topology};
@@ -29,9 +36,11 @@ pub struct BeaconPolicyOverrides {
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentSpec {
     pub name: String,
-    /// Registry reference; `None` = no hardware model (experiment 1).
-    pub platform: Option<PlatformSpec>,
-    pub objectives: Vec<ObjectiveKind>,
+    /// Platform binding table (registry references). Empty = no hardware
+    /// model (experiment 1). EVERY listed platform contributes its SRAM
+    /// constraint, whether or not an objective references it.
+    pub platforms: Vec<PlatformSpec>,
+    pub objectives: Vec<ScoredObjective>,
     /// Enable beacon-based search with this policy (None = inference-only).
     pub beacon: Option<BeaconPolicyOverrides>,
     pub ga: Nsga2Config,
@@ -41,7 +50,7 @@ pub struct ExperimentSpec {
     /// Feasibility area width above the 16-bit baseline error (paper: 8pp).
     pub err_feasible_pp: f64,
     /// Force tied W=A genomes even without a platform that requires it.
-    /// `None` defers to the platform (`tied_wa()`).
+    /// `None` defers to the platforms (tied if ANY bound platform ties).
     pub tied: Option<bool>,
 }
 
@@ -54,8 +63,8 @@ impl ExperimentSpec {
     pub fn exp1() -> ExperimentSpec {
         ExperimentSpec::builder()
             .name("exp1-compression")
-            .objective(ObjectiveKind::Error)
-            .objective(ObjectiveKind::SizeMb)
+            .objective(ScoredObjective::error())
+            .objective(ScoredObjective::size_mb())
             .generations(60)
             .build()
             .expect("exp1 preset is valid")
@@ -67,9 +76,9 @@ impl ExperimentSpec {
             .name("exp2-silago")
             .platform("silago")
             .sram_mb(6.0)
-            .objective(ObjectiveKind::Error)
-            .objective(ObjectiveKind::NegSpeedup)
-            .objective(ObjectiveKind::EnergyUj)
+            .objective(ScoredObjective::error())
+            .objective(ScoredObjective::neg_speedup())
+            .objective(ScoredObjective::energy_uj())
             .generations(15)
             .build()
             .expect("exp2 preset is valid")
@@ -81,20 +90,66 @@ impl ExperimentSpec {
             .name(if beacon { "exp3-bitfusion-beacon" } else { "exp3-bitfusion" })
             .platform("bitfusion")
             .sram_mb(2.0)
-            .objective(ObjectiveKind::Error)
-            .objective(ObjectiveKind::NegSpeedup)
+            .objective(ScoredObjective::error())
+            .objective(ScoredObjective::neg_speedup())
             .generations(60);
         let b = if beacon { b.beacon(BeaconPolicyOverrides::default()) } else { b };
         b.build().expect("exp3 preset is valid")
     }
 
-    /// Resolve the platform reference against the registry (None when the
-    /// spec has no hardware model).
-    pub fn resolve_platform(&self) -> Result<Option<SharedPlatform>, SearchError> {
-        match &self.platform {
-            None => Ok(None),
-            Some(spec) => Ok(Some(registry::resolve(spec)?)),
+    /// Cross-platform search: ONE front scored jointly against SiLago
+    /// (6 MB DiMArch scratchpad) and Bitfusion (2 MB SRAM). The genome
+    /// obeys the intersection of platform restrictions (tied W=A, no
+    /// 2-bit — SiLago), both SRAM constraints apply, and the per-platform
+    /// speedup objectives expose which solutions are robust across
+    /// accelerators and which are specialization artifacts.
+    pub fn cross_platform() -> ExperimentSpec {
+        ExperimentSpec::builder()
+            .name("cross-platform")
+            .platform("silago")
+            .sram_mb(6.0)
+            .platform("bitfusion")
+            .sram_mb(2.0)
+            .objective(ScoredObjective::error())
+            .platform_objective("silago", ScoredObjective::neg_speedup())
+            .platform_objective("bitfusion", ScoredObjective::neg_speedup())
+            .generations(30)
+            .build()
+            .expect("cross_platform preset is valid")
+    }
+
+    /// Resolve the platform table against the registry and bind every
+    /// objective to its platform, ready for scoring. Re-validates binding
+    /// references (spec fields are public and may have been edited after
+    /// `build()`).
+    pub fn resolve_objectives(
+        &self,
+    ) -> Result<(Vec<BoundObjective>, Vec<PlatformBinding>), SearchError> {
+        let mut bindings: Vec<PlatformBinding> = Vec::with_capacity(self.platforms.len());
+        for spec in &self.platforms {
+            bindings.push(PlatformBinding {
+                name: spec.name.clone(),
+                spec: spec.clone(),
+                platform: registry::resolve(spec)?,
+            });
         }
+
+        let names: Vec<&str> = self.platforms.iter().map(|p| p.name.as_str()).collect();
+        let mut bound = Vec::with_capacity(self.objectives.len());
+        for obj in &self.objectives {
+            let binding = binding_index(obj, &names)?;
+            // Auto-bound objectives (possible after direct field edits)
+            // get the platform suffix in their label too, so report
+            // columns always say where a hardware number came from.
+            let label = match binding {
+                Some(i) if obj.platform().is_none() => {
+                    format!("{}@{}", obj.metric.label(), bindings[i].name)
+                }
+                _ => obj.label(),
+            };
+            bound.push(BoundObjective { label, metric: obj.metric, binding });
+        }
+        Ok((bound, bindings))
     }
 
     // ------------------------------------------------------------- serde
@@ -102,12 +157,15 @@ impl ExperimentSpec {
     pub fn to_json(&self) -> Json {
         let mut obj: BTreeMap<String, Json> = BTreeMap::new();
         obj.insert("name".into(), Json::Str(self.name.clone()));
-        if let Some(p) = &self.platform {
-            obj.insert("platform".into(), p.to_json());
+        if !self.platforms.is_empty() {
+            obj.insert(
+                "platforms".into(),
+                Json::Arr(self.platforms.iter().map(PlatformSpec::to_json).collect()),
+            );
         }
         obj.insert(
             "objectives".into(),
-            Json::Arr(self.objectives.iter().map(|o| Json::Str(o.id().into())).collect()),
+            Json::Arr(self.objectives.iter().map(|o| Json::Str(o.id())).collect()),
         );
         let mut ga: BTreeMap<String, Json> = BTreeMap::new();
         ga.insert("pop_size".into(), self.ga.pop_size.into());
@@ -154,6 +212,8 @@ impl ExperimentSpec {
     }
 
     /// Parse from JSON, running the same validation as the builder.
+    /// Accepts the canonical `"platforms": [..]` table and, for config
+    /// compatibility, the legacy singular `"platform": {..}` shape.
     pub fn from_json(j: &Json) -> Result<ExperimentSpec, SearchError> {
         let mut b = ExperimentSpec::builder();
         let name = j
@@ -162,7 +222,11 @@ impl ExperimentSpec {
             .ok_or_else(|| SearchError::Config("missing 'name'".into()))?;
         b = b.name(name);
 
-        if let Some(p) = j.get("platform") {
+        if let Some(arr) = j.get("platforms").and_then(Json::as_arr) {
+            for p in arr {
+                b = b.platform_spec(PlatformSpec::from_json(p).map_err(SearchError::from)?);
+            }
+        } else if let Some(p) = j.get("platform") {
             let spec = PlatformSpec::from_json(p).map_err(SearchError::from)?;
             // Config-file escape hatch: {"kind": "none"} means no platform.
             if spec.name != "none" {
@@ -178,9 +242,7 @@ impl ExperimentSpec {
             let id = o
                 .as_str()
                 .ok_or_else(|| SearchError::Config("objectives must be strings".into()))?;
-            let kind = ObjectiveKind::from_id(id)
-                .ok_or_else(|| SearchError::Config(format!("unknown objective '{id}'")))?;
-            b = b.objective(kind);
+            b = b.objective(ScoredObjective::parse(id)?);
         }
 
         if let Some(g) = j.get("ga") {
@@ -198,9 +260,7 @@ impl ExperimentSpec {
             // numbers are accepted for hand-written configs.
             if let Some(s) = g.get("seed") {
                 if let Some(v) = s.as_str().map(str::parse::<u64>) {
-                    ga.seed = v.map_err(|e| {
-                        SearchError::Config(format!("ga.seed: {e}"))
-                    })?;
+                    ga.seed = v.map_err(|e| SearchError::Config(format!("ga.seed: {e}")))?;
                 } else if let Some(v) = s.as_i64() {
                     ga.seed = v as u64;
                 }
@@ -255,13 +315,54 @@ impl ExperimentSpec {
     }
 }
 
+/// Resolve one objective's binding to an index into the platform-name
+/// table, applying the lone-platform implicit rule. Shared by `build()`
+/// (which then writes the binding back explicitly) and
+/// `resolve_objectives()` (re-validating possibly field-edited specs), so
+/// the two paths cannot drift.
+fn binding_index(obj: &ScoredObjective, names: &[&str]) -> Result<Option<usize>, SearchError> {
+    if !obj.needs_platform() {
+        return match obj.platform() {
+            Some(name) => Err(SearchError::invalid(format!(
+                "objective '{}' is platform-independent; drop the '@{name}' binding",
+                obj.metric.id()
+            ))),
+            None => Ok(None),
+        };
+    }
+    if let Some(name) = obj.platform() {
+        return match names.iter().position(|n| *n == name) {
+            Some(i) => Ok(Some(i)),
+            None => Err(SearchError::invalid(format!(
+                "objective '{}' names a platform outside the spec's table (platforms: {})",
+                obj.id(),
+                if names.is_empty() { "none".to_string() } else { names.join(", ") }
+            ))),
+        };
+    }
+    match names.len() {
+        1 => Ok(Some(0)),
+        0 => Err(SearchError::invalid(format!(
+            "objective '{}' requires a hardware platform",
+            obj.id()
+        ))),
+        _ => Err(SearchError::invalid(format!(
+            "objective '{}' is ambiguous with {} platforms; bind it explicitly, e.g. '{}@{}'",
+            obj.id(),
+            names.len(),
+            obj.id(),
+            names[0]
+        ))),
+    }
+}
+
 /// Builder collecting spec fields; all validation happens in `build()`.
 #[derive(Debug, Clone, Default)]
 pub struct ExperimentSpecBuilder {
     name: Option<String>,
-    platform: Option<PlatformSpec>,
+    platforms: Vec<PlatformSpec>,
     pending_sram_mb: Option<f64>,
-    objectives: Vec<ObjectiveKind>,
+    objectives: Vec<ScoredObjective>,
     beacon: Option<BeaconPolicyOverrides>,
     ga: Option<Nsga2Config>,
     island: Option<IslandConfig>,
@@ -275,29 +376,46 @@ impl ExperimentSpecBuilder {
         self
     }
 
-    /// Name a platform from the registry (parameters via `sram_mb` or
-    /// `platform_spec` for anything richer).
+    /// Add a platform from the registry to the spec's platform table
+    /// (parameters via `sram_mb` or `platform_spec` for anything richer).
+    /// Call repeatedly for a cross-platform search.
     pub fn platform(mut self, name: impl Into<String>) -> Self {
-        self.platform = Some(PlatformSpec::new(name));
+        self.platforms.push(PlatformSpec::new(name));
         self
     }
 
     pub fn platform_spec(mut self, spec: PlatformSpec) -> Self {
-        self.platform = Some(spec);
+        self.platforms.push(spec);
         self
     }
 
-    /// Shorthand for the one parameter every built-in takes.
+    /// Shorthand for the one parameter every built-in takes; applies to
+    /// the most recently added platform.
     pub fn sram_mb(mut self, mb: f64) -> Self {
-        match self.platform.take() {
-            Some(p) => self.platform = Some(p.with_f64("sram_mb", mb)),
+        match self.platforms.pop() {
+            Some(p) => self.platforms.push(p.with_f64("sram_mb", mb)),
             None => self.pending_sram_mb = Some(mb),
         }
         self
     }
 
-    pub fn objective(mut self, kind: ObjectiveKind) -> Self {
-        self.objectives.push(kind);
+    pub fn objective(mut self, objective: ScoredObjective) -> Self {
+        self.objectives.push(objective);
+        self
+    }
+
+    /// Add `objective` bound to `platform`, adding the platform to the
+    /// table if it isn't there yet — the cross-platform building block.
+    pub fn platform_objective(
+        mut self,
+        platform: impl Into<String>,
+        objective: ScoredObjective,
+    ) -> Self {
+        let name = platform.into().to_lowercase();
+        if !self.platforms.iter().any(|p| p.name == name) {
+            self.platforms.push(PlatformSpec::new(name.clone()));
+        }
+        self.objectives.push(objective.on(name));
         self
     }
 
@@ -372,59 +490,103 @@ impl ExperimentSpecBuilder {
         self
     }
 
-    /// Validate and assemble. Checks: objectives present and unique,
-    /// platform resolvable from the registry, hardware objectives only
-    /// with a capable platform, and tied-W=A consistency (a platform that
-    /// ties precisions, like SiLago, cannot be overridden to untied).
+    /// Validate and assemble. Checks: objectives present and unique (after
+    /// binding normalization), platform table free of duplicates and
+    /// resolvable from the registry, hardware objectives bound to a
+    /// capable platform (energy needs an energy model; a lone platform
+    /// binds implicitly, several demand explicit '@platform' bindings),
+    /// and tied-W=A consistency (a table containing a tying platform,
+    /// like SiLago, cannot be overridden to untied).
     pub fn build(self) -> Result<ExperimentSpec, SearchError> {
         if self.objectives.is_empty() {
             return Err(SearchError::invalid("at least one objective required"));
         }
-        for (i, a) in self.objectives.iter().enumerate() {
-            if self.objectives[..i].contains(a) {
+
+        let mut platforms = self.platforms;
+        if let Some(mb) = self.pending_sram_mb {
+            match platforms.first_mut() {
+                Some(p) if p.f64("sram_mb").is_none() => {
+                    *p = p.clone().with_f64("sram_mb", mb);
+                }
+                Some(_) => {}
+                None => return Err(SearchError::invalid("sram_mb set but no platform named")),
+            }
+        }
+        for i in 1..platforms.len() {
+            if platforms[..i].iter().any(|q| q.name == platforms[i].name) {
+                return Err(SearchError::invalid(format!(
+                    "platform '{}' appears twice in the platform table",
+                    platforms[i].name
+                )));
+            }
+        }
+
+        // Platforms referenced by explicit bindings join the table FIRST
+        // (`platform_objective` adds them; a hand-built `.on("silago")`
+        // gets default parameters here), so the implicit-binding rule
+        // below sees the complete table.
+        let mut objectives = self.objectives;
+        for obj in &objectives {
+            if let Some(name) = obj.platform() {
+                if obj.needs_platform() && !platforms.iter().any(|p| p.name == name) {
+                    platforms.push(PlatformSpec::new(name));
+                }
+            }
+        }
+
+        // Normalize bindings: a lone platform binds every hardware
+        // objective explicitly (so the JSON form is always labeled);
+        // several platforms demand explicit bindings.
+        let names: Vec<String> = platforms.iter().map(|p| p.name.clone()).collect();
+        let name_refs: Vec<&str> = names.iter().map(String::as_str).collect();
+        for obj in &mut objectives {
+            if let Some(i) = binding_index(obj, &name_refs)? {
+                if obj.platform().is_none() {
+                    obj.binding = Some(names[i].clone());
+                }
+            }
+        }
+
+        for (i, a) in objectives.iter().enumerate() {
+            if objectives[..i].contains(a) {
                 return Err(SearchError::invalid(format!("duplicate objective '{}'", a.id())));
             }
         }
-        if self.platform.is_none() && self.pending_sram_mb.is_some() {
-            return Err(SearchError::invalid("sram_mb set but no platform named"));
-        }
 
-        let platform_spec = self.platform.map(|p| match self.pending_sram_mb {
-            Some(mb) if p.f64("sram_mb").is_none() => p.with_f64("sram_mb", mb),
-            _ => p,
-        });
-
-        // Resolving validates the name against the registry and lets us
-        // interrogate capabilities; the handle is dropped (SearchSession
+        // Resolving validates every name against the registry and lets us
+        // interrogate capabilities; the handles are dropped (SearchSession
         // re-resolves at run time so late registrations are honored).
-        let platform = match &platform_spec {
-            None => None,
-            Some(spec) => Some(registry::resolve(spec)?),
-        };
+        let mut resolved: Vec<SharedPlatform> = Vec::with_capacity(platforms.len());
+        for spec in &platforms {
+            resolved.push(registry::resolve(spec)?);
+        }
 
-        for kind in &self.objectives {
-            if kind.needs_platform() && platform.is_none() {
-                return Err(SearchError::invalid(format!(
-                    "objective '{}' requires a hardware platform",
-                    kind.id()
-                )));
+        for obj in &objectives {
+            if !obj.needs_energy_model() {
+                continue;
             }
-            if *kind == ObjectiveKind::EnergyUj
-                && !platform.as_ref().is_some_and(|p| p.has_energy_model())
-            {
-                return Err(SearchError::invalid(
-                    "objective 'energy_uj' requires a platform with an energy model",
-                ));
+            let name = obj.platform().expect("hardware objectives normalized above");
+            let idx = platforms
+                .iter()
+                .position(|p| p.name == name)
+                .expect("bound platforms added to the table above");
+            if !resolved[idx].has_energy_model() {
+                return Err(SearchError::invalid(format!(
+                    "objective '{}' requires a platform with an energy model",
+                    obj.id()
+                )));
             }
         }
 
-        if let (Some(p), Some(false)) = (&platform, self.tied) {
-            if p.tied_wa() {
-                return Err(SearchError::invalid(format!(
-                    "platform '{}' ties weight and activation precision per layer; \
-                     tied(false) is not satisfiable",
-                    p.name()
-                )));
+        if self.tied == Some(false) {
+            for p in &resolved {
+                if p.tied_wa() {
+                    return Err(SearchError::invalid(format!(
+                        "platform '{}' ties weight and activation precision per layer; \
+                         tied(false) is not satisfiable",
+                        p.name()
+                    )));
+                }
             }
         }
 
@@ -437,8 +599,8 @@ impl ExperimentSpecBuilder {
 
         Ok(ExperimentSpec {
             name: self.name.unwrap_or_else(|| "custom".into()),
-            platform: platform_spec,
-            objectives: self.objectives,
+            platforms,
+            objectives,
             beacon: self.beacon,
             ga,
             island: self.island,
@@ -455,14 +617,17 @@ mod tests {
     #[test]
     fn presets_match_paper_setups() {
         let e1 = ExperimentSpec::exp1();
-        assert!(e1.platform.is_none());
-        assert_eq!(e1.objectives, vec![ObjectiveKind::Error, ObjectiveKind::SizeMb]);
+        assert!(e1.platforms.is_empty());
+        assert_eq!(e1.objectives, vec![ScoredObjective::error(), ScoredObjective::size_mb()]);
         assert_eq!(e1.ga.generations, 60);
 
         let e2 = ExperimentSpec::exp2_silago();
-        assert_eq!(e2.platform.as_ref().unwrap().name, "silago");
-        assert_eq!(e2.platform.as_ref().unwrap().f64("sram_mb"), Some(6.0));
+        assert_eq!(e2.platforms[0].name, "silago");
+        assert_eq!(e2.platforms[0].f64("sram_mb"), Some(6.0));
         assert_eq!(e2.objectives.len(), 3);
+        // The lone platform binds hardware objectives explicitly.
+        assert_eq!(e2.objectives[1].id(), "neg_speedup@silago");
+        assert_eq!(e2.objectives[2].id(), "energy_uj@silago");
         assert_eq!(e2.ga.generations, 15);
 
         let e3 = ExperimentSpec::exp3_bitfusion(true);
@@ -471,47 +636,150 @@ mod tests {
     }
 
     #[test]
+    fn cross_platform_preset_binds_both_platforms() {
+        let spec = ExperimentSpec::cross_platform();
+        let names: Vec<&str> = spec.platforms.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, ["silago", "bitfusion"]);
+        assert_eq!(spec.platforms[0].f64("sram_mb"), Some(6.0));
+        assert_eq!(spec.platforms[1].f64("sram_mb"), Some(2.0));
+        let ids: Vec<String> = spec.objectives.iter().map(ScoredObjective::id).collect();
+        assert_eq!(ids, ["error", "neg_speedup@silago", "neg_speedup@bitfusion"]);
+
+        let (bound, bindings) = spec.resolve_objectives().unwrap();
+        assert_eq!(bindings.len(), 2);
+        let labels: Vec<&str> = bound.iter().map(|o| o.label.as_str()).collect();
+        assert_eq!(labels, ["WER_V", "-speedup@silago", "-speedup@bitfusion"]);
+        assert_eq!(bound[1].platform(&bindings), Some("silago"));
+        assert_eq!(bound[2].platform(&bindings), Some("bitfusion"));
+        // SiLago in the table forces the tied genome at session time.
+        assert!(bindings.iter().any(|b| b.platform.tied_wa()));
+    }
+
+    #[test]
     fn builder_rejects_invalid_combinations() {
         // No objectives.
         assert!(ExperimentSpec::builder().build().is_err());
         // Duplicate objective.
         assert!(ExperimentSpec::builder()
-            .objective(ObjectiveKind::Error)
-            .objective(ObjectiveKind::Error)
+            .objective(ScoredObjective::error())
+            .objective(ScoredObjective::error())
             .build()
             .is_err());
         // Hardware objective without platform.
         assert!(ExperimentSpec::builder()
-            .objective(ObjectiveKind::NegSpeedup)
+            .objective(ScoredObjective::neg_speedup())
             .build()
             .is_err());
         // Energy on a platform without an energy model.
         assert!(ExperimentSpec::builder()
             .platform("bitfusion")
-            .objective(ObjectiveKind::Error)
-            .objective(ObjectiveKind::EnergyUj)
+            .objective(ScoredObjective::error())
+            .objective(ScoredObjective::energy_uj())
             .build()
             .is_err());
         // Untying a tied platform.
         assert!(ExperimentSpec::builder()
             .platform("silago")
-            .objective(ObjectiveKind::Error)
+            .objective(ScoredObjective::error())
             .tied(false)
             .build()
             .is_err());
         // Unknown platform surfaces the registry's helpful error.
         let err = ExperimentSpec::builder()
             .platform("tpu")
-            .objective(ObjectiveKind::Error)
+            .objective(ScoredObjective::error())
             .build()
             .unwrap_err();
         assert!(matches!(err, SearchError::UnknownPlatform { .. }), "{err}");
         // sram_mb without a platform.
         assert!(ExperimentSpec::builder()
             .sram_mb(4.0)
-            .objective(ObjectiveKind::Error)
+            .objective(ScoredObjective::error())
             .build()
             .is_err());
+    }
+
+    #[test]
+    fn multi_platform_bindings_validate() {
+        // Unbound hardware objective with two platforms is ambiguous.
+        let err = ExperimentSpec::builder()
+            .platform("silago")
+            .platform("bitfusion")
+            .objective(ScoredObjective::error())
+            .objective(ScoredObjective::neg_speedup())
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("ambiguous"), "{err}");
+
+        // Platform-independent objectives reject bindings.
+        let err = ExperimentSpec::builder()
+            .platform("silago")
+            .objective(ScoredObjective::error().on("silago"))
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("platform-independent"), "{err}");
+
+        // A binding outside the table auto-adds the platform...
+        let spec = ExperimentSpec::builder()
+            .objective(ScoredObjective::error())
+            .objective(ScoredObjective::neg_speedup().on("bitfusion"))
+            .build()
+            .unwrap();
+        assert_eq!(spec.platforms.len(), 1);
+        assert_eq!(spec.platforms[0].name, "bitfusion");
+
+        // ...and does so BEFORE the implicit-binding rule runs, so a bare
+        // hardware objective binds to the lone binding-implied platform
+        // regardless of objective order.
+        let spec = ExperimentSpec::builder()
+            .objective(ScoredObjective::neg_speedup())
+            .objective(ScoredObjective::energy_uj().on("silago"))
+            .build()
+            .unwrap();
+        assert_eq!(spec.objectives[0].id(), "neg_speedup@silago");
+
+        // ...but an unknown registry name still fails to resolve.
+        let err = ExperimentSpec::builder()
+            .objective(ScoredObjective::error())
+            .objective(ScoredObjective::neg_speedup().on("tpu"))
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, SearchError::UnknownPlatform { .. }), "{err}");
+
+        // Duplicate platform table entries are rejected.
+        let err = ExperimentSpec::builder()
+            .platform("silago")
+            .platform("silago")
+            .objective(ScoredObjective::error())
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("twice"), "{err}");
+
+        // The same metric bound to two platforms is NOT a duplicate.
+        let spec = ExperimentSpec::builder()
+            .objective(ScoredObjective::error())
+            .platform_objective("silago", ScoredObjective::neg_speedup())
+            .platform_objective("bitfusion", ScoredObjective::neg_speedup())
+            .build()
+            .unwrap();
+        assert_eq!(spec.objectives.len(), 3);
+        // But binding it twice to the SAME platform is.
+        let err = ExperimentSpec::builder()
+            .platform_objective("silago", ScoredObjective::neg_speedup())
+            .platform_objective("silago", ScoredObjective::neg_speedup())
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn resolve_objectives_revalidates_edited_specs() {
+        let mut spec = ExperimentSpec::cross_platform();
+        // A driver edit pointing an objective at a platform that was
+        // dropped from the table is caught at resolve time.
+        spec.platforms.retain(|p| p.name != "bitfusion");
+        let err = spec.resolve_objectives().unwrap_err();
+        assert!(err.to_string().contains("outside the spec's table"), "{err}");
     }
 
     #[test]
@@ -519,17 +787,29 @@ mod tests {
         let a = ExperimentSpec::builder()
             .platform("silago")
             .sram_mb(4.0)
-            .objective(ObjectiveKind::Error)
+            .objective(ScoredObjective::error())
             .build()
             .unwrap();
-        assert_eq!(a.platform.unwrap().f64("sram_mb"), Some(4.0));
+        assert_eq!(a.platforms[0].f64("sram_mb"), Some(4.0));
+
+        // Per-platform: each sram_mb call binds to the latest platform.
+        let b = ExperimentSpec::builder()
+            .platform("silago")
+            .sram_mb(4.0)
+            .platform("bitfusion")
+            .sram_mb(1.5)
+            .objective(ScoredObjective::error())
+            .build()
+            .unwrap();
+        assert_eq!(b.platforms[0].f64("sram_mb"), Some(4.0));
+        assert_eq!(b.platforms[1].f64("sram_mb"), Some(1.5));
     }
 
     #[test]
     fn island_settings_validate_and_roundtrip() {
         let spec = ExperimentSpec::builder()
-            .objective(ObjectiveKind::Error)
-            .objective(ObjectiveKind::SizeMb)
+            .objective(ScoredObjective::error())
+            .objective(ScoredObjective::size_mb())
             .islands(4)
             .migration_interval(3)
             .topology(Topology::FullyConnected)
@@ -545,7 +825,7 @@ mod tests {
 
         // migrants >= pop_size cannot be satisfied.
         let err = ExperimentSpec::builder()
-            .objective(ObjectiveKind::Error)
+            .objective(ScoredObjective::error())
             .pop_size(4)
             .islands(2)
             .migrants(4)
@@ -555,12 +835,12 @@ mod tests {
 
         // Zero islands / zero interval rejected.
         assert!(ExperimentSpec::builder()
-            .objective(ObjectiveKind::Error)
+            .objective(ScoredObjective::error())
             .islands(0)
             .build()
             .is_err());
         assert!(ExperimentSpec::builder()
-            .objective(ObjectiveKind::Error)
+            .objective(ScoredObjective::error())
             .islands(2)
             .migration_interval(0)
             .build()
@@ -578,7 +858,7 @@ mod tests {
         // f64 JSON numbers lose precision above 2^53; the string encoding
         // must carry the full u64 so a saved config reproduces its search.
         let spec = ExperimentSpec::builder()
-            .objective(ObjectiveKind::Error)
+            .objective(ScoredObjective::error())
             .seed(u64::MAX - 12345)
             .build()
             .unwrap();
@@ -594,9 +874,33 @@ mod tests {
             ExperimentSpec::exp2_silago(),
             ExperimentSpec::exp3_bitfusion(false),
             ExperimentSpec::exp3_bitfusion(true),
+            ExperimentSpec::cross_platform(),
         ] {
             let back = ExperimentSpec::from_json_str(&spec.to_json_string()).unwrap();
             assert_eq!(spec, back, "roundtrip changed {}", spec.name);
         }
+    }
+
+    #[test]
+    fn platform_bound_objectives_roundtrip_with_parameters() {
+        // Explicit bindings + per-platform parameters survive the trip.
+        let spec = ExperimentSpec::builder()
+            .name("joint")
+            .platform_spec(PlatformSpec::new("silago").with_f64("sram_mb", 4.5))
+            .platform_spec(PlatformSpec::new("bitfusion").with_f64("sram_mb", 1.5))
+            .objective(ScoredObjective::error())
+            .platform_objective("silago", ScoredObjective::neg_speedup())
+            .platform_objective("silago", ScoredObjective::energy_uj())
+            .platform_objective("bitfusion", ScoredObjective::neg_speedup())
+            .build()
+            .unwrap();
+        let json = spec.to_json_string();
+        assert!(json.contains("neg_speedup@silago"), "{json}");
+        assert!(json.contains("energy_uj@silago"), "{json}");
+        assert!(json.contains("neg_speedup@bitfusion"), "{json}");
+        let back = ExperimentSpec::from_json_str(&json).unwrap();
+        assert_eq!(spec, back, "platform-bound objectives lost in roundtrip:\n{json}");
+        assert_eq!(back.platforms[0].f64("sram_mb"), Some(4.5));
+        assert_eq!(back.platforms[1].f64("sram_mb"), Some(1.5));
     }
 }

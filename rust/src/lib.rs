@@ -3,9 +3,12 @@
 //! reproduction. See DESIGN.md for the system inventory and README.md for
 //! the quickstart.
 //!
-//! Public API in three pieces (PR 2 redesign):
+//! Public API in four pieces (PR 2 + PR 4 redesigns):
 //!   * [`hw::registry`] — string-named platform registry; SiLago and
 //!     Bitfusion built in, custom backends registered from user code.
+//!   * [`ScoredObjective`] — typed objectives with explicit platform
+//!     bindings (`neg_speedup@silago`), so ONE search can score a front
+//!     against several registered platforms at once.
 //!   * [`ExperimentSpec::builder`] — validated, JSON-round-trippable
 //!     experiment descriptions.
 //!   * [`SearchSession`] — owns `Arc<Artifacts>`, evaluates populations
@@ -25,6 +28,6 @@ pub mod report;
 pub mod util;
 
 pub use coordinator::{
-    ExperimentSpec, ObjectiveKind, SearchError, SearchEvent, SearchOutcome, SearchSession,
+    ExperimentSpec, ScoredObjective, SearchError, SearchEvent, SearchOutcome, SearchSession,
 };
 pub use hw::registry::PlatformSpec;

@@ -14,7 +14,9 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use mohaq::coordinator::{baseline_rows, ExperimentSpec, SearchEvent, SearchSession};
+use mohaq::coordinator::{
+    baseline_rows, ExperimentSpec, ScoredObjective, SearchEvent, SearchSession,
+};
 use mohaq::hw::registry;
 use mohaq::hw::Platform;
 use mohaq::moo::Topology;
@@ -52,13 +54,14 @@ options:
   --a BITS    activation precisions, same format (default: same as --w)";
 
 const SEARCH_USAGE: &str = "\
-usage: mohaq search [--exp exp1|exp2|exp3] [--config FILE] [options]
+usage: mohaq search [--exp exp1|exp2|exp3|cross] [--config FILE] [options]
 
 Run a full MOHAQ experiment through a SearchSession.
 
 options:
   --exp NAME        paper preset: exp1 (compression), exp2 (SiLago),
-                    exp3 (Bitfusion)  [default: exp1]
+                    exp3 (Bitfusion), cross (joint SiLago + Bitfusion)
+                    [default: exp1]
   --config FILE     JSON experiment config instead of a preset
                     (covers everything the presets do; see config module)
   --beacon          enable beacon-based retraining (exp3 preset only)
@@ -67,6 +70,15 @@ options:
   --threads N       evaluation worker threads (0 = one per core; the
                     front is identical for any value)
   --out DIR         write front.csv / records.csv to DIR
+
+cross-platform search (one front scored on several platforms at once):
+  --platforms A,B   registry platforms to bind (e.g. silago,bitfusion);
+                    every listed platform contributes its SRAM constraint
+  --objectives LIST comma-separated objectives. 'metric@platform' binds
+                    explicitly (neg_speedup@silago); a bare hardware
+                    metric expands across every listed platform; energy
+                    objectives skip platforms without an energy model
+                    [default: error,neg_speedup,energy_uj]
 
 island model (population scaling; front is identical for any thread count):
   --islands K            run K sub-populations in lockstep (default: spec's
@@ -186,6 +198,74 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Build a cross-platform spec from `--platforms a,b` plus an optional
+/// `--objectives` list: explicit `metric@platform` tokens pass through
+/// the typed parser unchanged; bare hardware metrics expand across every
+/// listed platform (energy only where the platform has an energy model).
+fn spec_from_platform_flags(platforms: &str, objectives: Option<&str>) -> Result<ExperimentSpec> {
+    let names: Vec<String> = platforms
+        .split(',')
+        .map(|s| s.trim().to_lowercase())
+        .filter(|s| !s.is_empty())
+        .collect();
+    anyhow::ensure!(!names.is_empty(), "--platforms needs at least one platform name");
+
+    // Resolve up front: validates the names and exposes capabilities for
+    // the energy expansion below.
+    let mut resolved = Vec::with_capacity(names.len());
+    for name in &names {
+        resolved.push(registry::resolve(&registry::PlatformSpec::new(name))?);
+    }
+
+    let mut b = ExperimentSpec::builder().name(format!("cross-{}", names.join("-")));
+    for name in &names {
+        b = b.platform(name.clone());
+    }
+    // A metric from the DEFAULT list that no listed platform supports is
+    // dropped silently (the user never asked for it); an explicitly
+    // passed one errors below.
+    let explicit = objectives.is_some();
+    for token in objectives.unwrap_or("error,neg_speedup,energy_uj").split(',') {
+        let token = token.trim();
+        if token.is_empty() {
+            continue;
+        }
+        let obj = ScoredObjective::parse(token)?;
+        if let Some(p) = obj.platform() {
+            // An out-of-list platform would silently join the table (and
+            // add its SRAM constraint); demand it be listed explicitly.
+            anyhow::ensure!(
+                names.iter().any(|n| n.as_str() == p),
+                "objective '{token}' names platform '{p}' which is not in --platforms ({}); \
+                 list it there so its constraints are explicit",
+                names.join(", ")
+            );
+            b = b.objective(obj);
+            continue;
+        }
+        if !obj.needs_platform() {
+            b = b.objective(obj);
+            continue;
+        }
+        // Bare hardware metric: one objective per capable platform.
+        let mut bound_any = false;
+        for (name, p) in names.iter().zip(&resolved) {
+            if obj.needs_energy_model() && !p.has_energy_model() {
+                eprintln!("note: skipping energy_uj@{name} (no energy model)");
+                continue;
+            }
+            b = b.objective(obj.clone().on(name.clone()));
+            bound_any = true;
+        }
+        anyhow::ensure!(
+            bound_any || !explicit,
+            "objective '{token}' has no capable platform among: {}",
+            names.join(", ")
+        );
+    }
+    Ok(b.build()?)
+}
+
 fn cmd_search(args: &Args) -> Result<()> {
     if args.has("help") {
         println!("{SEARCH_USAGE}");
@@ -193,12 +273,24 @@ fn cmd_search(args: &Args) -> Result<()> {
     }
     let arts = Arc::new(mohaq::runtime::Artifacts::load(args.get_or("artifacts", "artifacts"))?);
     let mut spec = if let Some(cfg) = args.get("config") {
+        // Refuse to silently discard flags the chosen spec source ignores.
+        anyhow::ensure!(
+            args.get("platforms").is_none() && args.get("objectives").is_none(),
+            "--platforms/--objectives cannot be combined with --config (edit the config instead)"
+        );
         mohaq::config::spec_from_file(cfg)?
+    } else if let Some(platforms) = args.get("platforms") {
+        spec_from_platform_flags(platforms, args.get("objectives"))?
     } else {
+        anyhow::ensure!(
+            args.get("objectives").is_none(),
+            "--objectives requires --platforms (the presets fix their objective set)"
+        );
         match args.get_or("exp", "exp1") {
             "exp1" => ExperimentSpec::exp1(),
             "exp2" => ExperimentSpec::exp2_silago(),
             "exp3" => ExperimentSpec::exp3_bitfusion(args.has("beacon")),
+            "cross" | "cross_platform" => ExperimentSpec::cross_platform(),
             other => anyhow::bail!("unknown experiment '{other}' (see --help)"),
         }
     };
@@ -232,7 +324,7 @@ fn cmd_search(args: &Args) -> Result<()> {
 
     let session = SearchSession::new(arts.clone())?.threads(args.get_usize("threads", 0));
     let outcome = session.run_with(&spec, |event| match event {
-        SearchEvent::Started { name, num_vars, threads, islands, .. } => {
+        SearchEvent::Started { name, num_vars, objectives, threads, islands } => {
             if *islands > 1 {
                 println!(
                     "search '{name}': {num_vars} vars, {islands} islands, {threads} eval threads"
@@ -240,6 +332,7 @@ fn cmd_search(args: &Args) -> Result<()> {
             } else {
                 println!("search '{name}': {num_vars} vars, {threads} eval threads");
             }
+            println!("  objectives: {}", objectives.join(", "));
         }
         SearchEvent::BeaconCreated { name, retrain_steps } => {
             println!("  beacon created: {name} ({retrain_steps} steps)");

@@ -1,6 +1,11 @@
 //! Paper-style reporting: render solution tables (Tables 5-8), emit CSV
 //! series for the figures (5, 7-10), and markdown summaries for
 //! EXPERIMENTS.md.
+//!
+//! Cross-platform searches (PR 4) carry per-binding metrics in
+//! `SolutionRow::hw`; tables and CSVs grow one speedup/energy column pair
+//! per bound platform, labeled `@platform` whenever more than one binding
+//! is in play so joint fronts stay interpretable.
 
 use std::io::Write;
 use std::path::Path;
@@ -10,46 +15,95 @@ use anyhow::Result;
 use crate::coordinator::{SearchOutcome, SolutionRow};
 use crate::runtime::Artifacts;
 
+/// Platform labels of the hardware columns, in binding-table order (empty
+/// when the search had no platform bindings).
+fn hw_labels(rows: &[SolutionRow]) -> Vec<String> {
+    rows.first()
+        .map(|r| r.hw.iter().map(|h| h.platform.clone()).collect())
+        .unwrap_or_default()
+}
+
+fn row_speedup(r: &SolutionRow, idx: usize) -> Option<f64> {
+    // Baseline rows carry no bindings; their convenience field feeds
+    // EVERY platform column (Base16's 1.0x anchor holds on each platform
+    // by definition — speedup is relative to that platform's baseline).
+    r.hw.get(idx).map(|h| h.speedup).or(r.speedup)
+}
+
+fn row_energy(r: &SolutionRow, idx: usize) -> Option<f64> {
+    r.hw.get(idx).and_then(|h| h.energy_uj).or(r.energy_uj)
+}
+
 /// Render a Table-5/6/7/8-style table. Columns adapt to which metrics the
-/// experiment produced (speedup/energy columns appear when present).
+/// experiment produced: one speedup/energy pair per platform binding,
+/// `@platform`-labeled when the search scored several platforms.
 pub fn render_table(rows: &[SolutionRow], baselines: &[SolutionRow], arts: &Artifacts) -> String {
-    let has_speedup = rows.iter().any(|r| r.speedup.is_some());
-    let has_energy = rows.iter().any(|r| r.energy_uj.is_some());
+    let labels = hw_labels(rows);
+    let multi = labels.len() > 1;
+
+    // Hardware columns as (header, binding index, column width) triples —
+    // the width is computed once here so the header row and the data rows
+    // cannot drift apart.
+    let speed_col = |header: String, idx: usize| {
+        let w = header.len().max(7) + 2;
+        (header, idx, w)
+    };
+    let energy_col = |header: String, idx: usize| {
+        let w = header.len().max(6) + 4;
+        (header, idx, w)
+    };
+    let mut speed_cols: Vec<(String, usize, usize)> = Vec::new();
+    let mut energy_cols: Vec<(String, usize, usize)> = Vec::new();
+    if labels.is_empty() {
+        if rows.iter().any(|r| r.speedup.is_some()) {
+            speed_cols.push(speed_col("Speedup".into(), 0));
+        }
+        if rows.iter().any(|r| r.energy_uj.is_some()) {
+            energy_cols.push(energy_col("Energy".into(), 0));
+        }
+    } else {
+        for (i, l) in labels.iter().enumerate() {
+            let header = if multi { format!("Spd@{l}") } else { "Speedup".into() };
+            speed_cols.push(speed_col(header, i));
+            if rows.iter().any(|r| r.hw.get(i).is_some_and(|h| h.energy_uj.is_some())) {
+                let header = if multi { format!("E@{l}") } else { "Energy".into() };
+                energy_cols.push(energy_col(header, i));
+            }
+        }
+    }
+
     let mut s = String::new();
 
     // Header: layer names then metrics.
     s.push_str(&format!("{:<10}", "Sol."));
     for name in &arts.layer_names {
-        s.push_str(&format!("{:>8}", name));
+        s.push_str(&format!("{name:>8}"));
     }
     s.push_str(&format!("{:>9}{:>7}", "WER_V", "Cp_r"));
-    if has_speedup {
-        s.push_str(&format!("{:>9}", "Speedup"));
-    }
-    if has_energy {
-        s.push_str(&format!("{:>10}", "Energy"));
+    for (header, _, w) in speed_cols.iter().chain(&energy_cols) {
+        let w = *w;
+        s.push_str(&format!("{header:>w$}"));
     }
     s.push_str(&format!("{:>9}{:>11}\n", "WER_T", "params"));
 
     let mut write_row = |label: &str, r: &SolutionRow| {
         s.push_str(&format!("{label:<10}"));
         for i in 0..r.qc.w_bits.len() {
-            s.push_str(&format!(
-                "{:>8}",
-                format!("{}/{}", r.qc.w_bits[i], r.qc.a_bits[i])
-            ));
+            s.push_str(&format!("{:>8}", format!("{}/{}", r.qc.w_bits[i], r.qc.a_bits[i])));
         }
         s.push_str(&format!("{:>8.1}%{:>6.1}x", r.wer_v * 100.0, r.cp_r));
-        if has_speedup {
-            match r.speedup {
-                Some(v) => s.push_str(&format!("{:>8.1}x", v)),
-                None => s.push_str(&format!("{:>9}", "-")),
+        for (_, idx, w) in &speed_cols {
+            let (w, vw) = (*w, *w - 1);
+            match row_speedup(r, *idx) {
+                Some(v) => s.push_str(&format!("{v:>vw$.1}x")),
+                None => s.push_str(&format!("{:>w$}", "-")),
             }
         }
-        if has_energy {
-            match r.energy_uj {
-                Some(v) => s.push_str(&format!("{:>7.2} uJ", v)),
-                None => s.push_str(&format!("{:>10}", "-")),
+        for (_, idx, w) in &energy_cols {
+            let (w, vw) = (*w, *w - 3);
+            match row_energy(r, *idx) {
+                Some(v) => s.push_str(&format!("{v:>vw$.2} uJ")),
+                None => s.push_str(&format!("{:>w$}", "-")),
             }
         }
         s.push_str(&format!("{:>8.1}%{:>11}\n", r.wer_t * 100.0, r.param_set));
@@ -65,22 +119,39 @@ pub fn render_table(rows: &[SolutionRow], baselines: &[SolutionRow], arts: &Arti
     s
 }
 
-/// CSV of the Pareto set (figures 7/8/9/10 series).
+/// CSV of the Pareto set (figures 7/8/9/10 series). One
+/// `speedup@platform,energy_uj@platform` column pair per binding; the
+/// unlabeled legacy pair when the search had no platform.
 pub fn write_front_csv(path: impl AsRef<Path>, rows: &[SolutionRow]) -> Result<()> {
     let mut f = std::fs::File::create(path)?;
-    writeln!(f, "wer_v,wer_t,cp_r,size_mb,speedup,energy_uj,genome")?;
+    let labels = hw_labels(rows);
+    let mut header = String::from("wer_v,wer_t,cp_r,size_mb");
+    if labels.is_empty() {
+        header.push_str(",speedup,energy_uj");
+    } else {
+        for l in &labels {
+            header.push_str(&format!(",speedup@{l},energy_uj@{l}"));
+        }
+    }
+    writeln!(f, "{header},genome")?;
     for r in rows {
-        writeln!(
-            f,
-            "{:.6},{:.6},{:.4},{:.6},{},{},{}",
-            r.wer_v,
-            r.wer_t,
-            r.cp_r,
-            r.size_mb,
-            r.speedup.map(|v| format!("{v:.4}")).unwrap_or_default(),
-            r.energy_uj.map(|v| format!("{v:.6}")).unwrap_or_default(),
-            r.qc.display_wa().replace(' ', "|"),
-        )?;
+        let mut line = format!("{:.6},{:.6},{:.4},{:.6}", r.wer_v, r.wer_t, r.cp_r, r.size_mb);
+        if labels.is_empty() {
+            line.push_str(&format!(
+                ",{},{}",
+                r.speedup.map(|v| format!("{v:.4}")).unwrap_or_default(),
+                r.energy_uj.map(|v| format!("{v:.6}")).unwrap_or_default()
+            ));
+        } else {
+            for h in &r.hw {
+                line.push_str(&format!(
+                    ",{:.4},{}",
+                    h.speedup,
+                    h.energy_uj.map(|v| format!("{v:.6}")).unwrap_or_default()
+                ));
+            }
+        }
+        writeln!(f, "{line},{}", r.qc.display_wa().replace(' ', "|"))?;
     }
     Ok(())
 }
@@ -111,6 +182,9 @@ pub fn write_records_csv(path: impl AsRef<Path>, outcome: &SearchOutcome) -> Res
 pub fn summary_md(outcome: &SearchOutcome) -> String {
     let mut s = String::new();
     s.push_str(&format!("### {}\n\n", outcome.spec_name));
+    if !outcome.objective_names.is_empty() {
+        s.push_str(&format!("- objectives: {}\n", outcome.objective_names.join(", ")));
+    }
     s.push_str(&format!(
         "- evaluations: {} (exec calls {}, cache hits {})\n",
         outcome.evaluations, outcome.exec_calls, outcome.cache_hits
@@ -136,6 +210,7 @@ pub fn summary_md(outcome: &SearchOutcome) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::HwMetrics;
     use crate::quant::{Bits, QuantConfig};
 
     fn row() -> SolutionRow {
@@ -147,8 +222,20 @@ mod tests {
             size_mb: 0.66,
             speedup: Some(14.6),
             energy_uj: None,
+            hw: Vec::new(),
             param_set: "baseline".into(),
         }
+    }
+
+    fn cross_row() -> SolutionRow {
+        let mut r = row();
+        r.hw = vec![
+            HwMetrics { platform: "silago".into(), speedup: 3.2, energy_uj: Some(0.41) },
+            HwMetrics { platform: "bitfusion".into(), speedup: 14.6, energy_uj: None },
+        ];
+        r.speedup = Some(3.2);
+        r.energy_uj = Some(0.41);
+        r
     }
 
     fn tiny_arts_names() -> Vec<String> {
@@ -164,7 +251,7 @@ mod tests {
         let mut s = String::new();
         s.push_str(&format!("{:<10}", "Sol."));
         for n in &arts_names {
-            s.push_str(&format!("{:>8}", n));
+            s.push_str(&format!("{n:>8}"));
         }
         assert!(s.contains("L0"));
         let r = row();
@@ -180,6 +267,25 @@ mod tests {
         let text = std::fs::read_to_string(&p).unwrap();
         assert!(text.starts_with("wer_v,"));
         assert!(text.contains("14.6"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cross_platform_csv_labels_columns_per_binding() {
+        let dir = std::env::temp_dir().join("mohaq_report_cross_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("front.csv");
+        write_front_csv(&p, &[cross_row()]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let header = text.lines().next().unwrap();
+        assert_eq!(
+            header,
+            "wer_v,wer_t,cp_r,size_mb,speedup@silago,energy_uj@silago,\
+             speedup@bitfusion,energy_uj@bitfusion,genome"
+        );
+        // silago speedup + energy, bitfusion speedup, empty energy cell.
+        let line = text.lines().nth(1).unwrap();
+        assert!(line.contains(",3.2000,0.410000,14.6000,,"), "{line}");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -5,7 +5,7 @@
 
 use std::sync::Arc;
 
-use mohaq::coordinator::{ExperimentSpec, ObjectiveKind, SearchError, SearchSession};
+use mohaq::coordinator::{ExperimentSpec, ScoredObjective, SearchError, SearchSession};
 use mohaq::eval::ResultCache;
 use mohaq::hw::registry::{self, PlatformSpec};
 use mohaq::hw::Platform;
@@ -28,7 +28,7 @@ fn registry_rejects_unknown_platform_with_helpful_error() {
     // Same failure through the builder becomes the typed SearchError.
     let err = ExperimentSpec::builder()
         .platform("npu-9000")
-        .objective(ObjectiveKind::Error)
+        .objective(ScoredObjective::error())
         .build()
         .unwrap_err();
     match err {
@@ -69,21 +69,38 @@ fn custom_platform_registers_and_drives_spec_validation() {
     // Speedup objective on the custom platform validates...
     let spec = ExperimentSpec::builder()
         .platform("toy")
-        .objective(ObjectiveKind::Error)
-        .objective(ObjectiveKind::NegSpeedup)
+        .objective(ScoredObjective::error())
+        .objective(ScoredObjective::neg_speedup())
         .build()
         .unwrap();
-    assert_eq!(spec.platform.as_ref().unwrap().name, "toy");
-    assert_eq!(spec.resolve_platform().unwrap().unwrap().name(), "toy");
+    assert_eq!(spec.platforms[0].name, "toy");
+    // The lone platform binds the hardware objective explicitly, and the
+    // resolved binding carries the live handle.
+    assert_eq!(spec.objectives[1].id(), "neg_speedup@toy");
+    let (bound, bindings) = spec.resolve_objectives().unwrap();
+    assert_eq!(bindings[0].platform.name(), "toy");
+    assert_eq!(bound[1].label, "-speedup@toy");
 
     // ...but the energy objective is rejected: no energy model.
     let err = ExperimentSpec::builder()
         .platform("toy")
-        .objective(ObjectiveKind::Error)
-        .objective(ObjectiveKind::EnergyUj)
+        .objective(ScoredObjective::error())
+        .objective(ScoredObjective::energy_uj())
         .build()
         .unwrap_err();
     assert!(matches!(err, SearchError::InvalidSpec(_)), "{err}");
+
+    // A cross-platform spec can mix the custom backend with a built-in.
+    let spec = ExperimentSpec::builder()
+        .objective(ScoredObjective::error())
+        .platform_objective("toy", ScoredObjective::neg_speedup())
+        .platform_objective("bitfusion", ScoredObjective::neg_speedup())
+        .build()
+        .unwrap();
+    let (bound, bindings) = spec.resolve_objectives().unwrap();
+    assert_eq!(bindings.len(), 2);
+    let labels: Vec<&str> = bound.iter().map(|o| o.label.as_str()).collect();
+    assert_eq!(labels, ["WER_V", "-speedup@toy", "-speedup@bitfusion"]);
 }
 
 // ------------------------------------------------------------ spec builder
@@ -95,6 +112,7 @@ fn builder_output_survives_json_roundtrip_for_all_presets() {
         ExperimentSpec::exp2_silago(),
         ExperimentSpec::exp3_bitfusion(false),
         ExperimentSpec::exp3_bitfusion(true),
+        ExperimentSpec::cross_platform(),
     ] {
         let json = spec.to_json_string();
         let back = ExperimentSpec::from_json_str(&json).unwrap();
@@ -108,22 +126,23 @@ fn builder_chain_matches_issue_example() {
     let spec = ExperimentSpec::builder()
         .platform("silago")
         .sram_mb(6.0)
-        .objective(ObjectiveKind::Error)
-        .objective(ObjectiveKind::NegSpeedup)
+        .objective(ScoredObjective::error())
+        .objective(ScoredObjective::neg_speedup())
         .beacon(BeaconPolicyOverrides::default())
         .build()
         .unwrap();
-    assert_eq!(spec.platform.as_ref().unwrap().f64("sram_mb"), Some(6.0));
+    assert_eq!(spec.platforms[0].f64("sram_mb"), Some(6.0));
     assert!(spec.beacon.is_some());
     // SiLago ties W=A: the session will search the halved genome.
-    assert!(spec.resolve_platform().unwrap().unwrap().tied_wa());
+    let (_, bindings) = spec.resolve_objectives().unwrap();
+    assert!(bindings[0].platform.tied_wa());
 }
 
 #[test]
 fn builder_enforces_tied_wa_for_silago() {
     let err = ExperimentSpec::builder()
         .platform("silago")
-        .objective(ObjectiveKind::Error)
+        .objective(ScoredObjective::error())
         .tied(false)
         .build()
         .unwrap_err();
@@ -132,11 +151,38 @@ fn builder_enforces_tied_wa_for_silago() {
     // Explicitly tying an untied platform is allowed (halves the genome).
     let spec = ExperimentSpec::builder()
         .platform("bitfusion")
-        .objective(ObjectiveKind::Error)
+        .objective(ScoredObjective::error())
         .tied(true)
         .build()
         .unwrap();
     assert_eq!(spec.tied, Some(true));
+}
+
+#[test]
+fn cross_platform_spec_round_trips_and_rebinds() {
+    // The acceptance shape: platform-bound objectives with per-platform
+    // parameters survive JSON, and the resolved labels carry bindings.
+    let spec = ExperimentSpec::builder()
+        .name("joint")
+        .platform("silago")
+        .sram_mb(6.0)
+        .platform("bitfusion")
+        .sram_mb(2.0)
+        .objective(ScoredObjective::error())
+        .platform_objective("silago", ScoredObjective::neg_speedup())
+        .platform_objective("silago", ScoredObjective::energy_uj())
+        .platform_objective("bitfusion", ScoredObjective::neg_speedup())
+        .build()
+        .unwrap();
+    let json = spec.to_json_string();
+    let back = ExperimentSpec::from_json_str(&json).unwrap();
+    assert_eq!(spec, back, "cross-platform spec changed in roundtrip:\n{json}");
+
+    let (bound, bindings) = back.resolve_objectives().unwrap();
+    let labels: Vec<&str> = bound.iter().map(|o| o.label.as_str()).collect();
+    assert_eq!(labels, ["WER_V", "-speedup@silago", "energy_uJ@silago", "-speedup@bitfusion"]);
+    assert_eq!(bindings[0].spec.f64("sram_mb"), Some(6.0));
+    assert_eq!(bindings[1].spec.f64("sram_mb"), Some(2.0));
 }
 
 #[test]

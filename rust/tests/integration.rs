@@ -9,9 +9,11 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use mohaq::coordinator::{
-    baseline_rows, BeaconManager, BeaconPolicy, ExperimentSpec, SearchSession, Trainer,
+    baseline_rows, BeaconManager, BeaconPolicy, ExperimentSpec, MohaqProblem, SearchError,
+    SearchOutcome, SearchSession, Trainer,
 };
 use mohaq::eval::EvalService;
+use mohaq::moo::Problem;
 use mohaq::quant::{Bits, QuantConfig};
 use mohaq::runtime::{Artifacts, Runtime};
 
@@ -175,6 +177,93 @@ fn beacon_rescues_aggressive_quantization() {
         .expect("neighbor should use the existing beacon");
     assert_eq!(set2, set);
     assert_eq!(mgr.beacons.len(), 1, "no second retraining");
+}
+
+#[test]
+fn cross_platform_search_produces_labeled_joint_front() {
+    let Some(arts) = artifacts() else { return };
+    let mut spec = ExperimentSpec::cross_platform();
+    spec.ga.generations = 2;
+    spec.ga.initial_pop_size = 10;
+    spec.ga.pop_size = 6;
+    spec.ga.seed = 0xC405;
+
+    let run = |threads: usize| {
+        let session = SearchSession::new(arts.clone()).unwrap().threads(threads);
+        session.run(&spec).unwrap()
+    };
+    let one = run(1);
+    // One front, objective names labeled per platform binding.
+    assert_eq!(one.objective_names, ["WER_V", "-speedup@silago", "-speedup@bitfusion"]);
+    assert!(!one.rows.is_empty());
+    for row in &one.rows {
+        // Joint restrictions: tied W=A and no 2-bit (SiLago), and the
+        // tighter of the two SRAM caps (Bitfusion's 2 MB).
+        assert_eq!(row.qc.w_bits, row.qc.a_bits);
+        assert!(row.qc.w_bits.iter().all(|b| *b != Bits::B2), "{:?}", row.qc);
+        assert!(row.size_mb <= 2.0 + 1e-9, "over the bitfusion cap: {} MB", row.size_mb);
+        // Per-platform metrics in binding-table order.
+        assert_eq!(row.hw.len(), 2);
+        assert_eq!(row.hw[0].platform, "silago");
+        assert_eq!(row.hw[1].platform, "bitfusion");
+        assert!(row.hw[0].energy_uj.is_some(), "silago has an energy model");
+        assert!(row.hw[1].energy_uj.is_none(), "bitfusion has none");
+    }
+
+    let key = |o: &SearchOutcome| {
+        o.rows
+            .iter()
+            .map(|r| {
+                let hw: Vec<u64> = r.hw.iter().map(|h| h.speedup.to_bits()).collect();
+                (r.qc.clone(), r.wer_v.to_bits(), hw)
+            })
+            .collect::<Vec<_>>()
+    };
+    // Seed-deterministic run to run...
+    assert_eq!(key(&one), key(&run(1)), "same seed changed the joint front");
+    // ...and thread-count-invariant.
+    assert_eq!(key(&one), key(&run(4)), "eval threads changed the joint front");
+}
+
+#[test]
+fn failing_eval_trips_the_fuse_not_a_panic() {
+    let Some(arts) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let eval = EvalService::new(&rt, arts.clone()).unwrap();
+    let spec = ExperimentSpec::exp1();
+    let (objectives, bindings) = spec.resolve_objectives().unwrap();
+    let mut problem = MohaqProblem {
+        arts: arts.clone(),
+        eval,
+        trainer: None,
+        beacons: None,
+        bindings,
+        objectives,
+        tied: false,
+        err_limit: 1.0,
+        gene_min: 1,
+        threads: 2,
+        records: Vec::new(),
+        failure: None,
+    };
+
+    // A malformed genome (gene 99 maps to no precision) used to panic
+    // inside the worker pool; now it trips the problem's fuse: the batch
+    // returns infeasible sentinels and the typed error is stored for the
+    // session boundary.
+    let n = arts.layer_names.len();
+    let evals = problem.evaluate_batch(&[vec![99i64; 2 * n]]);
+    assert_eq!(evals.len(), 1);
+    assert!(!evals[0].feasible(), "sentinel must be infeasible");
+    let err = problem.failure.take().expect("fuse should hold the typed error");
+    assert!(matches!(err, SearchError::Eval(_)), "{err:?}");
+    assert!(err.to_string().contains("invalid genome"), "{err}");
+
+    // Once tripped, later batches short-circuit: sentinels, no records.
+    problem.failure = Some(SearchError::Eval("tripped".into()));
+    let evals = problem.evaluate_batch(&[vec![3i64; 2 * n]]);
+    assert!(!evals[0].feasible());
+    assert!(problem.records.is_empty(), "no evaluation happens after the fuse");
 }
 
 #[test]
