@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
     }
     let rt = Runtime::cpu()?;
     let arts = Arc::new(Artifacts::load(&dir)?);
-    let session = SearchSession::with_runtime(arts.clone(), rt);
+    let session = SearchSession::with_runtime(arts.clone(), rt)?;
 
     println!("\n== bench_exp2: SiLago 3-objective search (scaled: 5 generations) ==");
     let mut spec = ExperimentSpec::exp2_silago();

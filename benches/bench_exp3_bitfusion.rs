@@ -57,7 +57,7 @@ fn main() -> anyhow::Result<()> {
     let mut spec = ExperimentSpec::exp3_bitfusion(false);
     spec.ga.generations = 5;
     let t0 = std::time::Instant::now();
-    let session = SearchSession::with_runtime(arts.clone(), rt);
+    let session = SearchSession::with_runtime(arts.clone(), rt)?;
     let outcome = session.run(&spec)?;
     let secs = t0.elapsed().as_secs_f64();
     println!(

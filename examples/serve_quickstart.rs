@@ -1,0 +1,181 @@
+//! Serve-mode quickstart — hermetic: runs WITHOUT the artifact bundle.
+//!
+//! Starts an in-process `mohaq serve` server over the surrogate evaluator
+//! (or connects to an external one via `--addr`), then demonstrates the
+//! serve contracts end to end:
+//!   1. two clients with DIFFERENT per-tenant platform tables search
+//!      concurrently over the one shared session;
+//!   2. a repeat of tenant A's request comes back almost entirely from
+//!      the shared PTQ cache (cross-request reuse);
+//!   3. server stats + clean shutdown.
+//!
+//!     cargo run --release --example serve_quickstart
+//!     cargo run --release --example serve_quickstart -- \
+//!         --addr 127.0.0.1:7070 --shutdown     # drive an external server
+//!
+//! The CI smoke job starts the real `mohaq serve` binary and drives this
+//! example against it with `--addr ... --shutdown`.
+
+use std::time::Duration;
+
+use mohaq::coordinator::{ExperimentSpec, ScoredObjective};
+use mohaq::serve::{SearchReply, ServeClient, ServeState, Server};
+use mohaq::util::cli::Args;
+
+/// Tenant A: SiLago table (tied W=A genome, 6 MB scratchpad).
+fn tenant_a_spec() -> anyhow::Result<ExperimentSpec> {
+    Ok(ExperimentSpec::builder()
+        .name("tenant-a-silago")
+        .platform("silago")
+        .sram_mb(6.0)
+        .objective(ScoredObjective::error())
+        .objective(ScoredObjective::neg_speedup())
+        .pop_size(10)
+        .initial_pop_size(20)
+        .generations(8)
+        .seed(0xA11CE)
+        // Surrogate errors top out around baseline+16pp on SiLago's
+        // 4..16-bit genome; the widened area keeps the demo front rich.
+        .err_feasible_pp(25.0)
+        .build()?)
+}
+
+/// Tenant B: Bitfusion table (untied genome, 8 MB SRAM — wide feasible
+/// region under the surrogate) + a size objective — a different platform
+/// table over the SAME shared cache.
+fn tenant_b_spec() -> anyhow::Result<ExperimentSpec> {
+    Ok(ExperimentSpec::builder()
+        .name("tenant-b-bitfusion")
+        .platform("bitfusion")
+        .sram_mb(8.0)
+        .objective(ScoredObjective::error())
+        .objective(ScoredObjective::neg_speedup())
+        .objective(ScoredObjective::size_mb())
+        .pop_size(10)
+        .initial_pop_size(20)
+        .generations(8)
+        .seed(0xB0B)
+        .err_feasible_pp(35.0)
+        .build()?)
+}
+
+fn print_front(label: &str, reply: &SearchReply) {
+    println!(
+        "{label}: front of {} solutions ({} evals, {} exec, {} cache hits, {} generations)",
+        reply.rows.len(),
+        reply.evaluations,
+        reply.exec_calls,
+        reply.cache_hits,
+        reply.generations
+    );
+    println!("  objectives: {}", reply.objectives.join(", "));
+    for row in reply.rows.iter().take(4) {
+        let hw: Vec<String> =
+            row.hw.iter().map(|h| format!("{} {:.2}x", h.platform, h.speedup)).collect();
+        println!(
+            "  {:<24} WER_V {:>6.2}%  {:>6.3} MB  {}",
+            row.config,
+            row.wer_v * 100.0,
+            row.size_mb,
+            hw.join("  ")
+        );
+    }
+    if reply.rows.len() > 4 {
+        println!("  ... {} more", reply.rows.len() - 4);
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+
+    // Either drive an external server (--addr) or start one in-process.
+    let (addr, server_thread) = match args.get("addr") {
+        Some(addr) => (addr.to_string(), None),
+        None => {
+            let state = ServeState::new(
+                mohaq::coordinator::SearchSession::synthetic()?,
+                args.get_usize("threads", 0),
+            );
+            let server = Server::bind("127.0.0.1:0", state)?;
+            let addr = server.local_addr()?.to_string();
+            println!("in-process server on {addr} (surrogate evaluator)");
+            (addr, Some(std::thread::spawn(move || server.run())))
+        }
+    };
+
+    let mut probe = ServeClient::connect_retry(&addr, Duration::from_secs(10))?;
+    probe.ping()?;
+    println!("connected to {addr}\n");
+
+    // --- 1. two tenants, different platform tables, CONCURRENT ---------
+    let spec_a = tenant_a_spec()?;
+    let spec_b = tenant_b_spec()?;
+    let (reply_a, reply_b) = std::thread::scope(
+        |scope| -> Result<(SearchReply, SearchReply), anyhow::Error> {
+            let addr_a = addr.clone();
+            let addr_b = addr.clone();
+            let a = scope.spawn(move || -> anyhow::Result<SearchReply> {
+                let mut client = ServeClient::connect(addr_a.as_str())?;
+                Ok(client.search(&tenant_a_spec()?)?)
+            });
+            let b = scope.spawn(move || -> anyhow::Result<SearchReply> {
+                let mut client = ServeClient::connect(addr_b.as_str())?;
+                Ok(client.search(&tenant_b_spec()?)?)
+            });
+            let reply_a = a.join().map_err(|_| anyhow::anyhow!("client thread panicked"))??;
+            let reply_b = b.join().map_err(|_| anyhow::anyhow!("client thread panicked"))??;
+            Ok((reply_a, reply_b))
+        },
+    )?;
+    println!("== concurrent tenants ({} / {}) ==", spec_a.name, spec_b.name);
+    print_front("tenant A (silago)", &reply_a);
+    print_front("tenant B (bitfusion)", &reply_b);
+    if reply_a.rows.is_empty() || reply_b.rows.is_empty() {
+        anyhow::bail!("expected non-empty fronts from both tenants");
+    }
+
+    // --- 2. cross-request cache reuse ----------------------------------
+    // The same spec again: candidate errors are already memoized in the
+    // server's shared cache, so this request is (almost) execution-free.
+    let rerun = probe.search(&spec_a)?;
+    println!("\n== tenant A re-submitted ==");
+    print_front("rerun", &rerun);
+    println!(
+        "cross-request reuse: {} cache hits vs {} fresh executions",
+        rerun.cache_hits, rerun.exec_calls
+    );
+    if rerun.cache_hits == 0 {
+        anyhow::bail!("expected shared-cache hits on a repeated request");
+    }
+    let identical = reply_a.rows.len() == rerun.rows.len()
+        && reply_a
+            .rows
+            .iter()
+            .zip(&rerun.rows)
+            .all(|(x, y)| x.config == y.config && x.wer_v.to_bits() == y.wer_v.to_bits());
+    if !identical {
+        anyhow::bail!("repeated request must reproduce the front bit for bit");
+    }
+    println!("front reproduced bit for bit at the same seed");
+
+    // --- 3. stats + shutdown -------------------------------------------
+    let stats = probe.server_stats()?;
+    println!(
+        "\nserver stats: {} requests, {} executions, {} cache hits, {} unique solutions{}",
+        stats.requests,
+        stats.executions,
+        stats.cache_hits,
+        stats.unique_solutions,
+        if stats.surrogate { " (surrogate)" } else { "" }
+    );
+
+    if server_thread.is_some() || args.has("shutdown") {
+        probe.shutdown()?;
+        println!("server acknowledged shutdown");
+    }
+    if let Some(handle) = server_thread {
+        handle.join().map_err(|_| anyhow::anyhow!("server thread panicked"))??;
+        println!("in-process server exited cleanly");
+    }
+    Ok(())
+}

@@ -2,7 +2,10 @@
 //! the three paper presets (used by `mohaq search --config FILE`). This is
 //! a thin file-IO wrapper over `ExperimentSpec::from_json`, so a config
 //! file can express everything the builder can — and goes through the
-//! exact same validation.
+//! exact same validation. The same JSON shape is the serve-mode wire
+//! format: a `{"op":"search","spec":{...}}` frame carries exactly a
+//! config-file body (per-tenant platform table included), validated
+//! server-side into typed error frames (see `serve::protocol`).
 //!
 //! Example:
 //! ```json

@@ -22,6 +22,9 @@ pub enum SearchError {
     /// Shared evaluation state (e.g. the EvalService result cache) was
     /// poisoned by a worker panic; partial results cannot be trusted.
     Poisoned(String),
+    /// The search was cancelled through its `CancelToken` (serve mode:
+    /// client `cancel` frame or disconnect) before producing a front.
+    Cancelled,
 }
 
 impl SearchError {
@@ -45,6 +48,20 @@ impl SearchError {
             SearchError::Eval(msg)
         }
     }
+
+    /// Stable machine-readable class, used by the serve protocol's error
+    /// frames (`{"event":"error","kind":...}`) so clients can match on
+    /// failure classes without parsing messages.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            SearchError::UnknownPlatform { .. } => "unknown_platform",
+            SearchError::InvalidSpec(_) => "invalid_spec",
+            SearchError::Config(_) => "config",
+            SearchError::Eval(_) => "eval",
+            SearchError::Poisoned(_) => "poisoned",
+            SearchError::Cancelled => "cancelled",
+        }
+    }
 }
 
 impl fmt::Display for SearchError {
@@ -59,6 +76,7 @@ impl fmt::Display for SearchError {
             SearchError::Config(msg) => write!(f, "config: {msg}"),
             SearchError::Eval(msg) => write!(f, "evaluation failed: {msg}"),
             SearchError::Poisoned(msg) => write!(f, "evaluation state poisoned: {msg}"),
+            SearchError::Cancelled => write!(f, "search cancelled"),
         }
     }
 }

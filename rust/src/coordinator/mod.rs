@@ -23,9 +23,10 @@ pub mod trainer;
 pub use beacon::{Beacon, BeaconDecision, BeaconManager, BeaconPolicy};
 pub use error::SearchError;
 pub use objective::{BoundObjective, Direction, HwMetrics, PlatformBinding, ScoredObjective};
-pub use problem::{EvalRecord, MohaqProblem};
+pub use problem::{EvalRecord, EvalStrategy, MohaqProblem};
 pub use session::{
-    baseline_rows, GenerationLog, SearchEvent, SearchOutcome, SearchSession, SolutionRow,
+    baseline_rows, CancelToken, GenerationLog, SearchEvent, SearchOutcome, SearchSession,
+    SolutionRow,
 };
 pub use spec::{BeaconPolicyOverrides, ExperimentSpec, ExperimentSpecBuilder};
 pub use trainer::{RetrainReport, Trainer};

@@ -33,12 +33,32 @@ use std::sync::Arc;
 use crate::coordinator::beacon::BeaconManager;
 use crate::coordinator::error::SearchError;
 use crate::coordinator::objective::{sram_violation_mb, BoundObjective, PlatformBinding};
+use crate::coordinator::session::CancelToken;
 use crate::coordinator::trainer::Trainer;
 use crate::eval::EvalService;
 use crate::moo::{Evaluation, Problem};
 use crate::quant::QuantConfig;
 use crate::runtime::Artifacts;
-use crate::util::pool::map_parallel;
+use crate::util::pool::{map_parallel, WorkQueue};
+
+/// How the parallel PTQ phase fans out over workers.
+#[derive(Clone)]
+pub enum EvalStrategy {
+    /// Scoped threads spawned per batch (offline searches).
+    Threads(usize),
+    /// A long-lived shared pool: batches from every concurrent search
+    /// interleave as one job stream (serve mode).
+    Shared(Arc<WorkQueue>),
+}
+
+impl EvalStrategy {
+    pub fn workers(&self) -> usize {
+        match self {
+            EvalStrategy::Threads(n) => *n,
+            EvalStrategy::Shared(q) => q.threads(),
+        }
+    }
+}
 
 /// Objective sentinel once the failure fuse has tripped: large but finite
 /// (crowding-distance math stays NaN-free), and infeasible so a sentinel
@@ -59,7 +79,9 @@ pub struct EvalRecord {
 
 pub struct MohaqProblem {
     pub arts: Arc<Artifacts>,
-    pub eval: EvalService,
+    /// Shared evaluation service — `Arc` so a long-lived session (serve
+    /// mode) keeps ONE PTQ cache across every request it runs.
+    pub eval: Arc<EvalService>,
     pub trainer: Option<Trainer>,
     pub beacons: Option<BeaconManager>,
     /// Distinct platform bindings the objectives reference; EVERY binding
@@ -72,8 +94,12 @@ pub struct MohaqProblem {
     pub err_limit: f64,
     /// Minimum gene value (SiLago lacks 2-bit => 2).
     pub gene_min: i64,
-    /// Worker threads for the PTQ evaluation phase (1 = sequential).
-    pub threads: usize,
+    /// How the PTQ evaluation phase fans out (scoped threads or a shared
+    /// serve-mode pool).
+    pub evaluator: EvalStrategy,
+    /// Cooperative cancellation: checked at every batch; tripping it
+    /// surfaces as `SearchError::Cancelled` through the failure fuse.
+    pub cancel: CancelToken,
     /// Every evaluation, in order (telemetry).
     pub records: Vec<EvalRecord>,
     /// First evaluation failure (the tripped fuse). `SearchSession` takes
@@ -174,9 +200,22 @@ impl MohaqProblem {
                 unique.push(i);
             }
         }
-        let eval = &self.eval;
-        let base_results: Vec<anyhow::Result<f64>> =
-            map_parallel(self.threads, &unique, |_, &i| eval.val_error(&qcs[i], 0));
+        let base_results: Vec<anyhow::Result<f64>> = match &self.evaluator {
+            EvalStrategy::Threads(threads) => {
+                let eval = &self.eval;
+                map_parallel(*threads, &unique, |_, &i| eval.val_error(&qcs[i], 0))
+            }
+            EvalStrategy::Shared(queue) => queue.run_batch(
+                unique
+                    .iter()
+                    .map(|&i| {
+                        let eval = self.eval.clone();
+                        let qc = qcs[i].clone();
+                        move || eval.val_error(&qc, 0)
+                    })
+                    .collect(),
+            ),
+        };
         let base_errs: Vec<f64> = base_results
             .into_iter()
             .map(|r| r.map_err(SearchError::eval))
@@ -216,6 +255,13 @@ impl Problem for MohaqProblem {
         self.objectives.iter().map(|o| o.label.clone()).collect()
     }
 
+    /// Engines stop their generation loop once the fuse tripped or the
+    /// run was cancelled — a long-lived server must not spin through the
+    /// remaining schedule on sentinels.
+    fn aborted(&self) -> bool {
+        self.failure.is_some() || self.cancel.is_cancelled()
+    }
+
     fn evaluate(&mut self, genome: &[i64]) -> Evaluation {
         self.evaluate_batch(std::slice::from_ref(&genome.to_vec()))
             .pop()
@@ -223,6 +269,12 @@ impl Problem for MohaqProblem {
     }
 
     fn evaluate_batch(&mut self, genomes: &[Vec<i64>]) -> Vec<Evaluation> {
+        // Cooperative cancellation rides the failure fuse: the engine keeps
+        // its infallible loop, every remaining candidate costs nothing, and
+        // the session surfaces `SearchError::Cancelled` after unwinding.
+        if self.failure.is_none() && self.cancel.is_cancelled() {
+            self.failure = Some(SearchError::Cancelled);
+        }
         if self.failure.is_some() {
             return genomes.iter().map(|_| self.sentinel()).collect();
         }

@@ -1,11 +1,23 @@
 //! `SearchSession`: the public entry point of the MOHAQ search. A session
-//! owns the shared artifacts (`Arc<Artifacts>`) and the PJRT runtime,
-//! evaluates each generation's population in parallel across a thread
-//! pool, streams progress through a `SearchEvent` callback, and returns a
-//! typed `SearchError` at the API boundary. It replaces the old one-shot
-//! `run_search` free function; re-running `run` on the same session reuses
-//! the runtime (each run compiles its own executable against the shared
-//! client).
+//! owns the shared artifacts (`Arc<Artifacts>`), the PJRT runtime and ONE
+//! shared `EvalService` (PTQ result cache); it evaluates each generation's
+//! population in parallel across a thread pool, streams progress through a
+//! `SearchEvent` callback, and returns a typed `SearchError` at the API
+//! boundary.
+//!
+//! Session reuse (serve mode): every `run` on the same session shares the
+//! compiled executable AND the memoized PTQ results — a second request
+//! re-scoring genomes an earlier request already evaluated is pure cache
+//! hits, even when the two requests bind different hardware platforms
+//! (the error cache is platform-independent; hardware objectives are
+//! analytical). `run_with` is `&self` and thread-safe, so concurrent
+//! requests can share one session; `shared_queue` additionally funnels
+//! their candidate evaluations through one long-lived worker pool.
+//! Per-run `SearchOutcome` stats are deltas against the shared service
+//! counters, reported next to a cumulative snapshot.
+//!
+//! Cancellation: `run_with_cancel` takes a [`CancelToken`]; tripping it
+//! aborts at the next evaluation batch with `SearchError::Cancelled`.
 //!
 //! Objectives are resolved through the typed pipeline
 //! (`spec.resolve_objectives()`): each hardware objective is bound to a
@@ -19,7 +31,9 @@
 //! computes order-independent pure values and the order-dependent beacon
 //! phase stays sequential (see `MohaqProblem::evaluate_batch`).
 
+use std::cmp::Ordering;
 use std::collections::HashMap;
+use std::sync::atomic::AtomicBool;
 use std::sync::{Arc, Mutex};
 
 use anyhow::Context;
@@ -27,16 +41,37 @@ use anyhow::Context;
 use super::beacon::{BeaconManager, BeaconPolicy};
 use super::error::SearchError;
 use super::objective::HwMetrics;
-use super::problem::MohaqProblem;
+use super::problem::{EvalStrategy, MohaqProblem};
 use super::spec::ExperimentSpec;
 use super::trainer::Trainer;
-use crate::eval::EvalService;
+use crate::eval::{EvalService, EvalStats};
 use crate::hw::Platform;
 use crate::moo::island::{front_hypervolume, IslandConfig, IslandEvent, IslandModel};
 use crate::moo::{Individual, Nsga2, Nsga2Config, Parallel, Problem, SyncProblem};
 use crate::quant::{Bits, QuantConfig};
 use crate::runtime::{Artifacts, Runtime};
-use crate::util::pool;
+use crate::util::pool::{self, WorkQueue};
+
+/// Cooperative cancellation handle: clone it, hand one side to
+/// `run_with_cancel`, call `cancel()` from any thread. The search aborts
+/// at its next evaluation batch with `SearchError::Cancelled` (no partial
+/// front is reported — partial populations are not Pareto sets).
+#[derive(Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    pub fn cancel(&self) {
+        self.0.store(true, std::sync::atomic::Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(std::sync::atomic::Ordering::SeqCst)
+    }
+}
 
 /// One row of a paper-style solutions table.
 #[derive(Debug, Clone)]
@@ -118,8 +153,19 @@ pub struct SearchOutcome {
     pub rows: Vec<SolutionRow>,
     pub history: Vec<GenerationLog>,
     pub evaluations: usize,
+    /// Service executions during this run's window (delta of the shared
+    /// counters — a reused session carries its cache across runs). NOTE:
+    /// on a session shared by CONCURRENT runs this is a service-wide
+    /// window delta, so it includes activity the other in-flight runs
+    /// performed meanwhile; it is exact when runs are serial.
     pub exec_calls: usize,
+    /// Cache hits during this run's window (same delta semantics as
+    /// `exec_calls`). On a reused session this includes hits on entries
+    /// earlier requests populated — the cross-request-reuse signal.
     pub cache_hits: usize,
+    /// Cumulative service counters at the end of this run (cross-run
+    /// totals plus the cache-poisoning marker).
+    pub eval_stats: EvalStats,
     pub beacons: Vec<(String, usize)>,
     /// All evaluation records (figures 9/10 scatter data).
     pub records: Vec<super::problem::EvalRecord>,
@@ -132,10 +178,20 @@ pub struct SearchOutcome {
 }
 
 /// A reusable handle for running MOHAQ searches over one artifact bundle.
+/// `run_with` is `&self` and thread-safe: serve mode shares one session
+/// (one compiled executable, one PTQ cache) across concurrent requests.
 pub struct SearchSession {
     arts: Arc<Artifacts>,
-    rt: Runtime,
+    /// `None` for synthetic sessions: the surrogate evaluator needs no
+    /// PJRT client, and the hermetic fallback must not pay for (or fail
+    /// on) one.
+    rt: Option<Runtime>,
+    eval: Arc<EvalService>,
     threads: usize,
+    /// When set, candidate evaluations go through this long-lived shared
+    /// pool instead of per-batch scoped threads (serve mode: batches from
+    /// every in-flight search interleave as one job stream).
+    queue: Option<Arc<WorkQueue>>,
 }
 
 impl SearchSession {
@@ -143,12 +199,44 @@ impl SearchSession {
     /// evaluation thread pool (one worker per core).
     pub fn new(arts: Arc<Artifacts>) -> Result<SearchSession, SearchError> {
         let rt = Runtime::cpu().map_err(SearchError::eval)?;
-        Ok(SearchSession::with_runtime(arts, rt))
+        SearchSession::with_runtime(arts, rt)
     }
 
-    /// Create a session around an existing runtime.
-    pub fn with_runtime(arts: Arc<Artifacts>, rt: Runtime) -> SearchSession {
-        SearchSession { arts, rt, threads: pool::default_threads() }
+    /// Create a session around an existing runtime. Compiles the eval
+    /// executable once; every `run` on this session shares it and the
+    /// PTQ result cache.
+    pub fn with_runtime(arts: Arc<Artifacts>, rt: Runtime) -> Result<SearchSession, SearchError> {
+        let eval = EvalService::new(&rt, arts.clone())
+            .context("creating eval service")
+            .map_err(SearchError::eval)?;
+        Ok(SearchSession {
+            arts,
+            rt: Some(rt),
+            eval: Arc::new(eval),
+            threads: pool::default_threads(),
+            queue: None,
+        })
+    }
+
+    /// Hermetic session: synthetic in-memory artifacts scored by the
+    /// closed-form surrogate evaluator (`EvalService::surrogate`) — no
+    /// AOT bundle, no files, and no PJRT runtime (the surrogate never
+    /// executes a graph, so the fallback cannot fail on client startup).
+    /// Serve mode and CI fall back to this so the full search/serve
+    /// stack runs end to end offline. Beacon retraining is unavailable
+    /// (it needs the runtime and the lowered train graph).
+    pub fn synthetic() -> Result<SearchSession, SearchError> {
+        let arts = Arc::new(Artifacts::synthetic());
+        let eval = EvalService::surrogate(arts.clone())
+            .context("creating surrogate eval service")
+            .map_err(SearchError::eval)?;
+        Ok(SearchSession {
+            arts,
+            rt: None,
+            eval: Arc::new(eval),
+            threads: pool::default_threads(),
+            queue: None,
+        })
     }
 
     /// Set the evaluation worker count (0 = auto; 1 = sequential). The
@@ -158,12 +246,27 @@ impl SearchSession {
         self
     }
 
+    /// Route candidate evaluations through a long-lived shared worker
+    /// pool. Fronts stay bitwise-identical to the scoped-thread path —
+    /// only the scheduling substrate changes.
+    pub fn shared_queue(mut self, queue: Arc<WorkQueue>) -> SearchSession {
+        self.queue = Some(queue);
+        self
+    }
+
     pub fn artifacts(&self) -> &Arc<Artifacts> {
         &self.arts
     }
 
-    pub fn runtime(&self) -> &Runtime {
-        &self.rt
+    /// The PJRT runtime; `None` on synthetic (surrogate) sessions.
+    pub fn runtime(&self) -> Option<&Runtime> {
+        self.rt.as_ref()
+    }
+
+    /// The shared evaluation service (cumulative cross-run stats live
+    /// here: `eval().stats()`).
+    pub fn eval(&self) -> &Arc<EvalService> {
+        &self.eval
     }
 
     /// Run a search, discarding progress events.
@@ -176,23 +279,50 @@ impl SearchSession {
     pub fn run_with(
         &self,
         spec: &ExperimentSpec,
+        on_event: impl FnMut(&SearchEvent),
+    ) -> Result<SearchOutcome, SearchError> {
+        self.run_with_cancel(spec, on_event, &CancelToken::new())
+    }
+
+    /// `run_with` plus cooperative cancellation: when `cancel` trips, the
+    /// search aborts at its next evaluation batch and returns
+    /// `SearchError::Cancelled`.
+    pub fn run_with_cancel(
+        &self,
+        spec: &ExperimentSpec,
         mut on_event: impl FnMut(&SearchEvent),
+        cancel: &CancelToken,
     ) -> Result<SearchOutcome, SearchError> {
         let t0 = std::time::Instant::now();
         let arts = self.arts.clone();
-        let eval = EvalService::new(&self.rt, arts.clone())
-            .context("creating eval service")
-            .map_err(SearchError::eval)?;
+        let eval = self.eval.clone();
+        // Per-run stats are deltas against the shared service counters
+        // (one cache serves every run of this session).
+        let stats0 = eval.stats();
         let (objectives, bindings) = spec.resolve_objectives()?;
         // The genome obeys the INTERSECTION of platform restrictions: any
         // tying platform ties it, and the floor precision is the highest
         // minimum across bindings (SiLago lacks 2-bit => 2).
         let tied = spec.tied.unwrap_or_else(|| bindings.iter().any(|b| b.platform.tied_wa()));
-        let gene_min = bindings
-            .iter()
-            .map(|b| b.platform.supported_bits().iter().map(|bit| bit.to_gene()).min().unwrap())
-            .max()
-            .unwrap_or(1);
+        let mut gene_min = 1;
+        for b in &bindings {
+            // The registry rejects empty supported_bits at resolve time;
+            // keep a typed error here as defense in depth (a long-lived
+            // server must not panic on a hand-built binding).
+            let min = b
+                .platform
+                .supported_bits()
+                .iter()
+                .map(|bit| bit.to_gene())
+                .min()
+                .ok_or_else(|| {
+                    SearchError::invalid(format!(
+                        "platform '{}' declares no supported precisions",
+                        b.name
+                    ))
+                })?;
+            gene_min = gene_min.max(min);
+        }
         let err_limit = arts.baseline.val_err_16bit + spec.err_feasible_pp / 100.0;
 
         let beacon_sink = Arc::new(Mutex::new(Vec::new()));
@@ -210,7 +340,13 @@ impl SearchSession {
             if let Some(m) = ov.max_beacons {
                 policy.max_beacons = m;
             }
-            let trainer = Trainer::new(&self.rt, arts.clone(), spec.ga.seed ^ 0xbeac0)
+            let rt = self.rt.as_ref().ok_or_else(|| {
+                SearchError::invalid(
+                    "beacon retraining requires a PJRT runtime; synthetic \
+                     (surrogate) sessions have none",
+                )
+            })?;
+            let trainer = Trainer::new(rt, arts.clone(), spec.ga.seed ^ 0xbeac0)
                 .map_err(SearchError::eval)?;
             (
                 Some(trainer),
@@ -220,6 +356,10 @@ impl SearchSession {
             (None, None)
         };
 
+        let evaluator = match &self.queue {
+            Some(q) => EvalStrategy::Shared(q.clone()),
+            None => EvalStrategy::Threads(self.threads),
+        };
         let mut problem = MohaqProblem {
             arts: arts.clone(),
             eval,
@@ -230,7 +370,8 @@ impl SearchSession {
             tied,
             err_limit,
             gene_min,
-            threads: self.threads,
+            evaluator,
+            cancel: cancel.clone(),
             records: Vec::new(),
             failure: None,
         };
@@ -239,7 +380,10 @@ impl SearchSession {
             name: spec.name.clone(),
             num_vars: problem.num_vars(),
             objectives: problem.objective_names(),
-            threads: self.threads,
+            // The ACTIVE evaluator's worker count: the shared serve-mode
+            // pool when routed there, the session's scoped-thread setting
+            // otherwise.
+            threads: problem.evaluator.workers(),
             islands: spec.island.as_ref().map_or(1, |c| c.islands),
         });
 
@@ -294,22 +438,21 @@ impl SearchSession {
         }));
         let (pop, evaluations) = match run {
             Ok(result) => result,
-            Err(payload) => {
-                let msg = payload
-                    .downcast_ref::<String>()
-                    .cloned()
-                    .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
-                    .unwrap_or_else(|| "search evaluation panicked".into());
-                // A poisoned shared cache gets its own variant so callers
-                // can tell worker crashes from evaluation failures.
-                return Err(SearchError::from_panic(msg));
-            }
+            // A poisoned shared cache gets its own variant so callers
+            // can tell worker crashes from evaluation failures.
+            Err(payload) => return Err(SearchError::from_panic(pool::panic_message(payload))),
         };
         // Evaluation failures trip the problem's fuse instead of
         // panicking in the worker pool; surface the stored typed error
         // now that the engine has unwound.
         if let Some(e) = problem.failure.take() {
             return Err(e);
+        }
+        // The engine may also have stopped via `Problem::aborted` between
+        // generations, before any batch saw the token — a cancelled run
+        // never reports a (partial) front.
+        if cancel.is_cancelled() {
+            return Err(SearchError::Cancelled);
         }
 
         // ---- Post-process the Pareto set into report rows ----------------
@@ -351,7 +494,7 @@ impl SearchSession {
                 wer_t,
             });
         }
-        rows.sort_by(|a, b| a.wer_v.partial_cmp(&b.wer_v).unwrap());
+        sort_rows_nan_last(&mut rows);
 
         let stats = problem.eval.stats();
         let outcome = SearchOutcome {
@@ -360,8 +503,9 @@ impl SearchSession {
             rows,
             history,
             evaluations,
-            exec_calls: stats.executions,
-            cache_hits: stats.cache_hits,
+            exec_calls: stats.executions - stats0.executions,
+            cache_hits: stats.cache_hits - stats0.cache_hits,
+            eval_stats: stats,
             beacons: problem
                 .beacons
                 .as_ref()
@@ -419,6 +563,20 @@ impl SearchSession {
         let pop = model.run(&mut wrapped, |_| {});
         Nsga2::pareto_set(&pop)
     }
+}
+
+/// Order report rows by validation error, NaN rows last. A degenerate
+/// evaluation (e.g. an all-NaN surrogate or a broken artifact) used to
+/// panic the whole session here via `partial_cmp(..).unwrap()` — fatal
+/// for a long-lived server. NaN rows are kept (visible in the report)
+/// but sort after every real number.
+pub(crate) fn sort_rows_nan_last(rows: &mut [SolutionRow]) {
+    rows.sort_by(|a, b| match (a.wer_v.is_nan(), b.wer_v.is_nan()) {
+        (false, false) => a.wer_v.partial_cmp(&b.wer_v).unwrap_or(Ordering::Equal),
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
+    });
 }
 
 /// Drain pending beacon notifications, then emit one generation summary
@@ -487,4 +645,52 @@ pub fn baseline_rows(arts: &Artifacts) -> Vec<SolutionRow> {
             param_set: "baseline".into(),
         },
     ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(wer_v: f64) -> SolutionRow {
+        SolutionRow {
+            qc: QuantConfig::uniform(2, Bits::B8, Bits::B8),
+            wer_v,
+            wer_t: wer_v,
+            cp_r: 4.0,
+            size_mb: 1.0,
+            speedup: None,
+            energy_uj: None,
+            hw: Vec::new(),
+            param_set: "baseline".into(),
+        }
+    }
+
+    #[test]
+    fn final_report_sort_survives_nan_rows() {
+        // Regression: `partial_cmp(..).unwrap()` panicked on the first NaN
+        // from a degenerate evaluation. NaN rows now sort last; real rows
+        // keep ascending order.
+        let mut rows = vec![row(0.30), row(f64::NAN), row(0.10), row(f64::NAN), row(0.20)];
+        sort_rows_nan_last(&mut rows);
+        let order: Vec<f64> = rows.iter().map(|r| r.wer_v).collect();
+        assert_eq!(&order[..3], &[0.10, 0.20, 0.30]);
+        assert!(order[3].is_nan() && order[4].is_nan());
+    }
+
+    #[test]
+    fn session_is_send_sync() {
+        // Serve mode shares one session across connection threads.
+        fn check<T: Send + Sync>() {}
+        check::<SearchSession>();
+        check::<CancelToken>();
+    }
+
+    #[test]
+    fn cancel_token_round_trip() {
+        let t = CancelToken::new();
+        assert!(!t.is_cancelled());
+        let clone = t.clone();
+        clone.cancel();
+        assert!(t.is_cancelled(), "clones share the flag");
+    }
 }

@@ -17,6 +17,14 @@
 //! retraining registers additional sets (paper §4.3). All sets stay
 //! resident on the PJRT device so per-eval upload cost is only the quant
 //! params + data batch.
+//!
+//! Two engines share this surface:
+//!   * [`EvalService::new`] — the PJRT path over the AOT executable;
+//!   * [`EvalService::surrogate`] — a hermetic closed-form error model
+//!     (no runtime, no artifacts on disk) with the same cache, counters
+//!     and determinism contract. Serve mode and CI fall back to it when
+//!     no bundle is present, so the full search/serve stack exercises
+//!     end to end offline.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -66,13 +74,21 @@ impl<K: std::hash::Hash + Eq, V: Clone> ResultCache<K, V> {
         Ok(())
     }
 
-    /// Entry count; 0 when the lock is poisoned (stats stay best-effort).
-    pub fn len(&self) -> usize {
-        self.inner.lock().map(|g| g.len()).unwrap_or(0)
+    /// Entry count, or `None` when the lock is poisoned. Reporting
+    /// `Some(0)` for a poisoned cache made post-incident `EvalStats` lie
+    /// ("0 unique solutions" after thousands of evaluations); the marker
+    /// lets stats carry the poisoning explicitly.
+    pub fn len(&self) -> Option<usize> {
+        self.inner.lock().map(|g| g.len()).ok()
+    }
+
+    /// Whether a worker panicked while holding the lock.
+    pub fn poisoned(&self) -> bool {
+        self.inner.is_poisoned()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.len() == Some(0)
     }
 
     /// Poison the lock by panicking while holding it — the regression
@@ -93,15 +109,32 @@ impl<K: std::hash::Hash + Eq, V: Clone> Default for ResultCache<K, V> {
     }
 }
 
+/// Cumulative service counters. With a shared service (serve mode, session
+/// reuse) these are CROSS-REQUEST totals; `SearchOutcome` reports per-run
+/// deltas next to a snapshot of these.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct EvalStats {
     pub executions: usize,
     pub cache_hits: usize,
+    /// Distinct (param-set, genome) keys memoized; 0 while `poisoned`.
     pub unique_solutions: usize,
+    /// True when the result cache was poisoned by a worker panic —
+    /// `unique_solutions` can no longer be trusted (post-incident stats
+    /// must not silently read as "empty cache").
+    pub poisoned: bool,
+}
+
+/// How candidate errors are produced.
+enum Engine {
+    /// The AOT inference executable on a PJRT client.
+    Pjrt(Executor),
+    /// Hermetic closed-form error model (see `surrogate_val_error`).
+    Surrogate,
 }
 
 pub struct EvalService {
     pub arts: Arc<Artifacts>,
-    exec: Executor,
+    engine: Engine,
     param_sets: RwLock<Vec<Arc<ParamSet>>>,
     cache: ResultCache<CacheKey, f64>,
     executions: AtomicUsize,
@@ -122,9 +155,22 @@ impl EvalService {
             _ => "infer_ref",
         };
         let exec = rt.load(arts.hlo_path(which).or_else(|_| arts.hlo_path("infer"))?)?;
+        EvalService::with_engine(arts, Engine::Pjrt(exec))
+    }
+
+    /// Hermetic engine: candidate errors come from a deterministic
+    /// closed-form model of PTQ degradation instead of the AOT executable
+    /// (no PJRT, no files). Same cache, counters, and `Send + Sync`
+    /// contract — the search and serve stacks cannot tell the difference,
+    /// which is exactly what lets CI drive them end to end offline.
+    pub fn surrogate(arts: Arc<Artifacts>) -> Result<EvalService> {
+        EvalService::with_engine(arts, Engine::Surrogate)
+    }
+
+    fn with_engine(arts: Arc<Artifacts>, engine: Engine) -> Result<EvalService> {
         let svc = EvalService {
             arts: arts.clone(),
-            exec,
+            engine,
             param_sets: RwLock::new(Vec::new()),
             cache: ResultCache::new(),
             executions: AtomicUsize::new(0),
@@ -135,6 +181,11 @@ impl EvalService {
         Ok(svc)
     }
 
+    /// Whether this service evaluates through the hermetic surrogate.
+    pub fn is_surrogate(&self) -> bool {
+        matches!(self.engine, Engine::Surrogate)
+    }
+
     /// Register a parameter set (e.g. a retrained beacon); returns its id.
     pub fn add_param_set(&self, name: &str, host: Vec<Vec<f32>>) -> Result<usize> {
         anyhow::ensure!(
@@ -143,11 +194,14 @@ impl EvalService {
             host.len(),
             self.arts.tensors.len()
         );
-        let mut bufs = Vec::with_capacity(host.len());
-        for (data, info) in host.iter().zip(&self.arts.tensors) {
-            let shape: Vec<i64> = info.shape.iter().map(|&d| d as i64).collect();
-            // Scalars/1-D keep their manifest shape.
-            bufs.push(self.exec.upload(&Input::F32(data, shape))?);
+        let mut bufs = Vec::new();
+        if let Engine::Pjrt(exec) = &self.engine {
+            bufs.reserve(host.len());
+            for (data, info) in host.iter().zip(&self.arts.tensors) {
+                let shape: Vec<i64> = info.shape.iter().map(|&d| d as i64).collect();
+                // Scalars/1-D keep their manifest shape.
+                bufs.push(exec.upload(&Input::F32(data, shape))?);
+            }
         }
         let mut sets = self.param_sets.write().expect("param sets poisoned");
         sets.push(Arc::new(ParamSet { name: name.to_string(), host, bufs }));
@@ -166,7 +220,8 @@ impl EvalService {
         EvalStats {
             executions: self.executions.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
-            unique_solutions: self.cache.len(),
+            unique_solutions: self.cache.len().unwrap_or(0),
+            poisoned: self.cache.poisoned(),
         }
     }
 
@@ -174,8 +229,57 @@ impl EvalService {
         resolve_qparams(qc, &self.arts.layer_names, &self.arts.w_clips, &self.arts.a_clips)
     }
 
+    /// Deterministic closed-form PTQ error for the surrogate engine.
+    ///
+    /// Shaped after the empirical behavior of the real pipeline: the error
+    /// starts at the 16-bit baseline and each layer adds a penalty that
+    /// shrinks quadratically with precision (quantization MSE ~ 2^-2b),
+    /// weighted by the layer's share of the model size. Weight precision
+    /// dominates; activations contribute ~30%. A small FNV-hash term keyed
+    /// by (set, genome) breaks ties so fronts stay diverse. Pure function
+    /// of its inputs — bitwise identical across runs, threads, platforms.
+    fn surrogate_val_error(&self, qc: &QuantConfig, set: usize) -> f64 {
+        let model = &self.arts.model;
+        let total_bits = model.baseline_size_bits() as f64;
+        let penalty = |b: Bits| -> f64 {
+            match b {
+                Bits::B2 => 0.50,
+                Bits::B4 => 0.12,
+                Bits::B8 => 0.02,
+                Bits::B16 => 0.002,
+                Bits::B32 => 0.0,
+            }
+        };
+        let mut err = self.arts.baseline.val_err_16bit;
+        for (i, (wb, ab)) in qc.w_bits.iter().zip(&qc.a_bits).enumerate() {
+            let frac = model.layers[i].matrix_weights() as f64 * 32.0 / total_bits;
+            err += frac * (penalty(*wb) + 0.3 * penalty(*ab));
+        }
+        // FNV-1a over (set, genes): deterministic jitter in [0, 0.002).
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut mix = |v: u64| {
+            h ^= v;
+            h = h.wrapping_mul(0x100000001b3);
+        };
+        mix(set as u64);
+        for (wb, ab) in qc.w_bits.iter().zip(&qc.a_bits) {
+            mix(wb.bits() as u64);
+            mix(ab.bits() as u64 + 97);
+        }
+        err + (h % 1000) as f64 * 2.0e-6
+    }
+
     /// (err_count, total, loss_sum) accumulated over every batch of a split.
     fn run_split(&self, qc: &QuantConfig, set: usize, split: &Split) -> Result<(f64, f64, f64)> {
+        let Engine::Pjrt(exec) = &self.engine else {
+            // Surrogate: one "execution" per split, errors from the
+            // closed-form model (counted so cache-hit accounting and the
+            // stats surface behave identically to the PJRT path).
+            self.executions.fetch_add(1, Ordering::Relaxed);
+            let err = self.surrogate_val_error(qc, set);
+            let total = split.num_seqs.max(1) as f64;
+            return Ok((err * total, total, err * 3.0));
+        };
         let a = &self.arts;
         let (b, t, f) = (a.batch, a.seq_len, a.feat_dim);
         let n_layers = a.layer_names.len() as i64;
@@ -193,8 +297,7 @@ impl EvalService {
                 Input::F32(x, vec![b as i64, t as i64, f as i64]),
                 Input::I32(y, vec![b as i64, t as i64]),
             ];
-            let out = self
-                .exec
+            let out = exec
                 .run_mixed(&params.bufs, &fresh)
                 .with_context(|| format!("infer exec, set {set}"))?;
             err += scalar_f32(&out[0])? as f64;
@@ -269,16 +372,44 @@ mod tests {
     fn result_cache_round_trips_until_poisoned() {
         let cache: ResultCache<u32, f64> = ResultCache::new();
         assert!(cache.is_empty());
+        assert!(!cache.poisoned());
         cache.insert(7, 0.25).unwrap();
         assert_eq!(cache.get(&7).unwrap(), Some(0.25));
         assert_eq!(cache.get(&8).unwrap(), None);
-        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.len(), Some(1));
 
         cache.poison_for_test();
         let err = cache.get(&7).unwrap_err();
         assert!(err.to_string().contains("poisoned"), "{err}");
         assert!(cache.insert(9, 1.0).is_err());
-        assert_eq!(cache.len(), 0, "stats degrade to zero, not panic");
+        // Regression: a poisoned cache used to report len() == 0, making
+        // post-incident stats read as "empty cache" instead of "cannot
+        // trust the count". The marker is explicit now.
+        assert_eq!(cache.len(), None, "poisoned cache must not claim a count");
+        assert!(cache.poisoned());
+        assert!(!cache.is_empty(), "unknown size is not 'empty'");
+    }
+
+    #[test]
+    fn surrogate_engine_is_deterministic_monotone_and_cached() {
+        let arts = Arc::new(Artifacts::synthetic());
+        let svc = EvalService::surrogate(arts.clone()).unwrap();
+        assert!(svc.is_surrogate());
+        let n = arts.layer_names.len();
+        let e16 = svc.val_error(&QuantConfig::uniform(n, Bits::B16, Bits::B16), 0).unwrap();
+        let e8 = svc.val_error(&QuantConfig::uniform(n, Bits::B8, Bits::B8), 0).unwrap();
+        let e2 = svc.val_error(&QuantConfig::uniform(n, Bits::B2, Bits::B2), 0).unwrap();
+        assert!(e16 < e8 && e8 < e2, "penalty must grow as precision drops: {e16} {e8} {e2}");
+        assert!(e16 >= arts.baseline.val_err_16bit);
+        // Cached on repeat, bitwise identical across a fresh service.
+        let before = svc.stats().executions;
+        let again = svc.val_error(&QuantConfig::uniform(n, Bits::B16, Bits::B16), 0).unwrap();
+        assert_eq!(again.to_bits(), e16.to_bits());
+        assert_eq!(svc.stats().executions, before);
+        assert!(svc.stats().cache_hits > 0);
+        let svc2 = EvalService::surrogate(arts.clone()).unwrap();
+        let fresh = svc2.val_error(&QuantConfig::uniform(n, Bits::B16, Bits::B16), 0).unwrap();
+        assert_eq!(fresh.to_bits(), e16.to_bits());
     }
 
     #[test]

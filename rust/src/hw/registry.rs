@@ -155,14 +155,29 @@ where
 }
 
 /// Resolve a spec into a live platform, or a helpful error naming the
-/// registered platforms.
+/// registered platforms. A platform whose `supported_bits()` is empty is
+/// rejected HERE, at the registry boundary — the coordinator derives the
+/// genome's lower bound from that list and used to panic mid-search
+/// (`min().unwrap()` on the empty iterator) when a custom backend
+/// declared no precisions.
 pub fn resolve(spec: &PlatformSpec) -> Result<SharedPlatform, RegistryError> {
     let factory = {
         let map = registry().read().expect("platform registry poisoned");
         map.get(&spec.name.to_lowercase()).cloned()
     };
     match factory {
-        Some(f) => f(spec),
+        Some(f) => {
+            let platform = f(spec)?;
+            if platform.supported_bits().is_empty() {
+                return Err(RegistryError::Invalid(format!(
+                    "platform '{}' declares no supported precisions \
+                     (supported_bits() is empty); a search over it cannot \
+                     derive a genome range",
+                    spec.name
+                )));
+            }
+            Ok(platform)
+        }
         None => Err(RegistryError::Unknown { name: spec.name.clone(), known: known_platforms() }),
     }
 }
@@ -231,6 +246,39 @@ mod tests {
         let p = resolve(&PlatformSpec::new("flat-test")).unwrap();
         assert_eq!(p.name(), "flat-test");
         assert!(known_platforms().contains(&"flat-test".to_string()));
+    }
+
+    #[test]
+    fn empty_bits_platform_rejected_at_resolve_time() {
+        // Regression: a registered platform with an empty supported_bits
+        // list used to resolve fine and then panic mid-search when the
+        // session derived the genome lower bound (min().unwrap() on an
+        // empty iterator). It must be rejected at the registry boundary.
+        struct NoBits;
+        impl Platform for NoBits {
+            fn name(&self) -> &str {
+                "no-bits"
+            }
+            fn supported_bits(&self) -> &[Bits] {
+                &[]
+            }
+            fn tied_wa(&self) -> bool {
+                false
+            }
+            fn speedup(&self, _: &ModelDesc, _: &QuantConfig) -> f64 {
+                1.0
+            }
+            fn energy_pj(&self, _: &ModelDesc, _: &QuantConfig) -> Option<f64> {
+                None
+            }
+            fn sram_bytes(&self) -> Option<f64> {
+                None
+            }
+        }
+        register("no-bits", |_| Ok(Arc::new(NoBits)));
+        let err = resolve(&PlatformSpec::new("no-bits")).unwrap_err();
+        assert!(matches!(err, RegistryError::Invalid(_)), "{err:?}");
+        assert!(err.to_string().contains("no supported precisions"), "{err}");
     }
 
     #[test]

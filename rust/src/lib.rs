@@ -11,9 +11,13 @@
 //!     against several registered platforms at once.
 //!   * [`ExperimentSpec::builder`] — validated, JSON-round-trippable
 //!     experiment descriptions.
-//!   * [`SearchSession`] — owns `Arc<Artifacts>`, evaluates populations
-//!     across a thread pool (deterministic per seed for any thread
-//!     count), streams [`SearchEvent`]s, returns typed [`SearchError`]s.
+//!   * [`SearchSession`] — owns `Arc<Artifacts>` plus ONE shared
+//!     `EvalService`, evaluates populations across a thread pool
+//!     (deterministic per seed for any thread count), streams
+//!     [`SearchEvent`]s, returns typed [`SearchError`]s; reusable (and
+//!     thread-safe) across runs, which is what [`serve`] builds on.
+//!   * [`serve`] — `mohaq serve`: the long-lived search service (PR 5),
+//!     sharing one session + PTQ cache across concurrent TCP clients.
 
 pub mod config;
 pub mod coordinator;
@@ -25,6 +29,7 @@ pub mod moo;
 pub mod pareto;
 pub mod quant;
 pub mod report;
+pub mod serve;
 pub mod util;
 
 pub use coordinator::{

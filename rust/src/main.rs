@@ -35,6 +35,7 @@ commands:
   platforms   list registered hardware platforms
   eval        score one quantization config
   search      run a full experiment through a SearchSession
+  serve       long-lived search service over a shared session (TCP)
   help        show this message
 
 global options:
@@ -86,6 +87,56 @@ island model (population scaling; front is identical for any thread count):
   --migration-interval M exchange elites every M generations (default 5)
   --topology T           migration topology: ring | full (default ring)
   --migrants N           elites sent per source island (default 2)";
+
+const SERVE_USAGE: &str = "\
+usage: mohaq serve [--addr HOST:PORT] [--artifacts DIR] [--threads N]
+
+Run a long-lived search service over ONE shared SearchSession: requests
+arrive as line-delimited JSON over TCP (see serve::protocol), each
+carrying its own ExperimentSpec — platform table, objectives, GA
+settings. The compiled artifacts and the platform-independent PTQ result
+cache are shared across requests, so concurrent tenants searching
+different hardware reuse each other's candidate evaluations; all
+in-flight searches fan out across one evaluation worker pool.
+
+Without an artifact bundle the server falls back to the hermetic
+surrogate evaluator (synthetic model, closed-form errors) — handy for
+protocol work and CI.
+
+options:
+  --addr HOST:PORT  listen address (default 127.0.0.1:7070; port 0 picks
+                    an ephemeral port and prints it)
+  --artifacts DIR   artifact bundle to serve (default: artifacts). When
+                    DIR/manifest.json is missing the server falls back
+                    to the hermetic surrogate evaluator and says so.
+  --threads N       evaluation pool workers shared by all requests
+                    (0 = one per core)
+
+Drive it with examples/serve_quickstart.rs:
+  cargo run --release --example serve_quickstart -- --addr 127.0.0.1:7070";
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    if args.has("help") {
+        println!("{SERVE_USAGE}");
+        return Ok(());
+    }
+    let dir = args.get_or("artifacts", "artifacts");
+    let session = if std::path::Path::new(dir).join("manifest.json").exists() {
+        let arts = Arc::new(mohaq::runtime::Artifacts::load(dir)?);
+        println!("serving artifact bundle at {dir}");
+        SearchSession::new(arts)?
+    } else {
+        println!("no artifact bundle at {dir}; serving the hermetic surrogate evaluator");
+        SearchSession::synthetic()?
+    };
+    let state = mohaq::serve::ServeState::new(session, args.get_usize("threads", 0));
+    let server = mohaq::serve::Server::bind(args.get_or("addr", "127.0.0.1:7070"), state)?;
+    println!("mohaq serve: listening on {}", server.local_addr()?);
+    println!("(send {{\"op\":\"shutdown\"}} on any connection to stop)");
+    server.run()?;
+    println!("mohaq serve: shut down cleanly");
+    Ok(())
+}
 
 fn parse_bits_list(s: &str, n: usize) -> Result<Vec<Bits>> {
     let parsed: Vec<Bits> = s
@@ -369,6 +420,7 @@ fn main() -> Result<()> {
         "platforms" => cmd_platforms(),
         "eval" => cmd_eval(&args),
         "search" => cmd_search(&args),
+        "serve" => cmd_serve(&args),
         "help" => {
             println!("{USAGE}");
             Ok(())

@@ -218,6 +218,12 @@ impl IslandModel {
         }
 
         for gen in 1..=generations {
+            // Stop the archipelago early once the problem's fuse tripped
+            // (evaluation failure or cancellation) — everything after
+            // would be sentinel work the caller discards.
+            if problem.aborted() {
+                break;
+            }
             let mut children: Vec<Vec<Vec<i64>>> = Vec::with_capacity(k);
             for (isl, pop) in self.islands.iter_mut().zip(&pops) {
                 children.push(isl.offspring_genomes(&*problem, pop));

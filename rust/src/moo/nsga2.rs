@@ -215,6 +215,12 @@ impl Nsga2 {
         observer(&GenerationStats { generation: 0, evaluations: self.evaluations, population: &pop });
 
         for gen in 1..=self.config.generations {
+            // A tripped fuse / cancellation makes every further evaluation
+            // a sentinel; stop the loop instead of spinning through the
+            // remaining schedule (the caller discards the population).
+            if problem.aborted() {
+                break;
+            }
             let children = self.offspring_genomes(problem, &pop);
             let offspring = self.evaluate_all(problem, children);
             let mut pool = pop;

@@ -31,6 +31,15 @@ pub trait Problem {
     fn var_range(&self, i: usize) -> (i64, i64);
     fn evaluate(&mut self, genome: &[i64]) -> Evaluation;
 
+    /// Whether further evaluation is pointless (a failure fuse tripped or
+    /// the search was cancelled). Engines poll this between generations
+    /// and stop the loop early — a long-lived server must not spin
+    /// through thousands of remaining sentinel generations after a
+    /// cancellation. Default: never.
+    fn aborted(&self) -> bool {
+        false
+    }
+
     /// Evaluate one generation's worth of genomes. The engine always calls
     /// this (never `evaluate` directly), so implementations that can fan
     /// evaluation out — `coordinator::MohaqProblem` across its PJRT thread

@@ -231,6 +231,87 @@ impl Artifacts {
         })
     }
 
+    /// A hermetic in-memory bundle for serve mode and tests: the paper's
+    /// model geometry (Table 4 dims) with tiny deterministic weights,
+    /// minimal corpus splits, and calibration clips for every searchable
+    /// precision. No files are read or written; paired with
+    /// `EvalService::surrogate` it lets the full search/serve stack run
+    /// without the Python AOT pipeline. `hlo_path` deliberately errors —
+    /// there is no executable to load.
+    pub fn synthetic() -> Artifacts {
+        let model = ModelDesc::paper();
+        let layer_names: Vec<String> = model.layers.iter().map(|l| l.name.clone()).collect();
+
+        // One tiny tensor per layer; values from a splitmix-style stream
+        // so the bundle is identical on every build.
+        let mut state: u64 = 0x5EED_A27_1F4C5;
+        let mut next = move || {
+            state = state.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = state;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            ((z >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+        };
+        let mut tensors = Vec::new();
+        let mut weights = Vec::new();
+        let mut offset = 0usize;
+        for name in &layer_names {
+            let shape = vec![2usize, 2];
+            let data: Vec<f32> = (0..4).map(|_| next()).collect();
+            tensors.push(TensorInfo {
+                name: format!("{name}_w"),
+                shape,
+                offset,
+                bytes: 16,
+            });
+            offset += 16;
+            weights.push(data);
+        }
+
+        let clips = || -> ClipTable {
+            layer_names
+                .iter()
+                .map(|name| {
+                    (name.clone(), [2u32, 4, 8, 16, 32].iter().map(|&b| (b, 1.0)).collect())
+                })
+                .collect()
+        };
+        let w_clips = clips();
+        let a_clips = clips();
+
+        let (batch, seq_len, feat_dim) = (2usize, 4usize, 3usize);
+        let split = |num_seqs: usize| Split {
+            x: vec![0.0; num_seqs * seq_len * feat_dim],
+            y: vec![0; num_seqs * seq_len],
+            num_seqs,
+        };
+
+        Artifacts {
+            dir: PathBuf::from("<synthetic>"),
+            manifest: Json::Null,
+            layer_names,
+            model,
+            tensors,
+            weights,
+            w_clips,
+            a_clips,
+            batch,
+            seq_len,
+            feat_dim,
+            num_classes: 5,
+            train: split(2),
+            val_subsets: vec![split(2), split(2)],
+            test: split(2),
+            baseline: BaselineMetrics {
+                val_err_subsets: vec![0.154, 0.156],
+                val_err: 0.155,
+                test_err: 0.158,
+                val_err_16bit: 0.16,
+                beacon_lr: 1e-3,
+            },
+        }
+    }
+
     pub fn hlo_path(&self, which: &str) -> Result<PathBuf> {
         let file = self
             .manifest

@@ -1,0 +1,186 @@
+//! Minimal blocking client for the serve protocol — used by the example
+//! driver, the serve tests and the CI smoke job, and small enough to
+//! transliterate into any language that can speak line-delimited JSON.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use super::protocol::{Frame, FrontRow, Request, ServerStats};
+use crate::coordinator::ExperimentSpec;
+
+/// Client-side failure classes.
+#[derive(Debug)]
+pub enum ClientError {
+    Io(std::io::Error),
+    /// The server sent something the protocol module cannot parse, or
+    /// closed the connection mid-request.
+    Protocol(String),
+    /// The server reported a search failure (typed `kind` — e.g.
+    /// `invalid_spec`, `cancelled`, `poisoned` — plus the message).
+    Server { kind: String, message: String },
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Io(e) => write!(f, "io: {e}"),
+            ClientError::Protocol(msg) => write!(f, "protocol: {msg}"),
+            ClientError::Server { kind, message } => write!(f, "server error [{kind}]: {message}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+impl From<std::io::Error> for ClientError {
+    fn from(e: std::io::Error) -> ClientError {
+        ClientError::Io(e)
+    }
+}
+
+/// The terminal result of one search request.
+#[derive(Debug, Clone)]
+pub struct SearchReply {
+    pub id: u64,
+    pub objectives: Vec<String>,
+    pub rows: Vec<FrontRow>,
+    pub evaluations: usize,
+    /// Executions / cache hits during THIS request on the server's shared
+    /// cache (hits on entries other requests populated count — the
+    /// cross-request reuse signal).
+    pub exec_calls: usize,
+    pub cache_hits: usize,
+    pub wall_secs: f64,
+    pub hypervolume: Option<f64>,
+    /// Generation frames streamed before the front arrived.
+    pub generations: usize,
+}
+
+/// One connection to a `mohaq serve` server.
+pub struct ServeClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: u64,
+}
+
+impl ServeClient {
+    pub fn connect(addr: impl ToSocketAddrs) -> std::io::Result<ServeClient> {
+        let writer = TcpStream::connect(addr)?;
+        let reader = BufReader::new(writer.try_clone()?);
+        Ok(ServeClient { reader, writer, next_id: 1 })
+    }
+
+    /// Retry `connect` until `timeout` elapses — for drivers that race a
+    /// freshly spawned server process (the CI smoke job).
+    pub fn connect_retry(addr: &str, timeout: Duration) -> std::io::Result<ServeClient> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match ServeClient::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) if Instant::now() >= deadline => return Err(e),
+                Err(_) => std::thread::sleep(Duration::from_millis(100)),
+            }
+        }
+    }
+
+    fn send(&mut self, request: &Request) -> std::io::Result<()> {
+        let mut line = request.to_line();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.flush()
+    }
+
+    fn read_frame(&mut self) -> Result<Frame, ClientError> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        if n == 0 {
+            return Err(ClientError::Protocol("server closed the connection".into()));
+        }
+        Frame::parse(&line).map_err(|e| ClientError::Protocol(e.message))
+    }
+
+    pub fn ping(&mut self) -> Result<(), ClientError> {
+        self.send(&Request::Ping)?;
+        match self.read_frame()? {
+            Frame::Pong => Ok(()),
+            other => Err(ClientError::Protocol(format!("expected pong, got {other:?}"))),
+        }
+    }
+
+    pub fn server_stats(&mut self) -> Result<ServerStats, ClientError> {
+        self.send(&Request::Stats)?;
+        match self.read_frame()? {
+            Frame::Stats(s) => Ok(s),
+            other => Err(ClientError::Protocol(format!("expected stats, got {other:?}"))),
+        }
+    }
+
+    /// Ask the server to stop; resolves once the server confirms.
+    pub fn shutdown(&mut self) -> Result<(), ClientError> {
+        self.send(&Request::Shutdown)?;
+        match self.read_frame()? {
+            Frame::Bye => Ok(()),
+            other => Err(ClientError::Protocol(format!("expected bye, got {other:?}"))),
+        }
+    }
+
+    /// Run a search to completion, discarding progress frames.
+    pub fn search(&mut self, spec: &ExperimentSpec) -> Result<SearchReply, ClientError> {
+        self.search_with(spec, |_| false)
+    }
+
+    /// Run a search, observing every streamed frame. `on_frame` returning
+    /// `true` sends a `cancel` for this request (once); the call then
+    /// resolves with the server's verdict — normally a
+    /// `ClientError::Server { kind: "cancelled", .. }`.
+    pub fn search_with(
+        &mut self,
+        spec: &ExperimentSpec,
+        mut on_frame: impl FnMut(&Frame) -> bool,
+    ) -> Result<SearchReply, ClientError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.send(&Request::Search { id, spec: spec.to_json() })?;
+        let mut cancelled = false;
+        let mut generations = 0usize;
+        loop {
+            match self.read_frame()? {
+                Frame::Front {
+                    id: fid,
+                    objectives,
+                    rows,
+                    evaluations,
+                    exec_calls,
+                    cache_hits,
+                    wall_secs,
+                    hypervolume,
+                } if fid == id => {
+                    return Ok(SearchReply {
+                        id,
+                        objectives,
+                        rows,
+                        evaluations,
+                        exec_calls,
+                        cache_hits,
+                        wall_secs,
+                        hypervolume,
+                        generations,
+                    })
+                }
+                Frame::Error { id: fid, kind, message } if fid == Some(id) => {
+                    return Err(ClientError::Server { kind, message })
+                }
+                frame => {
+                    if matches!(frame, Frame::Generation { .. }) {
+                        generations += 1;
+                    }
+                    if on_frame(&frame) && !cancelled {
+                        cancelled = true;
+                        self.send(&Request::Cancel { id })?;
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! Serve mode: a long-lived MOHAQ search service over one shared
+//! [`SearchSession`](crate::coordinator::SearchSession).
+//!
+//! `mohaq serve --addr 127.0.0.1:7070` exposes the search API over a
+//! line-delimited JSON protocol on TCP (hermetic, std-only — no HTTP
+//! stack). One [`server::ServeState`] holds the compiled artifacts and
+//! ONE `EvalService` across requests: the PTQ error cache is
+//! platform-independent, so concurrent tenants submitting different
+//! platform tables reuse each other's candidate evaluations, and all
+//! in-flight searches fan their evaluation batches across one shared
+//! [`WorkQueue`](crate::util::pool::WorkQueue) job stream.
+//!
+//! Contracts (see DESIGN.md "Serve mode"):
+//!   * determinism — a served search returns the front the equivalent
+//!     offline `SearchSession::run` produces at the same seed, bit for
+//!     bit;
+//!   * cancellation — a `cancel` frame, a dead client (first failed
+//!     frame write), or server shutdown aborts the search at its next
+//!     evaluation batch with a typed `cancelled` error frame; a
+//!     half-closed client that keeps reading drains its fronts instead;
+//!   * panic isolation — no panic crosses the connection boundary:
+//!     malformed input, invalid specs, evaluation failures and even
+//!     engine panics all come back as typed `error` frames on a live
+//!     connection.
+//!
+//! Without an artifact bundle the server falls back to the hermetic
+//! surrogate evaluator (`SearchSession::synthetic`), which is how the CI
+//! smoke job and `examples/serve_quickstart.rs` drive the full stack
+//! offline.
+
+pub mod client;
+pub mod protocol;
+pub mod server;
+
+pub use client::{ClientError, SearchReply, ServeClient};
+pub use protocol::{Frame, FrontRow, HwEntry, Request, ServerStats};
+pub use server::{ServeState, Server};

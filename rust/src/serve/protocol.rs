@@ -1,0 +1,673 @@
+//! Serve-mode wire protocol: line-delimited JSON over TCP, std-only.
+//!
+//! Every message is one JSON object on one line. Client → server messages
+//! carry an `"op"` discriminator, server → client frames an `"event"`:
+//!
+//! ```text
+//! → {"op":"search","id":1,"spec":{...ExperimentSpec JSON...}}
+//! ← {"event":"started","id":1,"name":"exp2-silago","num_vars":8,...}
+//! ← {"event":"generation","id":1,"generation":0,"best_err":0.17,...}
+//! ← {"event":"front","id":1,"rows":[...],"cache_hits":120,...}
+//! → {"op":"cancel","id":1}          (any time while 1 is in flight)
+//! ← {"event":"error","id":1,"kind":"cancelled","message":"..."}
+//! → {"op":"stats"}                  → {"event":"stats",...}
+//! → {"op":"ping"}                   → {"event":"pong"}
+//! → {"op":"shutdown"}               → {"event":"bye"}   (server stops)
+//! ```
+//!
+//! Error frames carry the typed [`SearchError::kind`] string, so clients
+//! match on failure classes without parsing messages; `"protocol"` marks
+//! malformed input, `"busy"` the per-connection in-flight cap, and
+//! `"panic"` the serve-layer backstop (none takes the connection down).
+//! Numbers round-trip losslessly: the JSON codec emits
+//! shortest-round-trip floats and `NaN`/`Infinity` spellings its parser
+//! (and Python's json module) accepts, which is what makes served
+//! fronts bitwise-comparable to offline runs. Caveat for foreign
+//! clients: the non-finite spellings are a deliberate deviation from
+//! RFC 8259 (matching Python's default), so a strict parser must treat
+//! `NaN`/`Infinity` tokens the way Python's json module does — they
+//! only ever appear in numeric positions like a generation's `best_err`
+//! before any feasible solution exists.
+
+use crate::coordinator::{SearchEvent, SearchOutcome, SolutionRow};
+use crate::util::json::{obj, Json};
+
+/// Client → server message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Run a search; `spec` is raw `ExperimentSpec` JSON (parsed server
+    /// side so validation errors come back typed, tagged with `id`).
+    Search { id: u64, spec: Json },
+    /// Cancel the in-flight search with this id (same connection).
+    Cancel { id: u64 },
+    /// Snapshot of the shared service counters.
+    Stats,
+    Ping,
+    /// Stop the server once outstanding work is cancelled.
+    Shutdown,
+}
+
+/// Parse failure; carries the request id when one could be extracted so
+/// the error frame can still be correlated.
+#[derive(Debug)]
+pub struct ProtocolError {
+    pub id: Option<u64>,
+    pub message: String,
+}
+
+impl std::fmt::Display for ProtocolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.message)
+    }
+}
+
+impl std::error::Error for ProtocolError {}
+
+/// Extract a request/frame id: must be a non-negative integer small
+/// enough to survive the f64 wire representation. A fractional or
+/// negative id must NOT silently truncate — `{"id":3.9}` targeting
+/// request 3 would be a cross-request correlation bug.
+fn get_u64(j: &Json, key: &str) -> Option<u64> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .filter(|n| n.fract() == 0.0 && *n >= 0.0 && *n <= 9.0e15)
+        .map(|n| n as u64)
+}
+
+impl Request {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Search { id, spec } => obj(vec![
+                ("op", "search".into()),
+                ("id", (*id as usize).into()),
+                ("spec", spec.clone()),
+            ]),
+            Request::Cancel { id } => {
+                obj(vec![("op", "cancel".into()), ("id", (*id as usize).into())])
+            }
+            Request::Stats => obj(vec![("op", "stats".into())]),
+            Request::Ping => obj(vec![("op", "ping".into())]),
+            Request::Shutdown => obj(vec![("op", "shutdown".into())]),
+        }
+    }
+
+    /// One wire line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    pub fn parse(line: &str) -> Result<Request, ProtocolError> {
+        let j = Json::parse(line.trim())
+            .map_err(|e| ProtocolError { id: None, message: format!("bad frame: {e}") })?;
+        let id = get_u64(&j, "id");
+        let op = j.get("op").and_then(Json::as_str).ok_or_else(|| ProtocolError {
+            id,
+            message: "frame missing 'op'".into(),
+        })?;
+        let need_id = |id: Option<u64>| {
+            id.ok_or_else(|| ProtocolError {
+                id: None,
+                message: format!("'{op}' needs a numeric 'id'"),
+            })
+        };
+        match op {
+            "search" => {
+                let spec = j
+                    .get("spec")
+                    .cloned()
+                    .ok_or_else(|| ProtocolError { id, message: "'search' needs a 'spec'".into() })?;
+                Ok(Request::Search { id: need_id(id)?, spec })
+            }
+            "cancel" => Ok(Request::Cancel { id: need_id(id)? }),
+            "stats" => Ok(Request::Stats),
+            "ping" => Ok(Request::Ping),
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(ProtocolError { id, message: format!("unknown op '{other}'") }),
+        }
+    }
+}
+
+/// One per-platform metric entry of a front row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HwEntry {
+    pub platform: String,
+    pub speedup: f64,
+    pub energy_uj: Option<f64>,
+}
+
+/// One Pareto solution as served over the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrontRow {
+    /// `QuantConfig::display_wa` rendering (e.g. `W4A8 ...`).
+    pub config: String,
+    pub wer_v: f64,
+    pub wer_t: f64,
+    pub cp_r: f64,
+    pub size_mb: f64,
+    pub param_set: String,
+    pub hw: Vec<HwEntry>,
+}
+
+impl FrontRow {
+    pub fn from_row(row: &SolutionRow) -> FrontRow {
+        FrontRow {
+            config: row.qc.display_wa(),
+            wer_v: row.wer_v,
+            wer_t: row.wer_t,
+            cp_r: row.cp_r,
+            size_mb: row.size_mb,
+            param_set: row.param_set.clone(),
+            hw: row
+                .hw
+                .iter()
+                .map(|h| HwEntry {
+                    platform: h.platform.clone(),
+                    speedup: h.speedup,
+                    energy_uj: h.energy_uj,
+                })
+                .collect(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let hw: Vec<Json> = self
+            .hw
+            .iter()
+            .map(|h| {
+                obj(vec![
+                    ("platform", h.platform.as_str().into()),
+                    ("speedup", h.speedup.into()),
+                    ("energy_uj", h.energy_uj.map_or(Json::Null, Json::Num)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("config", self.config.as_str().into()),
+            ("wer_v", self.wer_v.into()),
+            ("wer_t", self.wer_t.into()),
+            ("cp_r", self.cp_r.into()),
+            ("size_mb", self.size_mb.into()),
+            ("param_set", self.param_set.as_str().into()),
+            ("hw", Json::Arr(hw)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<FrontRow, ProtocolError> {
+        let field = |key: &str| {
+            j.get(key).and_then(Json::as_f64).ok_or_else(|| ProtocolError {
+                id: None,
+                message: format!("row missing '{key}'"),
+            })
+        };
+        Ok(FrontRow {
+            config: j.get("config").and_then(Json::as_str).unwrap_or_default().to_string(),
+            wer_v: field("wer_v")?,
+            wer_t: field("wer_t")?,
+            cp_r: field("cp_r")?,
+            size_mb: field("size_mb")?,
+            param_set: j.get("param_set").and_then(Json::as_str).unwrap_or_default().to_string(),
+            hw: j
+                .get("hw")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(|h| HwEntry {
+                    platform: h
+                        .get("platform")
+                        .and_then(Json::as_str)
+                        .unwrap_or_default()
+                        .to_string(),
+                    speedup: h.get("speedup").and_then(Json::as_f64).unwrap_or(f64::NAN),
+                    energy_uj: h.get("energy_uj").and_then(Json::as_f64),
+                })
+                .collect(),
+        })
+    }
+}
+
+/// Server-level counter snapshot (the `stats` reply).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServerStats {
+    pub executions: usize,
+    pub cache_hits: usize,
+    pub unique_solutions: usize,
+    /// The shared result cache was poisoned by a worker panic.
+    pub poisoned: bool,
+    /// Search requests accepted since the server started.
+    pub requests: usize,
+    /// Searches currently in flight.
+    pub active: usize,
+    /// Whether the server evaluates through the hermetic surrogate.
+    pub surrogate: bool,
+}
+
+/// Server → client message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    Started {
+        id: u64,
+        name: String,
+        num_vars: usize,
+        objectives: Vec<String>,
+        threads: usize,
+        islands: usize,
+    },
+    Generation {
+        id: u64,
+        generation: usize,
+        evaluations: usize,
+        best_err: f64,
+        feasible: usize,
+        pop_size: usize,
+        island: Option<usize>,
+    },
+    Beacon { id: u64, name: String, retrain_steps: usize },
+    Migration { id: u64, generation: usize, from: usize, to: usize, accepted: usize },
+    /// Terminal success frame of one search request.
+    Front {
+        id: u64,
+        objectives: Vec<String>,
+        rows: Vec<FrontRow>,
+        evaluations: usize,
+        /// Executions / cache hits during this request's window (deltas
+        /// of the shared service counters: cross-request hits count —
+        /// the reuse signal — and concurrent requests' activity is
+        /// included; exact when requests are serial).
+        exec_calls: usize,
+        cache_hits: usize,
+        wall_secs: f64,
+        hypervolume: Option<f64>,
+    },
+    /// Terminal failure frame (`kind` is `SearchError::kind`, plus
+    /// `"protocol"` and `"panic"`); `id` is absent when a malformed line
+    /// could not be correlated.
+    Error { id: Option<u64>, kind: String, message: String },
+    Stats(ServerStats),
+    Pong,
+    Bye,
+}
+
+/// Translate a streaming `SearchEvent` into the wire frame for `id`.
+/// `Finished` is skipped — the terminal `front` frame carries its data.
+pub fn event_frame(id: u64, event: &SearchEvent) -> Option<Frame> {
+    Some(match event {
+        SearchEvent::Started { name, num_vars, objectives, threads, islands } => Frame::Started {
+            id,
+            name: name.clone(),
+            num_vars: *num_vars,
+            objectives: objectives.clone(),
+            threads: *threads,
+            islands: *islands,
+        },
+        SearchEvent::Generation(log) => Frame::Generation {
+            id,
+            generation: log.generation,
+            evaluations: log.evaluations,
+            best_err: log.best_err,
+            feasible: log.feasible,
+            pop_size: log.pop_size,
+            island: log.island,
+        },
+        SearchEvent::BeaconCreated { name, retrain_steps } => {
+            Frame::Beacon { id, name: name.clone(), retrain_steps: *retrain_steps }
+        }
+        SearchEvent::Migration { generation, from, to, accepted } => Frame::Migration {
+            id,
+            generation: *generation,
+            from: *from,
+            to: *to,
+            accepted: *accepted,
+        },
+        SearchEvent::Finished { .. } => return None,
+    })
+}
+
+/// The terminal success frame for a finished request.
+pub fn front_frame(id: u64, outcome: &SearchOutcome) -> Frame {
+    Frame::Front {
+        id,
+        objectives: outcome.objective_names.clone(),
+        rows: outcome.rows.iter().map(FrontRow::from_row).collect(),
+        evaluations: outcome.evaluations,
+        exec_calls: outcome.exec_calls,
+        cache_hits: outcome.cache_hits,
+        wall_secs: outcome.wall_secs,
+        hypervolume: outcome.front_hypervolume,
+    }
+}
+
+impl Frame {
+    pub fn to_json(&self) -> Json {
+        let uid = |id: u64| Json::Num(id as f64);
+        match self {
+            Frame::Started { id, name, num_vars, objectives, threads, islands } => obj(vec![
+                ("event", "started".into()),
+                ("id", uid(*id)),
+                ("name", name.as_str().into()),
+                ("num_vars", (*num_vars).into()),
+                (
+                    "objectives",
+                    Json::Arr(objectives.iter().map(|o| o.as_str().into()).collect()),
+                ),
+                ("threads", (*threads).into()),
+                ("islands", (*islands).into()),
+            ]),
+            Frame::Generation { id, generation, evaluations, best_err, feasible, pop_size, island } => {
+                obj(vec![
+                    ("event", "generation".into()),
+                    ("id", uid(*id)),
+                    ("generation", (*generation).into()),
+                    ("evaluations", (*evaluations).into()),
+                    ("best_err", (*best_err).into()),
+                    ("feasible", (*feasible).into()),
+                    ("pop_size", (*pop_size).into()),
+                    ("island", island.map_or(Json::Null, |i| i.into())),
+                ])
+            }
+            Frame::Beacon { id, name, retrain_steps } => obj(vec![
+                ("event", "beacon".into()),
+                ("id", uid(*id)),
+                ("name", name.as_str().into()),
+                ("retrain_steps", (*retrain_steps).into()),
+            ]),
+            Frame::Migration { id, generation, from, to, accepted } => obj(vec![
+                ("event", "migration".into()),
+                ("id", uid(*id)),
+                ("generation", (*generation).into()),
+                ("from", (*from).into()),
+                ("to", (*to).into()),
+                ("accepted", (*accepted).into()),
+            ]),
+            Frame::Front {
+                id,
+                objectives,
+                rows,
+                evaluations,
+                exec_calls,
+                cache_hits,
+                wall_secs,
+                hypervolume,
+            } => obj(vec![
+                ("event", "front".into()),
+                ("id", uid(*id)),
+                (
+                    "objectives",
+                    Json::Arr(objectives.iter().map(|o| o.as_str().into()).collect()),
+                ),
+                ("rows", Json::Arr(rows.iter().map(FrontRow::to_json).collect())),
+                ("evaluations", (*evaluations).into()),
+                ("exec_calls", (*exec_calls).into()),
+                ("cache_hits", (*cache_hits).into()),
+                ("wall_secs", (*wall_secs).into()),
+                ("hypervolume", hypervolume.map_or(Json::Null, Json::Num)),
+            ]),
+            Frame::Error { id, kind, message } => obj(vec![
+                ("event", "error".into()),
+                ("id", id.map_or(Json::Null, |i| Json::Num(i as f64))),
+                ("kind", kind.as_str().into()),
+                ("message", message.as_str().into()),
+            ]),
+            Frame::Stats(s) => obj(vec![
+                ("event", "stats".into()),
+                ("executions", s.executions.into()),
+                ("cache_hits", s.cache_hits.into()),
+                ("unique_solutions", s.unique_solutions.into()),
+                ("poisoned", s.poisoned.into()),
+                ("requests", s.requests.into()),
+                ("active", s.active.into()),
+                ("surrogate", s.surrogate.into()),
+            ]),
+            Frame::Pong => obj(vec![("event", "pong".into())]),
+            Frame::Bye => obj(vec![("event", "bye".into())]),
+        }
+    }
+
+    /// One wire line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    pub fn parse(line: &str) -> Result<Frame, ProtocolError> {
+        let j = Json::parse(line.trim())
+            .map_err(|e| ProtocolError { id: None, message: format!("bad frame: {e}") })?;
+        let event = j.get("event").and_then(Json::as_str).ok_or_else(|| ProtocolError {
+            id: get_u64(&j, "id"),
+            message: "frame missing 'event'".into(),
+        })?;
+        let id = || {
+            get_u64(&j, "id").ok_or_else(|| ProtocolError {
+                id: None,
+                message: format!("'{event}' frame missing 'id'"),
+            })
+        };
+        let num = |key: &str| {
+            j.get(key).and_then(Json::as_usize).ok_or_else(|| ProtocolError {
+                id: get_u64(&j, "id"),
+                message: format!("'{event}' frame missing '{key}'"),
+            })
+        };
+        let strings = |key: &str| -> Vec<String> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|v| v.as_str().map(String::from))
+                .collect()
+        };
+        Ok(match event {
+            "started" => Frame::Started {
+                id: id()?,
+                name: j.get("name").and_then(Json::as_str).unwrap_or_default().to_string(),
+                num_vars: num("num_vars")?,
+                objectives: strings("objectives"),
+                threads: num("threads")?,
+                islands: num("islands")?,
+            },
+            "generation" => Frame::Generation {
+                id: id()?,
+                generation: num("generation")?,
+                evaluations: num("evaluations")?,
+                best_err: j.get("best_err").and_then(Json::as_f64).unwrap_or(f64::NAN),
+                feasible: num("feasible")?,
+                pop_size: num("pop_size")?,
+                island: j.get("island").and_then(Json::as_usize),
+            },
+            "beacon" => Frame::Beacon {
+                id: id()?,
+                name: j.get("name").and_then(Json::as_str).unwrap_or_default().to_string(),
+                retrain_steps: num("retrain_steps")?,
+            },
+            "migration" => Frame::Migration {
+                id: id()?,
+                generation: num("generation")?,
+                from: num("from")?,
+                to: num("to")?,
+                accepted: num("accepted")?,
+            },
+            "front" => Frame::Front {
+                id: id()?,
+                objectives: strings("objectives"),
+                rows: j
+                    .get("rows")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(FrontRow::from_json)
+                    .collect::<Result<_, _>>()?,
+                evaluations: num("evaluations")?,
+                exec_calls: num("exec_calls")?,
+                cache_hits: num("cache_hits")?,
+                wall_secs: j.get("wall_secs").and_then(Json::as_f64).unwrap_or(0.0),
+                hypervolume: j.get("hypervolume").and_then(Json::as_f64),
+            },
+            "error" => Frame::Error {
+                id: get_u64(&j, "id"),
+                kind: j.get("kind").and_then(Json::as_str).unwrap_or("unknown").to_string(),
+                message: j.get("message").and_then(Json::as_str).unwrap_or_default().to_string(),
+            },
+            "stats" => Frame::Stats(ServerStats {
+                executions: num("executions")?,
+                cache_hits: num("cache_hits")?,
+                unique_solutions: num("unique_solutions")?,
+                poisoned: j.get("poisoned").and_then(Json::as_bool).unwrap_or(false),
+                requests: num("requests")?,
+                active: num("active")?,
+                surrogate: j.get("surrogate").and_then(Json::as_bool).unwrap_or(false),
+            }),
+            "pong" => Frame::Pong,
+            "bye" => Frame::Bye,
+            other => {
+                return Err(ProtocolError {
+                    id: get_u64(&j, "id"),
+                    message: format!("unknown event '{other}'"),
+                })
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ExperimentSpec;
+
+    #[test]
+    fn requests_round_trip() {
+        let reqs = vec![
+            Request::Search { id: 3, spec: ExperimentSpec::exp1().to_json() },
+            Request::Cancel { id: 7 },
+            Request::Stats,
+            Request::Ping,
+            Request::Shutdown,
+        ];
+        for r in reqs {
+            let line = r.to_line();
+            assert!(!line.contains('\n'), "one frame per line: {line}");
+            assert_eq!(Request::parse(&line).unwrap(), r, "{line}");
+        }
+    }
+
+    #[test]
+    fn frames_round_trip() {
+        let frames = vec![
+            Frame::Started {
+                id: 1,
+                name: "exp".into(),
+                num_vars: 8,
+                objectives: vec!["WER_V".into(), "-speedup@silago".into()],
+                threads: 4,
+                islands: 1,
+            },
+            Frame::Generation {
+                id: 1,
+                generation: 2,
+                evaluations: 40,
+                best_err: 0.1625,
+                feasible: 9,
+                pop_size: 10,
+                island: Some(2),
+            },
+            // No feasible solution yet: best_err is +Infinity and must
+            // survive the wire (regression for the json emitter).
+            Frame::Generation {
+                id: 1,
+                generation: 0,
+                evaluations: 10,
+                best_err: f64::INFINITY,
+                feasible: 0,
+                pop_size: 10,
+                island: None,
+            },
+            Frame::Beacon { id: 1, name: "W2A8...".into(), retrain_steps: 200 },
+            Frame::Migration { id: 1, generation: 5, from: 0, to: 1, accepted: 2 },
+            Frame::Front {
+                id: 1,
+                objectives: vec!["WER_V".into()],
+                rows: vec![FrontRow {
+                    config: "W4A4 ...".into(),
+                    wer_v: 0.17250000000000001,
+                    wer_t: 0.18,
+                    cp_r: 7.9,
+                    size_mb: 0.61,
+                    param_set: "baseline".into(),
+                    hw: vec![HwEntry {
+                        platform: "silago".into(),
+                        speedup: 3.25,
+                        energy_uj: None,
+                    }],
+                }],
+                evaluations: 400,
+                exec_calls: 120,
+                cache_hits: 280,
+                wall_secs: 1.25,
+                hypervolume: Some(0.82),
+            },
+            Frame::Error { id: Some(4), kind: "cancelled".into(), message: "search cancelled".into() },
+            Frame::Error { id: None, kind: "protocol".into(), message: "bad frame".into() },
+            Frame::Stats(ServerStats {
+                executions: 10,
+                cache_hits: 5,
+                unique_solutions: 8,
+                poisoned: false,
+                requests: 2,
+                active: 1,
+                surrogate: true,
+            }),
+            Frame::Pong,
+            Frame::Bye,
+        ];
+        for f in frames {
+            let line = f.to_line();
+            assert!(!line.contains('\n'), "one frame per line: {line}");
+            assert_eq!(Frame::parse(&line).unwrap(), f, "{line}");
+        }
+    }
+
+    #[test]
+    fn floats_round_trip_bitwise() {
+        // Shortest-round-trip float formatting is what makes a served
+        // front bitwise-comparable to the offline run that produced it.
+        for v in [0.1, 1.0 / 3.0, 0.16000000000000003, 123456.789012345] {
+            let f = Frame::Generation {
+                id: 0,
+                generation: 0,
+                evaluations: 0,
+                best_err: v,
+                feasible: 0,
+                pop_size: 0,
+                island: None,
+            };
+            match Frame::parse(&f.to_line()).unwrap() {
+                Frame::Generation { best_err, .. } => {
+                    assert_eq!(best_err.to_bits(), v.to_bits())
+                }
+                other => panic!("wrong frame {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_lines_yield_protocol_errors_with_best_effort_ids() {
+        assert!(Request::parse("{").is_err());
+        assert!(Request::parse("[]").is_err());
+        let e = Request::parse(r#"{"op":"warp","id":9}"#).unwrap_err();
+        assert_eq!(e.id, Some(9), "id extracted even for unknown ops");
+        let e = Request::parse(r#"{"op":"search"}"#).unwrap_err();
+        assert!(e.message.contains("spec"), "{e}");
+        let e = Request::parse(r#"{"id":1}"#).unwrap_err();
+        assert!(e.message.contains("op"), "{e}");
+    }
+
+    #[test]
+    fn fractional_or_negative_ids_are_rejected_not_truncated() {
+        // `{"id":3.9}` must NOT become a cancel for request 3.
+        for bad in [r#"{"op":"cancel","id":3.9}"#, r#"{"op":"cancel","id":-1}"#] {
+            let e = Request::parse(bad).unwrap_err();
+            assert!(e.message.contains("id"), "{e}");
+        }
+        assert_eq!(
+            Request::parse(r#"{"op":"cancel","id":3}"#).unwrap(),
+            Request::Cancel { id: 3 }
+        );
+    }
+}

@@ -1,0 +1,462 @@
+//! The serve-mode server: a long-lived search service over ONE shared
+//! `SearchSession`.
+//!
+//! Architecture:
+//!   * [`ServeState`] — the shared half: one session (one compiled
+//!     executable + one platform-independent PTQ result cache) and one
+//!     [`WorkQueue`]. Every request resolves its OWN spec fragment —
+//!     platform table, objectives, GA settings — against the registry,
+//!     while candidate errors are memoized across requests: concurrent
+//!     tenants searching different hardware reuse each other's
+//!     evaluations. Candidate batches from every in-flight search fan
+//!     out across the shared pool as one job stream.
+//!   * [`Server`] — the TCP half: one thread per connection, requests and
+//!     replies as line-delimited JSON (`serve::protocol`). Searches run
+//!     on their own threads so `cancel` frames are handled while a
+//!     search streams. Cancellation contract: a `cancel` frame, server
+//!     shutdown, or a FULLY gone client (first failed frame write)
+//!     cancels in-flight searches; a half-closed client that keeps
+//!     reading gets its remaining fronts drained to it.
+//!
+//! Panic policy: no panic crosses the connection boundary. The session
+//! already converts engine panics into typed `SearchError`s; the serve
+//! layer adds a `catch_unwind` backstop that turns anything left into an
+//! `error` frame (`kind: "panic"`), and malformed input yields
+//! `kind: "protocol"` frames — the connection stays up either way.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::protocol::{event_frame, front_frame, Frame, Request, ServerStats};
+use crate::coordinator::{CancelToken, ExperimentSpec, SearchSession};
+use crate::util::pool::{panic_message, relock, WorkQueue};
+
+/// How often idle connection readers wake to check for server shutdown.
+const POLL_INTERVAL: Duration = Duration::from_millis(200);
+
+/// Frame-size ceiling for incoming lines: a client streaming bytes with
+/// no newline must not grow the read buffer (and the server's memory)
+/// without bound. Real spec frames are a few KB.
+const MAX_LINE_BYTES: usize = 4 << 20;
+
+/// Per-write deadline: a client that stops reading (full TCP send
+/// buffer) must wedge neither the search thread streaming to it nor the
+/// clean-shutdown join — after this, writes fail and the search is
+/// cancelled instead.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Concurrent searches one connection may hold in flight: each costs an
+/// OS thread plus per-search state, so it must not scale with whatever a
+/// client chooses to send (the evaluation CPU itself is already bounded
+/// by the shared pool). Excess requests get a typed `busy` error frame.
+const MAX_INFLIGHT_PER_CONN: usize = 32;
+
+/// Concurrent connections the accept loop will serve; beyond this, new
+/// connections are dropped immediately. Bounds total thread count
+/// (connections × per-connection searches) so a connection flood
+/// degrades instead of exhausting OS threads.
+const MAX_CONNECTIONS: usize = 256;
+
+/// Shared server state: one session + one evaluation pool, reused by
+/// every connection and request.
+pub struct ServeState {
+    session: SearchSession,
+    requests: AtomicUsize,
+    active: AtomicUsize,
+    shutdown: AtomicBool,
+}
+
+impl ServeState {
+    /// Wrap a session for serving: its candidate evaluations are routed
+    /// through a new shared [`WorkQueue`] of `eval_workers` threads
+    /// (0 = one per core).
+    pub fn new(session: SearchSession, eval_workers: usize) -> Arc<ServeState> {
+        let queue = Arc::new(WorkQueue::new(eval_workers));
+        Arc::new(ServeState {
+            session: session.shared_queue(queue),
+            requests: AtomicUsize::new(0),
+            active: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+        })
+    }
+
+    pub fn session(&self) -> &SearchSession {
+        &self.session
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        let eval = self.session.eval().stats();
+        ServerStats {
+            executions: eval.executions,
+            cache_hits: eval.cache_hits,
+            unique_solutions: eval.unique_solutions,
+            poisoned: eval.poisoned,
+            requests: self.requests.load(Ordering::Relaxed),
+            active: self.active.load(Ordering::Relaxed),
+            surrogate: self.session.eval().is_surrogate(),
+        }
+    }
+
+    /// Flag the server for shutdown; connection readers notice within
+    /// `POLL_INTERVAL` and cancel their in-flight searches. Note: the
+    /// accept loop itself wakes on its NEXT incoming connection — the
+    /// `shutdown` protocol frame additionally nudges it with a
+    /// self-connection; callers invoking this directly can do the same.
+    pub fn begin_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+}
+
+/// Blocking TCP server over a [`ServeState`].
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<ServeState>,
+}
+
+impl Server {
+    /// Bind the listening socket (use port 0 for an ephemeral port, then
+    /// read it back via [`Server::local_addr`]).
+    pub fn bind(addr: impl ToSocketAddrs, state: Arc<ServeState>) -> std::io::Result<Server> {
+        Ok(Server { listener: TcpListener::bind(addr)?, state })
+    }
+
+    pub fn local_addr(&self) -> std::io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Accept and serve connections until a client sends `shutdown`.
+    /// Returns after every connection thread (and therefore every
+    /// in-flight search) has wound down — the clean-shutdown contract.
+    pub fn run(self) -> std::io::Result<()> {
+        let addr = self.listener.local_addr()?;
+        let mut conns = Vec::new();
+        for stream in self.listener.incoming() {
+            if self.state.is_shutdown() {
+                // Includes the self-connection nudge sent by the handler
+                // that processed the shutdown request.
+                break;
+            }
+            let stream = match stream {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let state = self.state.clone();
+            // Reap finished handlers so a months-long server does not
+            // accumulate one JoinHandle per connection ever accepted —
+            // and bound the live count: a connection flood degrades
+            // (drops) instead of exhausting OS threads.
+            conns.retain(|h| !h.is_finished());
+            if conns.len() >= MAX_CONNECTIONS {
+                drop(stream);
+                continue;
+            }
+            // Builder::spawn reports thread exhaustion as an error
+            // instead of panicking the accept loop off the air.
+            let spawned = std::thread::Builder::new()
+                .name("mohaq-serve-conn".into())
+                .spawn(move || handle_connection(stream, state, addr));
+            if let Ok(handle) = spawned {
+                conns.push(handle);
+            }
+        }
+        for c in conns {
+            let _ = c.join();
+        }
+        Ok(())
+    }
+}
+
+/// Write one frame; returns whether the client took it. Failures are
+/// tolerated here (client gone or wedged past `WRITE_TIMEOUT`) — the
+/// search-side caller cancels its search on a failed send, and the
+/// reader loop notices a disconnect on its own.
+fn send(writer: &Mutex<TcpStream>, frame: &Frame) -> bool {
+    let mut line = frame.to_line();
+    line.push('\n');
+    let w = relock(writer);
+    let mut out = &*w;
+    let ok = out.write_all(line.as_bytes()).and_then(|()| out.flush()).is_ok();
+    if !ok {
+        // A failed (or timed-out) write may have left a TORN frame on
+        // the socket — no later frame could be framed correctly, so tear
+        // the connection down instead of streaming garbage; the reader
+        // loop then sees EOF and cancels the connection's searches.
+        let _ = w.shutdown(std::net::Shutdown::Both);
+    }
+    ok
+}
+
+/// Address a connection can reach the accept loop on, for the shutdown
+/// nudge: a wildcard bind (0.0.0.0 / ::) is not connectable on every
+/// platform, so rewrite it to the matching loopback.
+fn nudge_addr(server_addr: SocketAddr) -> SocketAddr {
+    let mut addr = server_addr;
+    if addr.ip().is_unspecified() {
+        addr.set_ip(match addr.ip() {
+            IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+            IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+        });
+    }
+    addr
+}
+
+/// Run one search request on its own thread, streaming frames back;
+/// returns the TERMINAL frame (front or typed error) for the caller to
+/// deliver after clearing the request's inflight slot.
+fn run_search(
+    state: &ServeState,
+    writer: &Mutex<TcpStream>,
+    id: u64,
+    spec: ExperimentSpec,
+    cancel: CancelToken,
+) -> Frame {
+    state.requests.fetch_add(1, Ordering::Relaxed);
+    state.active.fetch_add(1, Ordering::Relaxed);
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        state.session.run_with_cancel(
+            &spec,
+            |event| {
+                if let Some(frame) = event_frame(id, event) {
+                    if !send(writer, &frame) {
+                        // The client cannot take frames any more (gone,
+                        // or wedged past the write timeout): stop
+                        // burning evaluations on its behalf.
+                        cancel.cancel();
+                    }
+                }
+            },
+            &cancel,
+        )
+    }));
+    state.active.fetch_sub(1, Ordering::Relaxed);
+    match result {
+        Ok(Ok(outcome)) => front_frame(id, &outcome),
+        Ok(Err(e)) => {
+            Frame::Error { id: Some(id), kind: e.kind().into(), message: e.to_string() }
+        }
+        // Serve-layer backstop: even a panic that escaped the session's
+        // own catch becomes a frame, never a dead connection.
+        Err(payload) => {
+            Frame::Error { id: Some(id), kind: "panic".into(), message: panic_message(payload) }
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, state: Arc<ServeState>, server_addr: SocketAddr) {
+    // Reader polls with a timeout so a quiet connection still notices
+    // server shutdown; the writer half is shared with search threads and
+    // bounded by WRITE_TIMEOUT so a non-reading client cannot wedge them.
+    let _ = stream.set_read_timeout(Some(POLL_INTERVAL));
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let mut reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => return,
+    };
+    let writer = Arc::new(Mutex::new(stream));
+    let inflight: Arc<Mutex<HashMap<u64, CancelToken>>> = Arc::new(Mutex::new(HashMap::new()));
+    let mut searches: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let mut buf: Vec<u8> = Vec::new();
+    // Set when EOF arrives with a final un-terminated line still in
+    // `buf`: process that line — and let a search it starts run to
+    // completion — so a piped one-shot client
+    // (`printf '{"op":...}' | nc`) gets its reply instead of a silent
+    // drop or an instant cancellation.
+    let mut last_line = false;
+
+    'conn: loop {
+        // read_until may return a timeout mid-line; `buf` keeps the
+        // partial bytes and the next pass continues the same line. The
+        // `take` bound forces read_until back to the loop at the size
+        // cap even when the socket supplies a continuous newline-free
+        // stream (otherwise one call could grow `buf` forever), and the
+        // guard below then rejects the oversized frame. Take returns
+        // Ok(0) only at true EOF here — the remaining allowance is
+        // always >= 1 because oversized buffers exit via the guard.
+        let allowed = (MAX_LINE_BYTES + 1 - buf.len()) as u64;
+        let complete = match std::io::Read::take(&mut reader, allowed).read_until(b'\n', &mut buf)
+        {
+            Ok(0) if buf.is_empty() => break 'conn, // EOF: client disconnected
+            Ok(0) => {
+                last_line = true; // EOF with a final un-terminated line
+                true
+            }
+            Ok(_) => buf.ends_with(b"\n"),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if state.is_shutdown() {
+                    break 'conn;
+                }
+                false
+            }
+            Err(_) => break 'conn,
+        };
+        if buf.len() > MAX_LINE_BYTES {
+            send(
+                &writer,
+                &Frame::Error {
+                    id: None,
+                    kind: "protocol".into(),
+                    message: format!("frame exceeds {MAX_LINE_BYTES} bytes"),
+                },
+            );
+            break 'conn;
+        }
+        if !complete {
+            continue; // partial line: keep accumulating
+        }
+        let line = String::from_utf8_lossy(&buf).into_owned();
+        buf.clear();
+        if line.trim().is_empty() {
+            if last_line {
+                break 'conn;
+            }
+            continue;
+        }
+        match Request::parse(&line) {
+            Err(e) => {
+                send(
+                    &writer,
+                    &Frame::Error { id: e.id, kind: "protocol".into(), message: e.message },
+                );
+            }
+            Ok(Request::Ping) => {
+                send(&writer, &Frame::Pong);
+            }
+            Ok(Request::Stats) => {
+                send(&writer, &Frame::Stats(state.stats()));
+            }
+            Ok(Request::Cancel { id }) => {
+                if let Some(token) = relock(&inflight).get(&id) {
+                    token.cancel();
+                }
+            }
+            Ok(Request::Shutdown) => {
+                state.begin_shutdown();
+                send(&writer, &Frame::Bye);
+                // Nudge the accept loop out of its blocking accept.
+                let _ = TcpStream::connect(nudge_addr(server_addr));
+                break 'conn;
+            }
+            Ok(Request::Search { id, spec }) => {
+                if relock(&inflight).contains_key(&id) {
+                    send(
+                        &writer,
+                        &Frame::Error {
+                            id: Some(id),
+                            kind: "protocol".into(),
+                            message: format!("request id {id} is already in flight"),
+                        },
+                    );
+                    continue;
+                }
+                if relock(&inflight).len() >= MAX_INFLIGHT_PER_CONN {
+                    send(
+                        &writer,
+                        &Frame::Error {
+                            id: Some(id),
+                            kind: "busy".into(),
+                            message: format!(
+                                "connection already has {MAX_INFLIGHT_PER_CONN} searches in \
+                                 flight; wait for one to finish or cancel it"
+                            ),
+                        },
+                    );
+                    continue;
+                }
+                // Parse server-side so validation failures come back as
+                // typed error frames tagged with the request id.
+                let spec = match ExperimentSpec::from_json(&spec) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        send(
+                            &writer,
+                            &Frame::Error {
+                                id: Some(id),
+                                kind: e.kind().into(),
+                                message: e.to_string(),
+                            },
+                        );
+                        continue;
+                    }
+                };
+                let token = CancelToken::new();
+                relock(&inflight).insert(id, token.clone());
+                // Reap completed searches so a long-lived connection
+                // submitting many sequential requests stays bounded.
+                searches.retain(|h| !h.is_finished());
+                let (state, writer, inflight) =
+                    (state.clone(), writer.clone(), inflight.clone());
+                let spawned = std::thread::Builder::new()
+                    .name("mohaq-serve-search".into())
+                    .spawn({
+                        let (writer, inflight) = (writer.clone(), inflight.clone());
+                        move || {
+                            let terminal = run_search(&state, &writer, id, spec, token);
+                            // Clear the inflight slot BEFORE delivering
+                            // the terminal frame: a client reusing the id
+                            // the moment it reads the front must not race
+                            // a stale entry.
+                            relock(&inflight).remove(&id);
+                            send(&writer, &terminal);
+                        }
+                    });
+                match spawned {
+                    Ok(handle) => searches.push(handle),
+                    Err(e) => {
+                        // Thread exhaustion degrades to a typed frame,
+                        // never a panic in the reader.
+                        relock(&inflight).remove(&id);
+                        send(
+                            &writer,
+                            &Frame::Error {
+                                id: Some(id),
+                                kind: "busy".into(),
+                                message: format!("cannot start search worker: {e}"),
+                            },
+                        );
+                    }
+                }
+            }
+        }
+        // Close after the final un-terminated line, and stop serving a
+        // busy connection (one that never hits the idle timeout) once
+        // another client has requested shutdown.
+        if last_line || state.is_shutdown() {
+            break 'conn;
+        }
+    }
+
+    // Epilogue: drain in-flight searches. EOF on the read side may be a
+    // one-shot client's deliberate half-close ("no more requests, finish
+    // what I sent") — its searches run to completion and stream their
+    // fronts to the still-open write side. A client that is fully gone
+    // is caught by `send`: the first failed write tears the connection
+    // down AND cancels the search (see `run_search`), so dead clients
+    // never keep work alive for long. Server shutdown — already flagged,
+    // or arriving while we wait — cancels promptly.
+    loop {
+        if state.is_shutdown() {
+            for token in relock(&inflight).values() {
+                token.cancel();
+            }
+            break;
+        }
+        if searches.iter().all(std::thread::JoinHandle::is_finished) {
+            break;
+        }
+        std::thread::sleep(POLL_INTERVAL);
+    }
+    for s in searches {
+        let _ = s.join();
+    }
+}

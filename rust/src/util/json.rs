@@ -107,7 +107,7 @@ impl Json {
 
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let bytes = text.as_bytes();
-        let mut p = Parser { b: bytes, i: 0 };
+        let mut p = Parser { b: bytes, i: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -136,7 +136,15 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                if n.is_nan() {
+                    // Non-finite spellings match our parser (and Python's
+                    // json module): Rust's Display would emit "inf"/"NaN"
+                    // forms the grammar rejects, breaking round-trips of
+                    // e.g. a generation log with no feasible solution yet.
+                    out.push_str("NaN");
+                } else if n.is_infinite() {
+                    out.push_str(if *n > 0.0 { "Infinity" } else { "-Infinity" });
+                } else if n.fract() == 0.0 && n.abs() < 9.0e15 {
                     out.push_str(&format!("{}", *n as i64));
                 } else {
                     out.push_str(&format!("{n}"));
@@ -205,14 +213,29 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
+/// Nesting ceiling: recursive descent on untrusted input (serve-mode
+/// frames arrive over TCP) must error out long before the thread stack
+/// overflows — a stack overflow aborts the whole process, not just the
+/// connection.
+const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
     fn err(&self, msg: &str) -> JsonError {
         JsonError { msg: msg.to_string(), pos: self.i }
+    }
+
+    fn descend(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        Ok(())
     }
 
     fn skip_ws(&mut self) {
@@ -259,11 +282,13 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, JsonError> {
+        self.descend()?;
         self.eat(b'{')?;
         let mut m = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -279,6 +304,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b'}') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(m));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
@@ -287,11 +313,13 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
+        self.descend()?;
         self.eat(b'[')?;
         let mut a = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(a));
         }
         loop {
@@ -302,6 +330,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b']') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(a));
                 }
                 _ => return Err(self.err("expected ',' or ']'")),
@@ -473,6 +502,28 @@ mod tests {
     fn integers_emit_without_fraction() {
         assert_eq!(Json::Num(4.0).to_string(), "4");
         assert_eq!(Json::Num(4.5).to_string(), "4.5");
+    }
+
+    #[test]
+    fn deep_nesting_errors_instead_of_overflowing_the_stack() {
+        // Serve mode feeds this parser untrusted TCP input; a recursion
+        // bomb must be a parse error, not a process abort.
+        let bomb = "[".repeat(100_000);
+        let err = Json::parse(&bomb).unwrap_err();
+        assert!(err.msg.contains("nesting too deep"), "{err}");
+        // Reasonable nesting still parses.
+        let ok = format!("{}1{}", "[".repeat(64), "]".repeat(64));
+        assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn non_finite_numbers_round_trip() {
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "Infinity");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string(), "-Infinity");
+        assert_eq!(Json::Num(f64::NAN).to_string(), "NaN");
+        assert_eq!(Json::parse("Infinity").unwrap().as_f64(), Some(f64::INFINITY));
+        assert_eq!(Json::parse("-Infinity").unwrap().as_f64(), Some(f64::NEG_INFINITY));
+        assert!(Json::parse("NaN").unwrap().as_f64().unwrap().is_nan());
     }
 
     #[test]

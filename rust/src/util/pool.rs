@@ -1,11 +1,22 @@
-//! Scoped thread-pool fan-out (rayon is not available offline).
+//! Thread-pool fan-out (rayon is not available offline).
 //!
-//! `map_parallel` evaluates a function over a slice on N worker threads and
-//! returns results in input order, so callers observe exactly the same
-//! result vector regardless of thread count — the property the coordinator
-//! relies on for seed-deterministic parallel population evaluation.
+//! Two substrates:
+//!   * `map_parallel` — scoped fan-out of one slice over N ephemeral
+//!     workers; results come back in input order, so callers observe
+//!     exactly the same result vector regardless of thread count — the
+//!     property the coordinator relies on for seed-deterministic parallel
+//!     population evaluation.
+//!   * `WorkQueue` — a long-lived pool with one shared job stream.
+//!     Several threads can submit batches concurrently (serve mode:
+//!     candidate evaluations from every in-flight search interleave
+//!     across the same workers); each `run_batch` call still returns its
+//!     own results in input order. Workers survive panicking jobs — the
+//!     panic is captured and re-raised in the submitting thread, never in
+//!     the pool.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 
 /// Default worker count: one per available core, or the `MOHAQ_THREADS`
 /// override (handy for CI runners and for pinning bench comparisons).
@@ -71,6 +82,138 @@ where
     slots.into_iter().map(|s| s.expect("worker skipped an item")).collect()
 }
 
+/// Lock helper that shrugs off poisoning: bookkeeping state (queue slots,
+/// serve-mode connection maps) stays usable even after a job panicked —
+/// the panic itself is reported separately, through [`panic_message`] or
+/// a typed error.
+pub fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Render a caught panic payload as a message (the two payload types
+/// `panic!` produces, with a fallback). Single source of truth for the
+/// pool, the session boundary and the serve layer.
+pub fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "worker panicked".into())
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// One result slot: empty until the job ran; `Err` carries a panic
+/// message to re-raise in the submitting thread.
+type Slot<R> = Option<Result<R, String>>;
+
+/// Per-batch rendezvous: result slots + a countdown the submitter waits on.
+struct Batch<R> {
+    slots: Mutex<Vec<Slot<R>>>,
+    remaining: Mutex<usize>,
+    done: Condvar,
+}
+
+/// A long-lived worker pool with a single shared job stream. Built once
+/// (e.g. per server), then any number of threads call [`WorkQueue::run_batch`]
+/// concurrently; their jobs interleave across the same workers. Dropping
+/// the queue closes the stream and joins the workers.
+pub struct WorkQueue {
+    tx: Mutex<Option<mpsc::Sender<Job>>>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    threads: usize,
+}
+
+impl WorkQueue {
+    /// Spawn a pool of `threads` workers (0 = one per core).
+    pub fn new(threads: usize) -> WorkQueue {
+        let threads = if threads == 0 { default_threads() } else { threads };
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|_| {
+                let rx = rx.clone();
+                std::thread::spawn(move || loop {
+                    // Hold the receiver lock only for the dequeue, not the
+                    // job itself, so workers drain the stream concurrently.
+                    let job = match relock(&rx).recv() {
+                        Ok(job) => job,
+                        Err(_) => break, // stream closed: pool shutting down
+                    };
+                    job();
+                })
+            })
+            .collect();
+        WorkQueue { tx: Mutex::new(Some(tx)), workers: Mutex::new(workers), threads }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run a batch of jobs on the pool and block until all complete;
+    /// results come back in input order. Safe to call from many threads at
+    /// once — that is the point: concurrent batches share one job stream.
+    /// A panicking job does NOT kill its worker; the panic message is
+    /// re-raised here, in the submitting thread.
+    pub fn run_batch<R, F>(&self, jobs: Vec<F>) -> Vec<R>
+    where
+        R: Send + 'static,
+        F: FnOnce() -> R + Send + 'static,
+    {
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let batch = Arc::new(Batch::<R> {
+            slots: Mutex::new((0..n).map(|_| None).collect()),
+            remaining: Mutex::new(n),
+            done: Condvar::new(),
+        });
+        {
+            let tx = relock(&self.tx);
+            let tx = tx.as_ref().expect("work queue already shut down");
+            for (i, job) in jobs.into_iter().enumerate() {
+                let b = batch.clone();
+                let wrapped: Job = Box::new(move || {
+                    // Capture the panic INSIDE the pool so the worker
+                    // survives; re-raise it in the submitting thread below.
+                    let out = catch_unwind(AssertUnwindSafe(job)).map_err(panic_message);
+                    relock(&b.slots)[i] = Some(out);
+                    let mut rem = relock(&b.remaining);
+                    *rem -= 1;
+                    if *rem == 0 {
+                        b.done.notify_all();
+                    }
+                });
+                tx.send(wrapped).expect("work queue workers gone");
+            }
+        }
+        let mut rem = relock(&batch.remaining);
+        while *rem > 0 {
+            rem = batch.done.wait(rem).unwrap_or_else(|e| e.into_inner());
+        }
+        drop(rem);
+        relock(&batch.slots)
+            .drain(..)
+            .map(|slot| match slot.expect("worker skipped a job") {
+                Ok(r) => r,
+                Err(msg) => panic!("{msg}"),
+            })
+            .collect()
+    }
+}
+
+impl Drop for WorkQueue {
+    fn drop(&mut self) {
+        // Close the stream, then join: workers exit when recv() fails.
+        relock(&self.tx).take();
+        for w in relock(&self.workers).drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -113,5 +256,52 @@ mod tests {
             }
             x
         });
+    }
+
+    #[test]
+    fn work_queue_returns_batch_results_in_order() {
+        let q = WorkQueue::new(4);
+        let out = q.run_batch((0..64u64).map(|x| move || x * 3).collect());
+        assert_eq!(out, (0..64).map(|x| x * 3).collect::<Vec<_>>());
+        assert!(q.run_batch::<u64, fn() -> u64>(Vec::new()).is_empty());
+    }
+
+    #[test]
+    fn work_queue_interleaves_concurrent_batches() {
+        // Several submitting threads share one job stream; each still gets
+        // its own results back, in its own input order.
+        let q = Arc::new(WorkQueue::new(3));
+        let outs: Vec<Vec<usize>> = std::thread::scope(|scope| {
+            (0..4usize)
+                .map(|t| {
+                    let q = q.clone();
+                    scope.spawn(move || {
+                        q.run_batch((0..50usize).map(|i| move || t * 1000 + i).collect())
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        for (t, out) in outs.iter().enumerate() {
+            assert_eq!(*out, (0..50).map(|i| t * 1000 + i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn work_queue_survives_panicking_jobs() {
+        let q = WorkQueue::new(2);
+        // A panicking batch re-raises in the SUBMITTING thread...
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            q.run_batch(vec![
+                Box::new(|| 1u32) as Box<dyn FnOnce() -> u32 + Send>,
+                Box::new(|| panic!("job exploded")),
+            ]);
+        }));
+        let msg = format!("{:?}", r.unwrap_err().downcast_ref::<String>());
+        assert!(msg.contains("job exploded"), "{msg}");
+        // ...and the workers stay alive for the next batch.
+        assert_eq!(q.run_batch(vec![|| 7u32]), vec![7]);
     }
 }

@@ -103,6 +103,116 @@ fn custom_platform_registers_and_drives_spec_validation() {
     assert_eq!(labels, ["WER_V", "-speedup@toy", "-speedup@bitfusion"]);
 }
 
+#[test]
+fn empty_bits_platform_is_rejected_before_any_search() {
+    // Regression: a custom registry platform with an empty supported-bits
+    // list used to pass spec validation and panic mid-search when the
+    // session derived the genome lower bound (min().unwrap() at
+    // coordinator/session.rs). The registry now rejects it at resolve
+    // time, so spec build returns a typed SearchError instead.
+    struct Hollow;
+    impl Platform for Hollow {
+        fn name(&self) -> &str {
+            "hollow"
+        }
+        fn supported_bits(&self) -> &[Bits] {
+            &[]
+        }
+        fn tied_wa(&self) -> bool {
+            false
+        }
+        fn speedup(&self, m: &ModelDesc, qc: &QuantConfig) -> f64 {
+            mohaq::hw::eq4_speedup(m, qc, |_, _| 1.0)
+        }
+        fn energy_pj(&self, _: &ModelDesc, _: &QuantConfig) -> Option<f64> {
+            None
+        }
+        fn sram_bytes(&self) -> Option<f64> {
+            None
+        }
+    }
+    registry::register("hollow", |_| Ok(Arc::new(Hollow)));
+
+    let err = ExperimentSpec::builder()
+        .platform("hollow")
+        .objective(ScoredObjective::error())
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, SearchError::InvalidSpec(_)), "{err:?}");
+    assert!(err.to_string().contains("no supported precisions"), "{err}");
+
+    // Same rejection when the platform sneaks in through an objective
+    // binding resolved at session time.
+    let mut spec = ExperimentSpec::builder()
+        .platform("bitfusion")
+        .objective(ScoredObjective::error())
+        .build()
+        .unwrap();
+    spec.platforms[0] = PlatformSpec::new("hollow");
+    let err = spec.resolve_objectives().unwrap_err();
+    assert!(matches!(err, SearchError::InvalidSpec(_)), "{err:?}");
+}
+
+#[test]
+fn synthetic_session_reuses_its_cache_across_runs() {
+    // The serve-mode building block, exercised offline: one session, two
+    // runs of the same spec — the second is served from the shared PTQ
+    // cache and reproduces the front bit for bit.
+    let spec = ExperimentSpec::builder()
+        .name("hermetic-reuse")
+        .platform("bitfusion")
+        // Generous SRAM: keeps the surrogate's feasible region wide so
+        // the front is non-empty at any seed.
+        .sram_mb(8.0)
+        .objective(ScoredObjective::error())
+        .objective(ScoredObjective::neg_speedup())
+        .pop_size(8)
+        .initial_pop_size(12)
+        .generations(4)
+        .seed(0xCAFE)
+        .err_feasible_pp(35.0)
+        .build()
+        .unwrap();
+    let session = SearchSession::synthetic().unwrap();
+    let first = session.run(&spec).unwrap();
+    assert!(!first.rows.is_empty(), "hermetic front is empty");
+    assert!(first.exec_calls > 0);
+
+    let second = session.run(&spec).unwrap();
+    assert!(second.cache_hits > 0, "second run must hit the shared cache");
+    assert!(
+        second.exec_calls <= second.rows.len(),
+        "search phase re-executed: {} exec calls for {} rows",
+        second.exec_calls,
+        second.rows.len()
+    );
+    assert_eq!(first.rows.len(), second.rows.len());
+    for (a, b) in first.rows.iter().zip(&second.rows) {
+        assert_eq!(a.qc, b.qc);
+        assert_eq!(a.wer_v.to_bits(), b.wer_v.to_bits());
+    }
+    // Cumulative service stats accrete across runs; per-run numbers are
+    // deltas.
+    assert_eq!(
+        session.eval().stats().executions,
+        first.eval_stats.executions + second.exec_calls
+    );
+}
+
+#[test]
+fn cancelled_token_aborts_before_any_evaluation() {
+    use mohaq::coordinator::CancelToken;
+    let session = SearchSession::synthetic().unwrap();
+    let token = CancelToken::new();
+    token.cancel();
+    let err = session
+        .run_with_cancel(&ExperimentSpec::exp1(), |_| {}, &token)
+        .unwrap_err();
+    assert!(matches!(err, SearchError::Cancelled), "{err:?}");
+    assert_eq!(err.kind(), "cancelled");
+    assert_eq!(session.eval().stats().executions, 0, "no work after cancel");
+}
+
 // ------------------------------------------------------------ spec builder
 
 #[test]
@@ -259,11 +369,17 @@ fn poisoned_eval_cache_surfaces_typed_error_not_panic() {
     // error which the session boundary maps to SearchError::Poisoned.
     let cache: ResultCache<u32, f64> = ResultCache::new();
     cache.insert(1, 0.5).unwrap();
+    assert_eq!(cache.len(), Some(1));
+    assert!(!cache.poisoned());
     cache.poison_for_test();
 
     let err = cache.get(&1).unwrap_err();
     assert!(err.to_string().contains("poisoned"), "{err}");
     assert!(cache.insert(2, 1.0).is_err(), "insert must fail once poisoned");
+    // Post-incident stats must say "poisoned", not "0 unique solutions":
+    // a silent zero made EvalStats lie after a worker crash.
+    assert_eq!(cache.len(), None, "poisoned cache must not report a count");
+    assert!(cache.poisoned(), "the poisoned marker must be set");
 
     // The exact payload MohaqProblem produces from that error classifies
     // as Poisoned at the session boundary (not a generic Eval failure).

@@ -229,7 +229,7 @@ fn cross_platform_search_produces_labeled_joint_front() {
 fn failing_eval_trips_the_fuse_not_a_panic() {
     let Some(arts) = artifacts() else { return };
     let rt = Runtime::cpu().unwrap();
-    let eval = EvalService::new(&rt, arts.clone()).unwrap();
+    let eval = Arc::new(EvalService::new(&rt, arts.clone()).unwrap());
     let spec = ExperimentSpec::exp1();
     let (objectives, bindings) = spec.resolve_objectives().unwrap();
     let mut problem = MohaqProblem {
@@ -242,7 +242,8 @@ fn failing_eval_trips_the_fuse_not_a_panic() {
         tied: false,
         err_limit: 1.0,
         gene_min: 1,
-        threads: 2,
+        evaluator: mohaq::coordinator::EvalStrategy::Threads(2),
+        cancel: mohaq::coordinator::CancelToken::new(),
         records: Vec::new(),
         failure: None,
     };

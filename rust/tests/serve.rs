@@ -1,0 +1,301 @@
+//! Serve-mode integration tests — hermetic (surrogate evaluator, no
+//! artifacts): a real TCP server over one shared `SearchSession`, driven
+//! by real clients.
+//!
+//! Covers the acceptance contracts of the serve tentpole:
+//!   * concurrent clients with DIFFERENT per-tenant platform tables get
+//!     seed-deterministic fronts bitwise-identical to offline
+//!     `SearchSession` runs of the same specs;
+//!   * the shared PTQ cache serves hits across requests (cross-tenant
+//!     reuse), visible in per-request and server-level stats;
+//!   * cancellation mid-search returns a typed `cancelled` error frame;
+//!   * malformed frames and invalid specs produce typed error frames on
+//!     a connection that stays alive — no panics cross the boundary.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use mohaq::coordinator::{ExperimentSpec, ScoredObjective, SearchSession};
+use mohaq::serve::{ClientError, Frame, Request, SearchReply, ServeClient, ServeState, Server};
+use mohaq::util::json::Json;
+
+/// Start a hermetic server on an ephemeral port; returns its address and
+/// the thread driving the accept loop (joined to assert clean shutdown).
+fn spawn_server() -> (SocketAddr, std::thread::JoinHandle<std::io::Result<()>>) {
+    let state = ServeState::new(SearchSession::synthetic().unwrap(), 2);
+    let server = Server::bind("127.0.0.1:0", state).unwrap();
+    let addr = server.local_addr().unwrap();
+    (addr, std::thread::spawn(move || server.run()))
+}
+
+fn connect(addr: SocketAddr) -> ServeClient {
+    ServeClient::connect_retry(&addr.to_string(), Duration::from_secs(10)).unwrap()
+}
+
+/// Send one raw line on a bare TCP stream (protocol-abuse cases the
+/// typed client cannot express).
+fn raw_send(stream: &mut TcpStream, line: &str) {
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    stream.flush().unwrap();
+}
+
+fn raw_read(reader: &mut BufReader<TcpStream>) -> Frame {
+    let mut line = String::new();
+    assert!(reader.read_line(&mut line).unwrap() > 0, "server closed the connection");
+    Frame::parse(&line).unwrap()
+}
+
+/// Tenant A: SiLago platform table (tied genome). The widened
+/// feasibility area keeps every reachable surrogate error feasible, so
+/// the front is never empty regardless of seed.
+fn silago_spec() -> ExperimentSpec {
+    ExperimentSpec::builder()
+        .name("tenant-silago")
+        .platform("silago")
+        .sram_mb(6.0)
+        .objective(ScoredObjective::error())
+        .objective(ScoredObjective::neg_speedup())
+        .pop_size(8)
+        .initial_pop_size(16)
+        .generations(6)
+        .seed(0x5117A60)
+        .err_feasible_pp(25.0)
+        .build()
+        .unwrap()
+}
+
+/// Tenant B: Bitfusion platform table (untied genome, extra objective).
+/// The 8 MB SRAM keeps the surrogate's feasible region wide (the paper's
+/// 2 MB budget forces 2/4-bit weights, whose surrogate error then trips
+/// the feasibility area — fine for a real search, flaky for a fixture).
+fn bitfusion_spec() -> ExperimentSpec {
+    ExperimentSpec::builder()
+        .name("tenant-bitfusion")
+        .platform("bitfusion")
+        .sram_mb(8.0)
+        .objective(ScoredObjective::error())
+        .objective(ScoredObjective::neg_speedup())
+        .objective(ScoredObjective::size_mb())
+        .pop_size(8)
+        .initial_pop_size(16)
+        .generations(6)
+        .seed(0xB17F)
+        .err_feasible_pp(35.0)
+        .build()
+        .unwrap()
+}
+
+/// Served front == offline front, bit for bit.
+fn assert_matches_offline(reply: &SearchReply, spec: &ExperimentSpec) {
+    // A fresh offline session: same spec, same seed, independent cache.
+    let offline = SearchSession::synthetic().unwrap().run(spec).unwrap();
+    assert_eq!(reply.objectives, offline.objective_names, "objective labels diverged");
+    assert_eq!(reply.evaluations, offline.evaluations, "evaluation counts diverged");
+    assert_eq!(reply.rows.len(), offline.rows.len(), "front size diverged");
+    for (served, local) in reply.rows.iter().zip(&offline.rows) {
+        assert_eq!(served.config, local.qc.display_wa());
+        assert_eq!(served.wer_v.to_bits(), local.wer_v.to_bits(), "wer_v not bitwise equal");
+        assert_eq!(served.wer_t.to_bits(), local.wer_t.to_bits(), "wer_t not bitwise equal");
+        assert_eq!(served.size_mb.to_bits(), local.size_mb.to_bits());
+        assert_eq!(served.hw.len(), local.hw.len());
+        for (sh, lh) in served.hw.iter().zip(&local.hw) {
+            assert_eq!(sh.platform, lh.platform);
+            assert_eq!(sh.speedup.to_bits(), lh.speedup.to_bits());
+        }
+    }
+    match (reply.hypervolume, offline.front_hypervolume) {
+        (Some(a), Some(b)) => assert_eq!(a.to_bits(), b.to_bits(), "hypervolume diverged"),
+        (a, b) => assert_eq!(a.is_some(), b.is_some(), "hypervolume presence diverged"),
+    }
+}
+
+#[test]
+fn concurrent_tenants_match_offline_and_share_the_cache() {
+    let (addr, server) = spawn_server();
+
+    // Two clients, two DIFFERENT platform tables, truly concurrent.
+    let (reply_a, reply_b) = std::thread::scope(|scope| {
+        let a = scope.spawn(move || connect(addr).search(&silago_spec()).unwrap());
+        let b = scope.spawn(move || connect(addr).search(&bitfusion_spec()).unwrap());
+        (a.join().unwrap(), b.join().unwrap())
+    });
+    assert!(!reply_a.rows.is_empty(), "tenant A front is empty");
+    assert!(!reply_b.rows.is_empty(), "tenant B front is empty");
+    assert!(reply_a.generations > 0, "no generation frames streamed");
+    assert_eq!(reply_a.objectives, vec!["WER_V", "-speedup@silago"]);
+    assert_eq!(reply_b.objectives, vec!["WER_V", "-speedup@bitfusion", "size_MB"]);
+
+    // Seed determinism: each served front is bitwise-identical to an
+    // offline SearchSession run of the same spec — even though the two
+    // requests shared one cache and one worker pool while racing.
+    assert_matches_offline(&reply_a, &silago_spec());
+    assert_matches_offline(&reply_b, &bitfusion_spec());
+
+    // Cross-request reuse: re-submitting tenant A's spec is served from
+    // the shared PTQ cache — plenty of hits, and fresh executions only
+    // for the final report's uncached test-split scoring (one per Pareto
+    // row) — the search itself is execution-free.
+    let mut client = connect(addr);
+    let rerun = client.search(&silago_spec()).unwrap();
+    assert!(rerun.cache_hits > 0, "repeat request must hit the shared cache");
+    assert!(
+        rerun.exec_calls <= rerun.rows.len(),
+        "search phase re-executed {} times for {} rows: cache not shared",
+        rerun.exec_calls,
+        rerun.rows.len()
+    );
+    assert_eq!(rerun.rows.len(), reply_a.rows.len());
+    for (x, y) in rerun.rows.iter().zip(&reply_a.rows) {
+        assert_eq!(x.config, y.config);
+        assert_eq!(x.wer_v.to_bits(), y.wer_v.to_bits());
+    }
+
+    // Server-level stats agree: one shared service, cumulative counters.
+    let stats = client.server_stats().unwrap();
+    assert!(stats.surrogate);
+    assert_eq!(stats.requests, 3);
+    assert!(stats.cache_hits >= rerun.cache_hits);
+    assert!(stats.unique_solutions > 0);
+    assert!(!stats.poisoned);
+
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn cancel_mid_search_returns_typed_error_frame() {
+    let (addr, server) = spawn_server();
+    let mut client = connect(addr);
+
+    // A long search (many generations) cancelled at the first generation
+    // frame: the server must answer with a `cancelled` error frame, not
+    // a front and not a dead socket.
+    let mut spec = silago_spec();
+    spec.ga.generations = 100_000;
+    let err = client
+        .search_with(&spec, |frame| matches!(frame, Frame::Generation { .. }))
+        .unwrap_err();
+    match err {
+        ClientError::Server { kind, .. } => assert_eq!(kind, "cancelled"),
+        other => panic!("expected server-side cancelled error, got {other:?}"),
+    }
+
+    // The connection survives cancellation.
+    client.ping().unwrap();
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn malformed_and_invalid_requests_get_error_frames_not_disconnects() {
+    let (addr, server) = spawn_server();
+
+    let mut raw = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(raw.try_clone().unwrap());
+
+    // Not JSON at all: protocol error, uncorrelated.
+    raw_send(&mut raw, "this is not json");
+    match raw_read(&mut reader) {
+        Frame::Error { id, kind, .. } => {
+            assert_eq!(id, None);
+            assert_eq!(kind, "protocol");
+        }
+        other => panic!("expected protocol error frame, got {other:?}"),
+    }
+
+    // Unknown op: protocol error, id still correlated.
+    raw_send(&mut raw, r#"{"op":"warp","id":4}"#);
+    match raw_read(&mut reader) {
+        Frame::Error { id, kind, .. } => {
+            assert_eq!(id, Some(4), "id correlated even for unknown ops");
+            assert_eq!(kind, "protocol");
+        }
+        other => panic!("expected protocol error frame, got {other:?}"),
+    }
+
+    // An invalid spec (no objectives): typed invalid_spec error frame on
+    // the SAME still-alive connection.
+    let bad = Json::parse(r#"{"name": "x", "objectives": []}"#).unwrap();
+    raw_send(&mut raw, &Request::Search { id: 9, spec: bad }.to_line());
+    match raw_read(&mut reader) {
+        Frame::Error { id, kind, .. } => {
+            assert_eq!(id, Some(9));
+            assert_eq!(kind, "invalid_spec");
+        }
+        other => panic!("expected invalid_spec error frame, got {other:?}"),
+    }
+
+    // An unknown platform in the tenant's table: typed unknown_platform.
+    let tpu = Json::parse(
+        r#"{"name": "x", "platforms": [{"name": "tpu-v9"}], "objectives": ["error"]}"#,
+    )
+    .unwrap();
+    raw_send(&mut raw, &Request::Search { id: 10, spec: tpu }.to_line());
+    match raw_read(&mut reader) {
+        Frame::Error { id, kind, message } => {
+            assert_eq!(id, Some(10));
+            assert_eq!(kind, "unknown_platform");
+            assert!(message.contains("tpu-v9"), "{message}");
+        }
+        other => panic!("expected unknown_platform error frame, got {other:?}"),
+    }
+
+    // After all that abuse the connection still serves a real search.
+    raw_send(&mut raw, &Request::Search { id: 11, spec: silago_spec().to_json() }.to_line());
+    loop {
+        match raw_read(&mut reader) {
+            Frame::Front { id, rows, .. } => {
+                assert_eq!(id, 11);
+                assert!(!rows.is_empty());
+                break;
+            }
+            Frame::Error { kind, message, .. } => {
+                panic!("search after abuse failed [{kind}]: {message}")
+            }
+            _ => continue,
+        }
+    }
+
+    let mut client = connect(addr);
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn disconnect_cancels_in_flight_searches() {
+    let (addr, server) = spawn_server();
+
+    // Fire a huge search, then drop the connection after the first
+    // frame. The server must cancel the orphaned search (the `active`
+    // count drains) rather than grind on forever.
+    {
+        let mut spec = silago_spec();
+        spec.ga.generations = 300_000;
+        spec.ga.seed = 0xD15C0;
+        let mut raw = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(raw.try_clone().unwrap());
+        raw_send(&mut raw, &Request::Search { id: 1, spec: spec.to_json() }.to_line());
+        let first = raw_read(&mut reader);
+        assert!(matches!(first, Frame::Started { .. }), "expected started, got {first:?}");
+        // Abandon the connection mid-search.
+    }
+
+    // The orphaned search drains: `active` returns to 0.
+    let mut client = connect(addr);
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    loop {
+        let stats = client.server_stats().unwrap();
+        if stats.active == 0 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "orphaned search did not cancel: {stats:?}"
+        );
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
