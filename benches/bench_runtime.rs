@@ -1,6 +1,8 @@
-//! Runtime hot-path benches: parallel generation evaluation (1 thread vs
-//! one-per-core — hermetic, the perf-trajectory number for the
-//! SearchSession thread pool), then the PJRT inference call (literal vs
+//! Runtime hot-path benches: a calibration spin (the normalization anchor
+//! for the bench-regression gate), the micro-batched PTQ eval throughput
+//! of the surrogate EvalService (hermetic — the headline eval-throughput
+//! number `mohaq bench-gate` protects), parallel generation evaluation
+//! (1 thread vs one-per-core), then the PJRT inference call (literal vs
 //! pre-uploaded-buffer input paths), parameter-set upload, qparam
 //! resolution and the full val_error evaluation — the numbers behind
 //! EXPERIMENTS.md §Perf L3.
@@ -10,12 +12,110 @@
 
 use std::sync::Arc;
 
-use mohaq::eval::EvalService;
+use mohaq::eval::{CacheKey, EvalService};
 use mohaq::moo::{Evaluation, Parallel, Problem, SyncProblem};
 use mohaq::quant::{resolve_qparams, Bits, QuantConfig};
 use mohaq::runtime::{Artifacts, Input, Runtime};
 use mohaq::util::bench::Bencher;
 use mohaq::util::pool;
+use mohaq::util::rng::Rng;
+
+/// Fixed integer spin measured like any other bench: the gate divides
+/// every throughput by this file's spin throughput so the verdict
+/// compares machine-relative scores, not raw items/s across runners
+/// (see util::benchgate).
+fn bench_calibration() -> std::io::Result<()> {
+    println!("== calibration spin (bench-gate normalization anchor) ==");
+    let mut b = Bencher::new(100, 1000, 10_000);
+    b.bench_items("calibration spin", 4096, || {
+        let mut acc = 0x5eedu64;
+        for i in 0..4096u64 {
+            acc = acc.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(i);
+        }
+        acc
+    });
+    b.emit_json("calibration")
+}
+
+/// A deterministic pool of fully-searchable 8-layer candidates (packable
+/// cache keys, no B32).
+fn candidate_pool(n_layers: usize, count: usize) -> Vec<QuantConfig> {
+    let mut rng = Rng::new(0xba7c4);
+    (0..count)
+        .map(|_| QuantConfig {
+            w_bits: (0..n_layers).map(|_| *rng.choose(&Bits::SEARCHABLE)).collect(),
+            a_bits: (0..n_layers).map(|_| *rng.choose(&Bits::SEARCHABLE)).collect(),
+        })
+        .collect()
+}
+
+/// Per-candidate `val_error` vs micro-batched `val_error_batch` on the
+/// hermetic surrogate engine — the eval-throughput trajectory the gate
+/// protects. Cold numbers rebuild the service every iteration (nothing
+/// memoized); hot numbers re-score one generation against a warm cache.
+fn bench_eval_throughput() -> anyhow::Result<()> {
+    println!("\n== EvalService PTQ eval throughput (hermetic surrogate) ==");
+    let arts = Arc::new(Artifacts::synthetic());
+    let n = arts.layer_names.len();
+    let pool = candidate_pool(n, 64);
+    let mut b = Bencher::new(150, 1500, 5_000);
+
+    b.bench_items("val_error x64 (per-candidate, cold)", 64, || {
+        let svc = EvalService::surrogate(arts.clone()).unwrap();
+        pool.iter().map(|qc| svc.val_error(qc, 0).unwrap()).sum::<f64>()
+    });
+    b.bench_items("val_error_batch x64 (cold)", 64, || {
+        let svc = EvalService::surrogate(arts.clone()).unwrap();
+        svc.val_error_batch(&pool, 0).unwrap()
+    });
+
+    let warm = EvalService::surrogate(arts.clone())?;
+    warm.val_error_batch(&pool, 0)?;
+    b.bench_items("val_error x64 (per-candidate, cache-hot)", 64, || {
+        pool.iter().map(|qc| warm.val_error(qc, 0).unwrap()).sum::<f64>()
+    });
+    b.bench_items("val_error_batch x64 (cache-hot)", 64, || {
+        warm.val_error_batch(&pool, 0).unwrap()
+    });
+
+    // Cache-key construction: packed (usize, u64, u64) vs the wide
+    // clone-both-gene-vectors representation it replaced.
+    b.bench_items("CacheKey x64 (packed u64 genes)", 64, || {
+        pool.iter()
+            .map(|qc| match CacheKey::new(0, qc) {
+                CacheKey::Packed(s, w, a) => s as u64 ^ w ^ a,
+                CacheKey::Wide(s, w, _) => s as u64 ^ w.len() as u64,
+            })
+            .fold(0u64, u64::wrapping_add)
+    });
+    b.bench_items("CacheKey x64 (wide clone baseline)", 64, || {
+        pool.iter()
+            .map(|qc| {
+                let k = CacheKey::Wide(0, qc.w_bits.clone(), qc.a_bits.clone());
+                match &k {
+                    CacheKey::Wide(_, w, a) => (w.len() + a.len()) as u64,
+                    CacheKey::Packed(..) => 0,
+                }
+            })
+            .fold(0u64, u64::wrapping_add)
+    });
+
+    // Qparam resolution: dense [layer][bits] table vs the string-keyed
+    // BTreeMap lookups it replaced on the eval hot path.
+    b.bench_items("QparamTable::resolve x64 (dense rows)", 64, || {
+        pool.iter().map(|qc| arts.qtable.resolve(qc).unwrap().0[0]).sum::<f32>()
+    });
+    b.bench_items("resolve_qparams x64 (string-keyed)", 64, || {
+        pool.iter()
+            .map(|qc| {
+                resolve_qparams(qc, &arts.layer_names, &arts.w_clips, &arts.a_clips).unwrap().0[0]
+            })
+            .sum::<f32>()
+    });
+
+    b.emit_json("eval_throughput")?;
+    Ok(())
+}
 
 /// Stand-in for one candidate evaluation: a genome-dependent compute spin
 /// roughly shaped like a small inference call, so the 1-vs-N-thread ratio
@@ -73,6 +173,8 @@ fn bench_parallel_eval(b: &mut Bencher) {
 }
 
 fn main() -> anyhow::Result<()> {
+    bench_calibration()?;
+    bench_eval_throughput()?;
     let mut hb = Bencher::new(200, 2000, 10_000);
     bench_parallel_eval(&mut hb);
     hb.emit_json("bench_runtime_parallel_eval")?;
@@ -95,6 +197,7 @@ fn main() -> anyhow::Result<()> {
     b.bench("resolve_qparams (8 layers)", || {
         resolve_qparams(&qc, &arts.layer_names, &arts.w_clips, &arts.a_clips).unwrap()
     });
+    b.bench("QparamTable::resolve (8 layers)", || arts.qtable.resolve(&qc).unwrap());
 
     // One inference batch, literal path (weights re-uploaded every call).
     let (wq, aq) = resolve_qparams(&qc, &arts.layer_names, &arts.w_clips, &arts.a_clips)?;

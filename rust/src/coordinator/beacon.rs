@@ -65,11 +65,27 @@ pub struct Beacon {
 pub enum BeaconDecision {
     /// Evaluate with the baseline parameter set.
     Baseline,
-    /// Re-evaluate with an existing beacon's parameter set.
-    Share { set_idx: usize },
+    /// Re-evaluate with an existing beacon's parameter set. Carries the
+    /// index into `beacons` (NOT a param-set id): during batch planning
+    /// the shared beacon may itself still be pending retraining, so its
+    /// set id does not exist yet.
+    Share { beacon_idx: usize },
     /// Eligible to become a new beacon (retrain, then register).
     Create,
 }
+
+/// One candidate's planned parameter source, produced by `plan_batch`:
+/// either the baseline set or a beacon (possibly one freshly created by
+/// the same planning pass, pending retraining).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BeaconPlan {
+    Baseline,
+    Beacon { beacon_idx: usize },
+}
+
+/// `set_idx` placeholder for a planned-but-not-yet-retrained beacon.
+/// `finalize_pending` replaces it with the registered param-set id.
+const PENDING_SET: usize = usize::MAX;
 
 pub struct BeaconManager {
     pub policy: BeaconPolicy,
@@ -125,7 +141,7 @@ impl BeaconManager {
         let wants_beacon = base_err >= self.policy.min_err_for_retrain;
         match self.nearest(qc) {
             Some((idx, d)) if d <= self.policy.threshold => {
-                BeaconDecision::Share { set_idx: self.beacons[idx].set_idx }
+                BeaconDecision::Share { beacon_idx: idx }
             }
             _ if wants_beacon && self.beacons.len() < self.policy.max_beacons => {
                 BeaconDecision::Create
@@ -133,6 +149,77 @@ impl BeaconManager {
             // No beacon close enough and not eligible to create one.
             _ => BeaconDecision::Baseline,
         }
+    }
+
+    /// The sequential half of the batched Algorithm 1 schedule: walk the
+    /// candidates in input order, decide Baseline/Share/Create for each,
+    /// and register fresh beacons IMMEDIATELY (param set pending) so later
+    /// candidates in the same batch see them in `nearest` — exactly the
+    /// visibility the per-candidate sequential schedule produces, since
+    /// `decide` depends only on beacon positions, never on their trained
+    /// parameters. Returns one plan per candidate plus the indices of the
+    /// freshly planned beacons (in creation == index order), whose
+    /// retraining the caller may dispatch in parallel before applying
+    /// results with `finalize_pending`.
+    pub fn plan_batch(&mut self, cands: &[(&QuantConfig, f64)]) -> (Vec<BeaconPlan>, Vec<usize>) {
+        let mut plans = Vec::with_capacity(cands.len());
+        let mut fresh = Vec::new();
+        for (qc, base_err) in cands {
+            self.lookups += 1;
+            let plan = match self.decide(qc, *base_err) {
+                BeaconDecision::Baseline => BeaconPlan::Baseline,
+                BeaconDecision::Share { beacon_idx } => BeaconPlan::Beacon { beacon_idx },
+                BeaconDecision::Create => {
+                    let beacon_idx = self.beacons.len();
+                    self.beacons.push(Beacon {
+                        qc: (*qc).clone(),
+                        set_idx: PENDING_SET,
+                        report: RetrainReport {
+                            steps: 0,
+                            lr: self.policy.lr,
+                            loss_curve: Vec::new(),
+                            wall_secs: 0.0,
+                        },
+                    });
+                    fresh.push(beacon_idx);
+                    BeaconPlan::Beacon { beacon_idx }
+                }
+            };
+            plans.push(plan);
+        }
+        (plans, fresh)
+    }
+
+    /// Apply one finished retraining to the pending beacon at
+    /// `beacon_idx`: register the parameter set, record the report and
+    /// stream the creation event. MUST be called in ascending beacon
+    /// order — param-set ids, the created log and sink events then match
+    /// the sequential schedule exactly regardless of which worker
+    /// finished first.
+    pub fn finalize_pending(
+        &mut self,
+        beacon_idx: usize,
+        eval: &EvalService,
+        params: Vec<Vec<f32>>,
+        report: RetrainReport,
+    ) -> Result<usize> {
+        debug_assert_eq!(self.beacons[beacon_idx].set_idx, PENDING_SET);
+        let name = format!("beacon{beacon_idx}[{}]", self.beacons[beacon_idx].qc.display_wa());
+        let set_idx = eval.add_param_set(&name, params)?;
+        if let Some(sink) = &self.sink {
+            sink.lock().expect("beacon sink poisoned").push((name.clone(), report.steps));
+        }
+        self.created_log.push(name);
+        let b = &mut self.beacons[beacon_idx];
+        b.set_idx = set_idx;
+        b.report = report;
+        Ok(set_idx)
+    }
+
+    /// Param-set id of a (finalized) beacon.
+    pub fn set_of(&self, beacon_idx: usize) -> usize {
+        debug_assert_ne!(self.beacons[beacon_idx].set_idx, PENDING_SET, "beacon still pending");
+        self.beacons[beacon_idx].set_idx
     }
 
     /// Algorithm 1: decide which parameter set to evaluate `qc` with.
@@ -148,11 +235,12 @@ impl BeaconManager {
         self.lookups += 1;
         match self.decide(qc, base_err) {
             BeaconDecision::Baseline => Ok(None),
-            BeaconDecision::Share { set_idx } => Ok(Some(set_idx)),
+            BeaconDecision::Share { beacon_idx } => Ok(Some(self.beacons[beacon_idx].set_idx)),
             BeaconDecision::Create => {
                 // Convert this solution into a beacon by retraining.
+                let base = eval.param_set(0)?;
                 let (params, report) = trainer.retrain(
-                    &eval.param_set(0).host.clone(),
+                    &base.host,
                     qc,
                     self.policy.retrain_steps,
                     self.policy.lr,
@@ -240,7 +328,7 @@ mod tests {
         // within the threshold instead of retraining.
         mgr.beacons.push(beacon_at(&[2; 8], 3));
         let near = qc(&[2, 2, 2, 2, 2, 2, 2, 4]); // distance 1 <= 6
-        assert_eq!(mgr.decide(&near, 0.17), BeaconDecision::Share { set_idx: 3 });
+        assert_eq!(mgr.decide(&near, 0.17), BeaconDecision::Share { beacon_idx: 0 });
 
         // max_beacons cap: a want-to-create candidate far from every
         // beacon falls back to the baseline once the cap is reached.
@@ -268,5 +356,33 @@ mod tests {
         assert!(d > mgr.policy.threshold && d <= mgr.policy.threshold * 1.5, "d={d}");
         // Below min_err_for_retrain => not a Create candidate either.
         assert_eq!(mgr.decide(&candidate, 0.17), BeaconDecision::Baseline);
+    }
+
+    /// `plan_batch` must reproduce the sequential Algorithm 1 visibility:
+    /// a candidate later in the batch shares a beacon planned EARLIER in
+    /// the same batch, and the duplicate never becomes a second beacon.
+    #[test]
+    fn plan_batch_makes_pending_beacons_visible_within_the_batch() {
+        let policy = BeaconPolicy::paper_defaults(0.16, 1e-3);
+        let mut mgr = BeaconManager::new(policy);
+        let creator = qc(&[2; 8]);
+        let neighbor = qc(&[2, 2, 2, 2, 2, 2, 2, 4]); // distance 1 from creator
+        let far_low = qc(&[16; 8]); // low error, no beacon near -> baseline
+        let cands = vec![(&creator, 0.30), (&neighbor, 0.28), (&creator, 0.30), (&far_low, 0.17)];
+        let (plans, fresh) = mgr.plan_batch(&cands);
+        assert_eq!(fresh, vec![0], "exactly one beacon planned");
+        assert_eq!(
+            plans,
+            vec![
+                BeaconPlan::Beacon { beacon_idx: 0 },
+                BeaconPlan::Beacon { beacon_idx: 0 },
+                BeaconPlan::Beacon { beacon_idx: 0 },
+                BeaconPlan::Baseline,
+            ]
+        );
+        assert_eq!(mgr.lookups, 4);
+        assert_eq!(mgr.beacons.len(), 1);
+        assert_eq!(mgr.beacons[0].set_idx, PENDING_SET, "param set still pending");
+        assert!(mgr.created_log.is_empty(), "creation is logged at finalize, not planning");
     }
 }

@@ -29,8 +29,16 @@ pub enum SearchError {
 
 impl SearchError {
     /// Wrap an internal `anyhow` failure, keeping its full cause chain.
+    /// Poison-marked failures (the eval cache and param-set table return
+    /// typed "poisoned" errors instead of panicking) classify as
+    /// `Poisoned`, same as panic payloads caught at the session boundary.
     pub fn eval(e: anyhow::Error) -> SearchError {
-        SearchError::Eval(format!("{e:#}"))
+        let msg = format!("{e:#}");
+        if msg.contains("poisoned") {
+            SearchError::Poisoned(msg)
+        } else {
+            SearchError::Eval(msg)
+        }
     }
 
     pub fn invalid(msg: impl Into<String>) -> SearchError {
@@ -113,6 +121,18 @@ mod tests {
         assert!(matches!(e, SearchError::Poisoned(_)), "{e:?}");
         let e = SearchError::from_panic("candidate evaluation failed: device lost".into());
         assert!(matches!(e, SearchError::Eval(_)), "{e:?}");
+    }
+
+    #[test]
+    fn eval_wrapper_classifies_poisoned_state() {
+        // The fuse path (try_evaluate_batch -> SearchError::eval) must
+        // type poisoned-lock failures the same way the panic boundary
+        // does — `param sets poisoned` used to surface as plain Eval.
+        let e = SearchError::eval(anyhow::anyhow!(
+            "param sets poisoned: a worker panicked while holding the lock"
+        ));
+        assert!(matches!(e, SearchError::Poisoned(_)), "{e:?}");
+        assert_eq!(e.kind(), "poisoned");
     }
 
     #[test]

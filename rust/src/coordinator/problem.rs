@@ -8,11 +8,17 @@
 //! objectives bound to DIFFERENT registered platforms, and every binding
 //! contributes its own SRAM constraint (violations are summed).
 //!
-//! Generations are evaluated in two phases: the post-training-quantization
+//! Generations are evaluated in phases: the post-training-quantization
 //! errors (the expensive PJRT executions) fan out across the session's
-//! thread pool, then the order-dependent beacon logic (Algorithm 1) runs
-//! sequentially over the precomputed errors. Both phases are deterministic
-//! per seed, so the front is bitwise-identical for any thread count.
+//! thread pool as MICRO-BATCHES — each worker receives one packed
+//! `val_error_batch` submission instead of one job per genome. The
+//! order-dependent half of the beacon logic (Algorithm 1) is only the
+//! *selection* pass, which runs sequentially over the precomputed errors;
+//! the retrainings it schedules are independent (each beacon trains on a
+//! forked RNG stream that is a pure function of seed and beacon index)
+//! and fan out across the same pool, with results applied in beacon
+//! order. Every phase is deterministic per seed, so the front is
+//! bitwise-identical for any thread count, batch size or island count.
 //!
 //! Under the island model (`moo::island`) a "generation" is the
 //! concatenation of every island's offspring, delivered here as one
@@ -27,10 +33,10 @@
 //! sentinel (no further PJRT work), and `SearchSession` surfaces the
 //! stored error after the engine unwinds. No worker-pool panics.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::Arc;
 
-use crate::coordinator::beacon::BeaconManager;
+use crate::coordinator::beacon::{BeaconManager, BeaconPlan};
 use crate::coordinator::error::SearchError;
 use crate::coordinator::objective::{sram_violation_mb, BoundObjective, PlatformBinding};
 use crate::coordinator::session::CancelToken;
@@ -39,7 +45,7 @@ use crate::eval::EvalService;
 use crate::moo::{Evaluation, Problem};
 use crate::quant::QuantConfig;
 use crate::runtime::Artifacts;
-use crate::util::pool::{map_parallel, WorkQueue};
+use crate::util::pool::{map_parallel, run_once_parallel, WorkQueue};
 
 /// How the parallel PTQ phase fans out over workers.
 #[derive(Clone)]
@@ -120,27 +126,45 @@ impl MohaqProblem {
         qc.ok_or_else(|| SearchError::Eval(format!("invalid genome {genome:?}")))
     }
 
-    /// Sequential half of Algorithm 1: given the (possibly parallel)
-    /// precomputed baseline error, decide whether a beacon parameter set
-    /// applies and return (err, set_idx).
-    fn refine_with_beacons(
-        &mut self,
-        qc: &QuantConfig,
-        base_err: f64,
-    ) -> anyhow::Result<(f64, usize)> {
-        if let (Some(beacons), Some(trainer)) = (self.beacons.as_mut(), self.trainer.as_mut()) {
-            if let Some(set) = beacons.select_or_create(qc, base_err, &self.eval, trainer)? {
-                let err = self.eval.val_error(qc, set)?;
-                // A beacon can only help; keep the better of the two
-                // (retraining a *different* genome can occasionally hurt
-                // an easy solution — the paper keeps such solutions via
-                // the baseline parameters).
-                if err < base_err {
-                    return Ok((err, set));
-                }
-            }
+    /// Fan the PTQ evaluation of `qcs` (against parameter set `set`) out
+    /// over the active strategy as micro-batches: ~one chunk per worker,
+    /// each chunk ONE packed `val_error_batch` submission, so a whole
+    /// generation reaches the eval service as a handful of batched jobs
+    /// instead of one per genome. Results come back in input order, and
+    /// the batched entry point is bitwise- and counter-identical to
+    /// per-candidate calls, so chunk geometry can never leak into the
+    /// front. (Associated fn, not a method: callers hold disjoint field
+    /// borrows of `self` during the beacon phase.)
+    fn fan_out_val_errors(
+        evaluator: &EvalStrategy,
+        eval: &Arc<EvalService>,
+        qcs: &[QuantConfig],
+        set: usize,
+    ) -> Result<Vec<f64>, SearchError> {
+        if qcs.is_empty() {
+            return Ok(Vec::new());
         }
-        Ok((base_err, 0))
+        let chunk = qcs.len().div_ceil(evaluator.workers().max(1)).max(1);
+        let results: Vec<anyhow::Result<Vec<f64>>> = match evaluator {
+            EvalStrategy::Threads(threads) => {
+                let chunks: Vec<&[QuantConfig]> = qcs.chunks(chunk).collect();
+                map_parallel(*threads, &chunks, |_, c| eval.val_error_batch(c, set))
+            }
+            EvalStrategy::Shared(queue) => queue.run_batch(
+                qcs.chunks(chunk)
+                    .map(|c| {
+                        let eval = eval.clone();
+                        let chunk: Vec<QuantConfig> = c.to_vec();
+                        move || eval.val_error_batch(&chunk, set)
+                    })
+                    .collect(),
+            ),
+        };
+        let mut out = Vec::with_capacity(qcs.len());
+        for r in results {
+            out.extend(r.map_err(SearchError::eval)?);
+        }
+        Ok(out)
     }
 
     fn score(
@@ -148,9 +172,9 @@ impl MohaqProblem {
         genome: &[i64],
         qc: &QuantConfig,
         base_err: f64,
+        err: f64,
+        set_idx: usize,
     ) -> Result<Evaluation, SearchError> {
-        let (err, set_idx) = self.refine_with_beacons(qc, base_err).map_err(SearchError::eval)?;
-
         let mut objectives = Vec::with_capacity(self.objectives.len());
         for obj in &self.objectives {
             objectives.push(obj.score(&self.bindings, &self.arts.model, qc, err)?);
@@ -200,34 +224,106 @@ impl MohaqProblem {
                 unique.push(i);
             }
         }
-        let base_results: Vec<anyhow::Result<f64>> = match &self.evaluator {
-            EvalStrategy::Threads(threads) => {
-                let eval = &self.eval;
-                map_parallel(*threads, &unique, |_, &i| eval.val_error(&qcs[i], 0))
-            }
-            EvalStrategy::Shared(queue) => queue.run_batch(
-                unique
-                    .iter()
-                    .map(|&i| {
-                        let eval = self.eval.clone();
-                        let qc = qcs[i].clone();
-                        move || eval.val_error(&qc, 0)
-                    })
-                    .collect(),
-            ),
-        };
-        let base_errs: Vec<f64> = base_results
-            .into_iter()
-            .map(|r| r.map_err(SearchError::eval))
-            .collect::<Result<_, _>>()?;
+        let unique_qcs: Vec<QuantConfig> = unique.iter().map(|&i| qcs[i].clone()).collect();
+        let base_errs = Self::fan_out_val_errors(&self.evaluator, &self.eval, &unique_qcs, 0)?;
 
-        // Phase 2 (sequential, input order): beacon logic + objectives.
+        // Phase 2 (Algorithm 1), split so only the genuinely
+        // order-dependent parts stay sequential:
+        //   2a (sequential, input order): beacon selection/creation
+        //       decisions — pending beacons become visible to later
+        //       candidates exactly as in the per-candidate schedule.
+        //   2b (parallel): retraining of the fresh beacons. Each trains on
+        //       a forked RNG stream that is a pure function of (seed,
+        //       beacon index), so dispatch order cannot reach the trained
+        //       parameters.
+        //   2c (sequential, beacon order): apply the retraining results —
+        //       param-set registration, reports, creation events.
+        //   2d (parallel): beacon-set re-evaluations, deduped and
+        //       micro-batched per set.
+        let mut final_err_set: Vec<(f64, usize)> =
+            genomes.iter().map(|g| (base_errs[slot_of[g.as_slice()]], 0usize)).collect();
+        {
+            // Disjoint field borrows: the beacon manager is held mutably
+            // across fan-outs that need the evaluator and eval service.
+            let Self { beacons, trainer, evaluator, eval, .. } = &mut *self;
+            if let (Some(beacons), Some(trainer)) = (beacons.as_mut(), trainer.as_ref()) {
+                let cands: Vec<(&QuantConfig, f64)> = genomes
+                    .iter()
+                    .zip(&qcs)
+                    .map(|(g, qc)| (qc, base_errs[slot_of[g.as_slice()]]))
+                    .collect();
+                let (plans, fresh) = beacons.plan_batch(&cands);
+
+                if !fresh.is_empty() {
+                    let base = eval.param_set(0).map_err(SearchError::eval)?;
+                    let (steps, lr) = (beacons.policy.retrain_steps, beacons.policy.lr);
+                    let jobs: Vec<_> = fresh
+                        .iter()
+                        .map(|&bidx| {
+                            let mut t = trainer.fork(bidx as u64);
+                            let qc = beacons.beacons[bidx].qc.clone();
+                            let base = base.clone();
+                            move || t.retrain(&base.host, &qc, steps, lr)
+                        })
+                        .collect();
+                    let results = match evaluator {
+                        EvalStrategy::Threads(threads) => run_once_parallel(*threads, jobs),
+                        EvalStrategy::Shared(queue) => queue.run_batch(jobs),
+                    };
+                    for (&bidx, result) in fresh.iter().zip(results) {
+                        let (params, report) = result.map_err(SearchError::eval)?;
+                        beacons
+                            .finalize_pending(bidx, eval, params, report)
+                            .map_err(SearchError::eval)?;
+                    }
+                }
+
+                // 2d: one re-eval per unique (set, genome) pair, grouped
+                // by set so each group is a packed batched submission.
+                let mut by_set: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+                let mut seen: HashSet<(usize, usize)> = HashSet::new();
+                for (i, plan) in plans.iter().enumerate() {
+                    if let BeaconPlan::Beacon { beacon_idx } = plan {
+                        let set = beacons.set_of(*beacon_idx);
+                        let slot = slot_of[genomes[i].as_slice()];
+                        if seen.insert((set, slot)) {
+                            by_set.entry(set).or_default().push(i);
+                        }
+                    }
+                }
+                let mut beacon_err: HashMap<(usize, usize), f64> = HashMap::new();
+                for (set, idxs) in &by_set {
+                    let batch: Vec<QuantConfig> = idxs.iter().map(|&i| qcs[i].clone()).collect();
+                    let errs = Self::fan_out_val_errors(evaluator, eval, &batch, *set)?;
+                    for (&i, e) in idxs.iter().zip(errs) {
+                        beacon_err.insert((*set, slot_of[genomes[i].as_slice()]), e);
+                    }
+                }
+                for (i, plan) in plans.iter().enumerate() {
+                    if let BeaconPlan::Beacon { beacon_idx } = plan {
+                        let set = beacons.set_of(*beacon_idx);
+                        let err = beacon_err[&(set, slot_of[genomes[i].as_slice()])];
+                        // A beacon can only help; keep the better of the
+                        // two (retraining a *different* genome can
+                        // occasionally hurt an easy solution — the paper
+                        // keeps such solutions via the baseline params).
+                        if err < final_err_set[i].0 {
+                            final_err_set[i] = (err, set);
+                        }
+                    }
+                }
+            }
+        }
+
+        // Phase 3 (sequential, input order): objectives + records.
         genomes
             .iter()
             .zip(&qcs)
-            .map(|(genome, qc)| {
+            .enumerate()
+            .map(|(i, (genome, qc))| {
                 let base_err = base_errs[slot_of[genome.as_slice()]];
-                self.score(genome, qc, base_err)
+                let (err, set_idx) = final_err_set[i];
+                self.score(genome, qc, base_err, err, set_idx)
             })
             .collect()
     }

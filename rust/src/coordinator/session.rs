@@ -27,9 +27,12 @@
 //! `SolutionRow::hw` carries the per-platform metrics.
 //!
 //! Determinism contract: for a fixed spec (including seed), the resulting
-//! front is bitwise-identical for ANY thread count — the parallel phase
-//! computes order-independent pure values and the order-dependent beacon
-//! phase stays sequential (see `MohaqProblem::evaluate_batch`).
+//! front is bitwise-identical for ANY thread count, micro-batch geometry
+//! or island count — the parallel phases (micro-batched PTQ evaluation,
+//! beacon retraining on per-beacon forked RNG streams) compute
+//! order-independent pure values, and only the order-dependent beacon
+//! *selection* pass stays sequential (see `MohaqProblem::evaluate_batch`
+//! and `BeaconManager::plan_batch`).
 
 use std::cmp::Ordering;
 use std::collections::HashMap;
@@ -487,7 +490,12 @@ impl SearchSession {
                 size_mb: model.size_bytes(&qc.w_bits) / (1024.0 * 1024.0),
                 speedup: hw.first().map(|h| h.speedup),
                 energy_uj: hw.first().and_then(|h| h.energy_uj),
-                param_set: problem.eval.param_set(set_idx).name.clone(),
+                param_set: problem
+                    .eval
+                    .param_set(set_idx)
+                    .map_err(SearchError::eval)?
+                    .name
+                    .clone(),
                 hw,
                 qc,
                 wer_v,

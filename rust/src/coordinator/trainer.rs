@@ -12,7 +12,12 @@ use crate::util::rng::Rng;
 
 pub struct Trainer {
     arts: Arc<Artifacts>,
-    exec: Executor,
+    /// Shared compiled train-step executable: forked trainers reuse it,
+    /// so a parallel retraining fan-out compiles nothing.
+    exec: Arc<Executor>,
+    /// The seed this trainer was built with — forked per-beacon RNG
+    /// streams derive from it, NOT from the live `rng` (which advances).
+    seed: u64,
     rng: Rng,
     /// Scratch for gathering non-contiguous training batches.
     x_batch: Vec<f32>,
@@ -30,14 +35,33 @@ pub struct RetrainReport {
 
 impl Trainer {
     pub fn new(rt: &Runtime, arts: Arc<Artifacts>, seed: u64) -> Result<Trainer> {
-        let exec = rt.load(arts.hlo_path("train_step")?)?;
+        let exec = Arc::new(rt.load(arts.hlo_path("train_step")?)?);
         Ok(Trainer {
             arts,
             exec,
+            seed,
             rng: Rng::new(seed),
             x_batch: Vec::new(),
             y_batch: Vec::new(),
         })
+    }
+
+    /// Derive an independent trainer for one parallel retraining run. It
+    /// shares the compiled executable (Arc clone, no recompilation) and
+    /// draws batches from an RNG stream that is a PURE function of
+    /// (base seed, stream tag) — beacon i always retrains on stream i, so
+    /// the trained parameters are identical whether the runs execute
+    /// sequentially or fan out across a worker pool in any order.
+    pub fn fork(&self, stream: u64) -> Trainer {
+        let mut base = Rng::new(self.seed);
+        Trainer {
+            arts: self.arts.clone(),
+            exec: self.exec.clone(),
+            seed: self.seed,
+            rng: base.fork(stream.wrapping_add(1)),
+            x_batch: Vec::new(),
+            y_batch: Vec::new(),
+        }
     }
 
     fn gather_batch(&mut self) {
@@ -65,12 +89,7 @@ impl Trainer {
         let t0 = std::time::Instant::now();
         let a = self.arts.clone();
         anyhow::ensure!(start.len() == a.tensors.len(), "bad param count");
-        let (wq, aq) = crate::quant::resolve_qparams(
-            qc,
-            &a.layer_names,
-            &a.w_clips,
-            &a.a_clips,
-        )?;
+        let (wq, aq) = a.qtable.resolve(qc)?;
         let n_layers = a.layer_names.len() as i64;
         let (b, t, f) = (a.batch as i64, a.seq_len as i64, a.feat_dim as i64);
         let shapes: Vec<Vec<i64>> = a

@@ -1,11 +1,18 @@
 //! Candidate-solution evaluation service: the error objective.
 //!
 //! Wraps the AOT inference executable. A candidate (QuantConfig) is
-//! resolved against the calibration tables into runtime (Δ,qmin,qmax,en)
-//! rows, then the executable runs over the validation subsets; the error
-//! objective is the MAX subset error (paper §4.2's variance-reduction
-//! trick). Results are memoized per (parameter-set, genome) — NSGA-II
-//! revisits genomes often with pop 10 x 60 generations.
+//! resolved through the dense precomputed [`crate::quant::QparamTable`]
+//! into runtime (Δ,qmin,qmax,en) rows, then the executable runs over the
+//! validation subsets; the error objective is the MAX subset error (paper
+//! §4.2's variance-reduction trick). Results are memoized per
+//! (parameter-set, genome) — NSGA-II revisits genomes often with pop 10 x
+//! 60 generations.
+//!
+//! The hot path is BATCHED: [`EvalService::val_error_batch`] scores M
+//! candidates with one cache round trip, one packed (M, L, 4) qparam
+//! resolution, and (on PJRT) one wq/aq upload per unique candidate over
+//! data batches that were uploaded once at construction. Per-candidate
+//! [`EvalService::val_error`] remains and is bitwise-identical.
 //!
 //! The service is `Send + Sync`: the result cache, execution counters and
 //! parameter-set table all use interior mutability, so one instance can
@@ -32,18 +39,62 @@ use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{Context, Result};
 
-use crate::quant::{resolve_qparams, Bits, QuantConfig};
-use crate::runtime::{scalar_f32, Artifacts, Executor, Input, Runtime, Split};
+use crate::quant::{Bits, QuantConfig};
+use crate::runtime::{scalar_f32, Artifacts, DeviceTensor, Executor, Input, Runtime, Split};
 
 pub struct ParamSet {
     pub name: String,
     /// Host copy (beacon sets need it as the start point of further runs
     /// and for the final report).
     pub host: Vec<Vec<f32>>,
-    bufs: Vec<crate::runtime::DeviceTensor>,
+    bufs: Vec<DeviceTensor>,
 }
 
-type CacheKey = (usize, Vec<Bits>, Vec<Bits>);
+/// Memo key for one (parameter set, genome) pair.
+///
+/// The hot variant packs each gene into 2 bits (4 searchable precisions)
+/// behind a length-marker bit — one `u64` per side — so building a key
+/// costs ZERO heap allocations. The previous key type,
+/// `(usize, Vec<Bits>, Vec<Bits>)`, cloned both gene vectors on EVERY
+/// lookup, cache hit or not. B32 genes (report-table rows, never searched)
+/// and models beyond 31 layers don't fit 2 bits/gene in a u64; they take
+/// the allocating wide fallback, so correctness never depends on packing.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum CacheKey {
+    Packed(usize, u64, u64),
+    Wide(usize, Vec<Bits>, Vec<Bits>),
+}
+
+impl CacheKey {
+    pub fn new(set: usize, qc: &QuantConfig) -> CacheKey {
+        match (pack_genes(&qc.w_bits), pack_genes(&qc.a_bits)) {
+            (Some(w), Some(a)) => CacheKey::Packed(set, w, a),
+            _ => CacheKey::Wide(set, qc.w_bits.clone(), qc.a_bits.clone()),
+        }
+    }
+}
+
+/// 2 bits per searchable gene, shifted in under a leading marker bit
+/// ([B2] -> 0b1_00, [B2,B2] -> 0b1_00_00): genomes of different lengths
+/// can never collide. `None` when the genome doesn't fit (B32 gene or
+/// more than 31 layers) — callers fall back to `CacheKey::Wide`.
+fn pack_genes(bits: &[Bits]) -> Option<u64> {
+    if bits.len() > 31 {
+        return None;
+    }
+    let mut packed: u64 = 1;
+    for b in bits {
+        let code = match b {
+            Bits::B2 => 0u64,
+            Bits::B4 => 1,
+            Bits::B8 => 2,
+            Bits::B16 => 3,
+            Bits::B32 => return None,
+        };
+        packed = (packed << 2) | code;
+    }
+    Some(packed)
+}
 
 /// Shared memo map behind a poison-aware mutex. A worker that panics while
 /// holding the lock poisons it; every later access returns a typed error
@@ -71,6 +122,23 @@ impl<K: std::hash::Hash + Eq, V: Clone> ResultCache<K, V> {
 
     pub fn insert(&self, key: K, value: V) -> Result<()> {
         self.guard()?.insert(key, value);
+        Ok(())
+    }
+
+    /// Bulk lookup: one lock acquisition for a whole evaluation batch
+    /// (the per-candidate path pays one per genome). Results line up with
+    /// `keys` by index.
+    pub fn get_many(&self, keys: &[K]) -> Result<Vec<Option<V>>> {
+        let guard = self.guard()?;
+        Ok(keys.iter().map(|k| guard.get(k).cloned()).collect())
+    }
+
+    /// Bulk insert under a single lock acquisition.
+    pub fn insert_many(&self, entries: Vec<(K, V)>) -> Result<()> {
+        let mut guard = self.guard()?;
+        for (k, v) in entries {
+            guard.insert(k, v);
+        }
         Ok(())
     }
 
@@ -126,10 +194,42 @@ pub struct EvalStats {
 
 /// How candidate errors are produced.
 enum Engine {
-    /// The AOT inference executable on a PJRT client.
-    Pjrt(Executor),
+    /// The AOT inference executable on a PJRT client. Every (x, y) batch
+    /// of every validation subset and the test split is uploaded ONCE at
+    /// service construction and stays device-resident — per-candidate
+    /// evaluation moves only the (L,4) qparam rows across the host
+    /// boundary (and batched evaluation amortizes even that packing).
+    Pjrt {
+        exec: Executor,
+        /// `val_data[subset][batch]` = pre-uploaded (x, y) device pair.
+        val_data: Vec<Vec<(DeviceTensor, DeviceTensor)>>,
+        test_data: Vec<(DeviceTensor, DeviceTensor)>,
+    },
     /// Hermetic closed-form error model (see `surrogate_val_error`).
     Surrogate,
+}
+
+impl Engine {
+    /// Build the PJRT engine: compile nothing (the executor is handed in
+    /// compiled), upload every data batch once.
+    fn pjrt(exec: Executor, arts: &Artifacts) -> Result<Engine> {
+        let (b, t, f) = (arts.batch, arts.seq_len, arts.feat_dim);
+        let upload_split = |split: &Split| -> Result<Vec<(DeviceTensor, DeviceTensor)>> {
+            (0..split.num_batches(b))
+                .map(|k| {
+                    let (x, y) = split.batch(k, b, t, f);
+                    Ok((
+                        exec.upload(&Input::F32(x, vec![b as i64, t as i64, f as i64]))?,
+                        exec.upload(&Input::I32(y, vec![b as i64, t as i64]))?,
+                    ))
+                })
+                .collect()
+        };
+        let val_data =
+            arts.val_subsets.iter().map(upload_split).collect::<Result<Vec<_>>>()?;
+        let test_data = upload_split(&arts.test)?;
+        Ok(Engine::Pjrt { exec, val_data, test_data })
+    }
 }
 
 pub struct EvalService {
@@ -155,7 +255,8 @@ impl EvalService {
             _ => "infer_ref",
         };
         let exec = rt.load(arts.hlo_path(which).or_else(|_| arts.hlo_path("infer"))?)?;
-        EvalService::with_engine(arts, Engine::Pjrt(exec))
+        let engine = Engine::pjrt(exec, &arts)?;
+        EvalService::with_engine(arts, engine)
     }
 
     /// Hermetic engine: candidate errors come from a deterministic
@@ -186,6 +287,16 @@ impl EvalService {
         matches!(self.engine, Engine::Surrogate)
     }
 
+    /// Read access to the parameter-set table; a poisoned lock surfaces
+    /// as the same typed "poisoned" error the result cache uses (so
+    /// `SearchError` classifies it as `Poisoned`), NOT as a second panic
+    /// inside the worker pool.
+    fn sets(&self) -> Result<std::sync::RwLockReadGuard<'_, Vec<Arc<ParamSet>>>> {
+        self.param_sets.read().map_err(|_| {
+            anyhow::anyhow!("param sets poisoned: a worker panicked while holding the lock")
+        })
+    }
+
     /// Register a parameter set (e.g. a retrained beacon); returns its id.
     pub fn add_param_set(&self, name: &str, host: Vec<Vec<f32>>) -> Result<usize> {
         anyhow::ensure!(
@@ -195,7 +306,7 @@ impl EvalService {
             self.arts.tensors.len()
         );
         let mut bufs = Vec::new();
-        if let Engine::Pjrt(exec) = &self.engine {
+        if let Engine::Pjrt { exec, .. } = &self.engine {
             bufs.reserve(host.len());
             for (data, info) in host.iter().zip(&self.arts.tensors) {
                 let shape: Vec<i64> = info.shape.iter().map(|&d| d as i64).collect();
@@ -203,17 +314,32 @@ impl EvalService {
                 bufs.push(exec.upload(&Input::F32(data, shape))?);
             }
         }
-        let mut sets = self.param_sets.write().expect("param sets poisoned");
+        let mut sets = self.param_sets.write().map_err(|_| {
+            anyhow::anyhow!("param sets poisoned: a worker panicked while holding the lock")
+        })?;
         sets.push(Arc::new(ParamSet { name: name.to_string(), host, bufs }));
         Ok(sets.len() - 1)
     }
 
-    pub fn param_set(&self, idx: usize) -> Arc<ParamSet> {
-        self.param_sets.read().expect("param sets poisoned")[idx].clone()
+    pub fn param_set(&self, idx: usize) -> Result<Arc<ParamSet>> {
+        let sets = self.sets()?;
+        sets.get(idx).cloned().ok_or_else(|| {
+            anyhow::anyhow!("parameter set {idx} out of range ({} registered)", sets.len())
+        })
     }
 
-    pub fn num_param_sets(&self) -> usize {
-        self.param_sets.read().expect("param sets poisoned").len()
+    pub fn num_param_sets(&self) -> Result<usize> {
+        Ok(self.sets()?.len())
+    }
+
+    /// Poison the parameter-set lock by panicking while holding it — the
+    /// regression hook mirroring `ResultCache::poison_for_test`.
+    #[doc(hidden)]
+    pub fn poison_param_sets_for_test(&self) {
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = self.param_sets.write();
+            panic!("poisoning param sets");
+        }));
     }
 
     pub fn stats(&self) -> EvalStats {
@@ -223,10 +349,6 @@ impl EvalService {
             unique_solutions: self.cache.len().unwrap_or(0),
             poisoned: self.cache.poisoned(),
         }
-    }
-
-    fn qparams(&self, qc: &QuantConfig) -> Result<(Vec<f32>, Vec<f32>)> {
-        resolve_qparams(qc, &self.arts.layer_names, &self.arts.w_clips, &self.arts.a_clips)
     }
 
     /// Deterministic closed-form PTQ error for the surrogate engine.
@@ -269,36 +391,51 @@ impl EvalService {
         err + (h % 1000) as f64 * 2.0e-6
     }
 
-    /// (err_count, total, loss_sum) accumulated over every batch of a split.
-    fn run_split(&self, qc: &QuantConfig, set: usize, split: &Split) -> Result<(f64, f64, f64)> {
-        let Engine::Pjrt(exec) = &self.engine else {
-            // Surrogate: one "execution" per split, errors from the
-            // closed-form model (counted so cache-hit accounting and the
-            // stats surface behave identically to the PJRT path).
-            self.executions.fetch_add(1, Ordering::Relaxed);
-            let err = self.surrogate_val_error(qc, set);
-            let total = split.num_seqs.max(1) as f64;
-            return Ok((err * total, total, err * 3.0));
-        };
-        let a = &self.arts;
-        let (b, t, f) = (a.batch, a.seq_len, a.feat_dim);
-        let n_layers = a.layer_names.len() as i64;
-        let (wq, aq) = self.qparams(qc)?;
+    /// Surrogate "execution" for one split: errors from the closed-form
+    /// model (counted so cache-hit accounting and the stats surface behave
+    /// identically to the PJRT path).
+    fn surrogate_run(&self, qc: &QuantConfig, set: usize, num_seqs: usize) -> (f64, f64, f64) {
+        self.executions.fetch_add(1, Ordering::Relaxed);
+        let err = self.surrogate_val_error(qc, set);
+        let total = num_seqs.max(1) as f64;
+        (err * total, total, err * 3.0)
+    }
+
+    /// Upload one candidate's already-resolved (L,4) wq/aq rows.
+    fn upload_qparams(
+        &self,
+        exec: &Executor,
+        wq: &[f32],
+        aq: &[f32],
+    ) -> Result<(DeviceTensor, DeviceTensor)> {
+        let l = self.arts.layer_names.len() as i64;
+        Ok((
+            exec.upload(&Input::F32(wq, vec![l, 4]))?,
+            exec.upload(&Input::F32(aq, vec![l, 4]))?,
+        ))
+    }
+
+    /// (err_count, total, loss_sum) over a split's pre-uploaded batches —
+    /// every input (params, qparams, data) is device-resident, so the only
+    /// host traffic per execution is the three scalar outputs.
+    fn pjrt_run(
+        &self,
+        exec: &Executor,
+        qp: &(DeviceTensor, DeviceTensor),
+        set: usize,
+        data: &[(DeviceTensor, DeviceTensor)],
+    ) -> Result<(f64, f64, f64)> {
         // Arc clone only — the lock is NOT held across executions, so
         // beacon registrations from the sequential phase never contend
         // with in-flight parallel evaluations.
-        let params = self.param_set(set);
+        let params = self.param_set(set)?;
         let (mut err, mut total, mut loss) = (0.0, 0.0, 0.0);
-        for k in 0..split.num_batches(b) {
-            let (x, y) = split.batch(k, b, t, f);
-            let fresh = [
-                Input::F32(&wq, vec![n_layers, 4]),
-                Input::F32(&aq, vec![n_layers, 4]),
-                Input::F32(x, vec![b as i64, t as i64, f as i64]),
-                Input::I32(y, vec![b as i64, t as i64]),
-            ];
+        for (x, y) in data {
+            let mut bufs: Vec<&DeviceTensor> = Vec::with_capacity(params.bufs.len() + 4);
+            bufs.extend(params.bufs.iter());
+            bufs.extend([&qp.0, &qp.1, x, y]);
             let out = exec
-                .run_mixed(&params.bufs, &fresh)
+                .run_device(&bufs)
                 .with_context(|| format!("infer exec, set {set}"))?;
             err += scalar_f32(&out[0])? as f64;
             total += scalar_f32(&out[1])? as f64;
@@ -308,29 +445,149 @@ impl EvalService {
         Ok((err, total, loss))
     }
 
+    /// Worst-subset error for one candidate, no cache involved — the
+    /// shared kernel of `val_error` and `val_error_batch` (the batch path
+    /// MUST be bitwise-identical to the sequential one, so both funnel
+    /// every miss through this).
+    fn uncached_val_error(
+        &self,
+        qc: &QuantConfig,
+        set: usize,
+        qp: Option<&(DeviceTensor, DeviceTensor)>,
+    ) -> Result<f64> {
+        match &self.engine {
+            Engine::Surrogate => {
+                let mut worst: f64 = 0.0;
+                for split in &self.arts.val_subsets {
+                    let (e, t, _) = self.surrogate_run(qc, set, split.num_seqs);
+                    worst = worst.max(e / t.max(1.0));
+                }
+                Ok(worst)
+            }
+            Engine::Pjrt { exec, val_data, .. } => {
+                let owned;
+                let qp = match qp {
+                    Some(qp) => qp,
+                    None => {
+                        let (wq, aq) = self.arts.qtable.resolve(qc)?;
+                        owned = self.upload_qparams(exec, &wq, &aq)?;
+                        &owned
+                    }
+                };
+                let mut worst: f64 = 0.0;
+                for data in val_data {
+                    let (e, t, _) = self.pjrt_run(exec, qp, set, data)?;
+                    worst = worst.max(e / t.max(1.0));
+                }
+                Ok(worst)
+            }
+        }
+    }
+
     /// Validation error = max over the subsets (paper §4.2). Cached. A
     /// poisoned cache lock surfaces as an `Err` (not a panic), so worker
     /// threads fail cleanly and `SearchSession` can report
     /// `SearchError::Poisoned`.
     pub fn val_error(&self, qc: &QuantConfig, set: usize) -> Result<f64> {
-        let key: CacheKey = (set, qc.w_bits.clone(), qc.a_bits.clone());
+        let key = CacheKey::new(set, qc);
         if let Some(v) = self.cache.get(&key)? {
             self.cache_hits.fetch_add(1, Ordering::Relaxed);
             return Ok(v);
         }
-        let mut worst: f64 = 0.0;
-        for split in &self.arts.val_subsets {
-            let (e, t, _) = self.run_split(qc, set, split)?;
-            worst = worst.max(e / t.max(1.0));
-        }
+        let worst = self.uncached_val_error(qc, set, None)?;
         self.cache.insert(key, worst)?;
         Ok(worst)
+    }
+
+    /// Batched [`val_error`]: evaluate M candidates against one parameter
+    /// set with the per-candidate overheads amortized across the batch —
+    /// ONE cache lock round trip for all lookups (and one for all
+    /// inserts), one packed (M, L, 4) host resolution of every miss's
+    /// qparam rows, and on the PJRT engine one wq/aq upload per unique
+    /// candidate per batch (the data batches are already device-resident).
+    ///
+    /// Contract: returns exactly what per-candidate `val_error` calls in
+    /// input order would return, bitwise, with the same execution and
+    /// cache-hit counter movement — duplicates are evaluated once and
+    /// count as hits from their second occurrence on, just as the
+    /// sequential path memoizes them.
+    pub fn val_error_batch(&self, qcs: &[QuantConfig], set: usize) -> Result<Vec<f64>> {
+        if qcs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let keys: Vec<CacheKey> = qcs.iter().map(|qc| CacheKey::new(set, qc)).collect();
+        let mut out = self.cache.get_many(&keys)?;
+        let mut hits = out.iter().filter(|v| v.is_some()).count();
+        // Unique misses in first-occurrence order; in-batch duplicates hit
+        // the first occurrence's (pending) result.
+        let mut first_of: HashMap<&CacheKey, usize> = HashMap::new();
+        let mut miss: Vec<usize> = Vec::new();
+        for (i, key) in keys.iter().enumerate() {
+            if out[i].is_some() {
+                continue;
+            }
+            if first_of.contains_key(key) {
+                hits += 1;
+            } else {
+                first_of.insert(key, miss.len());
+                miss.push(i);
+            }
+        }
+        if hits > 0 {
+            self.cache_hits.fetch_add(hits, Ordering::Relaxed);
+        }
+        if !miss.is_empty() {
+            let miss_errs: Vec<f64> = match &self.engine {
+                Engine::Surrogate => miss
+                    .iter()
+                    .map(|&i| self.uncached_val_error(&qcs[i], set, None))
+                    .collect::<Result<_>>()?,
+                Engine::Pjrt { exec, .. } => {
+                    // Pack every miss's (Δ,qmin,qmax,en) rows into one
+                    // (M, L, 4) host matrix, then upload candidate slices.
+                    let stride = self.arts.layer_names.len() * 4;
+                    let mut wq_all = Vec::with_capacity(miss.len() * stride);
+                    let mut aq_all = Vec::with_capacity(miss.len() * stride);
+                    for &i in &miss {
+                        self.arts.qtable.resolve_into(&qcs[i], &mut wq_all, &mut aq_all)?;
+                    }
+                    let mut errs = Vec::with_capacity(miss.len());
+                    for (m, &i) in miss.iter().enumerate() {
+                        let rows = m * stride..(m + 1) * stride;
+                        let qp =
+                            self.upload_qparams(exec, &wq_all[rows.clone()], &aq_all[rows])?;
+                        errs.push(self.uncached_val_error(&qcs[i], set, Some(&qp))?);
+                    }
+                    errs
+                }
+            };
+            let mut entries = Vec::with_capacity(miss.len());
+            for (m, &i) in miss.iter().enumerate() {
+                out[i] = Some(miss_errs[m]);
+                entries.push((keys[i].clone(), miss_errs[m]));
+            }
+            self.cache.insert_many(entries)?;
+            // Duplicate misses take their first occurrence's value.
+            for (i, key) in keys.iter().enumerate() {
+                if out[i].is_none() {
+                    out[i] = Some(miss_errs[first_of[key]]);
+                }
+            }
+        }
+        Ok(out.into_iter().map(|v| v.expect("every slot resolved")).collect())
     }
 
     /// Test-set error (final report column WER_T). Uncached — called once
     /// per Pareto solution.
     pub fn test_error(&self, qc: &QuantConfig, set: usize) -> Result<f64> {
-        let (e, t, _) = self.run_split(qc, set, &self.arts.test)?;
+        let (e, t, _) = match &self.engine {
+            Engine::Surrogate => self.surrogate_run(qc, set, self.arts.test.num_seqs),
+            Engine::Pjrt { exec, test_data, .. } => {
+                let (wq, aq) = self.arts.qtable.resolve(qc)?;
+                let qp = self.upload_qparams(exec, &wq, &aq)?;
+                self.pjrt_run(exec, &qp, set, test_data)?
+            }
+        };
         Ok(e / t.max(1.0))
     }
 
@@ -338,10 +595,23 @@ impl EvalService {
     pub fn val_loss(&self, qc: &QuantConfig, set: usize) -> Result<f64> {
         let mut sum = 0.0;
         let mut n = 0usize;
-        for split in &self.arts.val_subsets {
-            let (_, _, l) = self.run_split(qc, set, split)?;
-            n += split.num_batches(self.arts.batch);
-            sum += l;
+        match &self.engine {
+            Engine::Surrogate => {
+                for split in &self.arts.val_subsets {
+                    let (_, _, l) = self.surrogate_run(qc, set, split.num_seqs);
+                    n += split.num_batches(self.arts.batch);
+                    sum += l;
+                }
+            }
+            Engine::Pjrt { exec, val_data, .. } => {
+                let (wq, aq) = self.arts.qtable.resolve(qc)?;
+                let qp = self.upload_qparams(exec, &wq, &aq)?;
+                for (split, data) in self.arts.val_subsets.iter().zip(val_data) {
+                    let (_, _, l) = self.pjrt_run(exec, &qp, set, data)?;
+                    n += split.num_batches(self.arts.batch);
+                    sum += l;
+                }
+            }
         }
         Ok(sum / n.max(1) as f64)
     }
@@ -366,6 +636,126 @@ mod tests {
     fn service_is_send_sync() {
         fn check<T: Send + Sync>() {}
         check::<EvalService>();
+    }
+
+    #[test]
+    fn packed_cache_keys_are_injective_over_searchable_genomes() {
+        use crate::util::prop::check_prop;
+        use crate::util::rng::Rng;
+        // Two random searchable genomes (any length up to 31) collide iff
+        // they are equal — the 2-bit packing plus length marker is
+        // injective, so the packed key can replace the allocating one.
+        let gen_cfg = |r: &mut Rng| {
+            let n = 1 + r.below(31);
+            QuantConfig {
+                w_bits: (0..n).map(|_| *r.choose(&Bits::SEARCHABLE)).collect(),
+                a_bits: (0..n).map(|_| *r.choose(&Bits::SEARCHABLE)).collect(),
+            }
+        };
+        check_prop(
+            "packed_cache_key_injective",
+            500,
+            |r: &mut Rng| (gen_cfg(r), gen_cfg(r)),
+            |(a, b)| {
+                let (ka, kb) = (CacheKey::new(0, a), CacheKey::new(0, b));
+                if !matches!(ka, CacheKey::Packed(..)) {
+                    return Err("searchable genome should pack".into());
+                }
+                if (ka == kb) != (a == b) {
+                    return Err(format!("collision: {a:?} vs {b:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn cache_key_falls_back_to_wide_when_unpackable() {
+        // B32 (report rows) and >31 layers can't take 2 bits/gene; the
+        // wide variant keeps them correct instead of colliding.
+        let b32 = QuantConfig::uniform(4, Bits::B32, Bits::B32);
+        assert!(matches!(CacheKey::new(0, &b32), CacheKey::Wide(..)));
+        let long = QuantConfig::uniform(32, Bits::B2, Bits::B2);
+        assert!(matches!(CacheKey::new(0, &long), CacheKey::Wide(..)));
+        // Distinct sets key distinct entries; same qc+set keys are equal.
+        let qc = QuantConfig::uniform(8, Bits::B4, Bits::B8);
+        assert_eq!(CacheKey::new(1, &qc), CacheKey::new(1, &qc));
+        assert_ne!(CacheKey::new(0, &qc), CacheKey::new(1, &qc));
+        // Different lengths never collide (the marker bit).
+        let one = QuantConfig::uniform(1, Bits::B2, Bits::B2);
+        let two = QuantConfig::uniform(2, Bits::B2, Bits::B2);
+        assert_ne!(CacheKey::new(0, &one), CacheKey::new(0, &two));
+    }
+
+    #[test]
+    fn result_cache_bulk_ops_match_singles() {
+        let cache: ResultCache<u32, f64> = ResultCache::new();
+        cache.insert_many(vec![(1, 0.1), (2, 0.2)]).unwrap();
+        assert_eq!(
+            cache.get_many(&[2, 3, 1]).unwrap(),
+            vec![Some(0.2), None, Some(0.1)]
+        );
+        assert_eq!(cache.get(&1).unwrap(), Some(0.1));
+        cache.poison_for_test();
+        assert!(cache.get_many(&[1]).is_err());
+        assert!(cache.insert_many(vec![(4, 0.4)]).is_err());
+    }
+
+    #[test]
+    fn poisoned_param_sets_surface_typed_errors_not_panics() {
+        // Regression: `.expect("param sets poisoned")` panicked every
+        // later eval in the pool once a worker died holding the lock.
+        // The accessors now return the typed "poisoned" error path that
+        // `SearchError::from_panic`/`SearchError::eval` classify.
+        let arts = Arc::new(Artifacts::synthetic());
+        let svc = EvalService::surrogate(arts.clone()).unwrap();
+        assert_eq!(svc.num_param_sets().unwrap(), 1);
+        assert_eq!(svc.param_set(0).unwrap().name, "baseline");
+        let oob = svc.param_set(7).unwrap_err();
+        assert!(oob.to_string().contains("out of range"), "{oob}");
+
+        svc.poison_param_sets_for_test();
+        for err in [
+            svc.param_set(0).unwrap_err(),
+            svc.num_param_sets().unwrap_err(),
+            svc.add_param_set("b", arts.weights.clone()).unwrap_err(),
+        ] {
+            assert!(err.to_string().contains("poisoned"), "{err}");
+        }
+        // The PJRT path (pjrt_run -> param_set) reads through the same
+        // accessor, so evaluation errors out instead of panicking; the
+        // surrogate path never touches the table and stays usable.
+        let qc = QuantConfig::uniform(arts.layer_names.len(), Bits::B8, Bits::B8);
+        assert!(svc.val_error(&qc, 0).is_ok());
+    }
+
+    #[test]
+    fn val_error_batch_matches_sequential_on_surrogate() {
+        let arts = Arc::new(Artifacts::synthetic());
+        let n = arts.layer_names.len();
+        let qcs = vec![
+            QuantConfig::uniform(n, Bits::B2, Bits::B8),
+            QuantConfig::uniform(n, Bits::B16, Bits::B4),
+            QuantConfig::uniform(n, Bits::B2, Bits::B8), // in-batch duplicate
+            QuantConfig::uniform(n, Bits::B32, Bits::B32), // wide-key row
+        ];
+        let seq_svc = EvalService::surrogate(arts.clone()).unwrap();
+        let seq: Vec<f64> =
+            qcs.iter().map(|qc| seq_svc.val_error(qc, 0).unwrap()).collect();
+        let batch_svc = EvalService::surrogate(arts.clone()).unwrap();
+        let batch = batch_svc.val_error_batch(&qcs, 0).unwrap();
+        for (s, b) in seq.iter().zip(&batch) {
+            assert_eq!(s.to_bits(), b.to_bits());
+        }
+        // Same counter movement: duplicates count as hits, uniques as
+        // executions — the determinism contract callers rely on.
+        assert_eq!(seq_svc.stats().executions, batch_svc.stats().executions);
+        assert_eq!(seq_svc.stats().cache_hits, batch_svc.stats().cache_hits);
+        // Batch results are memoized: a second batched call is pure hits.
+        let before = batch_svc.stats().executions;
+        let again = batch_svc.val_error_batch(&qcs, 0).unwrap();
+        assert_eq!(again, batch);
+        assert_eq!(batch_svc.stats().executions, before);
     }
 
     #[test]

@@ -36,6 +36,7 @@ commands:
   eval        score one quantization config
   search      run a full experiment through a SearchSession
   serve       long-lived search service over a shared session (TCP)
+  bench-gate  diff a bench JSON report against the committed baseline
   help        show this message
 
 global options:
@@ -114,6 +115,56 @@ options:
 
 Drive it with examples/serve_quickstart.rs:
   cargo run --release --example serve_quickstart -- --addr 127.0.0.1:7070";
+
+const BENCH_GATE_USAGE: &str = "\
+usage: mohaq bench-gate --current FILE [--baseline FILE] [--max-regress-pct PCT]
+
+Compare a fresh bench report (Bencher::emit_json output, e.g. the CI
+bench-smoke artifact) against the committed baseline and exit non-zero
+when any throughput bench regressed beyond the limit. Throughputs are
+normalized by each report's own 'calibration spin' section so the
+verdict survives runner-speed differences; see util::benchgate.
+
+options:
+  --current FILE         fresh report to judge (required)
+  --baseline FILE        committed baseline (default: BENCH_baseline.json)
+  --max-regress-pct PCT  allowed normalized slowdown in percent (default: 25)";
+
+fn cmd_bench_gate(args: &Args) -> Result<()> {
+    if args.has("help") {
+        println!("{BENCH_GATE_USAGE}");
+        return Ok(());
+    }
+    let baseline_path = args.get_or("baseline", "BENCH_baseline.json");
+    let current_path = args.get("current").context("--current required (see --help)")?;
+    let read = |p: &str| -> Result<mohaq::util::json::Json> {
+        let text = std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?;
+        mohaq::util::json::Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {p}: {e}"))
+    };
+    let out = mohaq::util::benchgate::gate(
+        &read(baseline_path)?,
+        &read(current_path)?,
+        args.get_f64("max-regress-pct", 25.0),
+    );
+    println!("bench-gate: {baseline_path} vs {current_path}");
+    for c in &out.checked {
+        println!(
+            "  {:<28} {:<34} {:>10.4} -> {:>10.4}  ({:+.1}%)",
+            c.section, c.name, c.baseline, c.current, c.delta_pct
+        );
+    }
+    for n in &out.notes {
+        println!("  note: {n}");
+    }
+    for f in &out.failures {
+        eprintln!("  FAIL: {f}");
+    }
+    if !out.passed() {
+        anyhow::bail!("{} bench(es) regressed past the gate", out.failures.len());
+    }
+    println!("bench-gate: PASS ({} benches compared)", out.checked.len());
+    Ok(())
+}
 
 fn cmd_serve(args: &Args) -> Result<()> {
     if args.has("help") {
@@ -421,6 +472,7 @@ fn main() -> Result<()> {
         "eval" => cmd_eval(&args),
         "search" => cmd_search(&args),
         "serve" => cmd_serve(&args),
+        "bench-gate" => cmd_bench_gate(&args),
         "help" => {
             println!("{USAGE}");
             Ok(())

@@ -69,6 +69,21 @@ impl Bits {
     }
 
     pub const SEARCHABLE: [Bits; 4] = [Bits::B2, Bits::B4, Bits::B8, Bits::B16];
+
+    /// Dense index 0..COUNT over ALL precisions (searchable + B32) —
+    /// the row index of [`QparamTable`].
+    pub fn index(&self) -> usize {
+        match self {
+            Bits::B2 => 0,
+            Bits::B4 => 1,
+            Bits::B8 => 2,
+            Bits::B16 => 3,
+            Bits::B32 => 4,
+        }
+    }
+
+    /// Number of distinct precisions (`index()` range).
+    pub const COUNT: usize = 5;
 }
 
 impl std::fmt::Display for Bits {
@@ -202,6 +217,105 @@ pub fn resolve_qparams(
     Ok((wq, aq))
 }
 
+/// Dense precomputed qparam rows: `[layer][bits] -> (Δ, qmin, qmax, en)`.
+///
+/// The eval hot path used to re-resolve every candidate through two
+/// string-keyed nested `BTreeMap` lookups per layer (`resolve_qparams`);
+/// this table folds the calibration clips into ready-made rows ONCE at
+/// `Artifacts` load, so per-candidate resolution is O(L) array indexing
+/// with no hashing, no string compares and no BTree walks. Rows are
+/// bitwise-identical to what `resolve_qparams` produces (both go through
+/// `qparams_row`). A `None` entry means the calibration table has no clip
+/// for that (layer, bits); resolving through it reports the same error
+/// `resolve_qparams` would, at the same (lazy) point.
+#[derive(Debug, Clone)]
+pub struct QparamTable {
+    /// `rows[layer * Bits::COUNT + bits.index()]`, weights then acts.
+    w_rows: Vec<Option<[f32; 4]>>,
+    a_rows: Vec<Option<[f32; 4]>>,
+    /// Layer names kept only for error messages.
+    layer_names: Vec<String>,
+}
+
+impl QparamTable {
+    /// Fold the clip tables into dense rows. Missing clips become `None`
+    /// entries (errors stay lazy, matching `resolve_qparams`); B32 rows
+    /// are always present — quantization disabled needs no clip.
+    pub fn build(layer_names: &[String], w_clips: &ClipTable, a_clips: &ClipTable) -> QparamTable {
+        let row_of = |clips: &ClipTable, name: &String, bits: Bits| -> Option<[f32; 4]> {
+            if bits == Bits::B32 {
+                return Some(qparams_row(1.0, Bits::B32));
+            }
+            clips
+                .get(name)
+                .and_then(|m| m.get(&bits.bits()))
+                .map(|&clip| qparams_row(clip, bits))
+        };
+        let mut w_rows = Vec::with_capacity(layer_names.len() * Bits::COUNT);
+        let mut a_rows = Vec::with_capacity(layer_names.len() * Bits::COUNT);
+        for name in layer_names {
+            for bits in [Bits::B2, Bits::B4, Bits::B8, Bits::B16, Bits::B32] {
+                w_rows.push(row_of(w_clips, name, bits));
+                a_rows.push(row_of(a_clips, name, bits));
+            }
+        }
+        QparamTable { w_rows, a_rows, layer_names: layer_names.to_vec() }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layer_names.len()
+    }
+
+    fn row(rows: &[Option<[f32; 4]>], names: &[String], layer: usize, bits: Bits) -> anyhow::Result<[f32; 4]> {
+        rows[layer * Bits::COUNT + bits.index()].ok_or_else(|| {
+            anyhow::anyhow!("no clip for layer {} bits {bits}", names[layer])
+        })
+    }
+
+    /// Append one candidate's (L,4) wq/aq rows to `wq`/`aq` — the packing
+    /// primitive shared by single-candidate and batched resolution.
+    pub fn resolve_into(
+        &self,
+        qc: &QuantConfig,
+        wq: &mut Vec<f32>,
+        aq: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            qc.num_layers() == self.num_layers(),
+            "config has {} layers, model has {}",
+            qc.num_layers(),
+            self.num_layers()
+        );
+        for i in 0..qc.num_layers() {
+            wq.extend(Self::row(&self.w_rows, &self.layer_names, i, qc.w_bits[i])?);
+            aq.extend(Self::row(&self.a_rows, &self.layer_names, i, qc.a_bits[i])?);
+        }
+        Ok(())
+    }
+
+    /// Resolve one candidate to its flattened (L,4) wq/aq matrices —
+    /// drop-in for `resolve_qparams`, minus the BTreeMap walks.
+    pub fn resolve(&self, qc: &QuantConfig) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let mut wq = Vec::with_capacity(qc.num_layers() * 4);
+        let mut aq = Vec::with_capacity(qc.num_layers() * 4);
+        self.resolve_into(qc, &mut wq, &mut aq)?;
+        Ok((wq, aq))
+    }
+
+    /// Resolve M candidates into one packed pair of (M, L, 4) row-major
+    /// matrices (candidate m occupies `[m*L*4 .. (m+1)*L*4]`): a single
+    /// host allocation for a whole evaluation batch.
+    pub fn resolve_packed(&self, qcs: &[QuantConfig]) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let stride = self.num_layers() * 4;
+        let mut wq = Vec::with_capacity(qcs.len() * stride);
+        let mut aq = Vec::with_capacity(qcs.len() * stride);
+        for qc in qcs {
+            self.resolve_into(qc, &mut wq, &mut aq)?;
+        }
+        Ok((wq, aq))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -327,5 +441,94 @@ mod tests {
         let names = vec!["X".to_string()];
         let err = resolve_qparams(&qc, &names, &ClipTable::new(), &ClipTable::new());
         assert!(err.is_err());
+    }
+
+    fn clip_fixture(n: usize) -> (Vec<String>, ClipTable, ClipTable) {
+        let names: Vec<String> = (0..n).map(|i| format!("L{i}")).collect();
+        let table = |scale: f64| -> ClipTable {
+            names
+                .iter()
+                .enumerate()
+                .map(|(i, name)| {
+                    (
+                        name.clone(),
+                        [2u32, 4, 8, 16]
+                            .iter()
+                            .map(|&b| (b, scale + i as f64 * 0.25 + b as f64 * 0.01))
+                            .collect(),
+                    )
+                })
+                .collect()
+        };
+        (names, table(1.0), table(2.0))
+    }
+
+    #[test]
+    fn dense_table_matches_btreemap_resolution_prop() {
+        // The hot path swaps resolve_qparams for the precomputed table;
+        // this pins the two bitwise-identical over random genomes
+        // (including B32 report rows, which need no clip).
+        let (names, w_clips, a_clips) = clip_fixture(8);
+        let table = QparamTable::build(&names, &w_clips, &a_clips);
+        check_prop(
+            "dense_table_matches_resolve",
+            200,
+            |r: &mut Rng| {
+                let pick = |r: &mut Rng| match r.below(5) {
+                    0 => Bits::B2,
+                    1 => Bits::B4,
+                    2 => Bits::B8,
+                    3 => Bits::B16,
+                    _ => Bits::B32,
+                };
+                QuantConfig {
+                    w_bits: (0..8).map(|_| pick(r)).collect(),
+                    a_bits: (0..8).map(|_| pick(r)).collect(),
+                }
+            },
+            |qc| {
+                let slow = resolve_qparams(qc, &names, &w_clips, &a_clips)
+                    .map_err(|e| e.to_string())?;
+                let fast = table.resolve(qc).map_err(|e| e.to_string())?;
+                if slow == fast {
+                    Ok(())
+                } else {
+                    Err("table rows diverge from resolve_qparams".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn packed_resolution_is_per_candidate_concatenation() {
+        let (names, w_clips, a_clips) = clip_fixture(4);
+        let table = QparamTable::build(&names, &w_clips, &a_clips);
+        let qcs = vec![
+            QuantConfig::uniform(4, Bits::B2, Bits::B16),
+            QuantConfig::uniform(4, Bits::B8, Bits::B4),
+            QuantConfig::uniform(4, Bits::B2, Bits::B16),
+        ];
+        let (wq, aq) = table.resolve_packed(&qcs).unwrap();
+        let stride = 4 * 4;
+        assert_eq!(wq.len(), 3 * stride);
+        for (m, qc) in qcs.iter().enumerate() {
+            let (w1, a1) = table.resolve(qc).unwrap();
+            assert_eq!(&wq[m * stride..(m + 1) * stride], &w1[..]);
+            assert_eq!(&aq[m * stride..(m + 1) * stride], &a1[..]);
+        }
+    }
+
+    #[test]
+    fn dense_table_reports_missing_clips_lazily() {
+        // Building from empty tables succeeds (B32 rows need no clip);
+        // resolving a searchable precision reports the same error
+        // resolve_qparams would.
+        let names = vec!["X".to_string()];
+        let table = QparamTable::build(&names, &ClipTable::new(), &ClipTable::new());
+        assert!(table.resolve(&QuantConfig::uniform(1, Bits::B32, Bits::B32)).is_ok());
+        let err = table.resolve(&QuantConfig::uniform(1, Bits::B4, Bits::B4)).unwrap_err();
+        assert!(err.to_string().contains("no clip for layer X"), "{err}");
+        // Layer-count mismatch is caught up front.
+        assert!(table.resolve(&QuantConfig::uniform(2, Bits::B4, Bits::B4)).is_err());
     }
 }

@@ -8,7 +8,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{Context, Result};
 
 use crate::model::ModelDesc;
-use crate::quant::ClipTable;
+use crate::quant::{ClipTable, QparamTable};
 use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
@@ -63,6 +63,10 @@ pub struct Artifacts {
     pub weights: Vec<Vec<f32>>,
     pub w_clips: ClipTable,
     pub a_clips: ClipTable,
+    /// Dense `[layer][bits] -> (Δ,qmin,qmax,en)` rows folded from the clip
+    /// tables once at load — the eval/trainer hot paths resolve genomes
+    /// through this instead of the string-keyed `ClipTable`s.
+    pub qtable: QparamTable,
     pub batch: usize,
     pub seq_len: usize,
     pub feat_dim: usize,
@@ -211,6 +215,7 @@ impl Artifacts {
             beacon_lr: b.req("beacon_lr")?.as_f64().context("beacon_lr")?,
         };
 
+        let qtable = QparamTable::build(&layer_names, &w_clips, &a_clips);
         Ok(Artifacts {
             dir,
             manifest,
@@ -220,6 +225,7 @@ impl Artifacts {
             weights,
             w_clips,
             a_clips,
+            qtable,
             batch,
             seq_len,
             feat_dim,
@@ -278,6 +284,7 @@ impl Artifacts {
         };
         let w_clips = clips();
         let a_clips = clips();
+        let qtable = QparamTable::build(&layer_names, &w_clips, &a_clips);
 
         let (batch, seq_len, feat_dim) = (2usize, 4usize, 3usize);
         let split = |num_seqs: usize| Split {
@@ -295,6 +302,7 @@ impl Artifacts {
             weights,
             w_clips,
             a_clips,
+            qtable,
             batch,
             seq_len,
             feat_dim,

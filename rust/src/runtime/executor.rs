@@ -113,6 +113,17 @@ impl Executor {
         let result = out[0][0].to_literal_sync()?;
         Ok(result.to_tuple()?)
     }
+
+    /// Execute with EVERY input already device-resident — the batched eval
+    /// hot path: weights, data batches and the candidate's qparam rows are
+    /// all uploaded once (outside the per-execution loop), so a run here
+    /// moves only the scalar outputs across the host boundary.
+    pub fn run_device(&self, bufs: &[&DeviceTensor]) -> Result<Vec<xla::Literal>> {
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().map(|d| &d.buf).collect();
+        let out = self.exe.execute_b::<&xla::PjRtBuffer>(&refs)?;
+        let result = out[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
 }
 
 /// Extract a scalar f32 from a tuple element.
@@ -169,6 +180,12 @@ mod tests {
             .unwrap();
         assert_eq!(vec_f32(&out2[0]).unwrap(), vec![11.0, 22.0, 33.0, 44.0]);
         assert_eq!(vec_f32(&out2[1]).unwrap(), vec![10.0, 40.0, 90.0, 160.0]);
+
+        // All-device path: both inputs pre-uploaded, nothing fresh.
+        let ybuf = exec.upload(&Input::F32(&y, vec![2, 2])).unwrap();
+        let out3 = exec.run_device(&[&xbuf, &ybuf]).unwrap();
+        assert_eq!(vec_f32(&out3[0]).unwrap(), vec![11.0, 22.0, 33.0, 44.0]);
+        assert_eq!(vec_f32(&out3[1]).unwrap(), vec![10.0, 40.0, 90.0, 160.0]);
     }
 
     #[test]

@@ -8,7 +8,12 @@
 //! platform-independent, so concurrent tenants submitting different
 //! platform tables reuse each other's candidate evaluations, and all
 //! in-flight searches fan their evaluation batches across one shared
-//! [`WorkQueue`](crate::util::pool::WorkQueue) job stream.
+//! [`WorkQueue`](crate::util::pool::WorkQueue) job stream. A tenant's
+//! generation arrives as a handful of micro-batched
+//! [`EvalService::val_error_batch`](crate::eval::EvalService::val_error_batch)
+//! jobs (one per worker chunk), not one job per candidate, so queue
+//! round trips stay proportional to the worker count rather than the
+//! population size.
 //!
 //! Contracts (see DESIGN.md "Serve mode"):
 //!   * determinism — a served search returns the front the equivalent

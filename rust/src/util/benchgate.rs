@@ -1,0 +1,242 @@
+//! Bench-regression gate: diff a fresh perf report (the JSON artifact the
+//! benches accrete via `Bencher::emit_json`) against the committed
+//! baseline `BENCH_baseline.json`, failing on throughput regressions.
+//!
+//! Raw items/s cannot be compared across machines (the CI runner draw
+//! alone swings >25%), so both reports carry a CALIBRATION section — a
+//! fixed integer spin measured like any other bench — and every
+//! throughput is normalized by its own file's calibration throughput
+//! before the comparison. The gate therefore measures "eval throughput
+//! relative to how fast this machine spins", which is stable across
+//! runner generations.
+//!
+//! Bootstrap: a baseline with a top-level `"provisional": true` marker
+//! (committed before any CI run could measure real numbers) reports the
+//! comparison but never fails — the first green bench-smoke run's
+//! artifact is the intended replacement.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Section/bench the calibration spin reports under (see
+/// `benches/bench_runtime.rs`).
+pub const CALIBRATION_SECTION: &str = "calibration";
+pub const CALIBRATION_NAME: &str = "calibration spin";
+
+/// One (section, bench) pair present in both reports.
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    pub section: String,
+    pub name: String,
+    /// Calibration-normalized throughput scores (dimensionless).
+    pub baseline: f64,
+    pub current: f64,
+    /// current/baseline - 1 in percent; negative is a slowdown.
+    pub delta_pct: f64,
+}
+
+#[derive(Debug, Default)]
+pub struct GateOutcome {
+    pub checked: Vec<Comparison>,
+    /// Human-readable failure lines; empty means the gate passes.
+    pub failures: Vec<String>,
+    /// Non-fatal observations (new benches, missing calibration, ...).
+    pub notes: Vec<String>,
+}
+
+impl GateOutcome {
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// Every throughput-carrying bench in a report, keyed (section, name).
+/// Sections are the top-level keys whose value is an array of bench
+/// objects; top-level markers (`provisional`, notes) are skipped.
+fn throughputs(report: &Json) -> BTreeMap<(String, String), f64> {
+    let mut out = BTreeMap::new();
+    let Some(root) = report.as_obj() else {
+        return out;
+    };
+    for (section, value) in root {
+        let Some(benches) = value.as_arr() else {
+            continue;
+        };
+        for bench in benches {
+            let (Some(name), Some(tp)) = (
+                bench.get("name").and_then(Json::as_str),
+                bench.get("throughput").and_then(Json::as_f64),
+            ) else {
+                continue;
+            };
+            if tp > 0.0 {
+                out.insert((section.clone(), name.to_string()), tp);
+            }
+        }
+    }
+    out
+}
+
+/// Compare `current` against `baseline`, failing any bench whose
+/// calibration-normalized throughput dropped more than `max_regress_pct`
+/// percent. Benches present in only one report are noted, never failed
+/// (new benches must not brick CI; removed ones show up in review).
+pub fn gate(baseline: &Json, current: &Json, max_regress_pct: f64) -> GateOutcome {
+    let mut out = GateOutcome::default();
+    let provisional = baseline.get("provisional").and_then(Json::as_bool).unwrap_or(false);
+    if provisional {
+        out.notes.push(
+            "baseline is PROVISIONAL (committed without a measuring toolchain): \
+             reporting deltas only — replace BENCH_baseline.json with a real \
+             bench-smoke artifact to arm the gate"
+                .to_string(),
+        );
+    }
+
+    let base_tp = throughputs(baseline);
+    let cur_tp = throughputs(current);
+    let cal_key = (CALIBRATION_SECTION.to_string(), CALIBRATION_NAME.to_string());
+    // Per-file normalization; missing calibration on either side falls
+    // back to raw throughput (with a note — raw cross-machine numbers
+    // are indicative, not load-bearing).
+    let cal = match (base_tp.get(&cal_key), cur_tp.get(&cal_key)) {
+        (Some(&b), Some(&c)) => Some((b, c)),
+        _ => None,
+    };
+    if cal.is_none() && !base_tp.is_empty() && !cur_tp.is_empty() {
+        out.notes.push(
+            "no calibration spin in one of the reports; comparing RAW throughput".to_string(),
+        );
+    }
+
+    for (key, &base) in &base_tp {
+        if key == &cal_key {
+            continue;
+        }
+        let Some(&cur) = cur_tp.get(key) else {
+            out.notes.push(format!("bench '{}::{}' missing from current run", key.0, key.1));
+            continue;
+        };
+        let (bn, cn) = match cal {
+            Some((bc, cc)) => (base / bc, cur / cc),
+            None => (base, cur),
+        };
+        let delta_pct = (cn / bn - 1.0) * 100.0;
+        if delta_pct < -max_regress_pct && !provisional {
+            out.failures.push(format!(
+                "'{}::{}' regressed {:.1}% (normalized {:.4} -> {:.4}, limit {:.0}%)",
+                key.0, key.1, -delta_pct, bn, cn, max_regress_pct
+            ));
+        }
+        out.checked.push(Comparison {
+            section: key.0.clone(),
+            name: key.1.clone(),
+            baseline: bn,
+            current: cn,
+            delta_pct,
+        });
+    }
+    for key in cur_tp.keys() {
+        if key != &cal_key && !base_tp.contains_key(key) {
+            out.notes.push(format!("new bench '{}::{}' (no baseline yet)", key.0, key.1));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(cal: f64, evals: f64) -> Json {
+        Json::parse(&format!(
+            r#"{{
+                "{CALIBRATION_SECTION}": [
+                    {{"name": "{CALIBRATION_NAME}", "throughput": {cal}}}
+                ],
+                "eval_throughput": [
+                    {{"name": "val_error_batch x64", "throughput": {evals}}}
+                ]
+            }}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn same_normalized_score_passes_across_machine_speeds() {
+        // The "current" machine is 3x slower across the board: raw
+        // throughput drops 66%, normalized score is unchanged — pass.
+        let baseline = report(3000.0, 600.0);
+        let current = report(1000.0, 200.0);
+        let out = gate(&baseline, &current, 25.0);
+        assert!(out.passed(), "{:?}", out.failures);
+        assert_eq!(out.checked.len(), 1);
+        assert!(out.checked[0].delta_pct.abs() < 1e-9);
+    }
+
+    #[test]
+    fn genuine_regression_fails_even_on_a_faster_machine() {
+        // Machine is 2x faster, but the eval bench only kept pace 1.2x:
+        // normalized score dropped 40% — fail at the 25% limit.
+        let baseline = report(1000.0, 500.0);
+        let current = report(2000.0, 600.0);
+        let out = gate(&baseline, &current, 25.0);
+        assert!(!out.passed());
+        assert!(out.failures[0].contains("val_error_batch"), "{:?}", out.failures);
+        // The same drop passes a slacker limit.
+        assert!(gate(&baseline, &current, 45.0).passed());
+    }
+
+    #[test]
+    fn provisional_baseline_reports_but_never_fails() {
+        let mut b = report(1000.0, 500.0);
+        if let Json::Obj(m) = &mut b {
+            m.insert("provisional".into(), Json::Bool(true));
+        }
+        let current = report(1000.0, 100.0); // 80% regression
+        let out = gate(&b, &current, 25.0);
+        assert!(out.passed());
+        assert_eq!(out.checked.len(), 1, "deltas still reported");
+        assert!(out.notes.iter().any(|n| n.contains("PROVISIONAL")), "{:?}", out.notes);
+    }
+
+    #[test]
+    fn missing_and_new_benches_are_notes_not_failures() {
+        let baseline = Json::parse(
+            r#"{"calibration": [{"name": "calibration spin", "throughput": 1000.0}],
+                "old_section": [{"name": "gone", "throughput": 50.0}]}"#,
+        )
+        .unwrap();
+        let current = Json::parse(
+            r#"{"calibration": [{"name": "calibration spin", "throughput": 1000.0}],
+                "new_section": [{"name": "fresh", "throughput": 70.0}]}"#,
+        )
+        .unwrap();
+        let out = gate(&baseline, &current, 25.0);
+        assert!(out.passed());
+        assert!(out.notes.iter().any(|n| n.contains("missing from current")), "{:?}", out.notes);
+        assert!(out.notes.iter().any(|n| n.contains("no baseline yet")), "{:?}", out.notes);
+    }
+
+    #[test]
+    fn falls_back_to_raw_comparison_without_calibration() {
+        let baseline =
+            Json::parse(r#"{"s": [{"name": "b", "throughput": 100.0}]}"#).unwrap();
+        let current = Json::parse(r#"{"s": [{"name": "b", "throughput": 60.0}]}"#).unwrap();
+        let out = gate(&baseline, &current, 25.0);
+        assert!(!out.passed(), "raw 40% drop must still fail");
+        assert!(out.notes.iter().any(|n| n.contains("RAW")), "{:?}", out.notes);
+    }
+
+    #[test]
+    fn benches_without_throughput_are_ignored() {
+        // mean_ns-only rows (latency benches) are not gated — wall-time
+        // noise on shared runners is not a correctness signal.
+        let j = Json::parse(
+            r#"{"s": [{"name": "lat", "mean_ns": 5.0, "throughput": null}]}"#,
+        )
+        .unwrap();
+        assert!(throughputs(&j).is_empty());
+    }
+}

@@ -3,6 +3,7 @@
 //! property-test harness, micro-bench harness, CLI parsing.
 
 pub mod bench;
+pub mod benchgate;
 pub mod cli;
 pub mod json;
 pub mod pool;

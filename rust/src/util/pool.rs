@@ -82,6 +82,46 @@ where
     slots.into_iter().map(|s| s.expect("worker skipped an item")).collect()
 }
 
+/// Fan `items` out as contiguous micro-batches instead of single items:
+/// one atomic claim per CHUNK, not per item, so cheap per-item work (a
+/// cache probe, a surrogate evaluation) amortizes the fan-out overhead.
+/// `f` receives the chunk's starting index and the sub-slice, and must
+/// return one result per item; results come back in input order, so the
+/// output is bitwise-identical to the unchunked map at any thread count
+/// or chunk size.
+pub fn map_parallel_chunked<T, R, F>(threads: usize, items: &[T], chunk: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &[T]) -> Vec<R> + Sync,
+{
+    let chunk = chunk.max(1);
+    let chunks: Vec<(usize, &[T])> =
+        items.chunks(chunk).enumerate().map(|(k, c)| (k * chunk, c)).collect();
+    let nested = map_parallel(threads, &chunks, |_, &(start, c)| {
+        let out = f(start, c);
+        assert_eq!(out.len(), c.len(), "chunk fn returned {} results for {} items", out.len(), c.len());
+        out
+    });
+    nested.into_iter().flatten().collect()
+}
+
+/// The `FnOnce` counterpart of [`map_parallel`], for jobs that consume
+/// owned state (e.g. a forked `Trainer` in the parallel beacon-retraining
+/// fan-out): run every job on up to `threads` workers; results in input
+/// order; worker panics re-raise here with their original payload.
+pub fn run_once_parallel<R, F>(threads: usize, jobs: Vec<F>) -> Vec<R>
+where
+    R: Send,
+    F: FnOnce() -> R + Send,
+{
+    let slots: Vec<Mutex<Option<F>>> = jobs.into_iter().map(|f| Mutex::new(Some(f))).collect();
+    map_parallel(threads, &slots, |_, slot| {
+        let f = relock(slot).take().expect("job claimed twice");
+        f()
+    })
+}
+
 /// Lock helper that shrugs off poisoning: bookkeeping state (queue slots,
 /// serve-mode connection maps) stays usable even after a job panicked —
 /// the panic itself is reported separately, through [`panic_message`] or
@@ -256,6 +296,40 @@ mod tests {
             }
             x
         });
+    }
+
+    #[test]
+    fn chunked_map_matches_unchunked_at_any_chunk_size() {
+        let items: Vec<u64> = (0..103).collect();
+        let f = |x: u64| x.wrapping_mul(0x2545F4914F6CDD1D) >> 9;
+        let want: Vec<u64> = items.iter().map(|&x| f(x)).collect();
+        for threads in [1, 4] {
+            for chunk in [1, 7, 50, 103, 500] {
+                let got = map_parallel_chunked(threads, &items, chunk, |start, c| {
+                    c.iter().enumerate().map(|(j, &x)| {
+                        assert_eq!(x, (start + j) as u64, "chunk start index is absolute");
+                        f(x)
+                    }).collect()
+                });
+                assert_eq!(got, want, "threads={threads} chunk={chunk}");
+            }
+        }
+        assert!(map_parallel_chunked(4, &[] as &[u64], 8, |_, c| c.to_vec()).is_empty());
+    }
+
+    #[test]
+    fn run_once_parallel_consumes_owned_jobs_in_order() {
+        // Jobs move owned (non-Clone, non-Sync-shared) state — the exact
+        // shape of a forked-Trainer retraining fan-out.
+        struct Owned(u64);
+        let jobs: Vec<_> = (0..37u64)
+            .map(|i| {
+                let state = Owned(i);
+                move || state.0 * 10 + 1
+            })
+            .collect();
+        let out = run_once_parallel(4, jobs);
+        assert_eq!(out, (0..37).map(|i| i * 10 + 1).collect::<Vec<u64>>());
     }
 
     #[test]

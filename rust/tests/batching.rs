@@ -1,0 +1,126 @@
+//! Equivalence guarantees for the micro-batched eval path (hermetic —
+//! surrogate engine over synthetic artifacts):
+//!
+//! 1. `EvalService::val_error_batch` is BITWISE-identical to scoring the
+//!    same candidates one `val_error` call at a time, for arbitrary batch
+//!    geometry including duplicates and unpackable (B32) cache keys —
+//!    and the services end in the same observable state (same execution
+//!    and memoization counts, duplicates counted as cache hits).
+//! 2. Whole searches reproduce the SAME front bitwise for any evaluation
+//!    backend geometry: 1 thread, N threads, or a shared serve-mode
+//!    WorkQueue. Batching may only change the wall clock.
+
+use std::sync::Arc;
+
+use mohaq::coordinator::{ExperimentSpec, ScoredObjective, SearchOutcome, SearchSession};
+use mohaq::eval::EvalService;
+use mohaq::quant::{Bits, QuantConfig};
+use mohaq::runtime::Artifacts;
+use mohaq::util::pool::WorkQueue;
+use mohaq::util::prop::check_prop;
+use mohaq::util::rng::Rng;
+
+/// Random batch: 1..=24 candidates over every precision (B32 included so
+/// some cache keys take the Wide fallback), with a forced duplicate run
+/// so the dedup-and-fan-out path sees repeated keys.
+fn gen_batch(rng: &mut Rng) -> Vec<QuantConfig> {
+    let n_layers = Artifacts::synthetic().layer_names.len();
+    let all = [Bits::B2, Bits::B4, Bits::B8, Bits::B16, Bits::B32];
+    let len = 1 + rng.below(24);
+    let mut batch: Vec<QuantConfig> = (0..len)
+        .map(|_| QuantConfig {
+            w_bits: (0..n_layers).map(|_| *rng.choose(&all)).collect(),
+            a_bits: (0..n_layers).map(|_| *rng.choose(&all)).collect(),
+        })
+        .collect();
+    // Duplicate a random prefix element to a random later slot.
+    if len > 1 {
+        let src = rng.below(len);
+        let dst = rng.below(len);
+        batch[dst] = batch[src].clone();
+    }
+    batch
+}
+
+#[test]
+fn val_error_batch_is_bitwise_identical_to_sequential() {
+    let arts = Arc::new(Artifacts::synthetic());
+    check_prop(
+        "val_error_batch == sequential val_error",
+        60,
+        gen_batch,
+        |batch| {
+            // Fresh services so cold-cache behavior is compared too.
+            let seq = EvalService::surrogate(arts.clone()).map_err(|e| e.to_string())?;
+            let bat = EvalService::surrogate(arts.clone()).map_err(|e| e.to_string())?;
+            let want: Vec<f64> = batch
+                .iter()
+                .map(|qc| seq.val_error(qc, 0).map_err(|e| e.to_string()))
+                .collect::<Result<_, _>>()?;
+            let got = bat.val_error_batch(batch, 0).map_err(|e| e.to_string())?;
+            if want.len() != got.len() {
+                return Err(format!("length mismatch: {} vs {}", want.len(), got.len()));
+            }
+            for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+                if w.to_bits() != g.to_bits() {
+                    return Err(format!("candidate {i}: sequential {w} != batched {g}"));
+                }
+            }
+            // Same executions, same memoized keys, duplicates as hits.
+            if seq.stats() != bat.stats() {
+                return Err(format!(
+                    "service state diverged: sequential {:?} vs batched {:?}",
+                    seq.stats(),
+                    bat.stats()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+fn spec() -> ExperimentSpec {
+    ExperimentSpec::builder()
+        .name("batch-front-identity")
+        .platform("bitfusion")
+        .objective(ScoredObjective::error())
+        .objective(ScoredObjective::neg_speedup())
+        .pop_size(8)
+        .initial_pop_size(12)
+        .generations(4)
+        .seed(0xCAFE)
+        .err_feasible_pp(35.0)
+        .build()
+        .unwrap()
+}
+
+/// Everything observable about a front, with errors as raw bits.
+fn fingerprint(o: &SearchOutcome) -> Vec<(String, u64, u64, String)> {
+    o.rows
+        .iter()
+        .map(|r| (r.qc.display_wa(), r.wer_v.to_bits(), r.wer_t.to_bits(), r.param_set.clone()))
+        .collect()
+}
+
+#[test]
+fn front_is_bitwise_identical_across_eval_backends() {
+    let spec = spec();
+    let reference = SearchSession::synthetic().unwrap().threads(1).run(&spec).unwrap();
+    assert!(!reference.rows.is_empty(), "degenerate reference front");
+
+    for threads in [3, 8] {
+        let got = SearchSession::synthetic().unwrap().threads(threads).run(&spec).unwrap();
+        assert_eq!(fingerprint(&reference), fingerprint(&got), "{threads} threads");
+        assert_eq!(reference.evaluations, got.evaluations, "{threads} threads");
+        // Batching dedups identically, so the unique-miss count (device
+        // executions) must match the sequential run exactly.
+        assert_eq!(reference.exec_calls, got.exec_calls, "{threads} threads");
+    }
+
+    // Serve-mode geometry: candidate chunks submitted to a shared queue.
+    let queue = Arc::new(WorkQueue::new(2));
+    let got = SearchSession::synthetic().unwrap().shared_queue(queue).run(&spec).unwrap();
+    assert_eq!(fingerprint(&reference), fingerprint(&got), "shared queue");
+    assert_eq!(reference.evaluations, got.evaluations, "shared queue");
+    assert_eq!(reference.exec_calls, got.exec_calls, "shared queue");
+}
