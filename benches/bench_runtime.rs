@@ -14,7 +14,7 @@ use std::sync::Arc;
 
 use mohaq::eval::{CacheKey, EvalService};
 use mohaq::moo::{Evaluation, Parallel, Problem, SyncProblem};
-use mohaq::quant::{resolve_qparams, Bits, QuantConfig};
+use mohaq::quant::{Bits, QuantConfig};
 use mohaq::runtime::{Artifacts, Input, Runtime};
 use mohaq::util::bench::Bencher;
 use mohaq::util::pool;
@@ -100,17 +100,11 @@ fn bench_eval_throughput() -> anyhow::Result<()> {
             .fold(0u64, u64::wrapping_add)
     });
 
-    // Qparam resolution: dense [layer][bits] table vs the string-keyed
-    // BTreeMap lookups it replaced on the eval hot path.
+    // Qparam resolution on the hot path: the dense [layer][bits] table.
+    // (The string-keyed BTreeMap formulation it replaced is now a
+    // test-only oracle in quant::, no longer benched.)
     b.bench_items("QparamTable::resolve x64 (dense rows)", 64, || {
         pool.iter().map(|qc| arts.qtable.resolve(qc).unwrap().0[0]).sum::<f32>()
-    });
-    b.bench_items("resolve_qparams x64 (string-keyed)", 64, || {
-        pool.iter()
-            .map(|qc| {
-                resolve_qparams(qc, &arts.layer_names, &arts.w_clips, &arts.a_clips).unwrap().0[0]
-            })
-            .sum::<f32>()
     });
 
     b.emit_json("eval_throughput")?;
@@ -194,13 +188,10 @@ fn main() -> anyhow::Result<()> {
     let exec = rt.load(arts.hlo_path("infer")?)?;
     let n = arts.layer_names.len();
     let qc = QuantConfig::uniform(n, Bits::B4, Bits::B8);
-    b.bench("resolve_qparams (8 layers)", || {
-        resolve_qparams(&qc, &arts.layer_names, &arts.w_clips, &arts.a_clips).unwrap()
-    });
     b.bench("QparamTable::resolve (8 layers)", || arts.qtable.resolve(&qc).unwrap());
 
     // One inference batch, literal path (weights re-uploaded every call).
-    let (wq, aq) = resolve_qparams(&qc, &arts.layer_names, &arts.w_clips, &arts.a_clips)?;
+    let (wq, aq) = arts.qtable.resolve(&qc)?;
     let (bsz, t, f) = (arts.batch, arts.seq_len, arts.feat_dim);
     let split = &arts.val_subsets[0];
     let (x, y) = split.batch(0, bsz, t, f);

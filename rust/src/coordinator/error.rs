@@ -25,6 +25,10 @@ pub enum SearchError {
     /// The search was cancelled through its `CancelToken` (serve mode:
     /// client `cancel` frame or disconnect) before producing a front.
     Cancelled,
+    /// Distributed mode: a worker process died or timed out and the
+    /// search could not recover (re-shard retry budget exhausted, or no
+    /// workers left to take over the lost islands).
+    WorkerLost(String),
 }
 
 impl SearchError {
@@ -68,6 +72,7 @@ impl SearchError {
             SearchError::Eval(_) => "eval",
             SearchError::Poisoned(_) => "poisoned",
             SearchError::Cancelled => "cancelled",
+            SearchError::WorkerLost(_) => "worker_lost",
         }
     }
 }
@@ -85,6 +90,7 @@ impl fmt::Display for SearchError {
             SearchError::Eval(msg) => write!(f, "evaluation failed: {msg}"),
             SearchError::Poisoned(msg) => write!(f, "evaluation state poisoned: {msg}"),
             SearchError::Cancelled => write!(f, "search cancelled"),
+            SearchError::WorkerLost(msg) => write!(f, "worker lost: {msg}"),
         }
     }
 }

@@ -138,6 +138,13 @@ pub enum SearchEvent {
     Generation(GenerationLog),
     /// Island-model migration: elites copied between islands.
     Migration { generation: usize, from: usize, to: usize, accepted: usize },
+    /// Distributed mode: a worker accepted ownership of these global
+    /// island indices.
+    ShardAssigned { worker: usize, islands: Vec<usize> },
+    /// Distributed mode: a worker died or timed out; its islands move to
+    /// the survivors and the current round replays from the last
+    /// migration snapshot (`retry` counts re-shards so far).
+    ShardLost { worker: usize, islands: Vec<usize>, retry: usize },
     Finished {
         evaluations: usize,
         pareto: usize,
@@ -302,34 +309,10 @@ impl SearchSession {
         // Per-run stats are deltas against the shared service counters
         // (one cache serves every run of this session).
         let stats0 = eval.stats();
-        let (objectives, bindings) = spec.resolve_objectives()?;
-        // The genome obeys the INTERSECTION of platform restrictions: any
-        // tying platform ties it, and the floor precision is the highest
-        // minimum across bindings (SiLago lacks 2-bit => 2).
-        let tied = spec.tied.unwrap_or_else(|| bindings.iter().any(|b| b.platform.tied_wa()));
-        let mut gene_min = 1;
-        for b in &bindings {
-            // The registry rejects empty supported_bits at resolve time;
-            // keep a typed error here as defense in depth (a long-lived
-            // server must not panic on a hand-built binding).
-            let min = b
-                .platform
-                .supported_bits()
-                .iter()
-                .map(|bit| bit.to_gene())
-                .min()
-                .ok_or_else(|| {
-                    SearchError::invalid(format!(
-                        "platform '{}' declares no supported precisions",
-                        b.name
-                    ))
-                })?;
-            gene_min = gene_min.max(min);
-        }
-        let err_limit = arts.baseline.val_err_16bit + spec.err_feasible_pp / 100.0;
+        let mut problem = self.base_problem(spec, cancel.clone())?;
 
         let beacon_sink = Arc::new(Mutex::new(Vec::new()));
-        let (trainer, beacons) = if let Some(ov) = &spec.beacon {
+        if let Some(ov) = &spec.beacon {
             let mut policy = BeaconPolicy::paper_defaults(
                 arts.baseline.val_err_16bit,
                 arts.baseline.beacon_lr as f32,
@@ -351,33 +334,9 @@ impl SearchSession {
             })?;
             let trainer = Trainer::new(rt, arts.clone(), spec.ga.seed ^ 0xbeac0)
                 .map_err(SearchError::eval)?;
-            (
-                Some(trainer),
-                Some(BeaconManager::new(policy).with_sink(beacon_sink.clone())),
-            )
-        } else {
-            (None, None)
-        };
-
-        let evaluator = match &self.queue {
-            Some(q) => EvalStrategy::Shared(q.clone()),
-            None => EvalStrategy::Threads(self.threads),
-        };
-        let mut problem = MohaqProblem {
-            arts: arts.clone(),
-            eval,
-            trainer,
-            beacons,
-            bindings,
-            objectives,
-            tied,
-            err_limit,
-            gene_min,
-            evaluator,
-            cancel: cancel.clone(),
-            records: Vec::new(),
-            failure: None,
-        };
+            problem.trainer = Some(trainer);
+            problem.beacons = Some(BeaconManager::new(policy).with_sink(beacon_sink.clone()));
+        }
 
         on_event(&SearchEvent::Started {
             name: spec.name.clone(),
@@ -469,40 +428,7 @@ impl SearchSession {
             set_of.insert(r.genome.clone(), r.set_idx);
         }
 
-        let mut rows = Vec::with_capacity(set.len());
-        for ind in &set {
-            let qc = problem.try_decode(&ind.genome)?;
-            let set_idx = *set_of.get(&ind.genome).unwrap_or(&0);
-            let wer_v = problem.eval.val_error(&qc, set_idx).map_err(SearchError::eval)?;
-            let wer_t = problem.eval.test_error(&qc, set_idx).map_err(SearchError::eval)?;
-            let model = &problem.arts.model;
-            let hw: Vec<HwMetrics> = problem
-                .bindings
-                .iter()
-                .map(|b| HwMetrics {
-                    platform: b.name.clone(),
-                    speedup: b.platform.speedup(model, &qc),
-                    energy_uj: b.platform.energy_pj(model, &qc).map(|pj| pj / 1e6),
-                })
-                .collect();
-            rows.push(SolutionRow {
-                cp_r: model.compression_ratio(&qc.w_bits),
-                size_mb: model.size_bytes(&qc.w_bits) / (1024.0 * 1024.0),
-                speedup: hw.first().map(|h| h.speedup),
-                energy_uj: hw.first().and_then(|h| h.energy_uj),
-                param_set: problem
-                    .eval
-                    .param_set(set_idx)
-                    .map_err(SearchError::eval)?
-                    .name
-                    .clone(),
-                hw,
-                qc,
-                wer_v,
-                wer_t,
-            });
-        }
-        sort_rows_nan_last(&mut rows);
+        let rows = assemble_rows(&problem, &set, &set_of)?;
 
         let stats = problem.eval.stats();
         let outcome = SearchOutcome {
@@ -539,6 +465,95 @@ impl SearchSession {
         Ok(outcome)
     }
 
+    /// Distributed sibling of `run_with_cancel`: shard the spec's island
+    /// model across the worker processes at `workers` (started with
+    /// `mohaq worker`; see the `dist` module). Same spec, same seed, same
+    /// front — bitwise — as the in-process island run.
+    pub fn run_distributed(
+        &self,
+        spec: &ExperimentSpec,
+        workers: &[String],
+        config: &crate::dist::DistConfig,
+        on_event: impl FnMut(&SearchEvent),
+        cancel: &CancelToken,
+    ) -> Result<SearchOutcome, SearchError> {
+        crate::dist::run_search(self, spec, workers, config, on_event, cancel)
+    }
+
+    /// Resolve `spec` into the evaluation problem (no beacon machinery
+    /// attached — `run_with_cancel` bolts that on; the distributed path
+    /// forbids it).
+    fn base_problem(
+        &self,
+        spec: &ExperimentSpec,
+        cancel: CancelToken,
+    ) -> Result<MohaqProblem, SearchError> {
+        let (objectives, bindings) = spec.resolve_objectives()?;
+        // The genome obeys the INTERSECTION of platform restrictions: any
+        // tying platform ties it, and the floor precision is the highest
+        // minimum across bindings (SiLago lacks 2-bit => 2).
+        let tied = spec.tied.unwrap_or_else(|| bindings.iter().any(|b| b.platform.tied_wa()));
+        let mut gene_min = 1;
+        for b in &bindings {
+            // The registry rejects empty supported_bits at resolve time;
+            // keep a typed error here as defense in depth (a long-lived
+            // server must not panic on a hand-built binding).
+            let min = b
+                .platform
+                .supported_bits()
+                .iter()
+                .map(|bit| bit.to_gene())
+                .min()
+                .ok_or_else(|| {
+                    SearchError::invalid(format!(
+                        "platform '{}' declares no supported precisions",
+                        b.name
+                    ))
+                })?;
+            gene_min = gene_min.max(min);
+        }
+        let err_limit = self.arts.baseline.val_err_16bit + spec.err_feasible_pp / 100.0;
+        let evaluator = match &self.queue {
+            Some(q) => EvalStrategy::Shared(q.clone()),
+            None => EvalStrategy::Threads(self.threads),
+        };
+        Ok(MohaqProblem {
+            arts: self.arts.clone(),
+            eval: self.eval.clone(),
+            trainer: None,
+            beacons: None,
+            bindings,
+            objectives,
+            tied,
+            err_limit,
+            gene_min,
+            evaluator,
+            cancel,
+            records: Vec::new(),
+            failure: None,
+        })
+    }
+
+    /// The problem a distributed shard (worker or coordinator) evaluates
+    /// against. Beacon specs are rejected with a typed error: beacon
+    /// selection is order-dependent across the GLOBAL candidate batch
+    /// (Algorithm 1's sequential pass), which sharded evaluation cannot
+    /// reproduce — a distributed beacon search would silently diverge
+    /// from the single-process front instead of failing loudly here.
+    pub(crate) fn shard_problem(
+        &self,
+        spec: &ExperimentSpec,
+        cancel: CancelToken,
+    ) -> Result<MohaqProblem, SearchError> {
+        if spec.beacon.is_some() {
+            return Err(SearchError::invalid(
+                "beacon retraining is order-dependent across the global population and \
+                 cannot be sharded; drop 'beacon' from the spec or search single-process",
+            ));
+        }
+        self.base_problem(spec, cancel)
+    }
+
     /// Run NSGA-II over any artifact-free `SyncProblem` with `threads`
     /// evaluation workers (0 = one per core) — the generic half of the
     /// session's parallel plumbing, exposed for smoke tests and engine
@@ -571,6 +586,53 @@ impl SearchSession {
         let pop = model.run(&mut wrapped, |_| {});
         Nsga2::pareto_set(&pop)
     }
+}
+
+/// Score a final Pareto set into report rows — shared by the in-process
+/// and distributed paths so both produce identical tables for identical
+/// fronts. `set_of` maps genome → parameter-set index (empty map = the
+/// baseline set everywhere, the distributed case: beacons are rejected
+/// there, so every error came from set 0).
+pub(crate) fn assemble_rows(
+    problem: &MohaqProblem,
+    set: &[Individual],
+    set_of: &HashMap<Vec<i64>, usize>,
+) -> Result<Vec<SolutionRow>, SearchError> {
+    let mut rows = Vec::with_capacity(set.len());
+    for ind in set {
+        let qc = problem.try_decode(&ind.genome)?;
+        let set_idx = *set_of.get(&ind.genome).unwrap_or(&0);
+        let wer_v = problem.eval.val_error(&qc, set_idx).map_err(SearchError::eval)?;
+        let wer_t = problem.eval.test_error(&qc, set_idx).map_err(SearchError::eval)?;
+        let model = &problem.arts.model;
+        let hw: Vec<HwMetrics> = problem
+            .bindings
+            .iter()
+            .map(|b| HwMetrics {
+                platform: b.name.clone(),
+                speedup: b.platform.speedup(model, &qc),
+                energy_uj: b.platform.energy_pj(model, &qc).map(|pj| pj / 1e6),
+            })
+            .collect();
+        rows.push(SolutionRow {
+            cp_r: model.compression_ratio(&qc.w_bits),
+            size_mb: model.size_bytes(&qc.w_bits) / (1024.0 * 1024.0),
+            speedup: hw.first().map(|h| h.speedup),
+            energy_uj: hw.first().and_then(|h| h.energy_uj),
+            param_set: problem
+                .eval
+                .param_set(set_idx)
+                .map_err(SearchError::eval)?
+                .name
+                .clone(),
+            hw,
+            qc,
+            wer_v,
+            wer_t,
+        });
+    }
+    sort_rows_nan_last(&mut rows);
+    Ok(rows)
 }
 
 /// Order report rows by validation error, NaN rows last. A degenerate

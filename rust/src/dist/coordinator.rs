@@ -1,0 +1,503 @@
+//! Coordinator-side fleet driver: shard the island model over worker
+//! processes, advance them round by round, route elites through the
+//! topology, and merge the final front. See the module docs of
+//! [`crate::dist`] for the determinism and failure contracts.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::coordinator::session::assemble_rows;
+use crate::coordinator::{
+    CancelToken, ExperimentSpec, GenerationLog, SearchError, SearchEvent, SearchOutcome,
+    SearchSession,
+};
+use crate::moo::island::front_hypervolume;
+use crate::moo::{Individual, IslandConfig, IslandSnapshot, Nsga2, Problem};
+use crate::serve::protocol::{
+    Frame, IncomingMigrants, Request, ShardElites, ShardMigration, ShardPop,
+};
+
+use super::shard::shard_map;
+
+/// One search per coordinator connection, so the wire id is fixed.
+const SEARCH_ID: u64 = 1;
+
+/// Coordinator-side failure policy.
+#[derive(Debug, Clone)]
+pub struct DistConfig {
+    /// Silence window after which a worker is declared lost. Workers
+    /// heartbeat every ~250ms while computing, so anything beyond a few
+    /// seconds means the process (or the network) is gone.
+    pub heartbeat_timeout: Duration,
+    /// How many worker losses the search absorbs — each one re-shards
+    /// the dead worker's islands onto the survivors and replays the
+    /// current round from the last snapshot — before giving up with
+    /// `SearchError::WorkerLost`.
+    pub max_retries: usize,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        DistConfig { heartbeat_timeout: Duration::from_secs(10), max_retries: 2 }
+    }
+}
+
+/// Why one attempt at driving the fleet stopped.
+enum DriveError {
+    /// The worker at this position in the ORIGINAL address list stopped
+    /// responding (connect failure, EOF, IO error, heartbeat silence) —
+    /// recoverable by re-sharding onto the survivors.
+    Lost { worker: usize, detail: String },
+    /// A typed failure retrying cannot fix (invalid spec, poisoned
+    /// cache, cancellation, corrupt exchange).
+    Fatal(SearchError),
+}
+
+/// A live connection to one worker process.
+struct WorkerLink {
+    /// Position in the original worker list — stable across re-shards,
+    /// so `ShardAssigned`/`ShardLost` events name consistent workers.
+    worker: usize,
+    /// Global islands this link's worker owns in the current attempt.
+    islands: Vec<usize>,
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl WorkerLink {
+    fn connect(worker: usize, addr: &str, timeout: Duration) -> Result<WorkerLink, DriveError> {
+        let lost = |detail: String| DriveError::Lost { worker, detail };
+        let stream =
+            TcpStream::connect(addr).map_err(|e| lost(format!("connect {addr}: {e}")))?;
+        // The read timeout IS the heartbeat deadline: workers stream
+        // heartbeats while computing, so any single read blocking past
+        // the window means the worker is gone.
+        stream.set_read_timeout(Some(timeout)).map_err(|e| lost(e.to_string()))?;
+        stream.set_write_timeout(Some(timeout)).map_err(|e| lost(e.to_string()))?;
+        let reader = BufReader::new(stream.try_clone().map_err(|e| lost(e.to_string()))?);
+        Ok(WorkerLink { worker, islands: Vec::new(), reader, writer: stream })
+    }
+
+    fn send(&mut self, req: &Request) -> Result<(), DriveError> {
+        let mut line = req.to_line();
+        line.push('\n');
+        self.writer
+            .write_all(line.as_bytes())
+            .and_then(|()| self.writer.flush())
+            .map_err(|e| DriveError::Lost { worker: self.worker, detail: format!("send: {e}") })
+    }
+
+    /// Read frames until `want` accepts one. Heartbeats only reset the
+    /// per-read silence deadline; generation frames are forwarded to
+    /// `on_gen`; error frames map to typed failures (`error_to_drive`);
+    /// anything else is a protocol breach and counts as a lost worker.
+    fn read_until<T>(
+        &mut self,
+        mut want: impl FnMut(Frame) -> Option<T>,
+        on_gen: &mut impl FnMut(GenerationLog),
+    ) -> Result<T, DriveError> {
+        loop {
+            let mut line = String::new();
+            let n = self.reader.read_line(&mut line).map_err(|e| DriveError::Lost {
+                worker: self.worker,
+                detail: format!("read: {e}"),
+            })?;
+            if n == 0 {
+                return Err(DriveError::Lost {
+                    worker: self.worker,
+                    detail: "connection closed".into(),
+                });
+            }
+            let frame = Frame::parse(&line).map_err(|e| DriveError::Lost {
+                worker: self.worker,
+                detail: format!("bad frame: {e}"),
+            })?;
+            match frame {
+                Frame::WorkerHeartbeat { .. } => {}
+                Frame::Generation {
+                    generation, evaluations, best_err, feasible, pop_size, island, ..
+                } => on_gen(GenerationLog {
+                    generation,
+                    evaluations,
+                    best_err,
+                    feasible,
+                    pop_size,
+                    island,
+                }),
+                Frame::Error { kind, message, .. } => {
+                    return Err(error_to_drive(self.worker, &kind, message));
+                }
+                other => {
+                    if let Some(t) = want(other) {
+                        return Ok(t);
+                    }
+                    return Err(DriveError::Lost {
+                        worker: self.worker,
+                        detail: "unexpected frame".into(),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Map a worker's typed error frame back into the coordinator's error
+/// space. Spec/eval/poison classes are fatal — every worker would fail
+/// the same way, so retrying on survivors is pointless. A `cancelled`
+/// frame is NOT the coordinator's own cancellation (that is checked on
+/// the coordinator's token between rounds): a worker only cancels its
+/// shard when its own process is shutting down, so it counts as a lost
+/// worker, same as the socket teardown that usually races ahead of it.
+/// Protocol and panic classes are likewise a lost worker: the shard
+/// state on that connection is unusable, but a re-shard is sound.
+fn error_to_drive(worker: usize, kind: &str, message: String) -> DriveError {
+    match kind {
+        "invalid_spec" | "unknown_platform" => DriveError::Fatal(SearchError::InvalidSpec(message)),
+        "config" => DriveError::Fatal(SearchError::Config(message)),
+        "poisoned" => DriveError::Fatal(SearchError::Poisoned(message)),
+        "eval" => DriveError::Fatal(SearchError::Eval(message)),
+        _ => DriveError::Lost { worker, detail: format!("worker error [{kind}]: {message}") },
+    }
+}
+
+fn note_gen(
+    history: &mut Vec<GenerationLog>,
+    on_event: &mut dyn FnMut(&SearchEvent),
+    log: GenerationLog,
+) {
+    on_event(&SearchEvent::Generation(log.clone()));
+    history.push(log);
+}
+
+/// Run `spec` sharded across the worker processes listening at
+/// `workers`. Fixed seed + fixed spec produce a front bitwise-identical
+/// to `SearchSession::run` on one process, regardless of worker count
+/// or mid-run worker losses (as long as the retry budget holds out).
+pub fn run_search(
+    session: &SearchSession,
+    spec: &ExperimentSpec,
+    workers: &[String],
+    config: &DistConfig,
+    mut on_event: impl FnMut(&SearchEvent),
+    cancel: &CancelToken,
+) -> Result<SearchOutcome, SearchError> {
+    let t0 = std::time::Instant::now();
+    if workers.is_empty() {
+        return Err(SearchError::invalid(
+            "distributed search needs at least one worker address",
+        ));
+    }
+    let island_cfg = spec.island.clone().ok_or_else(|| {
+        SearchError::invalid("distributed search requires an island config ('island' in the spec)")
+    })?;
+    island_cfg.validate(spec.ga.pop_size).map_err(SearchError::invalid)?;
+    // Validates the full spec locally — including the beacon rejection —
+    // and provides the scorer for the final report rows.
+    let problem = session.shard_problem(spec, cancel.clone())?;
+    let stats0 = session.eval().stats();
+    let k = island_cfg.islands;
+    let generations = spec.ga.generations;
+    let interval = island_cfg.migration_interval.max(1);
+
+    on_event(&SearchEvent::Started {
+        name: spec.name.clone(),
+        num_vars: problem.num_vars(),
+        objectives: problem.objective_names(),
+        threads: problem.evaluator.workers(),
+        islands: k,
+    });
+
+    // The global schedule: one round per migration boundary (exchange
+    // afterwards), plus a final residual advance when the horizon is not
+    // itself a boundary. Workers advance between boundaries on their
+    // own; only the exchanges synchronize the fleet.
+    let mut rounds: Vec<(usize, bool)> = if k > 1 {
+        (1..=generations).filter(|g| g % interval == 0).map(|g| (g, true)).collect()
+    } else {
+        Vec::new()
+    };
+    if rounds.last().map_or(true, |&(g, _)| g < generations) {
+        rounds.push((generations, false));
+    }
+
+    let mut alive: Vec<(usize, String)> =
+        workers.iter().enumerate().map(|(i, a)| (i, a.clone())).collect();
+    let mut last_state: Option<(usize, Vec<IslandSnapshot>)> = None;
+    let mut history: Vec<GenerationLog> = Vec::new();
+    let mut losses = 0usize;
+
+    let pops: Vec<ShardPop> = loop {
+        if cancel.is_cancelled() {
+            return Err(SearchError::Cancelled);
+        }
+        match drive_fleet(
+            spec,
+            &island_cfg,
+            &rounds,
+            &alive,
+            config,
+            &mut last_state,
+            &mut history,
+            &mut on_event,
+            cancel,
+        ) {
+            Ok(pops) => break pops,
+            Err(DriveError::Fatal(e)) => return Err(e),
+            Err(DriveError::Lost { worker, detail }) => {
+                // Which islands died with the worker: same shard_map the
+                // attempt used, indexed by the worker's position among
+                // the (still pre-removal) live list.
+                let pos = alive.iter().position(|(w, _)| *w == worker).unwrap_or(0);
+                let islands = shard_map(k, alive.len())[pos].clone();
+                on_event(&SearchEvent::ShardLost { worker, islands, retry: losses });
+                losses += 1;
+                alive.retain(|(w, _)| *w != worker);
+                if alive.is_empty() {
+                    return Err(SearchError::WorkerLost(format!(
+                        "worker {worker} lost ({detail}) and no workers remain"
+                    )));
+                }
+                if losses > config.max_retries {
+                    return Err(SearchError::WorkerLost(format!(
+                        "worker {worker} lost ({detail}); retry budget ({}) exhausted",
+                        config.max_retries
+                    )));
+                }
+            }
+        }
+    };
+
+    // ---- Merge: identical post-processing to the in-process session.
+    let pop: Vec<Individual> = pops.iter().flat_map(|p| p.pop.clone()).collect();
+    let evaluations: usize = pops.iter().map(|p| p.evaluations).sum();
+    let set = Nsga2::pareto_set(&pop);
+    let front_hv = front_hypervolume(&set);
+    // Beacons are rejected in distributed mode, so every row scores
+    // against the baseline parameter set (set_idx 0).
+    let rows = assemble_rows(&problem, &set, &HashMap::new())?;
+    let stats = session.eval().stats();
+    let outcome = SearchOutcome {
+        spec_name: spec.name.clone(),
+        objective_names: problem.objective_names(),
+        rows,
+        history,
+        evaluations,
+        exec_calls: stats.executions - stats0.executions,
+        cache_hits: stats.cache_hits - stats0.cache_hits,
+        eval_stats: stats,
+        beacons: Vec::new(),
+        records: Vec::new(),
+        baseline_val_err: session.artifacts().baseline.val_err_16bit,
+        baseline_test_err: session.artifacts().baseline.test_err,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        front_hypervolume: front_hv,
+    };
+    on_event(&SearchEvent::Finished {
+        evaluations: outcome.evaluations,
+        pareto: outcome.rows.len(),
+        wall_secs: outcome.wall_secs,
+        hypervolume: outcome.front_hypervolume,
+    });
+    Ok(outcome)
+}
+
+/// One attempt: connect every live worker, assign shards (restoring
+/// from the last boundary snapshot when one exists), then drive the
+/// remaining rounds and collect the final populations. Any worker loss
+/// aborts the whole attempt — the caller re-shards onto the survivors
+/// and replays the current round from `last_state`; because the restore
+/// is exact, a replay cannot change the front.
+#[allow(clippy::too_many_arguments)]
+fn drive_fleet(
+    spec: &ExperimentSpec,
+    island_cfg: &IslandConfig,
+    rounds: &[(usize, bool)],
+    alive: &[(usize, String)],
+    config: &DistConfig,
+    last_state: &mut Option<(usize, Vec<IslandSnapshot>)>,
+    history: &mut Vec<GenerationLog>,
+    on_event: &mut dyn FnMut(&SearchEvent),
+    cancel: &CancelToken,
+) -> Result<Vec<ShardPop>, DriveError> {
+    let k = island_cfg.islands;
+    let map = shard_map(k, alive.len());
+    let restored = last_state.is_some();
+    let (base_gen, restore): (usize, &[IslandSnapshot]) = match last_state {
+        Some((g, snaps)) => (*g, snaps.as_slice()),
+        None => (0, &[]),
+    };
+
+    // Connect + assign. Workers mapped no islands (more workers than
+    // islands) are left untouched and idle.
+    let mut links: Vec<WorkerLink> = Vec::new();
+    for (pos, (worker, addr)) in alive.iter().enumerate() {
+        let islands = map[pos].clone();
+        if islands.is_empty() {
+            continue;
+        }
+        let mut link = WorkerLink::connect(*worker, addr, config.heartbeat_timeout)?;
+        let snaps: Vec<IslandSnapshot> =
+            restore.iter().filter(|s| islands.contains(&s.island)).cloned().collect();
+        link.send(&Request::ShardAssign {
+            id: SEARCH_ID,
+            spec: spec.to_json(),
+            islands: islands.clone(),
+            base_gen,
+            restore: snaps,
+        })?;
+        link.islands = islands;
+        links.push(link);
+    }
+    for link in &mut links {
+        let acked = link.read_until(
+            |f| match f {
+                Frame::ShardAssigned { islands, .. } => Some(islands),
+                _ => None,
+            },
+            &mut |_| {},
+        )?;
+        if acked != link.islands {
+            return Err(DriveError::Lost {
+                worker: link.worker,
+                detail: "shard ack does not match the assignment".into(),
+            });
+        }
+        on_event(&SearchEvent::ShardAssigned { worker: link.worker, islands: acked });
+    }
+
+    for &(upto, migrate) in rounds {
+        if restored && upto <= base_gen {
+            continue; // already inside the restored history
+        }
+        if cancel.is_cancelled() {
+            return Err(DriveError::Fatal(SearchError::Cancelled));
+        }
+        // Phase A: every shard advances to the boundary concurrently.
+        for link in &mut links {
+            link.send(&Request::RunIslands { id: SEARCH_ID, upto_gen: upto })?;
+        }
+        let mut elites: Vec<Vec<Individual>> = vec![Vec::new(); k];
+        for link in &mut links {
+            let shards = link.read_until(
+                |f| match f {
+                    Frame::EliteExchange { generation, shards, .. } if generation == upto => {
+                        Some(shards)
+                    }
+                    _ => None,
+                },
+                &mut |log| note_gen(history, on_event, log),
+            )?;
+            for ShardElites { island, elites: e } in shards {
+                if island < k {
+                    elites[island] = e;
+                }
+            }
+        }
+        if !migrate {
+            continue; // final residual round: no exchange, no snapshot
+        }
+
+        // Phase B: route migrants through the topology. Every owning
+        // worker gets its islands' source groups in global order; the
+        // MigrationApplied replies double as the boundary checkpoint.
+        for link in &mut links {
+            let incoming: Vec<IncomingMigrants> = link
+                .islands
+                .iter()
+                .map(|&to| IncomingMigrants {
+                    island: to,
+                    sources: island_cfg
+                        .topology
+                        .sources(k, to)
+                        .into_iter()
+                        .map(|from| (from, elites[from].clone()))
+                        .collect(),
+                })
+                .collect();
+            link.send(&Request::EliteExchange { id: SEARCH_ID, generation: upto, incoming })?;
+        }
+        let mut merged: Vec<Option<ShardMigration>> = (0..k).map(|_| None).collect();
+        for link in &mut links {
+            let shards = link.read_until(
+                |f| match f {
+                    Frame::MigrationApplied { generation, shards, .. } if generation == upto => {
+                        Some(shards)
+                    }
+                    _ => None,
+                },
+                &mut |log| note_gen(history, on_event, log),
+            )?;
+            for s in shards {
+                if s.island < k {
+                    merged[s.island] = Some(s);
+                }
+            }
+        }
+        // Replay the single-process event order: migrations in global
+        // island order first, then every island's generation summary.
+        for slot in &merged {
+            let Some(s) = slot else {
+                return Err(DriveError::Fatal(SearchError::Eval(
+                    "migration exchange reply missed an island".into(),
+                )));
+            };
+            for &(from, accepted) in &s.accepted {
+                if accepted > 0 {
+                    on_event(&SearchEvent::Migration {
+                        generation: upto,
+                        from,
+                        to: s.island,
+                        accepted,
+                    });
+                }
+            }
+        }
+        let mut snaps: Vec<IslandSnapshot> = Vec::with_capacity(k);
+        for slot in merged {
+            let s = slot.expect("checked above");
+            note_gen(
+                history,
+                on_event,
+                GenerationLog {
+                    generation: upto,
+                    evaluations: s.stats.evaluations,
+                    best_err: s.stats.best_err,
+                    feasible: s.stats.feasible,
+                    pop_size: s.stats.pop_size,
+                    island: Some(s.island),
+                },
+            );
+            snaps.push(s.state);
+        }
+        *last_state = Some((upto, snaps));
+    }
+
+    // Collect the FULL final populations, in global island order.
+    for link in &mut links {
+        link.send(&Request::ShardFront { id: SEARCH_ID })?;
+    }
+    let mut fronts: Vec<Option<ShardPop>> = (0..k).map(|_| None).collect();
+    for link in &mut links {
+        let shards = link.read_until(
+            |f| match f {
+                Frame::ShardFront { shards, .. } => Some(shards),
+                _ => None,
+            },
+            &mut |log| note_gen(history, on_event, log),
+        )?;
+        for s in shards {
+            if s.island < k {
+                fronts[s.island] = Some(s);
+            }
+        }
+    }
+    let mut pops = Vec::with_capacity(k);
+    for (i, f) in fronts.into_iter().enumerate() {
+        pops.push(f.ok_or_else(|| {
+            DriveError::Fatal(SearchError::Eval(format!("shard front reply missed island {i}")))
+        })?);
+    }
+    Ok(pops)
+}

@@ -1,0 +1,45 @@
+//! Distributed island sharding: ONE search across many worker processes.
+//!
+//! The island model (`moo::island`) already splits a search into K
+//! sub-populations that only interact at migration boundaries. This
+//! module distributes those islands across worker processes:
+//!
+//!   * A **worker** (`mohaq worker`, [`worker`]) is a serve-protocol
+//!     server in worker mode: it accepts `shard_assign` /
+//!     `run_islands` / `elite_exchange` / `shard_front` ops, runs its
+//!     assigned islands as a `moo::IslandShard` on its own evaluation
+//!     pool, streams heartbeats + generation summaries while advancing,
+//!     and ships elites/snapshots back at every boundary.
+//!   * The **coordinator** ([`coordinator::run_search`], reachable as
+//!     `SearchSession::run_distributed`) owns the global schedule: it
+//!     shards islands over workers ([`shard::shard_map`]), advances the
+//!     fleet round by round (a round = one migration boundary), routes
+//!     elites through the topology exactly as `IslandModel::migrate`
+//!     would, and performs the final dedup-merge + hypervolume scoring.
+//!
+//! Determinism contract (test-enforced, `rust/tests/dist.rs`): for a
+//! fixed seed and island config, the merged front is BITWISE-identical
+//! to the single-process `IslandModel` run, for any worker count and
+//! any shard map. This holds because island RNG streams are pure
+//! functions of (seed, K, island index), candidate evaluation is an
+//! order-independent pure function of the genome, and the exchange is
+//! replayed in the same global island order. Beacon specs are rejected
+//! with a typed error — beacon selection is order-dependent across the
+//! global candidate batch and cannot be sharded.
+//!
+//! Failure story: workers heartbeat while computing; a worker silent
+//! past [`DistConfig::heartbeat_timeout`] (or disconnected) is declared
+//! lost — the coordinator emits `SearchEvent::ShardLost`, re-shards the
+//! dead worker's islands onto the survivors, and REPLAYS the current
+//! round from the last post-migration snapshot. Because the restore is
+//! exact (RNG state + evaluation counters + ranked populations), a
+//! recovered search still produces the bitwise-identical front. The
+//! retry budget is bounded ([`DistConfig::max_retries`]); exhausting it
+//! surfaces as the typed `SearchError::WorkerLost`.
+
+pub mod coordinator;
+pub mod shard;
+pub mod worker;
+
+pub use coordinator::{run_search, DistConfig};
+pub use shard::shard_map;

@@ -1,0 +1,60 @@
+//! Deterministic shard maps: which worker owns which global islands.
+
+/// Contiguous assignment of `islands` global island indices over
+/// `workers` slots: worker `w` takes a contiguous run, and the first
+/// `islands % workers` workers take one extra island. Deterministic —
+/// the same inputs always produce the same map, which is half of the
+/// distributed determinism contract (the other half is exact snapshot
+/// replay). With more workers than islands the tail workers get empty
+/// assignments and sit idle.
+pub fn shard_map(islands: usize, workers: usize) -> Vec<Vec<usize>> {
+    assert!(workers > 0, "shard map needs at least one worker");
+    let base = islands / workers;
+    let extra = islands % workers;
+    let mut out = Vec::with_capacity(workers);
+    let mut next = 0usize;
+    for w in 0..workers {
+        let take = base + usize::from(w < extra);
+        out.push((next..next + take).collect());
+        next += take;
+    }
+    debug_assert_eq!(next, islands);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_every_island_exactly_once_in_order() {
+        for islands in 1..=9 {
+            for workers in 1..=5 {
+                let map = shard_map(islands, workers);
+                assert_eq!(map.len(), workers);
+                let flat: Vec<usize> = map.iter().flatten().copied().collect();
+                assert_eq!(flat, (0..islands).collect::<Vec<_>>(), "{islands}/{workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn remainder_goes_to_the_first_workers() {
+        assert_eq!(shard_map(5, 3), vec![vec![0, 1], vec![2, 3], vec![4]]);
+        assert_eq!(shard_map(4, 2), vec![vec![0, 1], vec![2, 3]]);
+        assert_eq!(shard_map(1, 1), vec![vec![0]]);
+    }
+
+    #[test]
+    fn surplus_workers_idle_with_empty_assignments() {
+        assert_eq!(shard_map(2, 4), vec![vec![0], vec![1], vec![], vec![]]);
+    }
+
+    #[test]
+    fn rebalance_after_a_loss_is_the_same_function_over_survivors() {
+        // The coordinator re-shards by calling shard_map over the
+        // surviving worker list; pin that 4-islands-2-survivors shape.
+        assert_eq!(shard_map(4, 3), vec![vec![0, 1], vec![2], vec![3]]);
+        assert_eq!(shard_map(4, 2), vec![vec![0, 1], vec![2, 3]]);
+    }
+}

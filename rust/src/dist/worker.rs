@@ -1,0 +1,319 @@
+//! Worker-side shard execution: the serve server in worker mode routes
+//! `shard_assign` / `run_islands` / `elite_exchange` / `shard_front`
+//! ops here. Shard ops are handled synchronously on the connection's
+//! reader thread — the coordinator drives every worker in lockstep, so
+//! there is never more than one shard op in flight per connection — and
+//! a dedicated heartbeat thread proves liveness (and watches for server
+//! shutdown) while an advance is computing.
+
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::{CancelToken, ExperimentSpec, MohaqProblem, SearchError};
+use crate::moo::{IslandShard, IslandSnapshot, Problem};
+use crate::serve::protocol::{
+    Frame, IncomingMigrants, Request, ShardElites, ShardMigration, ShardPop, ShardStats,
+};
+use crate::serve::server::send;
+use crate::serve::ServeState;
+use crate::util::json::Json;
+use crate::util::pool::relock;
+
+/// How often an advancing worker proves liveness to its coordinator.
+/// Must be comfortably below `DistConfig::heartbeat_timeout`.
+pub(crate) const HEARTBEAT_INTERVAL: Duration = Duration::from_millis(250);
+
+/// Per-connection worker state: the assigned shard plus the problem it
+/// evaluates through (the worker's own session and evaluation pool).
+pub struct ShardSession {
+    id: u64,
+    problem: MohaqProblem,
+    shard: IslandShard,
+    cancel: CancelToken,
+}
+
+fn err_frame(id: u64, e: &SearchError) -> Frame {
+    Frame::Error { id: Some(id), kind: e.kind().into(), message: e.to_string() }
+}
+
+fn proto_err(id: u64, message: String) -> Frame {
+    Frame::Error { id: Some(id), kind: "protocol".into(), message }
+}
+
+/// Handle one shard op against this connection's (at most one) shard.
+/// Failures reply with typed error frames; only transport death tears
+/// the connection.
+pub(crate) fn handle(
+    state: &Arc<ServeState>,
+    writer: &Arc<Mutex<TcpStream>>,
+    slot: &mut Option<ShardSession>,
+    req: Request,
+) {
+    match req {
+        Request::ShardAssign { id, spec, islands, base_gen, restore } => {
+            assign(state, writer, slot, id, spec, islands, base_gen, restore);
+        }
+        Request::RunIslands { id, upto_gen } => run_islands(state, writer, slot, id, upto_gen),
+        Request::EliteExchange { id, generation, incoming } => {
+            exchange(writer, slot, id, generation, incoming);
+        }
+        Request::ShardFront { id } => front(writer, slot, id),
+        // The server routes only the four shard ops here.
+        _ => {}
+    }
+}
+
+/// Fetch the shard session matching `id`, or reply with a protocol
+/// error. Assignments replace each other, so a stale id means the
+/// coordinator and worker disagree about the connection's state.
+fn session_for<'a>(
+    writer: &Mutex<TcpStream>,
+    slot: &'a mut Option<ShardSession>,
+    id: u64,
+) -> Option<&'a mut ShardSession> {
+    match slot {
+        Some(s) if s.id == id => Some(s),
+        _ => {
+            send(writer, &proto_err(id, format!("no shard assigned for search id {id}")));
+            None
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn assign(
+    state: &Arc<ServeState>,
+    writer: &Arc<Mutex<TcpStream>>,
+    slot: &mut Option<ShardSession>,
+    id: u64,
+    spec: Json,
+    islands: Vec<usize>,
+    base_gen: usize,
+    restore: Vec<IslandSnapshot>,
+) {
+    let spec = match ExperimentSpec::from_json(&spec) {
+        Ok(s) => s,
+        Err(e) => {
+            send(writer, &err_frame(id, &e));
+            return;
+        }
+    };
+    let Some(cfg) = spec.island.clone() else {
+        let e = SearchError::invalid(
+            "distributed search requires an island config ('island' in the spec)",
+        );
+        send(writer, &err_frame(id, &e));
+        return;
+    };
+    let cancel = CancelToken::new();
+    // shard_problem also enforces the beacon rejection worker-side, so a
+    // coordinator bug cannot smuggle an order-dependent spec through.
+    let problem = match state.session().shard_problem(&spec, cancel.clone()) {
+        Ok(p) => p,
+        Err(e) => {
+            send(writer, &err_frame(id, &e));
+            return;
+        }
+    };
+    let built = if restore.is_empty() {
+        IslandShard::new(spec.ga.clone(), cfg, &islands)
+    } else {
+        IslandShard::restore(spec.ga.clone(), cfg, base_gen, restore)
+    };
+    let shard = match built {
+        Ok(s) => s,
+        Err(msg) => {
+            send(writer, &err_frame(id, &SearchError::invalid(msg)));
+            return;
+        }
+    };
+    if shard.indices() != islands.as_slice() {
+        let e = SearchError::invalid("restore snapshots do not match the assigned islands");
+        send(writer, &err_frame(id, &e));
+        return;
+    }
+    let owned = shard.indices().to_vec();
+    *slot = Some(ShardSession { id, problem, shard, cancel });
+    send(writer, &Frame::ShardAssigned { id, islands: owned });
+}
+
+fn run_islands(
+    state: &Arc<ServeState>,
+    writer: &Arc<Mutex<TcpStream>>,
+    slot: &mut Option<ShardSession>,
+    id: u64,
+    upto_gen: usize,
+) {
+    let Some(sess) = session_for(writer, slot, id) else { return };
+    // Liveness + shutdown watch: the reader thread is busy computing, so
+    // a sidecar thread streams heartbeats and — when the server is shut
+    // down — cancels the problem and tears the socket. That teardown IS
+    // the fault-injection path the dist tests use to kill a worker
+    // mid-advance.
+    let done = Arc::new(AtomicBool::new(false));
+    let gen_now = Arc::new(AtomicUsize::new(sess.shard.generation()));
+    let hb = {
+        let done = done.clone();
+        let gen_now = gen_now.clone();
+        let state = state.clone();
+        let writer = writer.clone();
+        let cancel = sess.cancel.clone();
+        std::thread::spawn(move || loop {
+            if done.load(Ordering::SeqCst) {
+                break;
+            }
+            if state.is_shutdown() {
+                cancel.cancel();
+                let _ = relock(&writer).shutdown(std::net::Shutdown::Both);
+                break;
+            }
+            let beat = Frame::WorkerHeartbeat { id, generation: gen_now.load(Ordering::SeqCst) };
+            if !send(&writer, &beat) {
+                // Coordinator gone: stop the advance, it has no audience.
+                cancel.cancel();
+                break;
+            }
+            std::thread::sleep(HEARTBEAT_INTERVAL);
+        })
+    };
+
+    let k = sess.shard.config.islands;
+    let interval = sess.shard.config.migration_interval.max(1);
+    if !sess.shard.seeded() && !sess.problem.aborted() {
+        sess.shard.seed(&mut sess.problem);
+        emit_generations(writer, sess, id, 0);
+    }
+    while sess.shard.generation() < upto_gen && !sess.problem.aborted() {
+        let gen = sess.shard.step(&mut sess.problem);
+        gen_now.store(gen, Ordering::SeqCst);
+        // Boundary generations are reported by the coordinator after the
+        // elite exchange, preserving the single-process event order;
+        // everything else streams live from here.
+        if !(k > 1 && gen % interval == 0) {
+            emit_generations(writer, sess, id, gen);
+        }
+    }
+    done.store(true, Ordering::SeqCst);
+    let _ = hb.join();
+
+    if let Some(e) = sess.problem.failure.take() {
+        send(writer, &err_frame(id, &e));
+        return;
+    }
+    if sess.cancel.is_cancelled() {
+        send(writer, &err_frame(id, &SearchError::Cancelled));
+        return;
+    }
+    // Pre-migration elites, computed exactly as the single-process
+    // exchange would (pure — no RNG involved). On the final residual
+    // round the coordinator simply ignores them.
+    let shards = sess
+        .shard
+        .elites()
+        .into_iter()
+        .map(|(island, elites)| ShardElites { island, elites })
+        .collect();
+    send(writer, &Frame::EliteExchange { id, generation: sess.shard.generation(), shards });
+}
+
+/// Stream one generation summary per local island, mirroring the
+/// single-process `emit_generation` shape (global island index, that
+/// engine's evaluation counter, population stats).
+fn emit_generations(writer: &Mutex<TcpStream>, sess: &ShardSession, id: u64, generation: usize) {
+    for (local, &island) in sess.shard.indices().iter().enumerate() {
+        let pop = &sess.shard.pops()[local];
+        let best_err = pop
+            .iter()
+            .filter(|i| i.feasible())
+            .map(|i| i.objectives[0])
+            .fold(f64::INFINITY, f64::min);
+        let feasible = pop.iter().filter(|i| i.feasible()).count();
+        let frame = Frame::Generation {
+            id,
+            generation,
+            evaluations: sess.shard.engine_evaluations(local),
+            best_err,
+            feasible,
+            pop_size: pop.len(),
+            island: Some(island),
+        };
+        send(writer, &frame);
+    }
+}
+
+fn exchange(
+    writer: &Arc<Mutex<TcpStream>>,
+    slot: &mut Option<ShardSession>,
+    id: u64,
+    generation: usize,
+    incoming: Vec<IncomingMigrants>,
+) {
+    let Some(sess) = session_for(writer, slot, id) else { return };
+    // Source groups arrive in the topology's global order per island;
+    // apply them in exactly that order (`IslandModel::migrate` parity).
+    let mut accepted_of: Vec<(usize, Vec<(usize, usize)>)> = Vec::new();
+    for IncomingMigrants { island, sources } in incoming {
+        for (from, migrants) in sources {
+            let Some(n) = sess.shard.inject(island, &migrants) else {
+                send(writer, &proto_err(id, format!("island {island} is not owned by this shard")));
+                return;
+            };
+            match accepted_of.iter_mut().find(|(i, _)| *i == island) {
+                Some((_, v)) => v.push((from, n)),
+                None => accepted_of.push((island, vec![(from, n)])),
+            }
+        }
+    }
+    let shards = sess
+        .shard
+        .snapshot()
+        .into_iter()
+        .enumerate()
+        .map(|(local, state)| {
+            let island = state.island;
+            let accepted = accepted_of
+                .iter()
+                .find(|(i, _)| *i == island)
+                .map(|(_, v)| v.clone())
+                .unwrap_or_default();
+            ShardMigration { island, accepted, stats: local_stats(sess, local), state }
+        })
+        .collect();
+    send(writer, &Frame::MigrationApplied { id, generation, shards });
+}
+
+fn local_stats(sess: &ShardSession, local: usize) -> ShardStats {
+    let pop = &sess.shard.pops()[local];
+    ShardStats {
+        evaluations: sess.shard.engine_evaluations(local),
+        best_err: pop
+            .iter()
+            .filter(|i| i.feasible())
+            .map(|i| i.objectives[0])
+            .fold(f64::INFINITY, f64::min),
+        feasible: pop.iter().filter(|i| i.feasible()).count(),
+        pop_size: pop.len(),
+    }
+}
+
+fn front(writer: &Arc<Mutex<TcpStream>>, slot: &mut Option<ShardSession>, id: u64) {
+    let Some(sess) = session_for(writer, slot, id) else { return };
+    // FULL final populations, not per-island fronts: the coordinator's
+    // merge must rank the same concatenated pool the single-process
+    // session ranks, or dominated-but-deduplicating entries could skew
+    // the bitwise comparison.
+    let shards = sess
+        .shard
+        .indices()
+        .iter()
+        .enumerate()
+        .map(|(local, &island)| ShardPop {
+            island,
+            evaluations: sess.shard.engine_evaluations(local),
+            pop: sess.shard.pops()[local].clone(),
+        })
+        .collect();
+    send(writer, &Frame::ShardFront { id, shards });
+}

@@ -48,6 +48,11 @@ pub struct ParamSet {
     /// and for the final report).
     pub host: Vec<Vec<f32>>,
     bufs: Vec<DeviceTensor>,
+    /// Tombstone: the set was retired through
+    /// [`EvalService::evict_param_set`] — its host/device memory is
+    /// freed, its index stays reserved so later sets keep their ids, and
+    /// any attempt to evaluate against it is a typed error.
+    evicted: bool,
 }
 
 /// Memo key for one (parameter set, genome) pair.
@@ -70,6 +75,14 @@ impl CacheKey {
         match (pack_genes(&qc.w_bits), pack_genes(&qc.a_bits)) {
             (Some(w), Some(a)) => CacheKey::Packed(set, w, a),
             _ => CacheKey::Wide(set, qc.w_bits.clone(), qc.a_bits.clone()),
+        }
+    }
+
+    /// The parameter-set index this key scores against (eviction hooks
+    /// purge a whole set's entries by matching on this).
+    pub fn set(&self) -> usize {
+        match self {
+            CacheKey::Packed(s, _, _) | CacheKey::Wide(s, _, _) => *s,
         }
     }
 }
@@ -96,32 +109,102 @@ fn pack_genes(bits: &[Bits]) -> Option<u64> {
     Some(packed)
 }
 
-/// Shared memo map behind a poison-aware mutex. A worker that panics while
-/// holding the lock poisons it; every later access returns a typed error
-/// (carrying the "poisoned" marker `SearchSession` maps to
+/// Default memo bound: ~1M entries. A `(CacheKey, f64)` pair is tens of
+/// bytes, so the default caps the memo at tens of MB — far above any
+/// single search (pop x generations ~ 10^3..10^4 uniques) but finite for
+/// a months-long serve process absorbing unbounded tenants.
+pub const DEFAULT_CACHE_CAP: usize = 1 << 20;
+
+/// The two-generation memo state behind the lock: `hot` takes inserts
+/// and promotions, `cold` holds the previous generation. When `hot`
+/// reaches half the cap, `cold` is discarded (those entries were not
+/// touched for a full generation) and `hot` rotates into its place — an
+/// O(1)-amortized LRU approximation with no per-entry bookkeeping.
+struct CacheInner<K, V> {
+    hot: HashMap<K, V>,
+    cold: HashMap<K, V>,
+    /// Target bound on total resident entries (hot + cold).
+    cap: usize,
+    /// Entries discarded by rotation or purges, cumulative.
+    evictions: usize,
+}
+
+impl<K: std::hash::Hash + Eq, V> CacheInner<K, V> {
+    /// Rotate once `hot` fills its half of the budget. Each generation
+    /// holds at most `max(1, cap/2)` entries, so residency never exceeds
+    /// `cap` (+1 transiently during an insert).
+    fn maybe_rotate(&mut self) {
+        if self.hot.len() >= (self.cap / 2).max(1) {
+            self.evictions += self.cold.len();
+            self.cold = std::mem::take(&mut self.hot);
+        }
+    }
+}
+
+/// Shared bounded memo map behind a poison-aware mutex. A worker that
+/// panics while holding the lock poisons it; every later access returns
+/// a typed error (carrying the "poisoned" marker `SearchSession` maps to
 /// `SearchError::Poisoned`) instead of raising a second panic inside the
 /// worker pool.
+///
+/// Residency is bounded by a configurable cap (default
+/// [`DEFAULT_CACHE_CAP`]) with two-generation rotation: entries that go
+/// a full generation without being read are discarded. Lookups promote
+/// cold hits, so the working set of a live search never rotates out
+/// mid-run.
 pub struct ResultCache<K, V> {
-    inner: Mutex<HashMap<K, V>>,
+    inner: Mutex<CacheInner<K, V>>,
 }
 
 impl<K: std::hash::Hash + Eq, V: Clone> ResultCache<K, V> {
     pub fn new() -> ResultCache<K, V> {
-        ResultCache { inner: Mutex::new(HashMap::new()) }
+        ResultCache::with_capacity(DEFAULT_CACHE_CAP)
     }
 
-    fn guard(&self) -> Result<std::sync::MutexGuard<'_, HashMap<K, V>>> {
+    pub fn with_capacity(cap: usize) -> ResultCache<K, V> {
+        ResultCache {
+            inner: Mutex::new(CacheInner {
+                hot: HashMap::new(),
+                cold: HashMap::new(),
+                cap: cap.max(1),
+                evictions: 0,
+            }),
+        }
+    }
+
+    fn guard(&self) -> Result<std::sync::MutexGuard<'_, CacheInner<K, V>>> {
         self.inner.lock().map_err(|_| {
             anyhow::anyhow!("eval cache poisoned: a worker panicked while holding the lock")
         })
     }
 
+    /// Change the residency bound. Shrinking takes effect lazily, at the
+    /// next rotation — no eager mass eviction on the caller's thread.
+    pub fn set_capacity(&self, cap: usize) -> Result<()> {
+        self.guard()?.cap = cap.max(1);
+        Ok(())
+    }
+
     pub fn get(&self, key: &K) -> Result<Option<V>> {
-        Ok(self.guard()?.get(key).cloned())
+        let mut g = self.guard()?;
+        if let Some(v) = g.hot.get(key) {
+            return Ok(Some(v.clone()));
+        }
+        // Promote cold hits so a live working set survives rotation.
+        if let Some((k, v)) = g.cold.remove_entry(key) {
+            let out = v.clone();
+            g.hot.insert(k, v);
+            g.maybe_rotate();
+            return Ok(Some(out));
+        }
+        Ok(None)
     }
 
     pub fn insert(&self, key: K, value: V) -> Result<()> {
-        self.guard()?.insert(key, value);
+        let mut g = self.guard()?;
+        g.cold.remove(&key);
+        g.hot.insert(key, value);
+        g.maybe_rotate();
         Ok(())
     }
 
@@ -129,25 +212,58 @@ impl<K: std::hash::Hash + Eq, V: Clone> ResultCache<K, V> {
     /// (the per-candidate path pays one per genome). Results line up with
     /// `keys` by index.
     pub fn get_many(&self, keys: &[K]) -> Result<Vec<Option<V>>> {
-        let guard = self.guard()?;
-        Ok(keys.iter().map(|k| guard.get(k).cloned()).collect())
+        let mut g = self.guard()?;
+        let mut out = Vec::with_capacity(keys.len());
+        for key in keys {
+            if let Some(v) = g.hot.get(key) {
+                out.push(Some(v.clone()));
+            } else if let Some((k, v)) = g.cold.remove_entry(key) {
+                out.push(Some(v.clone()));
+                g.hot.insert(k, v);
+                g.maybe_rotate();
+            } else {
+                out.push(None);
+            }
+        }
+        Ok(out)
     }
 
     /// Bulk insert under a single lock acquisition.
     pub fn insert_many(&self, entries: Vec<(K, V)>) -> Result<()> {
-        let mut guard = self.guard()?;
+        let mut g = self.guard()?;
         for (k, v) in entries {
-            guard.insert(k, v);
+            g.cold.remove(&k);
+            g.hot.insert(k, v);
+            g.maybe_rotate();
         }
         Ok(())
     }
 
-    /// Entry count, or `None` when the lock is poisoned. Reporting
-    /// `Some(0)` for a poisoned cache made post-incident `EvalStats` lie
-    /// ("0 unique solutions" after thousands of evaluations); the marker
-    /// lets stats carry the poisoning explicitly.
+    /// Drop every entry whose key fails the predicate (eviction hooks
+    /// purge a retired parameter set's entries this way). Removed entries
+    /// count as evictions.
+    pub fn retain(&self, mut keep: impl FnMut(&K) -> bool) -> Result<()> {
+        let mut g = self.guard()?;
+        let before = g.hot.len() + g.cold.len();
+        g.hot.retain(|k, _| keep(k));
+        g.cold.retain(|k, _| keep(k));
+        g.evictions += before - (g.hot.len() + g.cold.len());
+        Ok(())
+    }
+
+    /// Entries discarded so far (rotation + purges), or `None` when the
+    /// lock is poisoned.
+    pub fn evictions(&self) -> Option<usize> {
+        self.inner.lock().map(|g| g.evictions).ok()
+    }
+
+    /// Resident entry count, or `None` when the lock is poisoned.
+    /// Reporting `Some(0)` for a poisoned cache made post-incident
+    /// `EvalStats` lie ("0 unique solutions" after thousands of
+    /// evaluations); the marker lets stats carry the poisoning
+    /// explicitly.
     pub fn len(&self) -> Option<usize> {
-        self.inner.lock().map(|g| g.len()).ok()
+        self.inner.lock().map(|g| g.hot.len() + g.cold.len()).ok()
     }
 
     /// Whether a worker panicked while holding the lock.
@@ -184,8 +300,14 @@ impl<K: std::hash::Hash + Eq, V: Clone> Default for ResultCache<K, V> {
 pub struct EvalStats {
     pub executions: usize,
     pub cache_hits: usize,
-    /// Distinct (param-set, genome) keys memoized; 0 while `poisoned`.
+    /// Distinct (param-set, genome) keys memoized and still resident;
+    /// 0 while `poisoned`.
     pub unique_solutions: usize,
+    /// Memo entries discarded so far (capacity rotation + param-set
+    /// purges); 0 while `poisoned`.
+    pub evictions: usize,
+    /// Parameter sets retired through `EvalService::evict_param_set`.
+    pub param_sets_evicted: usize,
     /// True when the result cache was poisoned by a worker panic —
     /// `unique_solutions` can no longer be trusted (post-incident stats
     /// must not silently read as "empty cache").
@@ -239,6 +361,7 @@ pub struct EvalService {
     cache: ResultCache<CacheKey, f64>,
     executions: AtomicUsize,
     cache_hits: AtomicUsize,
+    param_sets_evicted: AtomicUsize,
 }
 
 impl EvalService {
@@ -276,6 +399,7 @@ impl EvalService {
             cache: ResultCache::new(),
             executions: AtomicUsize::new(0),
             cache_hits: AtomicUsize::new(0),
+            param_sets_evicted: AtomicUsize::new(0),
         };
         let baseline = arts.weights.clone();
         svc.add_param_set("baseline", baseline)?;
@@ -317,15 +441,49 @@ impl EvalService {
         let mut sets = self.param_sets.write().map_err(|_| {
             anyhow::anyhow!("param sets poisoned: a worker panicked while holding the lock")
         })?;
-        sets.push(Arc::new(ParamSet { name: name.to_string(), host, bufs }));
+        sets.push(Arc::new(ParamSet { name: name.to_string(), host, bufs, evicted: false }));
         Ok(sets.len() - 1)
+    }
+
+    /// Retire a beacon parameter set: free its host and device memory
+    /// (tombstoning the slot so later sets keep their indices) and purge
+    /// its memoized results. Index 0 — the baseline every search scores
+    /// against — is not evictable. Evaluating against a retired set is a
+    /// typed error, so callers must only retire sets whose searches have
+    /// fully reported (the serve opt-in does this after rows are built).
+    pub fn evict_param_set(&self, idx: usize) -> Result<()> {
+        anyhow::ensure!(idx != 0, "parameter set 0 is the baseline and cannot be evicted");
+        {
+            let mut sets = self.param_sets.write().map_err(|_| {
+                anyhow::anyhow!("param sets poisoned: a worker panicked while holding the lock")
+            })?;
+            let slot = sets.get_mut(idx).ok_or_else(|| {
+                anyhow::anyhow!("parameter set {idx} out of range ({} registered)", sets.len())
+            })?;
+            if slot.evicted {
+                return Ok(()); // already retired — idempotent
+            }
+            let name = slot.name.clone();
+            *slot = Arc::new(ParamSet { name, host: Vec::new(), bufs: Vec::new(), evicted: true });
+        }
+        self.cache.retain(|k| k.set() != idx)?;
+        self.param_sets_evicted.fetch_add(1, Ordering::Relaxed);
+        Ok(())
     }
 
     pub fn param_set(&self, idx: usize) -> Result<Arc<ParamSet>> {
         let sets = self.sets()?;
-        sets.get(idx).cloned().ok_or_else(|| {
+        let set = sets.get(idx).cloned().ok_or_else(|| {
             anyhow::anyhow!("parameter set {idx} out of range ({} registered)", sets.len())
-        })
+        })?;
+        anyhow::ensure!(!set.evicted, "parameter set {idx} ('{}') was evicted", set.name);
+        Ok(set)
+    }
+
+    /// Bound the result memo (entries, not bytes); see
+    /// [`ResultCache::set_capacity`].
+    pub fn set_cache_capacity(&self, cap: usize) -> Result<()> {
+        self.cache.set_capacity(cap)
     }
 
     pub fn num_param_sets(&self) -> Result<usize> {
@@ -347,6 +505,8 @@ impl EvalService {
             executions: self.executions.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             unique_solutions: self.cache.len().unwrap_or(0),
+            evictions: self.cache.evictions().unwrap_or(0),
+            param_sets_evicted: self.param_sets_evicted.load(Ordering::Relaxed),
             poisoned: self.cache.poisoned(),
         }
     }
@@ -756,6 +916,84 @@ mod tests {
         let again = batch_svc.val_error_batch(&qcs, 0).unwrap();
         assert_eq!(again, batch);
         assert_eq!(batch_svc.stats().executions, before);
+    }
+
+    #[test]
+    fn capped_cache_rotates_out_idle_entries_and_counts_evictions() {
+        // cap 4 -> generations of 2. Entries untouched for a full
+        // generation rotate out; reads promote, so a live working set
+        // survives indefinitely.
+        let cache: ResultCache<u32, f64> = ResultCache::with_capacity(4);
+        for k in 0..8u32 {
+            cache.insert(k, k as f64).unwrap();
+        }
+        assert!(cache.len().unwrap() <= 4, "resident {:?}", cache.len());
+        assert_eq!(cache.evictions(), Some(6));
+        // Oldest entries are gone; the newest survive.
+        assert_eq!(cache.get(&0).unwrap(), None);
+        assert_eq!(cache.get(&7).unwrap(), Some(7.0));
+        // A key read every generation is never evicted.
+        let cache: ResultCache<u32, f64> = ResultCache::with_capacity(4);
+        cache.insert(100, 1.0).unwrap();
+        for k in 0..20u32 {
+            cache.insert(k, 0.0).unwrap();
+            assert_eq!(cache.get(&100).unwrap(), Some(1.0), "after insert {k}");
+        }
+        // Shrinking the cap takes effect at the next rotation.
+        let cache: ResultCache<u32, f64> = ResultCache::new();
+        for k in 0..100u32 {
+            cache.insert(k, 0.0).unwrap();
+        }
+        assert_eq!(cache.len(), Some(100));
+        cache.set_capacity(10).unwrap();
+        for k in 100..110u32 {
+            cache.insert(k, 0.0).unwrap();
+        }
+        assert!(cache.len().unwrap() <= 11, "resident {:?}", cache.len());
+    }
+
+    #[test]
+    fn retain_purges_matching_keys_as_evictions() {
+        let cache: ResultCache<u32, f64> = ResultCache::with_capacity(100);
+        for k in 0..10u32 {
+            cache.insert(k, k as f64).unwrap();
+        }
+        cache.retain(|k| k % 2 == 0).unwrap();
+        assert_eq!(cache.len(), Some(5));
+        assert_eq!(cache.evictions(), Some(5));
+        assert_eq!(cache.get(&3).unwrap(), None);
+        assert_eq!(cache.get(&4).unwrap(), Some(4.0));
+    }
+
+    #[test]
+    fn evicting_a_param_set_frees_it_and_purges_its_memos() {
+        let arts = Arc::new(Artifacts::synthetic());
+        let svc = EvalService::surrogate(arts.clone()).unwrap();
+        let beacon = svc.add_param_set("beacon-a", arts.weights.clone()).unwrap();
+        let n = arts.layer_names.len();
+        let qc = QuantConfig::uniform(n, Bits::B8, Bits::B8);
+        svc.val_error(&qc, 0).unwrap();
+        svc.val_error(&qc, beacon).unwrap();
+        assert_eq!(svc.stats().unique_solutions, 2);
+
+        svc.evict_param_set(beacon).unwrap();
+        let stats = svc.stats();
+        assert_eq!(stats.param_sets_evicted, 1);
+        assert_eq!(stats.unique_solutions, 1, "beacon memo purged, baseline kept");
+        assert_eq!(stats.evictions, 1);
+        // The slot is tombstoned: id space is stable, access is a typed
+        // error, and re-eviction is idempotent.
+        let err = svc.param_set(beacon).unwrap_err();
+        assert!(err.to_string().contains("evicted"), "{err}");
+        svc.evict_param_set(beacon).unwrap();
+        assert_eq!(svc.stats().param_sets_evicted, 1);
+        let next = svc.add_param_set("beacon-b", arts.weights.clone()).unwrap();
+        assert_eq!(next, beacon + 1);
+        // The baseline is not evictable, and the baseline memo still hits.
+        assert!(svc.evict_param_set(0).is_err());
+        let before = svc.stats().executions;
+        svc.val_error(&qc, 0).unwrap();
+        assert_eq!(svc.stats().executions, before);
     }
 
     #[test]

@@ -21,6 +21,7 @@
 
 pub mod config;
 pub mod coordinator;
+pub mod dist;
 pub mod eval;
 pub mod hw;
 pub mod runtime;

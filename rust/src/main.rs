@@ -36,6 +36,7 @@ commands:
   eval        score one quantization config
   search      run a full experiment through a SearchSession
   serve       long-lived search service over a shared session (TCP)
+  worker      distributed-search worker process (see search --workers)
   bench-gate  diff a bench JSON report against the committed baseline
   help        show this message
 
@@ -87,7 +88,41 @@ island model (population scaling; front is identical for any thread count):
                          setting, or a single population)
   --migration-interval M exchange elites every M generations (default 5)
   --topology T           migration topology: ring | full (default ring)
-  --migrants N           elites sent per source island (default 2)";
+  --migrants N           elites sent per source island (default 2)
+
+distributed search (islands sharded across worker PROCESSES; the merged
+front is bitwise-identical to the same seed run in-process):
+  --workers A,B          comma-separated addresses of running `mohaq
+                         worker` processes to shard the islands across
+  --spawn-workers N      spawn N local worker processes (ephemeral ports)
+                         for this search and stop them afterwards; adds
+                         to any --workers list
+  Requires an island config (--islands or the spec's); beacon retraining
+  is rejected in distributed mode (order-dependent across the global
+  population). Without an artifact bundle the search falls back to the
+  hermetic surrogate evaluator so the distributed stack can be exercised
+  offline.";
+
+const WORKER_USAGE: &str = "\
+usage: mohaq worker [--addr HOST:PORT] [--artifacts DIR] [--threads N]
+
+Run one distributed-search worker: a serve-protocol server that also
+accepts the shard ops a `mohaq search --workers ...` coordinator sends
+(shard_assign / run_islands / elite_exchange / shard_front — see the
+dist module). Each worker evaluates its assigned islands on its own
+thread pool; the coordinator performs the migrations and the final
+merge. Workers hold no cross-search state: a coordinator that vanishes
+simply costs the connection.
+
+options:
+  --addr HOST:PORT  listen address (default 127.0.0.1:0 — an ephemeral
+                    port, announced on stdout as
+                    'mohaq worker: listening on ADDR')
+  --artifacts DIR   artifact bundle to evaluate against (default:
+                    artifacts); falls back to the hermetic surrogate
+                    evaluator when DIR/manifest.json is missing
+  --threads N       evaluation pool workers (0 = one per core)
+  --cache-cap N     bound the PTQ result memo to N entries (default ~1M)";
 
 const SERVE_USAGE: &str = "\
 usage: mohaq serve [--addr HOST:PORT] [--artifacts DIR] [--threads N]
@@ -112,6 +147,12 @@ options:
                     to the hermetic surrogate evaluator and says so.
   --threads N       evaluation pool workers shared by all requests
                     (0 = one per core)
+  --cache-cap N     bound the shared PTQ result memo to N entries
+                    (default ~1M; idle entries rotate out, see eval::)
+  --evict-beacons   retire each request's beacon parameter sets (device
+                    + host memory and their memo entries) once its front
+                    is reported; only safe when beacon-enabled requests
+                    run serially
 
 Drive it with examples/serve_quickstart.rs:
   cargo run --release --example serve_quickstart -- --addr 127.0.0.1:7070";
@@ -128,7 +169,13 @@ verdict survives runner-speed differences; see util::benchgate.
 options:
   --current FILE         fresh report to judge (required)
   --baseline FILE        committed baseline (default: BENCH_baseline.json)
-  --max-regress-pct PCT  allowed normalized slowdown in percent (default: 25)";
+  --max-regress-pct PCT  allowed normalized slowdown in percent (default: 25)
+  --write-baseline       instead of gating, promote --current to the
+                         baseline path verbatim (validates it parses
+                         first). Run this on a quiet machine — or take
+                         the CI bench-smoke artifact — and commit the
+                         result to arm the gate; a baseline carrying
+                         \"provisional\": true only reports.";
 
 fn cmd_bench_gate(args: &Args) -> Result<()> {
     if args.has("help") {
@@ -141,6 +188,21 @@ fn cmd_bench_gate(args: &Args) -> Result<()> {
         let text = std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?;
         mohaq::util::json::Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {p}: {e}"))
     };
+    if args.has("write-baseline") {
+        let report = read(current_path)?;
+        anyhow::ensure!(
+            report.get("calibration spin").is_some(),
+            "{current_path} has no 'calibration spin' section; a baseline without it \
+             cannot be speed-normalized (is this really a Bencher::emit_json report?)"
+        );
+        // Copy the bytes verbatim (not a re-serialization) so the committed
+        // baseline diffs cleanly against the artifact it came from.
+        let text = std::fs::read_to_string(current_path)?;
+        std::fs::write(baseline_path, &text).with_context(|| format!("writing {baseline_path}"))?;
+        println!("bench-gate: wrote {baseline_path} from {current_path}");
+        println!("commit it to arm the >{}% regression gate", args.get_f64("max-regress-pct", 25.0));
+        return Ok(());
+    }
     let out = mohaq::util::benchgate::gate(
         &read(baseline_path)?,
         &read(current_path)?,
@@ -181,11 +243,56 @@ fn cmd_serve(args: &Args) -> Result<()> {
         SearchSession::synthetic()?
     };
     let state = mohaq::serve::ServeState::new(session, args.get_usize("threads", 0));
+    if let Some(cap) = args.get("cache-cap") {
+        let cap: usize = cap.parse().context("--cache-cap expects an entry count")?;
+        state
+            .session()
+            .eval()
+            .set_cache_capacity(cap)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+    if args.has("evict-beacons") {
+        state.set_evict_beacons(true);
+    }
     let server = mohaq::serve::Server::bind(args.get_or("addr", "127.0.0.1:7070"), state)?;
     println!("mohaq serve: listening on {}", server.local_addr()?);
     println!("(send {{\"op\":\"shutdown\"}} on any connection to stop)");
     server.run()?;
     println!("mohaq serve: shut down cleanly");
+    Ok(())
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    if args.has("help") {
+        println!("{WORKER_USAGE}");
+        return Ok(());
+    }
+    let dir = args.get_or("artifacts", "artifacts");
+    let session = if std::path::Path::new(dir).join("manifest.json").exists() {
+        let arts = Arc::new(mohaq::runtime::Artifacts::load(dir)?);
+        eprintln!("worker evaluating artifact bundle at {dir}");
+        SearchSession::new(arts)?
+    } else {
+        eprintln!("no artifact bundle at {dir}; worker uses the hermetic surrogate evaluator");
+        SearchSession::synthetic()?
+    };
+    let state = mohaq::serve::ServeState::worker(session, args.get_usize("threads", 0));
+    if let Some(cap) = args.get("cache-cap") {
+        let cap: usize = cap.parse().context("--cache-cap expects an entry count")?;
+        state
+            .session()
+            .eval()
+            .set_cache_capacity(cap)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+    let server = mohaq::serve::Server::bind(args.get_or("addr", "127.0.0.1:0"), state)?;
+    // The announce line is machine-read by `search --spawn-workers`; keep
+    // its shape stable and make sure it leaves the process immediately.
+    println!("mohaq worker: listening on {}", server.local_addr()?);
+    use std::io::Write as _;
+    let _ = std::io::stdout().flush();
+    server.run()?;
+    eprintln!("mohaq worker: shut down cleanly");
     Ok(())
 }
 
@@ -368,12 +475,70 @@ fn spec_from_platform_flags(platforms: &str, objectives: Option<&str>) -> Result
     Ok(b.build()?)
 }
 
+/// Child worker processes spawned for one `--spawn-workers` search;
+/// killed (and reaped) on drop so no exit path leaks them.
+struct SpawnedWorkers(Vec<std::process::Child>);
+
+impl Drop for SpawnedWorkers {
+    fn drop(&mut self) {
+        for child in &mut self.0 {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+/// Spawn `n` local `mohaq worker` processes on ephemeral ports (each
+/// re-executes the current binary) and return them with the addresses
+/// they announced on stdout.
+fn spawn_workers(n: usize, dir: &str, threads: usize) -> Result<(SpawnedWorkers, Vec<String>)> {
+    use std::io::BufRead;
+    let exe = std::env::current_exe().context("locating the mohaq binary")?;
+    let mut children = SpawnedWorkers(Vec::with_capacity(n));
+    let mut addrs = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut child = std::process::Command::new(&exe)
+            .args(["worker", "--addr", "127.0.0.1:0", "--artifacts", dir])
+            .args(["--threads", &threads.to_string()])
+            .stdout(std::process::Stdio::piped())
+            .spawn()
+            .with_context(|| format!("spawning worker {i}"))?;
+        let stdout = child.stdout.take().context("worker stdout unavailable")?;
+        children.0.push(child);
+        let mut reader = std::io::BufReader::new(stdout);
+        let addr = loop {
+            let mut line = String::new();
+            if reader.read_line(&mut line)? == 0 {
+                anyhow::bail!("worker {i} exited before announcing its address");
+            }
+            if let Some(rest) = line.trim().strip_prefix("mohaq worker: listening on ") {
+                break rest.to_string();
+            }
+        };
+        // Keep draining so the child never blocks on a full stdout pipe.
+        std::thread::spawn(move || for _ in reader.lines() {});
+        addrs.push(addr);
+    }
+    Ok((children, addrs))
+}
+
 fn cmd_search(args: &Args) -> Result<()> {
     if args.has("help") {
         println!("{SEARCH_USAGE}");
         return Ok(());
     }
-    let arts = Arc::new(mohaq::runtime::Artifacts::load(args.get_or("artifacts", "artifacts"))?);
+    let dir = args.get_or("artifacts", "artifacts");
+    let distributed = args.get("workers").is_some() || args.get("spawn-workers").is_some();
+    // Distributed runs fall back to the surrogate evaluator without a
+    // bundle (matching serve/worker) so the whole stack works offline;
+    // local runs keep the hard artifact requirement.
+    let session = if !std::path::Path::new(dir).join("manifest.json").exists() && distributed {
+        println!("no artifact bundle at {dir}; searching the hermetic surrogate evaluator");
+        SearchSession::synthetic()?
+    } else {
+        SearchSession::new(Arc::new(mohaq::runtime::Artifacts::load(dir)?))?
+    };
+    let arts = session.artifacts().clone();
     let mut spec = if let Some(cfg) = args.get("config") {
         // Refuse to silently discard flags the chosen spec source ignores.
         anyhow::ensure!(
@@ -424,8 +589,42 @@ fn cmd_search(args: &Args) -> Result<()> {
         spec.island = Some(cfg);
     }
 
-    let session = SearchSession::new(arts.clone())?.threads(args.get_usize("threads", 0));
-    let outcome = session.run_with(&spec, |event| match event {
+    let session = session.threads(args.get_usize("threads", 0));
+
+    // Distributed setup: collect worker addresses (named + spawned) and
+    // make sure there is an island config to shard.
+    let mut addrs: Vec<String> = args
+        .get("workers")
+        .map(|s| s.split(',').map(|t| t.trim().to_string()).filter(|t| !t.is_empty()).collect())
+        .unwrap_or_default();
+    let mut _spawned = None;
+    if distributed {
+        let n = args.get_usize("spawn-workers", 0);
+        if n > 0 {
+            let (guard, spawned_addrs) = spawn_workers(n, dir, args.get_usize("threads", 0))?;
+            addrs.extend(spawned_addrs);
+            _spawned = Some(guard);
+        }
+        anyhow::ensure!(!addrs.is_empty(), "--workers/--spawn-workers named no workers");
+        if spec.island.is_none() {
+            // One island per worker is the natural default; the merged
+            // front still only depends on (seed, island config), not on
+            // how the islands land on workers.
+            let cfg = mohaq::moo::IslandConfig {
+                islands: addrs.len(),
+                ..Default::default()
+            };
+            cfg.validate(spec.ga.pop_size)
+                .map_err(|e| anyhow::anyhow!("island config: {e}"))?;
+            println!(
+                "note: defaulting to {} island(s), one per worker (pass --islands to control)",
+                cfg.islands
+            );
+            spec.island = Some(cfg);
+        }
+    }
+
+    let on_event = |event: &SearchEvent| match event {
         SearchEvent::Started { name, num_vars, objectives, threads, islands } => {
             if *islands > 1 {
                 println!(
@@ -443,8 +642,27 @@ fn cmd_search(args: &Args) -> Result<()> {
         SearchEvent::Migration { generation, from, to, accepted } => {
             println!("  gen {generation:>3}  migration: island {from} -> island {to} ({accepted} elites)");
         }
+        SearchEvent::ShardAssigned { worker, islands } => {
+            println!("  worker {worker}: islands {islands:?}");
+        }
+        SearchEvent::ShardLost { worker, islands, retry } => {
+            println!(
+                "  worker {worker} LOST (islands {islands:?}); re-sharding onto survivors (retry {retry})"
+            );
+        }
         SearchEvent::Finished { .. } => {}
-    })?;
+    };
+    let outcome = if distributed {
+        session.run_distributed(
+            &spec,
+            &addrs,
+            &mohaq::dist::DistConfig::default(),
+            on_event,
+            &mohaq::coordinator::CancelToken::new(),
+        )?
+    } else {
+        session.run_with(&spec, on_event)?
+    };
     println!(
         "\n{}",
         report::render_table(&outcome.rows, &baseline_rows(&arts), &arts)
@@ -472,6 +690,7 @@ fn main() -> Result<()> {
         "eval" => cmd_eval(&args),
         "search" => cmd_search(&args),
         "serve" => cmd_serve(&args),
+        "worker" => cmd_worker(&args),
         "bench-gate" => cmd_bench_gate(&args),
         "help" => {
             println!("{USAGE}");

@@ -2,7 +2,7 @@
 
 use super::problem::Evaluation;
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Individual {
     pub genome: Vec<i64>,
     pub objectives: Vec<f64>,

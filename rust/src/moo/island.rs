@@ -162,23 +162,7 @@ impl IslandModel {
         problem: &mut dyn Problem,
         groups: Vec<Vec<Vec<i64>>>,
     ) -> Vec<Vec<Individual>> {
-        let counts: Vec<usize> = groups.iter().map(Vec::len).collect();
-        let flat: Vec<Vec<i64>> = groups.into_iter().flatten().collect();
-        self.evaluations += flat.len();
-        let evals = problem.evaluate_batch(&flat);
-        debug_assert_eq!(evals.len(), flat.len());
-        let mut remaining: Vec<Individual> = flat
-            .into_iter()
-            .zip(evals)
-            .map(|(g, e)| Individual::evaluated(g, e))
-            .collect();
-        let mut out = Vec::with_capacity(counts.len());
-        for (i, &c) in counts.iter().enumerate() {
-            let tail = remaining.split_off(c);
-            self.islands[i].add_evaluations(remaining.len());
-            out.push(std::mem::replace(&mut remaining, tail));
-        }
-        out
+        evaluate_island_groups(&mut self.islands, &mut self.evaluations, problem, groups)
     }
 
     /// Run the archipelago; returns the concatenation of the final island
@@ -274,6 +258,263 @@ impl IslandModel {
                 }
             }
         }
+    }
+}
+
+/// Shared group-evaluation step: flatten per-island genome groups into ONE
+/// `evaluate_batch` call, credit each engine with its own slice, and hand
+/// the evaluated individuals back per island. `total` accrues the batch
+/// size (the model/shard-level evaluation counter).
+fn evaluate_island_groups(
+    engines: &mut [Nsga2],
+    total: &mut usize,
+    problem: &mut dyn Problem,
+    groups: Vec<Vec<Vec<i64>>>,
+) -> Vec<Vec<Individual>> {
+    let counts: Vec<usize> = groups.iter().map(Vec::len).collect();
+    let flat: Vec<Vec<i64>> = groups.into_iter().flatten().collect();
+    *total += flat.len();
+    let evals = problem.evaluate_batch(&flat);
+    debug_assert_eq!(evals.len(), flat.len());
+    let mut remaining: Vec<Individual> = flat
+        .into_iter()
+        .zip(evals)
+        .map(|(g, e)| Individual::evaluated(g, e))
+        .collect();
+    let mut out = Vec::with_capacity(counts.len());
+    for (i, &c) in counts.iter().enumerate() {
+        let tail = remaining.split_off(c);
+        engines[i].add_evaluations(remaining.len());
+        out.push(std::mem::replace(&mut remaining, tail));
+    }
+    out
+}
+
+/// Serializable checkpoint of one island at a generation boundary:
+/// everything a process needs to resume the island's stream exactly —
+/// engine RNG state, the engine's evaluation counter, and the ranked
+/// population. Captured post-migration, so replaying from a snapshot
+/// reproduces the remainder of the search bit for bit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IslandSnapshot {
+    /// Global island index within the archipelago.
+    pub island: usize,
+    /// Engine RNG state (`Nsga2::rng_state`).
+    pub rng: [u64; 4],
+    /// Engine-level evaluation counter.
+    pub evaluations: usize,
+    /// Current (evaluated, ranked) population.
+    pub pop: Vec<Individual>,
+}
+
+/// A subset of an archipelago's islands, steppable one generation at a
+/// time with explicit elite exchange — the unit a distributed worker runs
+/// (`dist::`). Island RNG streams are a pure function of (seed, K, island
+/// index), so a shard recreates exactly the engines `IslandModel` would
+/// have used for those indices; because `evaluate_batch` values must be
+/// order-independent pure functions of the genome (see `moo::problem`),
+/// splitting the cross-island batches per shard cannot change any value,
+/// and a full exchange schedule reproduces the single-process archipelago
+/// bit for bit.
+pub struct IslandShard {
+    pub config: IslandConfig,
+    /// Global island indices this shard owns (strictly ascending).
+    indices: Vec<usize>,
+    engines: Vec<Nsga2>,
+    pops: Vec<Vec<Individual>>,
+    generation: usize,
+    seeded: bool,
+    evaluations: usize,
+}
+
+impl IslandShard {
+    /// A fresh shard owning the islands at `indices` (strictly ascending
+    /// global indices into a `config.islands`-island archipelago). `ga` is
+    /// the per-island configuration, identical on every shard.
+    pub fn new(ga: Nsga2Config, config: IslandConfig, indices: &[usize]) -> Result<Self, String> {
+        if indices.is_empty() {
+            return Err("shard needs at least one island".into());
+        }
+        for w in indices.windows(2) {
+            if w[1] <= w[0] {
+                return Err("shard island indices must be strictly ascending".into());
+            }
+        }
+        let k = config.islands;
+        if *indices.last().unwrap() >= k {
+            return Err(format!(
+                "island index {} out of range for {k} islands",
+                indices.last().unwrap()
+            ));
+        }
+        // Recreate the archipelago's full fork set and keep our subset:
+        // the streams must match IslandModel::new positionally.
+        let mut base = Rng::new(ga.seed);
+        let engines: Vec<Nsga2> = base
+            .split(k)
+            .into_iter()
+            .enumerate()
+            .filter(|(i, _)| indices.contains(i))
+            .map(|(_, rng)| Nsga2::with_rng(ga.clone(), rng))
+            .collect();
+        let n = engines.len();
+        Ok(IslandShard {
+            config,
+            indices: indices.to_vec(),
+            engines,
+            pops: vec![Vec::new(); n],
+            generation: 0,
+            seeded: false,
+            evaluations: 0,
+        })
+    }
+
+    /// Rebuild a shard from per-island snapshots taken at generation
+    /// `generation` (post-migration). The restored shard continues the
+    /// search exactly where the snapshots stopped.
+    pub fn restore(
+        ga: Nsga2Config,
+        config: IslandConfig,
+        generation: usize,
+        snapshots: Vec<IslandSnapshot>,
+    ) -> Result<Self, String> {
+        if snapshots.is_empty() {
+            return Err("shard needs at least one island snapshot".into());
+        }
+        let k = config.islands;
+        let mut indices = Vec::with_capacity(snapshots.len());
+        let mut engines = Vec::with_capacity(snapshots.len());
+        let mut pops = Vec::with_capacity(snapshots.len());
+        let mut evaluations = 0usize;
+        for s in snapshots {
+            if indices.last().is_some_and(|&last| s.island <= last) {
+                return Err("shard island snapshots must be strictly ascending".into());
+            }
+            if s.island >= k {
+                return Err(format!("island index {} out of range for {k} islands", s.island));
+            }
+            let mut engine = Nsga2::with_rng(ga.clone(), Rng::from_state(s.rng));
+            engine.add_evaluations(s.evaluations);
+            evaluations += s.evaluations;
+            indices.push(s.island);
+            engines.push(engine);
+            pops.push(s.pop);
+        }
+        Ok(IslandShard {
+            config,
+            indices,
+            engines,
+            pops,
+            generation,
+            seeded: true,
+            evaluations,
+        })
+    }
+
+    pub fn generation(&self) -> usize {
+        self.generation
+    }
+
+    pub fn seeded(&self) -> bool {
+        self.seeded
+    }
+
+    /// Global indices of the islands this shard owns.
+    pub fn indices(&self) -> &[usize] {
+        &self.indices
+    }
+
+    /// Current populations, positionally matching `indices()`.
+    pub fn pops(&self) -> &[Vec<Individual>] {
+        &self.pops
+    }
+
+    /// Engine-level evaluation counter of local island `local`.
+    pub fn engine_evaluations(&self, local: usize) -> usize {
+        self.engines[local].evaluations()
+    }
+
+    /// Evaluations performed by this shard (its share of the archipelago
+    /// budget; restored shards carry their history forward).
+    pub fn evaluations(&self) -> usize {
+        self.evaluations
+    }
+
+    /// Generation 0: every local island's enlarged initial population in
+    /// one cross-island batch (mirrors `IslandModel::run`).
+    pub fn seed(&mut self, problem: &mut dyn Problem) {
+        debug_assert!(!self.seeded, "shard already seeded");
+        let target0 = {
+            let c = &self.engines[0].config;
+            c.pop_size.min(c.initial_pop_size)
+        };
+        let mut seeds: Vec<Vec<Vec<i64>>> = Vec::with_capacity(self.engines.len());
+        for engine in &mut self.engines {
+            seeds.push(engine.seed_genomes(&*problem));
+        }
+        let evaluated =
+            evaluate_island_groups(&mut self.engines, &mut self.evaluations, problem, seeds);
+        for (i, group) in evaluated.into_iter().enumerate() {
+            self.pops[i] = self.engines[i].select_survivors(group, target0);
+        }
+        self.seeded = true;
+    }
+
+    /// Advance every local island one generation (offspring bred first so
+    /// the engine RNG streams match the lockstep archipelago, then ONE
+    /// cross-island evaluation batch, then (mu+lambda) survival). Returns
+    /// the new generation number. Elite exchange is the caller's job, at
+    /// the same boundaries `IslandModel::run` uses.
+    pub fn step(&mut self, problem: &mut dyn Problem) -> usize {
+        debug_assert!(self.seeded, "seed the shard before stepping");
+        let pop_size = self.engines[0].config.pop_size;
+        let mut children: Vec<Vec<Vec<i64>>> = Vec::with_capacity(self.engines.len());
+        for (engine, pop) in self.engines.iter_mut().zip(&self.pops) {
+            children.push(engine.offspring_genomes(&*problem, pop));
+        }
+        let offspring =
+            evaluate_island_groups(&mut self.engines, &mut self.evaluations, problem, children);
+        for (i, off) in offspring.into_iter().enumerate() {
+            let mut pool = std::mem::take(&mut self.pops[i]);
+            pool.extend(off);
+            self.pops[i] = self.engines[i].select_survivors(pool, pop_size);
+        }
+        self.generation += 1;
+        self.generation
+    }
+
+    /// Pre-migration elites of every local island: `(global index,
+    /// migrants)` pairs, selected by the same deterministic quality order
+    /// the single-process exchange uses. Pure — does not touch RNG state.
+    pub fn elites(&self) -> Vec<(usize, Vec<Individual>)> {
+        self.indices
+            .iter()
+            .zip(&self.pops)
+            .map(|(&g, p)| (g, select_elites(p, self.config.migrants)))
+            .collect()
+    }
+
+    /// Inject migrants into global island `island` (replacing its worst,
+    /// skipping genomes already present, then re-ranking). Returns the
+    /// accepted count, or `None` if this shard does not own the island.
+    /// Callers must apply source groups in the topology's global order.
+    pub fn inject(&mut self, island: usize, incoming: &[Individual]) -> Option<usize> {
+        let local = self.indices.iter().position(|&g| g == island)?;
+        Some(inject(&mut self.pops[local], incoming))
+    }
+
+    /// Checkpoint every local island (positionally matching `indices()`).
+    pub fn snapshot(&self) -> Vec<IslandSnapshot> {
+        self.indices
+            .iter()
+            .enumerate()
+            .map(|(local, &island)| IslandSnapshot {
+                island,
+                rng: self.engines[local].rng_state(),
+                evaluations: self.engines[local].evaluations(),
+                pop: self.pops[local].clone(),
+            })
+            .collect()
     }
 }
 
@@ -483,6 +724,190 @@ mod tests {
             f.iter().map(|i| i.genome.clone()).collect::<Vec<_>>()
         };
         assert_eq!(key(&via_pop), key(&via_helper));
+    }
+
+    /// Bitwise identity key: genome + objective/violation/crowding bits +
+    /// rank — everything the merge and the wire codec must preserve.
+    fn pop_key(pop: &[Individual]) -> Vec<(Vec<i64>, Vec<u64>, u64, usize, u64)> {
+        pop.iter()
+            .map(|i| {
+                (
+                    i.genome.clone(),
+                    i.objectives.iter().map(|v| v.to_bits()).collect(),
+                    i.violation.to_bits(),
+                    i.rank,
+                    i.crowding.to_bits(),
+                )
+            })
+            .collect()
+    }
+
+    /// Coordinator-style driver: run `parts` as independent shards (each
+    /// on its OWN problem instance, like worker processes), performing the
+    /// global elite exchange at every boundary, and return the final
+    /// populations concatenated in global island order.
+    fn run_sharded(parts: &[Vec<usize>], ga_cfg: Nsga2Config, cfg: IslandConfig) -> Vec<Individual> {
+        let gens = ga_cfg.generations;
+        let k = cfg.islands;
+        let mut shards: Vec<IslandShard> = parts
+            .iter()
+            .map(|p| IslandShard::new(ga_cfg.clone(), cfg.clone(), p).unwrap())
+            .collect();
+        let mut problems: Vec<Zdt> =
+            parts.iter().map(|_| Zdt::new(ZdtVariant::Zdt1, 6, 32)).collect();
+        for (s, p) in shards.iter_mut().zip(&mut problems) {
+            s.seed(p);
+        }
+        for gen in 1..=gens {
+            for (s, p) in shards.iter_mut().zip(&mut problems) {
+                s.step(p);
+            }
+            if k > 1 && gen % cfg.migration_interval == 0 {
+                let mut elites: Vec<Vec<Individual>> = vec![Vec::new(); k];
+                for s in &shards {
+                    for (g, e) in s.elites() {
+                        elites[g] = e;
+                    }
+                }
+                for to in 0..k {
+                    for from in cfg.topology.sources(k, to) {
+                        for s in shards.iter_mut() {
+                            if s.inject(to, &elites[from]).is_some() {
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let mut by_island: Vec<(usize, Vec<Individual>)> = Vec::new();
+        for s in &shards {
+            for (local, &g) in s.indices().iter().enumerate() {
+                by_island.push((g, s.pops()[local].clone()));
+            }
+        }
+        by_island.sort_by_key(|(g, _)| *g);
+        by_island.into_iter().flat_map(|(_, p)| p).collect()
+    }
+
+    #[test]
+    fn shards_reproduce_island_model_bitwise() {
+        for topology in [Topology::Ring, Topology::FullyConnected] {
+            let cfg = IslandConfig {
+                islands: 3,
+                migration_interval: 2,
+                topology,
+                migrants: 2,
+            };
+            let mut problem = Zdt::new(ZdtVariant::Zdt1, 6, 32);
+            let mut model = IslandModel::new(ga(9, 10), cfg.clone());
+            let reference = model.run(&mut problem, |_| {});
+
+            // One shard covering everything, and a genuinely split pair.
+            for parts in [vec![vec![0, 1, 2]], vec![vec![0], vec![1, 2]]] {
+                let sharded = run_sharded(&parts, ga(9, 10), cfg.clone());
+                assert_eq!(
+                    pop_key(&reference),
+                    pop_key(&sharded),
+                    "sharded run diverged ({topology:?}, {} shard(s))",
+                    parts.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn shard_snapshot_restore_resumes_bitwise() {
+        let cfg = IslandConfig {
+            islands: 3,
+            migration_interval: 2,
+            topology: Topology::FullyConnected,
+            migrants: 2,
+        };
+        let ga_cfg = ga(21, 6);
+        let mut problem = Zdt::new(ZdtVariant::Zdt1, 6, 32);
+        let mut model = IslandModel::new(ga_cfg.clone(), cfg.clone());
+        let reference = model.run(&mut problem, |_| {});
+
+        // Run split shards, but checkpoint + rebuild BOTH shards at the
+        // gen-4 boundary (post-exchange) — the coordinator's re-shard path.
+        let parts: Vec<Vec<usize>> = vec![vec![0, 1], vec![2]];
+        let k = cfg.islands;
+        let mut shards: Vec<IslandShard> = parts
+            .iter()
+            .map(|p| IslandShard::new(ga_cfg.clone(), cfg.clone(), p).unwrap())
+            .collect();
+        let mut problems: Vec<Zdt> =
+            parts.iter().map(|_| Zdt::new(ZdtVariant::Zdt1, 6, 32)).collect();
+        for (s, p) in shards.iter_mut().zip(&mut problems) {
+            s.seed(p);
+        }
+        let exchange = |shards: &mut Vec<IslandShard>, cfg: &IslandConfig| {
+            let mut elites: Vec<Vec<Individual>> = vec![Vec::new(); k];
+            for s in shards.iter() {
+                for (g, e) in s.elites() {
+                    elites[g] = e;
+                }
+            }
+            for to in 0..k {
+                for from in cfg.topology.sources(k, to) {
+                    for s in shards.iter_mut() {
+                        if s.inject(to, &elites[from]).is_some() {
+                            break;
+                        }
+                    }
+                }
+            }
+        };
+        for gen in 1..=ga_cfg.generations {
+            for (s, p) in shards.iter_mut().zip(&mut problems) {
+                s.step(p);
+            }
+            if gen % cfg.migration_interval == 0 {
+                exchange(&mut shards, &cfg);
+            }
+            if gen == 4 {
+                // Re-shard: islands {0,1} and {2} swap to {0} and {1,2},
+                // rebuilt purely from snapshots.
+                let mut snaps: Vec<IslandSnapshot> =
+                    shards.iter().flat_map(|s| s.snapshot()).collect();
+                snaps.sort_by_key(|s| s.island);
+                let tail = snaps.split_off(1);
+                shards = vec![
+                    IslandShard::restore(ga_cfg.clone(), cfg.clone(), gen, snaps).unwrap(),
+                    IslandShard::restore(ga_cfg.clone(), cfg.clone(), gen, tail).unwrap(),
+                ];
+                problems = vec![
+                    Zdt::new(ZdtVariant::Zdt1, 6, 32),
+                    Zdt::new(ZdtVariant::Zdt1, 6, 32),
+                ];
+            }
+        }
+        let mut by_island: Vec<(usize, Vec<Individual>)> = Vec::new();
+        for s in &shards {
+            for (local, &g) in s.indices().iter().enumerate() {
+                by_island.push((g, s.pops()[local].clone()));
+            }
+        }
+        by_island.sort_by_key(|(g, _)| *g);
+        let resumed: Vec<Individual> = by_island.into_iter().flat_map(|(_, p)| p).collect();
+        assert_eq!(pop_key(&reference), pop_key(&resumed), "restore diverged from lockstep run");
+        let evals: usize = shards.iter().map(IslandShard::evaluations).sum();
+        assert_eq!(evals, 3 * (12 + 6 * 8), "restored shards must carry the budget forward");
+    }
+
+    #[test]
+    fn shard_construction_validates() {
+        let cfg = IslandConfig { islands: 3, ..Default::default() };
+        assert!(IslandShard::new(ga(1, 5), cfg.clone(), &[]).is_err());
+        assert!(IslandShard::new(ga(1, 5), cfg.clone(), &[1, 1]).is_err());
+        assert!(IslandShard::new(ga(1, 5), cfg.clone(), &[2, 1]).is_err());
+        assert!(IslandShard::new(ga(1, 5), cfg.clone(), &[3]).is_err());
+        let shard = IslandShard::new(ga(1, 5), cfg.clone(), &[0, 2]).unwrap();
+        assert_eq!(shard.indices(), &[0, 2]);
+        assert!(!shard.seeded());
+        assert_eq!(shard.generation(), 0);
+        assert!(IslandShard::restore(ga(1, 5), cfg, 0, Vec::new()).is_err());
     }
 
     #[test]

@@ -12,7 +12,7 @@ pub mod problems;
 pub mod sort;
 
 pub use individual::Individual;
-pub use island::{IslandConfig, IslandEvent, IslandModel, Topology};
+pub use island::{IslandConfig, IslandEvent, IslandModel, IslandShard, IslandSnapshot, Topology};
 pub use nsga2::{GenerationStats, Nsga2, Nsga2Config};
 pub use parallel::{Parallel, SyncProblem};
 pub use problem::{Evaluation, Problem};

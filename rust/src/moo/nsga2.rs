@@ -76,6 +76,13 @@ impl Nsga2 {
         self.evaluations += n;
     }
 
+    /// The engine's current RNG state — with `with_rng(cfg,
+    /// Rng::from_state(..))` + `add_evaluations` this checkpoints an
+    /// engine mid-search (island snapshot/restore across processes).
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
     fn random_genome(&mut self, problem: &dyn Problem) -> Vec<i64> {
         (0..problem.num_vars())
             .map(|i| {

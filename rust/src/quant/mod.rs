@@ -184,6 +184,13 @@ pub fn qparams_row(clip: f64, bits: Bits) -> [f32; 4] {
 
 /// Resolve a QuantConfig to the flattened wq/aq matrices ((L,4) row-major)
 /// fed to the AOT executable.
+///
+/// Test-only oracle: the runtime resolves through the dense
+/// [`QparamTable`] everywhere (built once at `Artifacts` load); this
+/// string-keyed walk of the raw clip tables survives only to pin the
+/// table bitwise-identical to the original formulation
+/// (`dense_table_matches_btreemap_resolution_prop`).
+#[cfg(test)]
 pub fn resolve_qparams(
     qc: &QuantConfig,
     layer_names: &[String],
@@ -220,14 +227,15 @@ pub fn resolve_qparams(
 /// Dense precomputed qparam rows: `[layer][bits] -> (Δ, qmin, qmax, en)`.
 ///
 /// The eval hot path used to re-resolve every candidate through two
-/// string-keyed nested `BTreeMap` lookups per layer (`resolve_qparams`);
-/// this table folds the calibration clips into ready-made rows ONCE at
-/// `Artifacts` load, so per-candidate resolution is O(L) array indexing
-/// with no hashing, no string compares and no BTree walks. Rows are
-/// bitwise-identical to what `resolve_qparams` produces (both go through
-/// `qparams_row`). A `None` entry means the calibration table has no clip
-/// for that (layer, bits); resolving through it reports the same error
-/// `resolve_qparams` would, at the same (lazy) point.
+/// string-keyed nested `BTreeMap` lookups per layer (the test-only
+/// `resolve_qparams` oracle); this table folds the calibration clips
+/// into ready-made rows ONCE at `Artifacts` load, so per-candidate
+/// resolution is O(L) array indexing with no hashing, no string compares
+/// and no BTree walks. Rows are bitwise-identical to what
+/// `resolve_qparams` produces (both go through `qparams_row`). A `None`
+/// entry means the calibration table has no clip for that (layer, bits);
+/// resolving through it reports the same error `resolve_qparams` would,
+/// at the same (lazy) point.
 #[derive(Debug, Clone)]
 pub struct QparamTable {
     /// `rows[layer * Bits::COUNT + bits.index()]`, weights then acts.

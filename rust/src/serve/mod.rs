@@ -38,5 +38,8 @@ pub mod protocol;
 pub mod server;
 
 pub use client::{ClientError, SearchReply, ServeClient};
-pub use protocol::{Frame, FrontRow, HwEntry, Request, ServerStats};
+pub use protocol::{
+    Frame, FrontRow, HwEntry, IncomingMigrants, Request, ServerStats, ShardElites,
+    ShardMigration, ShardPop, ShardStats,
+};
 pub use server::{ServeState, Server};

@@ -28,8 +28,19 @@
 //! `NaN`/`Infinity` tokens the way Python's json module does — they
 //! only ever appear in numeric positions like a generation's `best_err`
 //! before any feasible solution exists.
+//!
+//! Worker mode (distributed island sharding, `rust/src/dist/`) extends
+//! the protocol with coordinator → worker ops `shard_assign` /
+//! `run_islands` / `elite_exchange` / `shard_front` and worker →
+//! coordinator frames `shard_assigned` / `elite_exchange` /
+//! `migration_applied` / `shard_front` / `worker_heartbeat`.
+//! Individuals and island snapshots ride the same lossless number
+//! codec; the one exception is the RNG state, whose `u64` words exceed
+//! f64 precision and therefore travel as decimal strings (the same
+//! convention `ExperimentSpec` uses for `ga.seed`).
 
 use crate::coordinator::{SearchEvent, SearchOutcome, SolutionRow};
+use crate::moo::{Individual, IslandSnapshot};
 use crate::util::json::{obj, Json};
 
 /// Client → server message.
@@ -45,6 +56,75 @@ pub enum Request {
     Ping,
     /// Stop the server once outstanding work is cancelled.
     Shutdown,
+    /// Coordinator → worker: own these global island indices of the
+    /// search described by `spec`. `restore` carries post-migration
+    /// snapshots when the shard replays work a lost worker had done
+    /// (empty = fresh shard, seeded from scratch); `base_gen` is the
+    /// generation the snapshots were taken at.
+    ShardAssign { id: u64, spec: Json, islands: Vec<usize>, base_gen: usize, restore: Vec<IslandSnapshot> },
+    /// Coordinator → worker: advance the assigned shard to `upto_gen`;
+    /// the worker replies with an `elite_exchange` frame holding its
+    /// islands' elites at that boundary.
+    RunIslands { id: u64, upto_gen: usize },
+    /// Coordinator → worker: migrants routed by the coordinator's
+    /// topology; the worker injects them (in the listed order — that
+    /// order is part of the determinism contract) and replies with a
+    /// `migration_applied` frame.
+    EliteExchange { id: u64, generation: usize, incoming: Vec<IncomingMigrants> },
+    /// Coordinator → worker: ship back the full final island
+    /// populations for the global merge.
+    ShardFront { id: u64 },
+}
+
+/// Migrants routed to one island of a worker's shard, grouped by source
+/// island (the coordinator → worker leg of a migration boundary).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IncomingMigrants {
+    /// Global index of the receiving island.
+    pub island: usize,
+    /// `(from_island, migrants)` in topology-source order.
+    pub sources: Vec<(usize, Vec<Individual>)>,
+}
+
+/// One island's elites as shipped worker → coordinator at a boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardElites {
+    pub island: usize,
+    pub elites: Vec<Individual>,
+}
+
+/// Per-island generation bookkeeping after a migration was applied —
+/// the coordinator synthesizes the boundary `Generation` events from
+/// these instead of having workers stream them out of order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardStats {
+    pub evaluations: usize,
+    pub best_err: f64,
+    pub feasible: usize,
+    pub pop_size: usize,
+}
+
+/// One island's `migration_applied` entry: per-source acceptance
+/// counts, generation stats, and the post-migration snapshot the
+/// coordinator keeps so a later worker loss can replay from here.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardMigration {
+    pub island: usize,
+    /// `(from_island, accepted)` per injected source, in order.
+    pub accepted: Vec<(usize, usize)>,
+    pub stats: ShardStats,
+    pub state: IslandSnapshot,
+}
+
+/// One island's slice of the `shard_front` reply. This is the FULL
+/// final population, not the island-local front: the global merge
+/// re-ranks the concatenation, and dropping dominated locals here would
+/// change crowding/dedup relative to the single-process run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardPop {
+    pub island: usize,
+    pub evaluations: usize,
+    pub pop: Vec<Individual>,
 }
 
 /// Parse failure; carries the request id when one could be extracted so
@@ -74,6 +154,157 @@ fn get_u64(j: &Json, key: &str) -> Option<u64> {
         .map(|n| n as u64)
 }
 
+// --------------------------------------------------- dist payload codecs
+
+/// Individual wire form carries all five fields: the merge re-ranks, but
+/// snapshots must restore the exact in-memory state, rank/crowding
+/// included.
+fn ind_to_json(i: &Individual) -> Json {
+    obj(vec![
+        ("genome", Json::Arr(i.genome.iter().map(|g| Json::Num(*g as f64)).collect())),
+        ("objectives", Json::Arr(i.objectives.iter().map(|o| Json::Num(*o)).collect())),
+        ("violation", i.violation.into()),
+        // usize::MAX (the unranked sentinel) exceeds 2^53; the emitter
+        // prints the rounded float and the saturating cast in `as_usize`
+        // maps it back to exactly usize::MAX on parse.
+        ("rank", Json::Num(i.rank as f64)),
+        ("crowding", i.crowding.into()),
+    ])
+}
+
+fn ind_from_json(j: &Json) -> Result<Individual, ProtocolError> {
+    let genome = j
+        .get("genome")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ProtocolError { id: None, message: "individual missing 'genome'".into() })?
+        .iter()
+        .filter_map(Json::as_i64)
+        .collect();
+    Ok(Individual {
+        genome,
+        objectives: j.get("objectives").and_then(Json::f64_vec).unwrap_or_default(),
+        violation: j.get("violation").and_then(Json::as_f64).unwrap_or(0.0),
+        rank: j.get("rank").and_then(Json::as_usize).unwrap_or(usize::MAX),
+        crowding: j.get("crowding").and_then(Json::as_f64).unwrap_or(0.0),
+    })
+}
+
+fn inds_to_json(xs: &[Individual]) -> Json {
+    Json::Arr(xs.iter().map(ind_to_json).collect())
+}
+
+fn inds_from_json(j: Option<&Json>) -> Result<Vec<Individual>, ProtocolError> {
+    j.and_then(Json::as_arr).unwrap_or(&[]).iter().map(ind_from_json).collect()
+}
+
+fn snapshot_to_json(s: &IslandSnapshot) -> Json {
+    obj(vec![
+        ("island", s.island.into()),
+        // u64 state words would lose low bits through the f64 wire type.
+        ("rng", Json::Arr(s.rng.iter().map(|w| w.to_string().into()).collect())),
+        ("evaluations", s.evaluations.into()),
+        ("pop", inds_to_json(&s.pop)),
+    ])
+}
+
+fn snapshot_from_json(j: &Json) -> Result<IslandSnapshot, ProtocolError> {
+    let bad = |msg: &str| ProtocolError { id: None, message: msg.into() };
+    let island = j
+        .get("island")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| bad("snapshot missing 'island'"))?;
+    let words: Vec<u64> = j
+        .get("rng")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|w| w.as_str().and_then(|s| s.parse::<u64>().ok()))
+        .collect();
+    let rng: [u64; 4] =
+        words.try_into().map_err(|_| bad("snapshot 'rng' must be 4 decimal strings"))?;
+    Ok(IslandSnapshot {
+        island,
+        rng,
+        evaluations: j.get("evaluations").and_then(Json::as_usize).unwrap_or(0),
+        pop: inds_from_json(j.get("pop"))?,
+    })
+}
+
+fn parse_incoming_migrants(m: &Json) -> Result<IncomingMigrants, ProtocolError> {
+    let island = m.get("island").and_then(Json::as_usize).ok_or_else(|| ProtocolError {
+        id: None,
+        message: "migrant group missing 'island'".into(),
+    })?;
+    let sources = m
+        .get("sources")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[])
+        .iter()
+        .map(|s| {
+            let from = s.get("from").and_then(Json::as_usize).ok_or_else(|| ProtocolError {
+                id: None,
+                message: "migrant source missing 'from'".into(),
+            })?;
+            Ok((from, inds_from_json(s.get("migrants"))?))
+        })
+        .collect::<Result<_, ProtocolError>>()?;
+    Ok(IncomingMigrants { island, sources })
+}
+
+fn parse_shard_elites(s: &Json) -> Result<ShardElites, ProtocolError> {
+    Ok(ShardElites {
+        island: s.get("island").and_then(Json::as_usize).ok_or_else(|| ProtocolError {
+            id: None,
+            message: "shard entry missing 'island'".into(),
+        })?,
+        elites: inds_from_json(s.get("elites"))?,
+    })
+}
+
+fn parse_shard_migration(s: &Json) -> Result<ShardMigration, ProtocolError> {
+    let island = s.get("island").and_then(Json::as_usize).ok_or_else(|| ProtocolError {
+        id: None,
+        message: "shard entry missing 'island'".into(),
+    })?;
+    let accepted = s
+        .get("accepted")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|pair| {
+            let p = pair.as_arr()?;
+            Some((p.first()?.as_usize()?, p.get(1)?.as_usize()?))
+        })
+        .collect();
+    let num = |key: &str| s.get(key).and_then(Json::as_usize).unwrap_or(0);
+    let state = s
+        .get("state")
+        .ok_or_else(|| ProtocolError { id: None, message: "shard entry missing 'state'".into() })
+        .and_then(snapshot_from_json)?;
+    Ok(ShardMigration {
+        island,
+        accepted,
+        stats: ShardStats {
+            evaluations: num("evaluations"),
+            best_err: s.get("best_err").and_then(Json::as_f64).unwrap_or(f64::INFINITY),
+            feasible: num("feasible"),
+            pop_size: num("pop_size"),
+        },
+        state,
+    })
+}
+
+fn parse_shard_pop(s: &Json) -> Result<ShardPop, ProtocolError> {
+    Ok(ShardPop {
+        island: s.get("island").and_then(Json::as_usize).ok_or_else(|| ProtocolError {
+            id: None,
+            message: "shard entry missing 'island'".into(),
+        })?,
+        evaluations: s.get("evaluations").and_then(Json::as_usize).unwrap_or(0),
+        pop: inds_from_json(s.get("pop"))?,
+    })
+}
+
 impl Request {
     pub fn to_json(&self) -> Json {
         match self {
@@ -88,6 +319,51 @@ impl Request {
             Request::Stats => obj(vec![("op", "stats".into())]),
             Request::Ping => obj(vec![("op", "ping".into())]),
             Request::Shutdown => obj(vec![("op", "shutdown".into())]),
+            Request::ShardAssign { id, spec, islands, base_gen, restore } => obj(vec![
+                ("op", "shard_assign".into()),
+                ("id", (*id as usize).into()),
+                ("spec", spec.clone()),
+                ("islands", Json::Arr(islands.iter().map(|i| (*i).into()).collect())),
+                ("base_gen", (*base_gen).into()),
+                ("restore", Json::Arr(restore.iter().map(snapshot_to_json).collect())),
+            ]),
+            Request::RunIslands { id, upto_gen } => obj(vec![
+                ("op", "run_islands".into()),
+                ("id", (*id as usize).into()),
+                ("upto_gen", (*upto_gen).into()),
+            ]),
+            Request::EliteExchange { id, generation, incoming } => obj(vec![
+                ("op", "elite_exchange".into()),
+                ("id", (*id as usize).into()),
+                ("generation", (*generation).into()),
+                (
+                    "incoming",
+                    Json::Arr(
+                        incoming
+                            .iter()
+                            .map(|m| {
+                                let sources = m
+                                    .sources
+                                    .iter()
+                                    .map(|(from, migrants)| {
+                                        obj(vec![
+                                            ("from", (*from).into()),
+                                            ("migrants", inds_to_json(migrants)),
+                                        ])
+                                    })
+                                    .collect();
+                                obj(vec![
+                                    ("island", m.island.into()),
+                                    ("sources", Json::Arr(sources)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+            Request::ShardFront { id } => {
+                obj(vec![("op", "shard_front".into()), ("id", (*id as usize).into())])
+            }
         }
     }
 
@@ -122,6 +398,58 @@ impl Request {
             "stats" => Ok(Request::Stats),
             "ping" => Ok(Request::Ping),
             "shutdown" => Ok(Request::Shutdown),
+            "shard_assign" => {
+                let spec = j.get("spec").cloned().ok_or_else(|| ProtocolError {
+                    id,
+                    message: "'shard_assign' needs a 'spec'".into(),
+                })?;
+                let islands = j.get("islands").and_then(Json::usize_vec).unwrap_or_default();
+                if islands.is_empty() {
+                    return Err(ProtocolError {
+                        id,
+                        message: "'shard_assign' needs a non-empty 'islands' array".into(),
+                    });
+                }
+                let restore = j
+                    .get("restore")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(snapshot_from_json)
+                    .collect::<Result<_, _>>()
+                    .map_err(|e: ProtocolError| ProtocolError { id, message: e.message })?;
+                Ok(Request::ShardAssign {
+                    id: need_id(id)?,
+                    spec,
+                    islands,
+                    base_gen: j.get("base_gen").and_then(Json::as_usize).unwrap_or(0),
+                    restore,
+                })
+            }
+            "run_islands" => {
+                let upto_gen =
+                    j.get("upto_gen").and_then(Json::as_usize).ok_or_else(|| ProtocolError {
+                        id,
+                        message: "'run_islands' needs 'upto_gen'".into(),
+                    })?;
+                Ok(Request::RunIslands { id: need_id(id)?, upto_gen })
+            }
+            "elite_exchange" => {
+                let incoming = j
+                    .get("incoming")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(parse_incoming_migrants)
+                    .collect::<Result<_, _>>()
+                    .map_err(|e: ProtocolError| ProtocolError { id, message: e.message })?;
+                Ok(Request::EliteExchange {
+                    id: need_id(id)?,
+                    generation: j.get("generation").and_then(Json::as_usize).unwrap_or(0),
+                    incoming,
+                })
+            }
+            "shard_front" => Ok(Request::ShardFront { id: need_id(id)? }),
             other => Err(ProtocolError { id, message: format!("unknown op '{other}'") }),
         }
     }
@@ -285,6 +613,19 @@ pub enum Frame {
     Stats(ServerStats),
     Pong,
     Bye,
+    /// Worker ack of `shard_assign`, echoing the owned global indices.
+    ShardAssigned { id: u64, islands: Vec<usize> },
+    /// Worker reply to `run_islands`: this shard's elites at a boundary.
+    EliteExchange { id: u64, generation: usize, shards: Vec<ShardElites> },
+    /// Worker reply to the `elite_exchange` op: per-island acceptance,
+    /// stats, and post-migration snapshots.
+    MigrationApplied { id: u64, generation: usize, shards: Vec<ShardMigration> },
+    /// Worker reply to `shard_front`: full final island populations.
+    ShardFront { id: u64, shards: Vec<ShardPop> },
+    /// Liveness signal streamed while a `run_islands` advance is in
+    /// flight; a coordinator that stops seeing these (or generation
+    /// frames) past its deadline declares the worker lost.
+    WorkerHeartbeat { id: u64, generation: usize },
 }
 
 /// Translate a streaming `SearchEvent` into the wire frame for `id`.
@@ -318,6 +659,10 @@ pub fn event_frame(id: u64, event: &SearchEvent) -> Option<Frame> {
             to: *to,
             accepted: *accepted,
         },
+        // Shard lifecycle events are coordinator-local: they describe
+        // the coordinator's own worker fleet, which a serve client of
+        // the coordinator has no use for.
+        SearchEvent::ShardAssigned { .. } | SearchEvent::ShardLost { .. } => return None,
         SearchEvent::Finished { .. } => return None,
     })
 }
@@ -419,6 +764,83 @@ impl Frame {
             ]),
             Frame::Pong => obj(vec![("event", "pong".into())]),
             Frame::Bye => obj(vec![("event", "bye".into())]),
+            Frame::ShardAssigned { id, islands } => obj(vec![
+                ("event", "shard_assigned".into()),
+                ("id", uid(*id)),
+                ("islands", Json::Arr(islands.iter().map(|i| (*i).into()).collect())),
+            ]),
+            Frame::EliteExchange { id, generation, shards } => obj(vec![
+                ("event", "elite_exchange".into()),
+                ("id", uid(*id)),
+                ("generation", (*generation).into()),
+                (
+                    "shards",
+                    Json::Arr(
+                        shards
+                            .iter()
+                            .map(|s| {
+                                obj(vec![
+                                    ("island", s.island.into()),
+                                    ("elites", inds_to_json(&s.elites)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+            Frame::MigrationApplied { id, generation, shards } => obj(vec![
+                ("event", "migration_applied".into()),
+                ("id", uid(*id)),
+                ("generation", (*generation).into()),
+                (
+                    "shards",
+                    Json::Arr(
+                        shards
+                            .iter()
+                            .map(|s| {
+                                let accepted = s
+                                    .accepted
+                                    .iter()
+                                    .map(|(from, n)| Json::Arr(vec![(*from).into(), (*n).into()]))
+                                    .collect();
+                                obj(vec![
+                                    ("island", s.island.into()),
+                                    ("accepted", Json::Arr(accepted)),
+                                    ("evaluations", s.stats.evaluations.into()),
+                                    ("best_err", s.stats.best_err.into()),
+                                    ("feasible", s.stats.feasible.into()),
+                                    ("pop_size", s.stats.pop_size.into()),
+                                    ("state", snapshot_to_json(&s.state)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+            Frame::ShardFront { id, shards } => obj(vec![
+                ("event", "shard_front".into()),
+                ("id", uid(*id)),
+                (
+                    "shards",
+                    Json::Arr(
+                        shards
+                            .iter()
+                            .map(|s| {
+                                obj(vec![
+                                    ("island", s.island.into()),
+                                    ("evaluations", s.evaluations.into()),
+                                    ("pop", inds_to_json(&s.pop)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+            Frame::WorkerHeartbeat { id, generation } => obj(vec![
+                ("event", "worker_heartbeat".into()),
+                ("id", uid(*id)),
+                ("generation", (*generation).into()),
+            ]),
         }
     }
 
@@ -516,6 +938,43 @@ impl Frame {
             }),
             "pong" => Frame::Pong,
             "bye" => Frame::Bye,
+            "shard_assigned" => Frame::ShardAssigned {
+                id: id()?,
+                islands: j.get("islands").and_then(Json::usize_vec).unwrap_or_default(),
+            },
+            "elite_exchange" => Frame::EliteExchange {
+                id: id()?,
+                generation: num("generation")?,
+                shards: j
+                    .get("shards")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(parse_shard_elites)
+                    .collect::<Result<_, _>>()?,
+            },
+            "migration_applied" => Frame::MigrationApplied {
+                id: id()?,
+                generation: num("generation")?,
+                shards: j
+                    .get("shards")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(parse_shard_migration)
+                    .collect::<Result<_, _>>()?,
+            },
+            "shard_front" => Frame::ShardFront {
+                id: id()?,
+                shards: j
+                    .get("shards")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(parse_shard_pop)
+                    .collect::<Result<_, _>>()?,
+            },
+            "worker_heartbeat" => Frame::WorkerHeartbeat { id: id()?, generation: num("generation")? },
             other => {
                 return Err(ProtocolError {
                     id: get_u64(&j, "id"),
@@ -656,6 +1115,139 @@ mod tests {
         assert!(e.message.contains("spec"), "{e}");
         let e = Request::parse(r#"{"id":1}"#).unwrap_err();
         assert!(e.message.contains("op"), "{e}");
+    }
+
+    fn sample_ind() -> Individual {
+        Individual {
+            genome: vec![3, -1, 4, 1],
+            objectives: vec![0.16000000000000003, -2.5],
+            violation: 0.0,
+            rank: 0,
+            crowding: 1.75,
+        }
+    }
+
+    /// Unranked sentinel rank and boundary-individual crowding: the two
+    /// extremes a snapshot must carry losslessly.
+    fn edge_ind() -> Individual {
+        Individual {
+            genome: vec![0],
+            objectives: vec![f64::INFINITY],
+            violation: 12.5,
+            rank: usize::MAX,
+            crowding: f64::INFINITY,
+        }
+    }
+
+    fn sample_snapshot() -> IslandSnapshot {
+        IslandSnapshot {
+            island: 2,
+            rng: [u64::MAX, 0, 1, 0x9E3779B97F4A7C15],
+            evaluations: 132,
+            pop: vec![sample_ind(), edge_ind()],
+        }
+    }
+
+    #[test]
+    fn dist_requests_round_trip() {
+        let reqs = vec![
+            Request::ShardAssign {
+                id: 11,
+                spec: ExperimentSpec::exp1().to_json(),
+                islands: vec![1, 2],
+                base_gen: 4,
+                restore: vec![sample_snapshot()],
+            },
+            Request::ShardAssign {
+                id: 12,
+                spec: ExperimentSpec::exp1().to_json(),
+                islands: vec![0],
+                base_gen: 0,
+                restore: vec![],
+            },
+            Request::RunIslands { id: 11, upto_gen: 6 },
+            Request::EliteExchange {
+                id: 11,
+                generation: 6,
+                incoming: vec![IncomingMigrants {
+                    island: 1,
+                    sources: vec![(0, vec![sample_ind()]), (2, vec![])],
+                }],
+            },
+            Request::ShardFront { id: 11 },
+        ];
+        for r in reqs {
+            let line = r.to_line();
+            assert!(!line.contains('\n'), "one frame per line: {line}");
+            assert_eq!(Request::parse(&line).unwrap(), r, "{line}");
+        }
+    }
+
+    #[test]
+    fn dist_frames_round_trip() {
+        let frames = vec![
+            Frame::ShardAssigned { id: 11, islands: vec![1, 2] },
+            Frame::EliteExchange {
+                id: 11,
+                generation: 6,
+                shards: vec![
+                    ShardElites { island: 1, elites: vec![sample_ind()] },
+                    ShardElites { island: 2, elites: vec![] },
+                ],
+            },
+            Frame::MigrationApplied {
+                id: 11,
+                generation: 6,
+                shards: vec![ShardMigration {
+                    island: 1,
+                    accepted: vec![(0, 2), (2, 0)],
+                    stats: ShardStats {
+                        evaluations: 92,
+                        best_err: f64::INFINITY,
+                        feasible: 0,
+                        pop_size: 10,
+                    },
+                    state: sample_snapshot(),
+                }],
+            },
+            Frame::ShardFront {
+                id: 11,
+                shards: vec![ShardPop {
+                    island: 2,
+                    evaluations: 132,
+                    pop: vec![sample_ind(), edge_ind()],
+                }],
+            },
+            Frame::WorkerHeartbeat { id: 11, generation: 5 },
+        ];
+        for f in frames {
+            let line = f.to_line();
+            assert!(!line.contains('\n'), "one frame per line: {line}");
+            assert_eq!(Frame::parse(&line).unwrap(), f, "{line}");
+        }
+    }
+
+    #[test]
+    fn snapshot_codec_is_lossless_at_the_extremes() {
+        // u64 RNG words would lose low bits through an f64, so they ride
+        // as decimal strings; usize::MAX rank survives via the
+        // saturating cast and +inf crowding via the Infinity spelling.
+        let s = sample_snapshot();
+        let back = snapshot_from_json(&snapshot_to_json(&s)).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(back.rng[0], u64::MAX);
+        assert_eq!(back.pop[1].rank, usize::MAX);
+        assert!(back.pop[1].crowding.is_infinite());
+    }
+
+    #[test]
+    fn shard_assign_validates() {
+        let e = Request::parse(r#"{"op":"shard_assign","id":1,"spec":{}}"#).unwrap_err();
+        assert!(e.message.contains("islands"), "{e}");
+        let e = Request::parse(r#"{"op":"shard_assign","id":1,"islands":[0]}"#).unwrap_err();
+        assert!(e.message.contains("spec"), "{e}");
+        let e = Request::parse(r#"{"op":"run_islands","id":1}"#).unwrap_err();
+        assert!(e.message.contains("upto_gen"), "{e}");
     }
 
     #[test]

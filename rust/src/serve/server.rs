@@ -68,6 +68,17 @@ pub struct ServeState {
     requests: AtomicUsize,
     active: AtomicUsize,
     shutdown: AtomicBool,
+    /// Worker mode: this server accepts the shard ops of the distributed
+    /// protocol (`dist::worker`) in addition to the regular ops.
+    worker: bool,
+    /// Opt-in: retire the beacon parameter sets a search registered once
+    /// its front is built (`EvalService::evict_param_set`), so a
+    /// long-lived server's device memory does not grow with every
+    /// beacon-enabled tenant. Off by default — eviction is index-window
+    /// based, so it should only be enabled on servers whose
+    /// beacon-enabled requests run serially (concurrent beacon searches
+    /// could retire each other's sets mid-run).
+    evict_beacons: AtomicBool,
 }
 
 impl ServeState {
@@ -81,7 +92,34 @@ impl ServeState {
             requests: AtomicUsize::new(0),
             active: AtomicUsize::new(0),
             shutdown: AtomicBool::new(false),
+            worker: false,
+            evict_beacons: AtomicBool::new(false),
         })
+    }
+
+    /// Like [`ServeState::new`], but in worker mode: the server also
+    /// accepts `shard_assign` / `run_islands` / `elite_exchange` /
+    /// `shard_front` ops from a distributed-search coordinator.
+    pub fn worker(session: SearchSession, eval_workers: usize) -> Arc<ServeState> {
+        let queue = Arc::new(WorkQueue::new(eval_workers));
+        Arc::new(ServeState {
+            session: session.shared_queue(queue),
+            requests: AtomicUsize::new(0),
+            active: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            worker: true,
+            evict_beacons: AtomicBool::new(false),
+        })
+    }
+
+    pub fn is_worker(&self) -> bool {
+        self.worker
+    }
+
+    /// Enable per-request beacon-set eviction (see the `evict_beacons`
+    /// field docs for the serial-requests caveat).
+    pub fn set_evict_beacons(&self, on: bool) {
+        self.evict_beacons.store(on, Ordering::SeqCst);
     }
 
     pub fn session(&self) -> &SearchSession {
@@ -178,7 +216,7 @@ impl Server {
 /// tolerated here (client gone or wedged past `WRITE_TIMEOUT`) — the
 /// search-side caller cancels its search on a failed send, and the
 /// reader loop notices a disconnect on its own.
-fn send(writer: &Mutex<TcpStream>, frame: &Frame) -> bool {
+pub(crate) fn send(writer: &Mutex<TcpStream>, frame: &Frame) -> bool {
     let mut line = frame.to_line();
     line.push('\n');
     let w = relock(writer);
@@ -220,6 +258,10 @@ fn run_search(
 ) -> Frame {
     state.requests.fetch_add(1, Ordering::Relaxed);
     state.active.fetch_add(1, Ordering::Relaxed);
+    // For opt-in beacon eviction: every parameter set registered past
+    // this watermark during the request belongs to it (valid while
+    // beacon-enabled requests run serially; see `set_evict_beacons`).
+    let sets_before = state.session.eval().num_param_sets().unwrap_or(usize::MAX);
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         state.session.run_with_cancel(
             &spec,
@@ -237,6 +279,16 @@ fn run_search(
         )
     }));
     state.active.fetch_sub(1, Ordering::Relaxed);
+    if state.evict_beacons.load(Ordering::SeqCst) {
+        // The outcome's rows are fully scored by now — the retrained
+        // sets' numbers live on in the front, only the device/host
+        // buffers and their memo entries are released.
+        if let Ok(after) = state.session.eval().num_param_sets() {
+            for idx in sets_before..after {
+                let _ = state.session.eval().evict_param_set(idx);
+            }
+        }
+    }
     match result {
         Ok(Ok(outcome)) => front_frame(id, &outcome),
         Ok(Err(e)) => {
@@ -247,6 +299,17 @@ fn run_search(
         Err(payload) => {
             Frame::Error { id: Some(id), kind: "panic".into(), message: panic_message(payload) }
         }
+    }
+}
+
+/// The request id of a shard op (the dist ops all carry one).
+fn shard_request_id(req: &Request) -> Option<u64> {
+    match req {
+        Request::ShardAssign { id, .. }
+        | Request::RunIslands { id, .. }
+        | Request::EliteExchange { id, .. }
+        | Request::ShardFront { id } => Some(*id),
+        _ => None,
     }
 }
 
@@ -270,6 +333,11 @@ fn handle_connection(stream: TcpStream, state: Arc<ServeState>, server_addr: Soc
     // (`printf '{"op":...}' | nc`) gets its reply instead of a silent
     // drop or an instant cancellation.
     let mut last_line = false;
+    // Worker mode: at most one island shard per connection, owned by the
+    // coordinator on the other end (`dist::worker`). Dropped with the
+    // connection, which is what frees a shard when a coordinator
+    // re-shards after a loss.
+    let mut shard: Option<crate::dist::worker::ShardSession> = None;
 
     'conn: loop {
         // read_until may return a timeout mid-line; `buf` keeps the
@@ -346,6 +414,32 @@ fn handle_connection(stream: TcpStream, state: Arc<ServeState>, server_addr: Soc
                 // Nudge the accept loop out of its blocking accept.
                 let _ = TcpStream::connect(nudge_addr(server_addr));
                 break 'conn;
+            }
+            Ok(
+                req @ (Request::ShardAssign { .. }
+                | Request::RunIslands { .. }
+                | Request::EliteExchange { .. }
+                | Request::ShardFront { .. }),
+            ) => {
+                if state.is_worker() {
+                    // Shard ops are synchronous on the reader thread: the
+                    // coordinator drives every worker in lockstep, so
+                    // there is never a second op in flight while one
+                    // computes (liveness comes from the worker's own
+                    // heartbeat thread).
+                    crate::dist::worker::handle(&state, &writer, &mut shard, req);
+                } else {
+                    send(
+                        &writer,
+                        &Frame::Error {
+                            id: shard_request_id(&req),
+                            kind: "protocol".into(),
+                            message: "shard ops require a worker server (start one with \
+                                      'mohaq worker')"
+                                .into(),
+                        },
+                    );
+                }
             }
             Ok(Request::Search { id, spec }) => {
                 if relock(&inflight).contains_key(&id) {

@@ -30,6 +30,18 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// The raw xoshiro state — lets a suspended computation (an island
+    /// shard shipped to another process) resume its stream exactly where
+    /// it stopped.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from a captured [`Rng::state`].
+    pub fn from_state(s: [u64; 4]) -> Rng {
+        Rng { s }
+    }
+
     /// Fork `k` independent child streams in one call (tags 1..=k) — one
     /// per island of an archipelago. Consumes k draws from this stream,
     /// so the children are a pure function of (seed, k, position).
@@ -200,6 +212,18 @@ mod tests {
             for j in 0..i {
                 assert_ne!(a[i], a[j], "streams {i} and {j} coincide");
             }
+        }
+    }
+
+    #[test]
+    fn state_round_trip_resumes_the_stream() {
+        let mut a = Rng::new(0xC0FFEE);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        let mut b = Rng::from_state(a.state());
+        for _ in 0..64 {
+            assert_eq!(a.next_u64(), b.next_u64());
         }
     }
 

@@ -1,0 +1,264 @@
+//! Distributed island-sharding integration tests — hermetic (surrogate
+//! evaluator, no artifacts): a real coordinator driving real worker
+//! servers over loopback TCP.
+//!
+//! Covers the acceptance contracts of the dist tentpole:
+//!   * determinism — fixed seed + fixed shard map produce a merged front
+//!     bitwise-identical to the single-process `IslandModel` run of the
+//!     same spec, for ring AND fully-connected topologies;
+//!   * worker failure — killing a worker process mid-run re-shards its
+//!     islands onto the survivors, surfaces a typed `ShardLost` event,
+//!     and still completes with the SAME bitwise-identical front
+//!     (restore from the last migration snapshot is exact);
+//!   * retry exhaustion — losing every worker yields a typed
+//!     `SearchError::WorkerLost`, never a panic or a hang.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use mohaq::coordinator::{
+    CancelToken, ExperimentSpec, ScoredObjective, SearchEvent, SearchOutcome, SearchSession,
+};
+use mohaq::dist::DistConfig;
+use mohaq::moo::{IslandConfig, Topology};
+use mohaq::serve::{ServeState, Server};
+
+/// Start a hermetic worker server on an ephemeral port; returns its
+/// address and the accept-loop thread (joined to assert clean shutdown).
+fn spawn_worker() -> (SocketAddr, std::thread::JoinHandle<std::io::Result<()>>) {
+    let state = ServeState::worker(SearchSession::synthetic().unwrap(), 2);
+    let server = Server::bind("127.0.0.1:0", state).unwrap();
+    let addr = server.local_addr().unwrap();
+    (addr, std::thread::spawn(move || server.run()))
+}
+
+/// Shut one worker down the way an operator (or a fault) would: a
+/// shutdown frame on a fresh connection. The worker's heartbeat thread
+/// notices, cancels any in-flight shard advance, and tears its sockets.
+fn stop_worker(addr: SocketAddr) {
+    if let Ok(mut s) = TcpStream::connect(addr) {
+        let _ = s.write_all(b"{\"op\":\"shutdown\"}\n");
+        let _ = s.flush();
+        let mut line = String::new();
+        let _ = BufReader::new(s).read_line(&mut line);
+    }
+}
+
+/// The shared fixture spec: 4 islands over the surrogate evaluator. The
+/// widened feasibility area keeps the front non-empty for any seed.
+fn dist_spec(topology: Topology) -> ExperimentSpec {
+    let mut spec = ExperimentSpec::builder()
+        .name("dist-silago")
+        .platform("silago")
+        .sram_mb(6.0)
+        .objective(ScoredObjective::error())
+        .objective(ScoredObjective::neg_speedup())
+        .pop_size(8)
+        .initial_pop_size(16)
+        .generations(6)
+        .seed(0xD157)
+        .err_feasible_pp(25.0)
+        .build()
+        .unwrap();
+    spec.island = Some(IslandConfig {
+        islands: 4,
+        migration_interval: 2,
+        topology,
+        migrants: 2,
+    });
+    spec
+}
+
+/// The determinism contract, at full strength: same front, bit for bit.
+fn assert_fronts_bitwise_equal(dist: &SearchOutcome, local: &SearchOutcome) {
+    assert_eq!(dist.objective_names, local.objective_names, "objective labels diverged");
+    assert_eq!(dist.evaluations, local.evaluations, "evaluation totals diverged");
+    assert_eq!(dist.rows.len(), local.rows.len(), "front size diverged");
+    for (d, l) in dist.rows.iter().zip(&local.rows) {
+        assert_eq!(d.qc.display_wa(), l.qc.display_wa(), "genomes diverged");
+        assert_eq!(d.wer_v.to_bits(), l.wer_v.to_bits(), "wer_v not bitwise equal");
+        assert_eq!(d.wer_t.to_bits(), l.wer_t.to_bits(), "wer_t not bitwise equal");
+        assert_eq!(d.size_mb.to_bits(), l.size_mb.to_bits());
+        assert_eq!(d.hw.len(), l.hw.len());
+        for (dh, lh) in d.hw.iter().zip(&l.hw) {
+            assert_eq!(dh.platform, lh.platform);
+            assert_eq!(dh.speedup.to_bits(), lh.speedup.to_bits());
+        }
+    }
+    match (dist.front_hypervolume, local.front_hypervolume) {
+        (Some(a), Some(b)) => assert_eq!(a.to_bits(), b.to_bits(), "hypervolume diverged"),
+        (a, b) => assert_eq!(a.is_some(), b.is_some(), "hypervolume presence diverged"),
+    }
+}
+
+#[test]
+fn distributed_front_matches_single_process_bitwise_on_both_topologies() {
+    for topology in [Topology::Ring, Topology::FullyConnected] {
+        let spec = dist_spec(topology);
+        // Reference: the in-process island model, fresh session.
+        let local = SearchSession::synthetic().unwrap().run(&spec).unwrap();
+        assert!(!local.rows.is_empty(), "reference front is empty (bad fixture)");
+
+        // 3 workers for 4 islands: shard map [ [0,1], [2], [3] ] — one
+        // worker holds a multi-island shard, exercising cross-island
+        // batching worker-side.
+        let workers: Vec<_> = (0..3).map(|_| spawn_worker()).collect();
+        let addrs: Vec<String> = workers.iter().map(|(a, _)| a.to_string()).collect();
+
+        let mut assigned = 0usize;
+        let mut migrations = 0usize;
+        let outcome = SearchSession::synthetic()
+            .unwrap()
+            .run_distributed(
+                &spec,
+                &addrs,
+                &DistConfig::default(),
+                |event| match event {
+                    SearchEvent::ShardAssigned { .. } => assigned += 1,
+                    SearchEvent::Migration { .. } => migrations += 1,
+                    SearchEvent::ShardLost { .. } => panic!("no worker should be lost here"),
+                    _ => {}
+                },
+                &CancelToken::new(),
+            )
+            .unwrap();
+
+        assert_eq!(assigned, 3, "every worker should ack its shard");
+        assert!(migrations > 0, "migration boundaries should fire ({topology:?})");
+        assert_fronts_bitwise_equal(&outcome, &local);
+
+        for (addr, handle) in workers {
+            stop_worker(addr);
+            handle.join().unwrap().unwrap();
+        }
+    }
+}
+
+#[test]
+fn killing_a_worker_mid_run_reshards_and_completes_with_the_same_front() {
+    let spec = dist_spec(Topology::Ring);
+    let local = SearchSession::synthetic().unwrap().run(&spec).unwrap();
+
+    let workers: Vec<_> = (0..3).map(|_| spawn_worker()).collect();
+    let addrs: Vec<String> = workers.iter().map(|(a, _)| a.to_string()).collect();
+    let victim = workers[2].0;
+
+    let mut killed = false;
+    let mut lost: Vec<(usize, Vec<usize>, usize)> = Vec::new();
+    let outcome = SearchSession::synthetic()
+        .unwrap()
+        .run_distributed(
+            &spec,
+            &addrs,
+            &DistConfig { heartbeat_timeout: Duration::from_secs(10), max_retries: 2 },
+            |event| match event {
+                // First sign of life from the fleet: pull the plug on
+                // worker 2 while the advance is in flight.
+                SearchEvent::Generation(_) if !killed => {
+                    killed = true;
+                    stop_worker(victim);
+                }
+                SearchEvent::ShardLost { worker, islands, retry } => {
+                    lost.push((*worker, islands.clone(), *retry));
+                }
+                _ => {}
+            },
+            &CancelToken::new(),
+        )
+        .expect("search must survive a single worker loss");
+
+    assert!(killed, "the kill never triggered");
+    assert_eq!(lost.len(), 1, "expected exactly one shard loss, got {lost:?}");
+    let (worker, islands, retry) = &lost[0];
+    assert_eq!(*worker, 2, "the victim was worker 2");
+    assert_eq!(islands, &vec![3], "worker 2 owned island 3 in the 4/3 shard map");
+    assert_eq!(*retry, 0, "first (and only) re-shard");
+
+    // The re-sharded, replayed search still lands on the identical front.
+    assert_fronts_bitwise_equal(&outcome, &local);
+
+    // The victim's accept loop has wound down; the survivors shut down
+    // cleanly on request.
+    let mut workers = workers;
+    let (_, victim_handle) = workers.remove(2);
+    victim_handle.join().unwrap().unwrap();
+    for (addr, handle) in workers {
+        stop_worker(addr);
+        handle.join().unwrap().unwrap();
+    }
+}
+
+#[test]
+fn losing_every_worker_is_a_typed_error_not_a_hang() {
+    let spec = dist_spec(Topology::Ring);
+    // One real worker, killed mid-run, nobody left: the search must end
+    // in SearchError::WorkerLost (kind "worker_lost"), not panic or spin.
+    let (addr, handle) = spawn_worker();
+    let mut killed = false;
+    let err = SearchSession::synthetic()
+        .unwrap()
+        .run_distributed(
+            &spec,
+            &[addr.to_string()],
+            &DistConfig { heartbeat_timeout: Duration::from_secs(10), max_retries: 2 },
+            |event| {
+                if matches!(event, SearchEvent::Generation(_)) && !killed {
+                    killed = true;
+                    stop_worker(addr);
+                }
+            },
+            &CancelToken::new(),
+        )
+        .expect_err("no survivors: the search cannot complete");
+    assert!(killed);
+    assert!(
+        matches!(err, mohaq::coordinator::SearchError::WorkerLost(_)),
+        "expected WorkerLost, got {err:?}"
+    );
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn unreachable_workers_fail_over_to_the_reachable_one() {
+    let spec = dist_spec(Topology::Ring);
+    let local = SearchSession::synthetic().unwrap().run(&spec).unwrap();
+
+    // One live worker plus two addresses nobody listens on: the
+    // connect failures burn the retry budget's losses but the fleet
+    // converges on the survivor and completes.
+    let (addr, handle) = spawn_worker();
+    let dead_a = {
+        // Bind-then-drop reserves an address that is closed by the time
+        // the coordinator dials it.
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let dead_b = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let addrs = vec![dead_a, addr.to_string(), dead_b];
+
+    let mut lost_workers: Vec<usize> = Vec::new();
+    let outcome = SearchSession::synthetic()
+        .unwrap()
+        .run_distributed(
+            &spec,
+            &addrs,
+            &DistConfig { heartbeat_timeout: Duration::from_secs(10), max_retries: 2 },
+            |event| {
+                if let SearchEvent::ShardLost { worker, .. } = event {
+                    lost_workers.push(*worker);
+                }
+            },
+            &CancelToken::new(),
+        )
+        .expect("one reachable worker is enough");
+
+    assert_eq!(lost_workers, vec![0, 2], "both dead addresses reported lost");
+    assert_fronts_bitwise_equal(&outcome, &local);
+
+    stop_worker(addr);
+    handle.join().unwrap().unwrap();
+}

@@ -264,6 +264,128 @@ fn malformed_and_invalid_requests_get_error_frames_not_disconnects() {
 }
 
 #[test]
+fn torn_and_batched_frames_parse_like_whole_lines() {
+    let (addr, server) = spawn_server();
+    let mut raw = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(raw.try_clone().unwrap());
+
+    // One frame torn across many tiny writes with pauses long enough to
+    // straddle the server's read-timeout polling: the reader must keep
+    // the partial line and resume it, not reject the fragments.
+    let line = format!("{}\n", Request::Ping.to_line());
+    for chunk in line.as_bytes().chunks(3) {
+        raw.write_all(chunk).unwrap();
+        raw.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(60));
+    }
+    assert!(matches!(raw_read(&mut reader), Frame::Pong), "torn ping not answered");
+
+    // Several frames batched into ONE write: each gets its own reply.
+    let batch = format!("{}\n{}\n{}\n", Request::Ping.to_line(), Request::Stats.to_line(), Request::Ping.to_line());
+    raw.write_all(batch.as_bytes()).unwrap();
+    raw.flush().unwrap();
+    assert!(matches!(raw_read(&mut reader), Frame::Pong));
+    assert!(matches!(raw_read(&mut reader), Frame::Stats(_)));
+    assert!(matches!(raw_read(&mut reader), Frame::Pong));
+
+    // A torn SEARCH request (split mid-JSON) still runs end to end.
+    let search = format!("{}\n", Request::Search { id: 7, spec: silago_spec().to_json() }.to_line());
+    let (a, b) = search.as_bytes().split_at(search.len() / 2);
+    raw.write_all(a).unwrap();
+    raw.flush().unwrap();
+    std::thread::sleep(Duration::from_millis(60));
+    raw.write_all(b).unwrap();
+    raw.flush().unwrap();
+    loop {
+        match raw_read(&mut reader) {
+            Frame::Front { id, rows, .. } => {
+                assert_eq!(id, 7);
+                assert!(!rows.is_empty());
+                break;
+            }
+            Frame::Error { kind, message, .. } => panic!("torn search failed [{kind}]: {message}"),
+            _ => continue,
+        }
+    }
+
+    let mut client = connect(addr);
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn oversized_frame_gets_an_error_frame_then_teardown() {
+    let (addr, server) = spawn_server();
+    let mut raw = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(raw.try_clone().unwrap());
+
+    // Stream > MAX_LINE_BYTES without a newline. The server must answer
+    // with a typed protocol error and close THIS connection only —
+    // growing the buffer forever or killing the server are both wrong.
+    let chunk = vec![b'x'; 1 << 20];
+    for _ in 0..5 {
+        if raw.write_all(&chunk).is_err() {
+            break; // server may tear down before we finish pushing
+        }
+    }
+    let mut line = String::new();
+    if reader.read_line(&mut line).unwrap() > 0 {
+        match Frame::parse(&line).unwrap() {
+            Frame::Error { id, kind, message } => {
+                assert_eq!(id, None);
+                assert_eq!(kind, "protocol");
+                assert!(message.contains("exceeds"), "{message}");
+            }
+            other => panic!("expected oversized-frame error, got {other:?}"),
+        }
+    }
+    // Teardown: the stream reaches EOF.
+    let mut rest = String::new();
+    assert_eq!(reader.read_line(&mut rest).unwrap(), 0, "connection not torn down");
+
+    // The server itself is fine: a fresh connection still works.
+    let mut client = connect(addr);
+    client.ping().unwrap();
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn shard_ops_on_a_non_worker_server_get_typed_errors() {
+    let (addr, server) = spawn_server();
+    let mut raw = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(raw.try_clone().unwrap());
+
+    // A plain serve server refuses dist shard ops with a typed,
+    // id-correlated error frame — the connection stays alive.
+    raw_send(&mut raw, r#"{"op":"shard_front","id":21}"#);
+    match raw_read(&mut reader) {
+        Frame::Error { id, kind, message } => {
+            assert_eq!(id, Some(21));
+            assert_eq!(kind, "protocol");
+            assert!(message.contains("worker"), "{message}");
+        }
+        other => panic!("expected protocol error frame, got {other:?}"),
+    }
+    raw_send(&mut raw, r#"{"op":"run_islands","id":22,"upto_gen":5}"#);
+    match raw_read(&mut reader) {
+        Frame::Error { id, kind, .. } => {
+            assert_eq!(id, Some(22));
+            assert_eq!(kind, "protocol");
+        }
+        other => panic!("expected protocol error frame, got {other:?}"),
+    }
+
+    // Still alive and serving.
+    raw_send(&mut raw, &Request::Ping.to_line());
+    assert!(matches!(raw_read(&mut reader), Frame::Pong));
+
+    let mut client = connect(addr);
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
 fn disconnect_cancels_in_flight_searches() {
     let (addr, server) = spawn_server();
 
