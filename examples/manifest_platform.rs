@@ -1,0 +1,85 @@
+//! Platform-manifest demo — hermetic (surrogate evaluator, no artifact
+//! bundle): load the checked-in SiLago-equivalent manifest
+//! (`platforms/silago_lut.json`), lint it, register it, and run the SAME
+//! search once on the manifest-backed platform and once on the built-in
+//! `silago`, asserting the two fronts are bitwise-identical — the
+//! data-driven platform path reproduces the built-in exactly.
+//!
+//!     cargo run --release --example manifest_platform [-- --gens 12]
+
+use mohaq::coordinator::{ExperimentSpec, ScoredObjective, SearchSession, SolutionRow};
+use mohaq::hw::{registry, PlatformManifest};
+use mohaq::util::cli::Args;
+
+fn spec(platform: &str, gens: usize, seed: u64) -> anyhow::Result<ExperimentSpec> {
+    Ok(ExperimentSpec::builder()
+        .name(format!("manifest-demo-{platform}"))
+        .platform(platform)
+        .objective(ScoredObjective::error())
+        .objective(ScoredObjective::neg_speedup())
+        .objective(ScoredObjective::energy_uj())
+        .pop_size(12)
+        .initial_pop_size(24)
+        .generations(gens)
+        .seed(seed)
+        .err_feasible_pp(30.0)
+        .build()?)
+}
+
+fn run(spec: &ExperimentSpec) -> anyhow::Result<Vec<SolutionRow>> {
+    Ok(SearchSession::synthetic()?.threads(2).run(spec)?.rows)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let gens = args.get_usize("gens", 12);
+    let seed = args.get_u64("seed", 0x10_117);
+
+    // Load + lint: a manifest is strict-parsed and schema-checked before
+    // anything touches the registry.
+    let path = format!("{}/platforms/silago_lut.json", env!("CARGO_MANIFEST_DIR"));
+    let manifest = PlatformManifest::load_file(&path).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("loaded {path}");
+    println!("  {}", manifest.summary());
+
+    // Register it under its manifest name; idempotent, but shadowing a
+    // builtin would be rejected here.
+    registry::register_manifest(&manifest).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("registered '{}' (source: manifest)\n", manifest.name);
+
+    println!("== searching '{}' (manifest tables) vs 'silago' (builtin) ==", manifest.name);
+    let lut_front = run(&spec(&manifest.name, gens, seed)?)?;
+    let builtin_front = run(&spec("silago", gens, seed)?)?;
+
+    anyhow::ensure!(!lut_front.is_empty(), "manifest-platform front is empty");
+    anyhow::ensure!(
+        lut_front.len() == builtin_front.len(),
+        "front sizes diverged: {} vs {}",
+        lut_front.len(),
+        builtin_front.len()
+    );
+    for (a, b) in lut_front.iter().zip(&builtin_front) {
+        anyhow::ensure!(a.qc.display_wa() == b.qc.display_wa(), "genomes diverged");
+        anyhow::ensure!(a.wer_v.to_bits() == b.wer_v.to_bits(), "errors diverged");
+        for (ha, hb) in a.hw.iter().zip(&b.hw) {
+            anyhow::ensure!(ha.speedup.to_bits() == hb.speedup.to_bits(), "speedups diverged");
+            anyhow::ensure!(
+                ha.energy_uj.map(f64::to_bits) == hb.energy_uj.map(f64::to_bits),
+                "energies diverged"
+            );
+        }
+    }
+    println!("front: {} solutions, every objective bitwise-identical across backends", lut_front.len());
+    for row in &lut_front {
+        let hw = &row.hw[0];
+        println!(
+            "  {}  WER_V {:5.2}%  speedup {:.3}x  energy {:.1} uJ",
+            row.qc.display_wa(),
+            row.wer_v * 100.0,
+            hw.speedup,
+            hw.energy_uj.unwrap_or(f64::NAN)
+        );
+    }
+    println!("\nmanifest-backed platform reproduces the builtin bit for bit.");
+    Ok(())
+}

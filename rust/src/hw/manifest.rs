@@ -1,0 +1,637 @@
+//! Versioned platform manifests: accelerator cost models as *data*.
+//!
+//! A manifest describes everything the search needs to score hardware
+//! objectives on a platform — supported precisions, tied-W=A rule,
+//! per-precision speedup lookup table (HAQ-style latency tables), SRAM
+//! capacity and an optional Eq. 3 energy model — without a line of Rust.
+//! `hw::tabular` turns a validated manifest into a live [`Platform`]
+//! (same Eq. 3/Eq. 4 free functions as the built-ins, so a manifest that
+//! transcribes SiLago's Table 2 reproduces the built-in's fronts bit for
+//! bit), and the registry loads manifests at startup
+//! (`mohaq --platform-dir`), per spec (an inline `"manifest"` platform
+//! parameter) or per serve request (`register_platform` frames).
+//!
+//! Validation is strict on purpose: unknown fields are rejected at every
+//! object level (a typo'd `"enery"` must not silently drop the energy
+//! model), `format_version` is gated exactly, and the cost tables must
+//! cover precisely the declared precision grid (diagonal when
+//! `tied_wa`, full W×A cross product otherwise). Future format versions
+//! may add optional fields under a bumped `format_version`; readers of
+//! version N reject version N+1 rather than guess.
+//!
+//! [`Platform`]: super::Platform
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+use std::path::Path;
+
+use crate::quant::Bits;
+use crate::util::json::{Json, JsonError};
+
+/// The manifest format version this build reads and writes.
+pub const MANIFEST_VERSION: u64 = 1;
+
+/// Typed manifest failure. Every parse/validation/IO path lands here —
+/// feeding arbitrary bytes into the loader must never panic.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ManifestError {
+    /// The text is not valid JSON (position details in the message).
+    Parse(String),
+    /// `format_version` is missing or not one this build understands.
+    Version { found: u64, supported: u64 },
+    /// A required field is absent.
+    Missing { field: String },
+    /// A field this schema does not define (strict rejection).
+    UnknownField { context: String, field: String },
+    /// A field is present but its value is out of contract.
+    Invalid(String),
+    /// Filesystem failure while loading (path in the message).
+    Io(String),
+    /// Registration collided with an existing platform name.
+    Collision { name: String, existing: String },
+}
+
+impl fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ManifestError::Parse(msg) => write!(f, "manifest is not valid JSON: {msg}"),
+            ManifestError::Version { found, supported } => write!(
+                f,
+                "manifest format_version {found} is not supported (this build reads \
+                 version {supported})"
+            ),
+            ManifestError::Missing { field } => write!(f, "manifest is missing '{field}'"),
+            ManifestError::UnknownField { context, field } => write!(
+                f,
+                "unknown field '{field}' in {context} (the manifest schema is strict; \
+                 see DESIGN.md \"Platform manifests\")"
+            ),
+            ManifestError::Invalid(msg) => write!(f, "invalid manifest: {msg}"),
+            ManifestError::Io(msg) => write!(f, "manifest io error: {msg}"),
+            ManifestError::Collision { name, existing } => write!(
+                f,
+                "platform name '{name}' is already registered as a {existing} platform; \
+                 manifests may not shadow it"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {}
+
+impl From<JsonError> for ManifestError {
+    fn from(e: JsonError) -> ManifestError {
+        ManifestError::Parse(e.to_string())
+    }
+}
+
+/// Optional Eq. 3 energy model: per-bit load energy from SRAM, a MAC
+/// energy table over the precision grid, and a flat per-op cost for the
+/// fixed (element-wise / nonlinear) ops.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyModel {
+    /// Energy to load one bit from on-chip memory (pJ).
+    pub bit_load_pj: f64,
+    /// Energy per fixed op (pJ); optional in JSON, defaults to 0.
+    pub fixed_op_pj: f64,
+    /// MAC energy (pJ) per `(w_bits, a_bits)` pair.
+    pub mac_pj: BTreeMap<(u32, u32), f64>,
+}
+
+/// A validated, versioned platform description. Field order here is the
+/// schema; `from_json` rejects anything outside it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlatformManifest {
+    /// Registry name (normalized lowercase; no whitespace).
+    pub name: String,
+    /// Free-text provenance/notes; round-trips but is never interpreted.
+    pub description: Option<String>,
+    /// Whether weight and activation precision must match per layer.
+    pub tied_wa: bool,
+    /// MAC precisions the platform supports, sorted ascending. 32-bit is
+    /// the float baseline, not a searchable precision, and is rejected.
+    pub supported_bits: Vec<Bits>,
+    /// On-chip SRAM capacity in MB (the memory constraint), if any.
+    pub sram_mb: Option<f64>,
+    /// Speedup over the platform's widest-precision baseline per
+    /// `(w_bits, a_bits)` pair (Eq. 4 lookup table).
+    pub speedup: BTreeMap<(u32, u32), f64>,
+    /// Optional energy model (platforms without one reject `energy_uj`
+    /// objectives at spec validation, same as built-in Bitfusion).
+    pub energy: Option<EnergyModel>,
+}
+
+/// `"4x8"` ↔ `(4, 8)` — the JSON spelling of a W×A table key.
+fn parse_pair_key(key: &str) -> Result<(u32, u32), ManifestError> {
+    let bad = || {
+        ManifestError::Invalid(format!(
+            "table key '{key}' is not of the form 'WxA' (e.g. \"4x8\")"
+        ))
+    };
+    let (w, a) = key.split_once('x').ok_or_else(bad)?;
+    Ok((w.parse().map_err(|_| bad())?, a.parse().map_err(|_| bad())?))
+}
+
+fn pair_key(w: u32, a: u32) -> String {
+    format!("{w}x{a}")
+}
+
+/// Parse a `{"WxA": cost}` table, checking values are finite and within
+/// `(min, ∞)`, and every referenced precision is in `bits`.
+fn parse_table(
+    j: &Json,
+    context: &str,
+    bits: &BTreeSet<u32>,
+    min_exclusive: f64,
+) -> Result<BTreeMap<(u32, u32), f64>, ManifestError> {
+    let obj = j
+        .as_obj()
+        .ok_or_else(|| ManifestError::Invalid(format!("'{context}' must be a JSON object")))?;
+    let mut table = BTreeMap::new();
+    for (key, value) in obj {
+        let (w, a) = parse_pair_key(key)?;
+        for b in [w, a] {
+            if !bits.contains(&b) {
+                return Err(ManifestError::Invalid(format!(
+                    "'{context}' key '{key}' references {b}-bit, which is not in \
+                     supported_bits"
+                )));
+            }
+        }
+        let v = value.as_f64().ok_or_else(|| {
+            ManifestError::Invalid(format!("'{context}' entry '{key}' must be a number"))
+        })?;
+        if !v.is_finite() || v <= min_exclusive {
+            let want = if min_exclusive < 0.0 {
+                "a finite number >= 0".to_string()
+            } else {
+                format!("a finite number > {min_exclusive}")
+            };
+            return Err(ManifestError::Invalid(format!(
+                "'{context}' entry '{key}' must be {want} (got {v})"
+            )));
+        }
+        table.insert((w, a), v);
+    }
+    Ok(table)
+}
+
+/// The precision pairs a table must cover exactly: the diagonal for a
+/// tied-W=A platform, the full cross product otherwise.
+fn required_pairs(bits: &[Bits], tied: bool) -> BTreeSet<(u32, u32)> {
+    let mut pairs = BTreeSet::new();
+    for w in bits {
+        for a in bits {
+            if !tied || w == a {
+                pairs.insert((w.bits(), a.bits()));
+            }
+        }
+    }
+    pairs
+}
+
+fn check_coverage(
+    table: &BTreeMap<(u32, u32), f64>,
+    context: &str,
+    required: &BTreeSet<(u32, u32)>,
+) -> Result<(), ManifestError> {
+    for (w, a) in required {
+        if !table.contains_key(&(*w, *a)) {
+            return Err(ManifestError::Invalid(format!(
+                "'{context}' is missing entry '{}' for a supported precision pair",
+                pair_key(*w, *a)
+            )));
+        }
+    }
+    for (w, a) in table.keys() {
+        if !required.contains(&(*w, *a)) {
+            return Err(ManifestError::Invalid(format!(
+                "'{context}' entry '{}' is unreachable (tied-W=A platforms take only \
+                 diagonal WxW entries)",
+                pair_key(*w, *a)
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn reject_unknown_fields(
+    obj: &BTreeMap<String, Json>,
+    context: &str,
+    allowed: &[&str],
+) -> Result<(), ManifestError> {
+    for key in obj.keys() {
+        if !allowed.contains(&key.as_str()) {
+            return Err(ManifestError::UnknownField {
+                context: context.to_string(),
+                field: key.clone(),
+            });
+        }
+    }
+    Ok(())
+}
+
+impl PlatformManifest {
+    /// Parse and fully validate a manifest. Everything `from_json`
+    /// accepts satisfies [`validate`](Self::validate).
+    pub fn from_json(j: &Json) -> Result<PlatformManifest, ManifestError> {
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| ManifestError::Invalid("manifest must be a JSON object".into()))?;
+        reject_unknown_fields(
+            obj,
+            "the manifest",
+            &[
+                "format_version",
+                "name",
+                "description",
+                "tied_wa",
+                "supported_bits",
+                "sram_mb",
+                "speedup",
+                "energy",
+            ],
+        )?;
+
+        // Version gate FIRST: a future-format manifest should fail with
+        // "unsupported version", not whatever field error shows up first.
+        let version = obj
+            .get("format_version")
+            .ok_or_else(|| ManifestError::Missing { field: "format_version".into() })
+            .and_then(|v| {
+                v.as_i64().filter(|n| *n >= 0).map(|n| n as u64).ok_or_else(|| {
+                    ManifestError::Invalid("'format_version' must be a non-negative integer".into())
+                })
+            })?;
+        if version != MANIFEST_VERSION {
+            return Err(ManifestError::Version { found: version, supported: MANIFEST_VERSION });
+        }
+
+        let name = obj
+            .get("name")
+            .ok_or_else(|| ManifestError::Missing { field: "name".into() })?
+            .as_str()
+            .ok_or_else(|| ManifestError::Invalid("'name' must be a string".into()))?
+            .to_lowercase();
+
+        let description = match obj.get("description") {
+            None => None,
+            Some(d) => Some(
+                d.as_str()
+                    .ok_or_else(|| ManifestError::Invalid("'description' must be a string".into()))?
+                    .to_string(),
+            ),
+        };
+
+        let tied_wa = obj
+            .get("tied_wa")
+            .ok_or_else(|| ManifestError::Missing { field: "tied_wa".into() })?
+            .as_bool()
+            .ok_or_else(|| ManifestError::Invalid("'tied_wa' must be a boolean".into()))?;
+
+        let bits_arr = obj
+            .get("supported_bits")
+            .ok_or_else(|| ManifestError::Missing { field: "supported_bits".into() })?
+            .as_arr()
+            .ok_or_else(|| ManifestError::Invalid("'supported_bits' must be an array".into()))?;
+        let mut supported_bits: Vec<Bits> = Vec::with_capacity(bits_arr.len());
+        for b in bits_arr {
+            let n = b.as_i64().filter(|n| *n > 0).ok_or_else(|| {
+                ManifestError::Invalid("'supported_bits' entries must be positive integers".into())
+            })?;
+            if n == 32 {
+                return Err(ManifestError::Invalid(
+                    "'supported_bits' may not include 32: 32-bit float is the \
+                     unquantized baseline, not a searchable precision"
+                        .into(),
+                ));
+            }
+            let bits = Bits::from_bits(n as u32).ok_or_else(|| {
+                ManifestError::Invalid(format!(
+                    "'supported_bits' entry {n} is not a supported precision (2, 4, 8, 16)"
+                ))
+            })?;
+            if supported_bits.contains(&bits) {
+                return Err(ManifestError::Invalid(format!(
+                    "'supported_bits' lists {n} twice"
+                )));
+            }
+            supported_bits.push(bits);
+        }
+        supported_bits.sort_by_key(Bits::bits);
+
+        let sram_mb = match obj.get("sram_mb") {
+            None => None,
+            Some(v) => {
+                let mb = v
+                    .as_f64()
+                    .ok_or_else(|| ManifestError::Invalid("'sram_mb' must be a number".into()))?;
+                if !mb.is_finite() || mb <= 0.0 {
+                    return Err(ManifestError::Invalid(format!(
+                        "'sram_mb' must be a finite number > 0 (got {mb})"
+                    )));
+                }
+                Some(mb)
+            }
+        };
+
+        let bit_set: BTreeSet<u32> = supported_bits.iter().map(Bits::bits).collect();
+        let speedup = parse_table(
+            obj.get("speedup")
+                .ok_or_else(|| ManifestError::Missing { field: "speedup".into() })?,
+            "speedup",
+            &bit_set,
+            0.0,
+        )?;
+
+        let energy = match obj.get("energy") {
+            None => None,
+            Some(e) => {
+                let eobj = e.as_obj().ok_or_else(|| {
+                    ManifestError::Invalid("'energy' must be a JSON object".into())
+                })?;
+                reject_unknown_fields(eobj, "'energy'", &["bit_load_pj", "fixed_op_pj", "mac_pj"])?;
+                let pj = |field: &str, required: bool| -> Result<Option<f64>, ManifestError> {
+                    match eobj.get(field) {
+                        None if required => {
+                            Err(ManifestError::Missing { field: format!("energy.{field}") })
+                        }
+                        None => Ok(None),
+                        Some(v) => {
+                            let pj = v.as_f64().ok_or_else(|| {
+                                ManifestError::Invalid(format!(
+                                    "'energy.{field}' must be a number"
+                                ))
+                            })?;
+                            if !pj.is_finite() || pj < 0.0 {
+                                return Err(ManifestError::Invalid(format!(
+                                    "'energy.{field}' must be a finite number >= 0 (got {pj})"
+                                )));
+                            }
+                            Ok(Some(pj))
+                        }
+                    }
+                };
+                let bit_load_pj = pj("bit_load_pj", true)?.expect("required field checked");
+                let fixed_op_pj = pj("fixed_op_pj", false)?.unwrap_or(0.0);
+                let mac_pj = parse_table(
+                    eobj.get("mac_pj")
+                        .ok_or_else(|| ManifestError::Missing { field: "energy.mac_pj".into() })?,
+                    "energy.mac_pj",
+                    &bit_set,
+                    // MAC energy 0 is physically meaningless but harmless;
+                    // forbid only negatives (min_exclusive just below 0).
+                    -f64::MIN_POSITIVE,
+                )?;
+                Some(EnergyModel { bit_load_pj, fixed_op_pj, mac_pj })
+            }
+        };
+
+        let manifest = PlatformManifest {
+            name,
+            description,
+            tied_wa,
+            supported_bits,
+            sram_mb,
+            speedup,
+            energy,
+        };
+        manifest.validate()?;
+        Ok(manifest)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<PlatformManifest, ManifestError> {
+        let j = Json::parse(text).map_err(ManifestError::from)?;
+        PlatformManifest::from_json(&j)
+    }
+
+    /// Load and validate a single manifest file.
+    pub fn load_file(path: impl AsRef<Path>) -> Result<PlatformManifest, ManifestError> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ManifestError::Io(format!("{}: {e}", path.display())))?;
+        PlatformManifest::from_json_str(&text)
+            .map_err(|e| match e {
+                // Keep typed variants intact; only prefix the free-text ones
+                // with the offending path.
+                ManifestError::Parse(msg) => {
+                    ManifestError::Parse(format!("{}: {msg}", path.display()))
+                }
+                ManifestError::Invalid(msg) => {
+                    ManifestError::Invalid(format!("{}: {msg}", path.display()))
+                }
+                other => other,
+            })
+    }
+
+    /// Structural invariants, re-checkable on hand-built values (the
+    /// registry re-validates before registering). `from_json` output
+    /// always passes.
+    pub fn validate(&self) -> Result<(), ManifestError> {
+        if self.name.is_empty() {
+            return Err(ManifestError::Invalid("'name' must be non-empty".into()));
+        }
+        if !self.name.chars().all(|c| c.is_ascii_alphanumeric() || "_-.".contains(c)) {
+            return Err(ManifestError::Invalid(format!(
+                "'name' '{}' may only contain [a-z0-9_.-] (it is used as a registry key \
+                 and in 'metric@name' objective bindings)",
+                self.name
+            )));
+        }
+        if self.supported_bits.is_empty() {
+            return Err(ManifestError::Invalid(
+                "'supported_bits' must list at least one precision".into(),
+            ));
+        }
+        let required = required_pairs(&self.supported_bits, self.tied_wa);
+        check_coverage(&self.speedup, "speedup", &required)?;
+        if let Some(e) = &self.energy {
+            check_coverage(&e.mac_pj, "energy.mac_pj", &required)?;
+        }
+        Ok(())
+    }
+
+    /// Emit the canonical JSON form. `from_json(m.to_json()) == m` —
+    /// the round trip is lossless (values travel as exact f64s through
+    /// the in-tree codec's shortest-round-trip float formatting).
+    pub fn to_json(&self) -> Json {
+        let mut obj: BTreeMap<String, Json> = BTreeMap::new();
+        obj.insert("format_version".into(), Json::Num(MANIFEST_VERSION as f64));
+        obj.insert("name".into(), Json::Str(self.name.clone()));
+        if let Some(d) = &self.description {
+            obj.insert("description".into(), Json::Str(d.clone()));
+        }
+        obj.insert("tied_wa".into(), Json::Bool(self.tied_wa));
+        obj.insert(
+            "supported_bits".into(),
+            Json::Arr(self.supported_bits.iter().map(|b| Json::Num(b.bits() as f64)).collect()),
+        );
+        if let Some(mb) = self.sram_mb {
+            obj.insert("sram_mb".into(), Json::Num(mb));
+        }
+        let table_json = |t: &BTreeMap<(u32, u32), f64>| {
+            Json::Obj(t.iter().map(|((w, a), v)| (pair_key(*w, *a), Json::Num(*v))).collect())
+        };
+        obj.insert("speedup".into(), table_json(&self.speedup));
+        if let Some(e) = &self.energy {
+            let mut em: BTreeMap<String, Json> = BTreeMap::new();
+            em.insert("bit_load_pj".into(), Json::Num(e.bit_load_pj));
+            em.insert("fixed_op_pj".into(), Json::Num(e.fixed_op_pj));
+            em.insert("mac_pj".into(), table_json(&e.mac_pj));
+            obj.insert("energy".into(), Json::Obj(em));
+        }
+        Json::Obj(obj)
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string_pretty()
+    }
+
+    /// One-line capability summary for `mohaq platform lint` / discovery.
+    pub fn summary(&self) -> String {
+        let bits: Vec<String> =
+            self.supported_bits.iter().map(|b| b.bits().to_string()).collect();
+        format!(
+            "tied W=A: {:<5} bits: {{{}}}  sram: {}  speedup table: {} entries  energy model: {}",
+            self.tied_wa,
+            bits.join(","),
+            match self.sram_mb {
+                Some(mb) => format!("{mb} MB"),
+                None => "none".into(),
+            },
+            self.speedup.len(),
+            if self.energy.is_some() { "yes" } else { "no" },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn silago_text() -> String {
+        std::fs::read_to_string(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/platforms/silago_lut.json"
+        ))
+        .expect("checked-in manifest")
+    }
+
+    #[test]
+    fn checked_in_manifests_parse_and_roundtrip() {
+        for file in ["silago_lut.json", "bitfusion_lut.json"] {
+            let path = format!("{}/platforms/{file}", env!("CARGO_MANIFEST_DIR"));
+            let m = PlatformManifest::load_file(&path).unwrap_or_else(|e| panic!("{file}: {e}"));
+            let back = PlatformManifest::from_json(&m.to_json()).unwrap();
+            assert_eq!(m, back, "{file}: JSON round trip not lossless");
+            // Bitwise: the emitted text re-parses to the same f64s.
+            let reparsed = PlatformManifest::from_json_str(&m.to_json_string()).unwrap();
+            for (k, v) in &m.speedup {
+                assert_eq!(v.to_bits(), reparsed.speedup[k].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn silago_manifest_matches_builtin_tables() {
+        let m = PlatformManifest::from_json_str(&silago_text()).unwrap();
+        assert_eq!(m.name, "silago_lut");
+        assert!(m.tied_wa);
+        assert_eq!(m.supported_bits, vec![Bits::B4, Bits::B8, Bits::B16]);
+        for b in [Bits::B4, Bits::B8, Bits::B16] {
+            let pair = (b.bits(), b.bits());
+            assert_eq!(m.speedup[&pair].to_bits(), super::super::silago::mac_speedup(b).to_bits());
+            let e = m.energy.as_ref().unwrap();
+            assert_eq!(e.mac_pj[&pair].to_bits(), super::super::silago::mac_energy_pj(b).to_bits());
+        }
+        assert_eq!(m.energy.as_ref().unwrap().bit_load_pj, super::super::silago::BIT_LOAD_PJ);
+    }
+
+    #[test]
+    fn bitfusion_manifest_matches_builtin_tables() {
+        let path = format!("{}/platforms/bitfusion_lut.json", env!("CARGO_MANIFEST_DIR"));
+        let m = PlatformManifest::load_file(path).unwrap();
+        assert!(!m.tied_wa);
+        assert!(m.energy.is_none());
+        assert_eq!(m.speedup.len(), 16);
+        for w in Bits::SEARCHABLE {
+            for a in Bits::SEARCHABLE {
+                assert_eq!(
+                    m.speedup[&(w.bits(), a.bits())].to_bits(),
+                    super::super::bitfusion::mac_speedup(w, a).to_bits(),
+                    "({w:?},{a:?})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn version_gate_rejects_other_versions() {
+        let text = silago_text().replace("\"format_version\": 1", "\"format_version\": 2");
+        match PlatformManifest::from_json_str(&text) {
+            Err(ManifestError::Version { found: 2, supported: 1 }) => {}
+            other => panic!("expected version error, got {other:?}"),
+        }
+        let no_version = silago_text().replace("\"format_version\": 1,", "");
+        match PlatformManifest::from_json_str(&no_version) {
+            Err(ManifestError::Missing { field }) => assert_eq!(field, "format_version"),
+            other => panic!("expected missing-version error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_fields_rejected_at_every_level() {
+        let top = silago_text().replace("\"tied_wa\"", "\"tied\": true, \"tied_wa\"");
+        match PlatformManifest::from_json_str(&top) {
+            Err(ManifestError::UnknownField { field, .. }) => assert_eq!(field, "tied"),
+            other => panic!("expected unknown-field error, got {other:?}"),
+        }
+        let nested = silago_text().replace("\"bit_load_pj\"", "\"bit_laod_pj\": 1, \"bit_load_pj\"");
+        match PlatformManifest::from_json_str(&nested) {
+            Err(ManifestError::UnknownField { field, context }) => {
+                assert_eq!(field, "bit_laod_pj");
+                assert!(context.contains("energy"), "{context}");
+            }
+            other => panic!("expected unknown-field error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn coverage_and_value_validation() {
+        // Missing diagonal entry.
+        let missing = silago_text().replace("\"8x8\": 2.0,", "");
+        assert!(matches!(
+            PlatformManifest::from_json_str(&missing),
+            Err(ManifestError::Invalid(_))
+        ));
+        // Off-diagonal entry on a tied platform.
+        let off = silago_text().replace("\"8x8\": 2.0,", "\"8x8\": 2.0, \"4x8\": 3.0,");
+        let err = PlatformManifest::from_json_str(&off).unwrap_err();
+        assert!(err.to_string().contains("unreachable"), "{err}");
+        // Table key referencing an unsupported precision.
+        let alien = silago_text().replace("\"8x8\": 2.0,", "\"8x8\": 2.0, \"2x2\": 9.0,");
+        let err = PlatformManifest::from_json_str(&alien).unwrap_err();
+        assert!(err.to_string().contains("not in"), "{err}");
+        // Non-positive speedup.
+        let zero = silago_text().replace("\"8x8\": 2.0", "\"8x8\": 0.0");
+        assert!(PlatformManifest::from_json_str(&zero).is_err());
+        // 32-bit is not a searchable precision.
+        let b32 = silago_text().replace("[4, 8, 16]", "[4, 8, 16, 32]");
+        let err = PlatformManifest::from_json_str(&b32).unwrap_err();
+        assert!(err.to_string().contains("32"), "{err}");
+        // Duplicate precision entry.
+        let dup = silago_text().replace("[4, 8, 16]", "[4, 8, 16, 8]");
+        let err = PlatformManifest::from_json_str(&dup).unwrap_err();
+        assert!(err.to_string().contains("twice"), "{err}");
+    }
+
+    #[test]
+    fn name_rules() {
+        let upper = silago_text().replace("\"silago_lut\"", "\"SiLago_LUT\"");
+        assert_eq!(PlatformManifest::from_json_str(&upper).unwrap().name, "silago_lut");
+        let spaced = silago_text().replace("\"silago_lut\"", "\"si lago\"");
+        assert!(PlatformManifest::from_json_str(&spaced).is_err());
+        let empty = silago_text().replace("\"silago_lut\"", "\"\"");
+        assert!(PlatformManifest::from_json_str(&empty).is_err());
+    }
+}

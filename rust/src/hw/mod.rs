@@ -6,10 +6,14 @@
 //! simulation shortcut.
 
 pub mod bitfusion;
+pub mod manifest;
 pub mod registry;
 pub mod silago;
+pub mod tabular;
 
+pub use manifest::{ManifestError, PlatformManifest};
 pub use registry::{register, resolve, PlatformSpec};
+pub use tabular::TabularPlatform;
 
 use crate::model::ModelDesc;
 use crate::quant::{Bits, QuantConfig};

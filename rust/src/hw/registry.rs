@@ -11,8 +11,11 @@
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::path::Path;
 use std::sync::{Arc, OnceLock, RwLock};
 
+use super::manifest::{ManifestError, PlatformManifest};
+use super::tabular::TabularPlatform;
 use super::{bitfusion::Bitfusion, silago::SiLago, Platform};
 use crate::util::json::{Json, JsonError};
 
@@ -116,27 +119,67 @@ impl From<JsonError> for RegistryError {
     }
 }
 
-type Registry = RwLock<BTreeMap<String, PlatformFactory>>;
+/// Where a registry entry came from — surfaced by
+/// [`known_platforms_with_sources`] so `mohaq platforms` and serve-mode
+/// discovery can tell tenants which names are data-driven.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlatformSource {
+    /// Compiled into the binary (`hw::silago`, `hw::bitfusion`).
+    Builtin,
+    /// Registered from Rust via [`register`].
+    Custom,
+    /// Loaded from a [`PlatformManifest`] (file or `register_manifest`).
+    Manifest,
+}
+
+impl fmt::Display for PlatformSource {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            PlatformSource::Builtin => "builtin",
+            PlatformSource::Custom => "custom",
+            PlatformSource::Manifest => "manifest",
+        })
+    }
+}
+
+struct Entry {
+    factory: PlatformFactory,
+    source: PlatformSource,
+    /// Present iff `source == Manifest`; kept for idempotence checks
+    /// (re-registering the identical manifest is a no-op, a *different*
+    /// manifest under the same name is a collision) and discovery.
+    manifest: Option<PlatformManifest>,
+}
+
+type Registry = RwLock<BTreeMap<String, Entry>>;
 
 fn registry() -> &'static Registry {
     static REGISTRY: OnceLock<Registry> = OnceLock::new();
     REGISTRY.get_or_init(|| {
-        let mut map: BTreeMap<String, PlatformFactory> = BTreeMap::new();
+        let mut map: BTreeMap<String, Entry> = BTreeMap::new();
         map.insert(
             "silago".to_string(),
-            Arc::new(|spec: &PlatformSpec| {
-                // Experiment 2 default: 6 MB DiMArch scratchpad (§5.3).
-                let mb = spec.f64("sram_mb").unwrap_or(6.0);
-                Ok(Arc::new(SiLago::new(Some(mb * 1024.0 * 1024.0))) as SharedPlatform)
-            }),
+            Entry {
+                factory: Arc::new(|spec: &PlatformSpec| {
+                    // Experiment 2 default: 6 MB DiMArch scratchpad (§5.3).
+                    let mb = spec.f64("sram_mb").unwrap_or(6.0);
+                    Ok(Arc::new(SiLago::new(Some(mb * 1024.0 * 1024.0))) as SharedPlatform)
+                }),
+                source: PlatformSource::Builtin,
+                manifest: None,
+            },
         );
         map.insert(
             "bitfusion".to_string(),
-            Arc::new(|spec: &PlatformSpec| {
-                // Experiment 3 default: 2 MB SRAM (§5.4).
-                let mb = spec.f64("sram_mb").unwrap_or(2.0);
-                Ok(Arc::new(Bitfusion::new(Some(mb * 1024.0 * 1024.0))) as SharedPlatform)
-            }),
+            Entry {
+                factory: Arc::new(|spec: &PlatformSpec| {
+                    // Experiment 3 default: 2 MB SRAM (§5.4).
+                    let mb = spec.f64("sram_mb").unwrap_or(2.0);
+                    Ok(Arc::new(Bitfusion::new(Some(mb * 1024.0 * 1024.0))) as SharedPlatform)
+                }),
+                source: PlatformSource::Builtin,
+                manifest: None,
+            },
         );
         RwLock::new(map)
     })
@@ -148,10 +191,77 @@ pub fn register<F>(name: &str, factory: F)
 where
     F: Fn(&PlatformSpec) -> Result<SharedPlatform, RegistryError> + Send + Sync + 'static,
 {
-    registry()
-        .write()
-        .expect("platform registry poisoned")
-        .insert(name.to_lowercase(), Arc::new(factory));
+    registry().write().expect("platform registry poisoned").insert(
+        name.to_lowercase(),
+        Entry { factory: Arc::new(factory), source: PlatformSource::Custom, manifest: None },
+    );
+}
+
+/// The factory a registered manifest resolves through: a
+/// [`TabularPlatform`] rebuilt per spec so the spec-level `sram_mb`
+/// override keeps the built-ins' semantics.
+fn manifest_factory(m: PlatformManifest) -> PlatformFactory {
+    Arc::new(move |spec: &PlatformSpec| {
+        let platform =
+            TabularPlatform::from_manifest(&m).map_err(|e| RegistryError::Invalid(e.to_string()))?;
+        Ok(Arc::new(match spec.f64("sram_mb") {
+            Some(mb) => platform.with_sram_mb(Some(mb)),
+            None => platform,
+        }) as SharedPlatform)
+    })
+}
+
+/// Register a validated manifest as a resolvable platform.
+///
+/// Collision rules: a name held by a built-in or Rust-registered
+/// platform is never shadowed by data ([`ManifestError::Collision`]);
+/// re-registering the *identical* manifest is an idempotent no-op (the
+/// registry is process-global, so startup dirs and tests load the same
+/// files repeatedly); a *different* manifest under a taken name is a
+/// collision.
+pub fn register_manifest(m: &PlatformManifest) -> Result<(), ManifestError> {
+    m.validate()?;
+    let mut map = registry().write().expect("platform registry poisoned");
+    match map.get(&m.name) {
+        Some(existing) if existing.manifest.as_ref() == Some(m) => Ok(()),
+        Some(existing) => Err(ManifestError::Collision {
+            name: m.name.clone(),
+            existing: existing.source.to_string(),
+        }),
+        None => {
+            map.insert(
+                m.name.clone(),
+                Entry {
+                    factory: manifest_factory(m.clone()),
+                    source: PlatformSource::Manifest,
+                    manifest: Some(m.clone()),
+                },
+            );
+            Ok(())
+        }
+    }
+}
+
+/// Load every `*.json` manifest in `dir` (sorted by file name, so
+/// registration order — and any collision reported — is deterministic)
+/// and register each. Returns the registered names in load order.
+pub fn load_manifest_dir(dir: impl AsRef<Path>) -> Result<Vec<String>, ManifestError> {
+    let dir = dir.as_ref();
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| ManifestError::Io(format!("{}: {e}", dir.display())))?;
+    let mut paths: Vec<std::path::PathBuf> = entries
+        .filter_map(Result::ok)
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|ext| ext == "json"))
+        .collect();
+    paths.sort();
+    let mut names = Vec::with_capacity(paths.len());
+    for path in paths {
+        let m = PlatformManifest::load_file(&path)?;
+        register_manifest(&m)?;
+        names.push(m.name);
+    }
+    Ok(names)
 }
 
 /// Resolve a spec into a live platform, or a helpful error naming the
@@ -161,9 +271,40 @@ where
 /// (`min().unwrap()` on the empty iterator) when a custom backend
 /// declared no precisions.
 pub fn resolve(spec: &PlatformSpec) -> Result<SharedPlatform, RegistryError> {
+    // An inline manifest (spec param "manifest") resolves without
+    // touching the global registry — this is how serve-mode tenant
+    // manifests and manifest-carrying config files stay scoped to their
+    // own spec. It may not shadow a built-in or Rust-registered name; it
+    // MAY coincide with a globally registered manifest (the inline copy
+    // wins for this spec, which keeps a tenant's view self-contained).
+    if let Some(mj) = spec.params.get("manifest") {
+        let m = PlatformManifest::from_json(mj)
+            .map_err(|e| RegistryError::Invalid(format!("inline manifest: {e}")))?;
+        if m.name != spec.name.to_lowercase() {
+            return Err(RegistryError::Invalid(format!(
+                "inline manifest names '{}' but the platform entry is '{}'",
+                m.name, spec.name
+            )));
+        }
+        if let Some(source) = source_of(&m.name) {
+            if source != PlatformSource::Manifest {
+                return Err(RegistryError::Invalid(
+                    ManifestError::Collision { name: m.name, existing: source.to_string() }
+                        .to_string(),
+                ));
+            }
+        }
+        let platform = TabularPlatform::from_manifest(&m)
+            .map_err(|e| RegistryError::Invalid(format!("inline manifest: {e}")))?;
+        return Ok(Arc::new(match spec.f64("sram_mb") {
+            Some(mb) => platform.with_sram_mb(Some(mb)),
+            None => platform,
+        }) as SharedPlatform);
+    }
+
     let factory = {
         let map = registry().read().expect("platform registry poisoned");
-        map.get(&spec.name.to_lowercase()).cloned()
+        map.get(&spec.name.to_lowercase()).map(|e| e.factory.clone())
     };
     match factory {
         Some(f) => {
@@ -182,7 +323,8 @@ pub fn resolve(spec: &PlatformSpec) -> Result<SharedPlatform, RegistryError> {
     }
 }
 
-/// Names currently registered, sorted.
+/// Names currently registered, sorted (BTreeMap key order — the listing
+/// is deterministic however registration interleaved).
 pub fn known_platforms() -> Vec<String> {
     registry()
         .read()
@@ -190,6 +332,35 @@ pub fn known_platforms() -> Vec<String> {
         .keys()
         .cloned()
         .collect()
+}
+
+/// Sorted `(name, source)` pairs — the discovery listing behind
+/// `mohaq platforms` and the serve-mode `platforms` request.
+pub fn known_platforms_with_sources() -> Vec<(String, PlatformSource)> {
+    registry()
+        .read()
+        .expect("platform registry poisoned")
+        .iter()
+        .map(|(name, entry)| (name.clone(), entry.source))
+        .collect()
+}
+
+/// The source of a registered name, if any.
+pub fn source_of(name: &str) -> Option<PlatformSource> {
+    registry()
+        .read()
+        .expect("platform registry poisoned")
+        .get(&name.to_lowercase())
+        .map(|e| e.source)
+}
+
+/// The manifest registered under `name`, if that entry is data-driven.
+pub fn manifest_of(name: &str) -> Option<PlatformManifest> {
+    registry()
+        .read()
+        .expect("platform registry poisoned")
+        .get(&name.to_lowercase())
+        .and_then(|e| e.manifest.clone())
 }
 
 #[cfg(test)]
@@ -291,5 +462,115 @@ mod tests {
             PlatformSpec::from_json_str(r#"{"kind": "bitfusion", "sram_mb": 1.5}"#).unwrap();
         assert_eq!(legacy.name, "bitfusion");
         assert_eq!(legacy.f64("sram_mb"), Some(1.5));
+    }
+
+    fn test_manifest(name: &str) -> PlatformManifest {
+        let text = std::fs::read_to_string(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/platforms/silago_lut.json"
+        ))
+        .unwrap();
+        let mut m = PlatformManifest::from_json_str(&text).unwrap();
+        m.name = name.to_string();
+        m
+    }
+
+    #[test]
+    fn register_manifest_is_idempotent_but_rejects_collisions() {
+        let m = test_manifest("reg-manifest-test");
+        register_manifest(&m).unwrap();
+        // Identical re-registration: no-op (the registry is process-global
+        // and manifest dirs get re-loaded by every entry point).
+        register_manifest(&m).unwrap();
+        assert_eq!(source_of("reg-manifest-test"), Some(PlatformSource::Manifest));
+        assert_eq!(manifest_of("reg-manifest-test"), Some(m.clone()));
+
+        // A DIFFERENT manifest under the same name is a collision.
+        let mut other = m.clone();
+        other.sram_mb = Some(1.0);
+        let err = register_manifest(&other).unwrap_err();
+        assert!(matches!(err, ManifestError::Collision { .. }), "{err:?}");
+
+        // Built-in names are never shadowed by data.
+        let mut shadow = m;
+        shadow.name = "silago".into();
+        let err = register_manifest(&shadow).unwrap_err();
+        assert!(err.to_string().contains("builtin"), "{err}");
+
+        // The resolved platform honors the spec-level sram override.
+        let p = resolve(&PlatformSpec::new("reg-manifest-test")).unwrap();
+        assert_eq!(p.sram_bytes(), Some(6.0 * 1024.0 * 1024.0));
+        let p = resolve(&PlatformSpec::new("reg-manifest-test").with_f64("sram_mb", 2.0)).unwrap();
+        assert_eq!(p.sram_bytes(), Some(2.0 * 1024.0 * 1024.0));
+    }
+
+    #[test]
+    fn listing_is_sorted_and_carries_sources() {
+        register_manifest(&test_manifest("zz-listing-test")).unwrap();
+        let listed = known_platforms_with_sources();
+        let names: Vec<&String> = listed.iter().map(|(n, _)| n).collect();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted, "listing must be deterministic (sorted)");
+        assert!(listed
+            .iter()
+            .any(|(n, s)| n == "silago" && *s == PlatformSource::Builtin));
+        assert!(listed
+            .iter()
+            .any(|(n, s)| n == "zz-listing-test" && *s == PlatformSource::Manifest));
+        assert!(known_platforms().contains(&"zz-listing-test".to_string()));
+    }
+
+    #[test]
+    fn inline_manifest_resolves_without_registration() {
+        let m = test_manifest("inline-only-test");
+        let mut spec = PlatformSpec::new("inline-only-test");
+        spec.params.insert("manifest".into(), m.to_json());
+        let p = resolve(&spec).unwrap();
+        assert_eq!(p.name(), "inline-only-test");
+        assert!(p.tied_wa());
+        // The name never reached the global registry.
+        assert_eq!(source_of("inline-only-test"), None);
+
+        // Name mismatch between entry and manifest is rejected.
+        let mut wrong = PlatformSpec::new("other-name");
+        wrong.params.insert("manifest".into(), m.to_json());
+        let err = resolve(&wrong).unwrap_err();
+        assert!(err.to_string().contains("names"), "{err}");
+
+        // Inline manifests may not shadow built-ins.
+        let mut shadow_m = test_manifest("silago");
+        shadow_m.name = "silago".into();
+        let mut shadow = PlatformSpec::new("silago");
+        shadow.params.insert("manifest".into(), shadow_m.to_json());
+        let err = resolve(&shadow).unwrap_err();
+        assert!(err.to_string().contains("already registered"), "{err}");
+
+        // Inline + sram_mb override compose.
+        let mut with_sram = PlatformSpec::new("inline-only-test").with_f64("sram_mb", 3.0);
+        with_sram.params.insert("manifest".into(), m.to_json());
+        let p = resolve(&with_sram).unwrap();
+        assert_eq!(p.sram_bytes(), Some(3.0 * 1024.0 * 1024.0));
+
+        // A malformed inline manifest is an Invalid error, not a panic.
+        let mut bad = PlatformSpec::new("inline-only-test");
+        bad.params.insert("manifest".into(), Json::Str("not an object".into()));
+        let err = resolve(&bad).unwrap_err();
+        assert!(matches!(err, RegistryError::Invalid(_)), "{err:?}");
+    }
+
+    #[test]
+    fn load_manifest_dir_registers_checked_in_platforms() {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/platforms");
+        let names = load_manifest_dir(dir).unwrap();
+        assert_eq!(names, ["bitfusion_lut", "silago_lut"], "sorted by file name");
+        // Idempotent on re-load.
+        assert_eq!(load_manifest_dir(dir).unwrap(), names);
+        assert_eq!(source_of("silago_lut"), Some(PlatformSource::Manifest));
+        let p = resolve(&PlatformSpec::new("bitfusion_lut")).unwrap();
+        assert!(!p.tied_wa());
+        // Missing directory is a typed Io error.
+        let err = load_manifest_dir("/nonexistent-manifest-dir").unwrap_err();
+        assert!(matches!(err, ManifestError::Io(_)), "{err:?}");
     }
 }

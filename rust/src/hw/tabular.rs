@@ -1,0 +1,223 @@
+//! Table-driven `Platform` backend: Eq. 3/Eq. 4 scoring where the
+//! per-precision MAC costs come from a [`PlatformManifest`]'s lookup
+//! tables instead of Rust code (HAQ-style latency tables). Because this
+//! routes through the SAME `eq4_speedup`/`eq3_energy_pj` free functions
+//! as the built-ins, a manifest transcribing a built-in's tables scores
+//! every candidate to the identical f64 — the manifest-vs-builtin
+//! bitwise-front invariant rests on that.
+
+use std::collections::BTreeMap;
+
+use super::manifest::{ManifestError, PlatformManifest};
+use super::{eq3_energy_pj, eq4_speedup, Platform};
+use crate::model::ModelDesc;
+use crate::quant::{Bits, QuantConfig};
+
+#[derive(Debug, Clone)]
+struct EnergyTables {
+    bit_load_pj: f64,
+    fixed_op_pj: f64,
+    mac_pj: BTreeMap<(u32, u32), f64>,
+    /// Conservative fallback for an off-table pair (see `mac_energy`).
+    max_mac_pj: f64,
+}
+
+/// A live platform backed entirely by manifest tables.
+#[derive(Debug, Clone)]
+pub struct TabularPlatform {
+    name: String,
+    tied: bool,
+    bits: Vec<Bits>,
+    speedup: BTreeMap<(u32, u32), f64>,
+    energy: Option<EnergyTables>,
+    sram_bytes: Option<f64>,
+}
+
+impl TabularPlatform {
+    /// Build from a manifest, re-validating it (hand-assembled manifests
+    /// get the same strictness as loaded ones).
+    pub fn from_manifest(m: &PlatformManifest) -> Result<TabularPlatform, ManifestError> {
+        m.validate()?;
+        Ok(TabularPlatform {
+            name: m.name.clone(),
+            tied: m.tied_wa,
+            bits: m.supported_bits.clone(),
+            speedup: m.speedup.clone(),
+            energy: m.energy.as_ref().map(|e| EnergyTables {
+                bit_load_pj: e.bit_load_pj,
+                fixed_op_pj: e.fixed_op_pj,
+                mac_pj: e.mac_pj.clone(),
+                max_mac_pj: e.mac_pj.values().cloned().fold(0.0, f64::max),
+            }),
+            sram_bytes: m.sram_mb.map(|mb| mb * 1024.0 * 1024.0),
+        })
+    }
+
+    /// Override the SRAM capacity (the spec-level `sram_mb` parameter,
+    /// same semantics as the built-ins' factories).
+    pub fn with_sram_mb(mut self, mb: Option<f64>) -> TabularPlatform {
+        self.sram_bytes = mb.map(|mb| mb * 1024.0 * 1024.0);
+        self
+    }
+
+    /// Per-op speedup for a precision pair. Validation guarantees the
+    /// table covers every pair a genome over `supported_bits` can
+    /// produce, so a miss only happens for configs the search would
+    /// never emit (e.g. a driver scoring a hand-built 2-bit config on a
+    /// {4,8,16} platform); fall back to the 1.0 baseline rather than
+    /// panic.
+    fn mac_speedup(&self, w: Bits, a: Bits) -> f64 {
+        let (w, a) = self.effective_pair(w, a);
+        self.speedup.get(&(w, a)).copied().unwrap_or(1.0)
+    }
+
+    /// Same contract as `mac_speedup`; the off-table fallback is the
+    /// most expensive MAC in the table (conservative for an energy
+    /// objective being minimized).
+    fn mac_energy(&self, e: &EnergyTables, w: Bits, a: Bits) -> f64 {
+        let (w, a) = self.effective_pair(w, a);
+        e.mac_pj.get(&(w, a)).copied().unwrap_or(e.max_mac_pj)
+    }
+
+    /// A tied-W=A platform runs the whole layer at the weight precision
+    /// (the built-in SiLago model indexes its tables by W alone), so a
+    /// mixed pair degrades to the diagonal entry.
+    fn effective_pair(&self, w: Bits, a: Bits) -> (u32, u32) {
+        if self.tied {
+            (w.bits(), w.bits())
+        } else {
+            (w.bits(), a.bits())
+        }
+    }
+}
+
+impl Platform for TabularPlatform {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn supported_bits(&self) -> &[Bits] {
+        &self.bits
+    }
+
+    fn tied_wa(&self) -> bool {
+        self.tied
+    }
+
+    fn has_energy_model(&self) -> bool {
+        self.energy.is_some()
+    }
+
+    fn speedup(&self, model: &ModelDesc, qc: &QuantConfig) -> f64 {
+        eq4_speedup(model, qc, |w, a| self.mac_speedup(w, a))
+    }
+
+    fn energy_pj(&self, model: &ModelDesc, qc: &QuantConfig) -> Option<f64> {
+        self.energy.as_ref().map(|e| {
+            eq3_energy_pj(model, qc, e.bit_load_pj, |w, a| self.mac_energy(e, w, a), e.fixed_op_pj)
+        })
+    }
+
+    fn sram_bytes(&self) -> Option<f64> {
+        self.sram_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::{bitfusion::Bitfusion, silago::SiLago};
+
+    fn load(file: &str) -> PlatformManifest {
+        let path = format!("{}/platforms/{file}", env!("CARGO_MANIFEST_DIR"));
+        PlatformManifest::load_file(path).unwrap()
+    }
+
+    /// Every tied config over {4,8,16} on the paper model.
+    fn tied_configs(model: &ModelDesc) -> Vec<QuantConfig> {
+        let layers = model.layers.len();
+        let choices = [Bits::B4, Bits::B8, Bits::B16];
+        // Enumerate a deterministic spread rather than the full 3^L grid:
+        // uniform configs plus rotations mixing all three precisions.
+        let mut configs: Vec<QuantConfig> = choices
+            .iter()
+            .map(|b| QuantConfig::uniform(layers, *b, *b))
+            .collect();
+        for offset in 0..3 {
+            let w: Vec<Bits> = (0..layers).map(|i| choices[(i + offset) % 3]).collect();
+            configs.push(QuantConfig { w_bits: w.clone(), a_bits: w });
+        }
+        configs
+    }
+
+    #[test]
+    fn silago_manifest_scores_bitwise_like_builtin() {
+        let p = TabularPlatform::from_manifest(&load("silago_lut.json")).unwrap();
+        let builtin = SiLago::paper_experiment();
+        let model = ModelDesc::paper();
+        assert_eq!(p.sram_bytes(), builtin.sram_bytes());
+        assert!(p.tied_wa());
+        assert!(p.has_energy_model());
+        for qc in tied_configs(&model) {
+            assert_eq!(
+                p.speedup(&model, &qc).to_bits(),
+                builtin.speedup(&model, &qc).to_bits(),
+                "speedup diverged on {qc:?}"
+            );
+            assert_eq!(
+                p.energy_pj(&model, &qc).unwrap().to_bits(),
+                builtin.energy_pj(&model, &qc).unwrap().to_bits(),
+                "energy diverged on {qc:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn bitfusion_manifest_scores_bitwise_like_builtin() {
+        let p = TabularPlatform::from_manifest(&load("bitfusion_lut.json")).unwrap();
+        let builtin = Bitfusion::paper_experiment();
+        let model = ModelDesc::paper();
+        assert_eq!(p.sram_bytes(), builtin.sram_bytes());
+        assert!(!p.tied_wa());
+        assert_eq!(p.energy_pj(&model, &QuantConfig::uniform(model.layers.len(), Bits::B8, Bits::B8)), None);
+        let layers = model.layers.len();
+        let mut configs = Vec::new();
+        for w in Bits::SEARCHABLE {
+            for a in Bits::SEARCHABLE {
+                configs.push(QuantConfig::uniform(layers, w, a));
+            }
+        }
+        for offset in 0..4 {
+            let w: Vec<Bits> =
+                (0..layers).map(|i| Bits::SEARCHABLE[(i + offset) % 4]).collect();
+            let a: Vec<Bits> =
+                (0..layers).map(|i| Bits::SEARCHABLE[(i + offset + 1) % 4]).collect();
+            configs.push(QuantConfig { w_bits: w, a_bits: a });
+        }
+        for qc in configs {
+            assert_eq!(
+                p.speedup(&model, &qc).to_bits(),
+                builtin.speedup(&model, &qc).to_bits(),
+                "speedup diverged on {qc:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn sram_override_matches_builtin_convention() {
+        let p = TabularPlatform::from_manifest(&load("silago_lut.json"))
+            .unwrap()
+            .with_sram_mb(Some(1.5));
+        assert_eq!(p.sram_bytes(), Some(1.5 * 1024.0 * 1024.0));
+    }
+
+    #[test]
+    fn off_table_lookups_fall_back_instead_of_panicking() {
+        let p = TabularPlatform::from_manifest(&load("silago_lut.json")).unwrap();
+        let model = ModelDesc::paper();
+        // 2-bit is outside the manifest's {4,8,16} grid.
+        let qc = QuantConfig::uniform(model.layers.len(), Bits::B2, Bits::B2);
+        assert!(p.speedup(&model, &qc).is_finite());
+        assert!(p.energy_pj(&model, &qc).unwrap().is_finite());
+    }
+}

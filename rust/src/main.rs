@@ -33,6 +33,7 @@ commands:
   info        artifact bundle summary
   table4      model op/param breakdown (paper Table 4)
   platforms   list registered hardware platforms
+  platform    platform-manifest tooling (mohaq platform lint FILE|DIR...)
   eval        score one quantization config
   search      run a full experiment through a SearchSession
   serve       long-lived search service over a shared session (TCP)
@@ -41,9 +42,22 @@ commands:
   help        show this message
 
 global options:
-  --artifacts DIR   artifact bundle directory (default: artifacts)
+  --artifacts DIR     artifact bundle directory (default: artifacts)
+  --platform-dir DIR  load every *.json platform manifest in DIR into the
+                      registry before running (platforms / search / serve
+                      / worker; see DESIGN.md 'Platform manifests')
 
 run `mohaq <command> --help` for per-command options.";
+
+const PLATFORM_USAGE: &str = "\
+usage: mohaq platform lint [FILE|DIR ...]
+
+Validate platform manifest files (default target: platforms/). Each
+FILE is parsed and schema-checked; each DIR contributes its *.json
+files in sorted order. A manifest that passes prints its resolved
+capability summary (precisions, tied-W=A, SRAM, energy model, sample
+best-case speedup on the paper model); any failure prints its typed
+error and the command exits non-zero.";
 
 const EVAL_USAGE: &str = "\
 usage: mohaq eval --w BITS[,BITS...] [--a BITS[,BITS...]] [--artifacts DIR]
@@ -73,6 +87,11 @@ options:
   --threads N       evaluation worker threads (0 = one per core; the
                     front is identical for any value)
   --out DIR         write front.csv / records.csv to DIR
+  --synthetic       evaluate on the hermetic surrogate evaluator even if
+                    an artifact bundle exists (deterministic, offline —
+                    what the CI smoke jobs run)
+  --platform-dir D  load every *.json manifest in D into the platform
+                    registry first, so --platforms/--config can name them
 
 cross-platform search (one front scored on several platforms at once):
   --platforms A,B   registry platforms to bind (e.g. silago,bitfusion);
@@ -233,6 +252,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("{SERVE_USAGE}");
         return Ok(());
     }
+    load_platform_dir(args)?;
     let dir = args.get_or("artifacts", "artifacts");
     let session = if std::path::Path::new(dir).join("manifest.json").exists() {
         let arts = Arc::new(mohaq::runtime::Artifacts::load(dir)?);
@@ -267,6 +287,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
         println!("{WORKER_USAGE}");
         return Ok(());
     }
+    load_platform_dir(args)?;
     let dir = args.get_or("artifacts", "artifacts");
     let session = if std::path::Path::new(dir).join("manifest.json").exists() {
         let arts = Arc::new(mohaq::runtime::Artifacts::load(dir)?);
@@ -360,13 +381,29 @@ fn cmd_table4(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_platforms() -> Result<()> {
+/// Apply `--platform-dir DIR`: load every manifest in DIR into the
+/// process registry. Announced on stderr so commands with machine-read
+/// stdout (the worker announce line) stay clean.
+fn load_platform_dir(args: &Args) -> Result<()> {
+    if let Some(dir) = args.get("platform-dir") {
+        let names = registry::load_manifest_dir(dir).map_err(|e| anyhow::anyhow!("{e}"))?;
+        eprintln!("loaded {} platform manifest(s) from {dir}: {}", names.len(), names.join(", "));
+    }
+    Ok(())
+}
+
+fn cmd_platforms(args: &Args) -> Result<()> {
+    load_platform_dir(args)?;
     println!("registered platforms (hw::registry):");
-    for name in registry::known_platforms() {
+    for (name, source) in registry::known_platforms_with_sources() {
         let p = registry::resolve(&registry::PlatformSpec::new(&name))
             .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let marker = match source {
+            registry::PlatformSource::Builtin => String::new(),
+            other => format!("  (source: {other})"),
+        };
         println!(
-            "  {name:<12} tied W=A: {:<5}  energy model: {:<5}  default SRAM: {}",
+            "  {name:<14} tied W=A: {:<5}  energy model: {:<5}  default SRAM: {}{marker}",
             p.tied_wa(),
             p.has_energy_model(),
             p.sram_bytes()
@@ -374,8 +411,77 @@ fn cmd_platforms() -> Result<()> {
                 .unwrap_or_else(|| "-".into()),
         );
     }
-    println!("\nregister custom backends via mohaq::hw::registry::register");
-    println!("(see examples/custom_platform.rs)");
+    println!("\nregister custom backends via mohaq::hw::registry::register,");
+    println!("or load manifest files with --platform-dir DIR / register_manifest");
+    println!("(see examples/custom_platform.rs and examples/manifest_platform.rs)");
+    Ok(())
+}
+
+/// `mohaq platform lint [FILE|DIR ...]` — validate manifests and print
+/// their resolved capability summaries.
+fn cmd_platform(args: &Args) -> Result<()> {
+    if args.has("help") {
+        println!("{PLATFORM_USAGE}");
+        return Ok(());
+    }
+    let sub = args.positional.get(1).map(|s| s.as_str());
+    anyhow::ensure!(
+        sub == Some("lint"),
+        "unknown platform subcommand {:?}\n\n{PLATFORM_USAGE}",
+        sub.unwrap_or("<none>")
+    );
+    let mut targets: Vec<String> = args.positional[2..].to_vec();
+    if targets.is_empty() {
+        targets.push("platforms".into());
+    }
+    // Expand directories to their sorted *.json files so the report
+    // order is deterministic.
+    let mut files: Vec<std::path::PathBuf> = Vec::new();
+    for t in &targets {
+        let path = std::path::Path::new(t);
+        if path.is_dir() {
+            let mut batch: Vec<std::path::PathBuf> = std::fs::read_dir(path)
+                .with_context(|| format!("reading directory {t}"))?
+                .filter_map(|e| e.ok().map(|e| e.path()))
+                .filter(|p| p.extension().is_some_and(|ext| ext == "json"))
+                .collect();
+            batch.sort();
+            anyhow::ensure!(!batch.is_empty(), "{t} contains no *.json manifest files");
+            files.extend(batch);
+        } else {
+            files.push(path.to_path_buf());
+        }
+    }
+    let model = mohaq::model::ModelDesc::paper();
+    let mut failures = 0usize;
+    for file in &files {
+        match mohaq::hw::PlatformManifest::load_file(file) {
+            Err(e) => {
+                failures += 1;
+                eprintln!("FAIL {}: {e}", file.display());
+            }
+            Ok(m) => {
+                // from_manifest re-validates; with the load green it
+                // cannot fail, but route the error anyway.
+                let p = mohaq::hw::TabularPlatform::from_manifest(&m)
+                    .map_err(|e| anyhow::anyhow!("{}: {e}", file.display()))?;
+                let best_bits = m.supported_bits[0];
+                let qc = QuantConfig::uniform(model.layers.len(), best_bits, best_bits);
+                println!("OK   {}: {}", file.display(), m.summary());
+                println!(
+                    "       paper-model speedup at uniform {}-bit: {:.2}x",
+                    best_bits.bits(),
+                    p.speedup(&model, &qc)
+                );
+            }
+        }
+    }
+    anyhow::ensure!(
+        failures == 0,
+        "{failures} of {} manifest(s) failed validation",
+        files.len()
+    );
+    println!("platform lint: {} manifest(s) OK", files.len());
     Ok(())
 }
 
@@ -527,12 +633,16 @@ fn cmd_search(args: &Args) -> Result<()> {
         println!("{SEARCH_USAGE}");
         return Ok(());
     }
+    load_platform_dir(args)?;
     let dir = args.get_or("artifacts", "artifacts");
     let distributed = args.get("workers").is_some() || args.get("spawn-workers").is_some();
-    // Distributed runs fall back to the surrogate evaluator without a
-    // bundle (matching serve/worker) so the whole stack works offline;
-    // local runs keep the hard artifact requirement.
-    let session = if !std::path::Path::new(dir).join("manifest.json").exists() && distributed {
+    // --synthetic forces the surrogate; distributed runs fall back to it
+    // without a bundle (matching serve/worker) so the whole stack works
+    // offline; other local runs keep the hard artifact requirement.
+    let session = if args.has("synthetic") {
+        println!("searching the hermetic surrogate evaluator (--synthetic)");
+        SearchSession::synthetic()?
+    } else if !std::path::Path::new(dir).join("manifest.json").exists() && distributed {
         println!("no artifact bundle at {dir}; searching the hermetic surrogate evaluator");
         SearchSession::synthetic()?
     } else {
@@ -686,7 +796,8 @@ fn main() -> Result<()> {
     match cmd {
         "info" => cmd_info(&args),
         "table4" => cmd_table4(&args),
-        "platforms" => cmd_platforms(),
+        "platforms" => cmd_platforms(&args),
+        "platform" => cmd_platform(&args),
         "eval" => cmd_eval(&args),
         "search" => cmd_search(&args),
         "serve" => cmd_serve(&args),

@@ -6,8 +6,9 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
 
-use super::protocol::{Frame, FrontRow, Request, ServerStats};
+use super::protocol::{Frame, FrontRow, PlatformInfo, Request, ServerStats};
 use crate::coordinator::ExperimentSpec;
+use crate::hw::manifest::PlatformManifest;
 
 /// Client-side failure classes.
 #[derive(Debug)]
@@ -122,6 +123,38 @@ impl ServeClient {
         match self.read_frame()? {
             Frame::Bye => Ok(()),
             other => Err(ClientError::Protocol(format!("expected bye, got {other:?}"))),
+        }
+    }
+
+    /// Register a platform manifest for THIS connection (tenant-scoped:
+    /// other connections never see it). Returns the registered name; a
+    /// rejected manifest — invalid, or colliding with a server-side
+    /// platform — comes back as `ClientError::Server { kind: "manifest" }`.
+    pub fn register_platform(
+        &mut self,
+        manifest: &PlatformManifest,
+    ) -> Result<String, ClientError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.send(&Request::RegisterPlatform { id, manifest: manifest.to_json() })?;
+        match self.read_frame()? {
+            Frame::PlatformRegistered { id: fid, name } if fid == id => Ok(name),
+            Frame::Error { id: fid, kind, message } if fid == Some(id) || fid.is_none() => {
+                Err(ClientError::Server { kind, message })
+            }
+            other => {
+                Err(ClientError::Protocol(format!("expected platform_registered, got {other:?}")))
+            }
+        }
+    }
+
+    /// List the platforms resolvable on this connection: the server's
+    /// global registry plus this connection's tenant manifests.
+    pub fn platforms(&mut self) -> Result<Vec<PlatformInfo>, ClientError> {
+        self.send(&Request::Platforms)?;
+        match self.read_frame()? {
+            Frame::Platforms { platforms } => Ok(platforms),
+            other => Err(ClientError::Protocol(format!("expected platforms, got {other:?}"))),
         }
     }
 

@@ -39,7 +39,7 @@ pub mod server;
 
 pub use client::{ClientError, SearchReply, ServeClient};
 pub use protocol::{
-    Frame, FrontRow, HwEntry, IncomingMigrants, Request, ServerStats, ShardElites,
-    ShardMigration, ShardPop, ShardStats,
+    Frame, FrontRow, HwEntry, IncomingMigrants, PlatformInfo, Request, ServerStats,
+    ShardElites, ShardMigration, ShardPop, ShardStats,
 };
 pub use server::{ServeState, Server};

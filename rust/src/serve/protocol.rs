@@ -56,6 +56,16 @@ pub enum Request {
     Ping,
     /// Stop the server once outstanding work is cancelled.
     Shutdown,
+    /// Register a platform manifest (`hw::manifest` JSON) scoped to THIS
+    /// connection's tenant: later `search` requests on the connection may
+    /// name it in their platform table and objective bindings. Rejected
+    /// (typed `"manifest"` error frame) on schema violations or a name
+    /// collision with a globally registered platform; never touches the
+    /// global registry.
+    RegisterPlatform { id: u64, manifest: Json },
+    /// List the platforms this connection may bind objectives to: the
+    /// global registry plus the tenant's own registered manifests.
+    Platforms,
     /// Coordinator → worker: own these global island indices of the
     /// search described by `spec`. `restore` carries post-migration
     /// snapshots when the shard replays work a lost worker had done
@@ -319,6 +329,12 @@ impl Request {
             Request::Stats => obj(vec![("op", "stats".into())]),
             Request::Ping => obj(vec![("op", "ping".into())]),
             Request::Shutdown => obj(vec![("op", "shutdown".into())]),
+            Request::RegisterPlatform { id, manifest } => obj(vec![
+                ("op", "register_platform".into()),
+                ("id", (*id as usize).into()),
+                ("manifest", manifest.clone()),
+            ]),
+            Request::Platforms => obj(vec![("op", "platforms".into())]),
             Request::ShardAssign { id, spec, islands, base_gen, restore } => obj(vec![
                 ("op", "shard_assign".into()),
                 ("id", (*id as usize).into()),
@@ -398,6 +414,14 @@ impl Request {
             "stats" => Ok(Request::Stats),
             "ping" => Ok(Request::Ping),
             "shutdown" => Ok(Request::Shutdown),
+            "register_platform" => {
+                let manifest = j.get("manifest").cloned().ok_or_else(|| ProtocolError {
+                    id,
+                    message: "'register_platform' needs a 'manifest'".into(),
+                })?;
+                Ok(Request::RegisterPlatform { id: need_id(id)?, manifest })
+            }
+            "platforms" => Ok(Request::Platforms),
             "shard_assign" => {
                 let spec = j.get("spec").cloned().ok_or_else(|| ProtocolError {
                     id,
@@ -553,6 +577,16 @@ impl FrontRow {
     }
 }
 
+/// One entry of the `platforms` discovery reply. `source` is the
+/// registry's [`PlatformSource`](crate::hw::registry::PlatformSource)
+/// rendering (`builtin` / `custom` / `manifest`), or `manifest (tenant)`
+/// for a manifest registered on this connection.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlatformInfo {
+    pub name: String,
+    pub source: String,
+}
+
 /// Server-level counter snapshot (the `stats` reply).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ServerStats {
@@ -613,6 +647,11 @@ pub enum Frame {
     Stats(ServerStats),
     Pong,
     Bye,
+    /// Ack of `register_platform`, echoing the (normalized) name the
+    /// connection's searches may now bind objectives to.
+    PlatformRegistered { id: u64, name: String },
+    /// Reply to the `platforms` op: sorted discovery listing.
+    Platforms { platforms: Vec<PlatformInfo> },
     /// Worker ack of `shard_assign`, echoing the owned global indices.
     ShardAssigned { id: u64, islands: Vec<usize> },
     /// Worker reply to `run_islands`: this shard's elites at a boundary.
@@ -764,6 +803,28 @@ impl Frame {
             ]),
             Frame::Pong => obj(vec![("event", "pong".into())]),
             Frame::Bye => obj(vec![("event", "bye".into())]),
+            Frame::PlatformRegistered { id, name } => obj(vec![
+                ("event", "platform_registered".into()),
+                ("id", uid(*id)),
+                ("name", name.as_str().into()),
+            ]),
+            Frame::Platforms { platforms } => obj(vec![
+                ("event", "platforms".into()),
+                (
+                    "platforms",
+                    Json::Arr(
+                        platforms
+                            .iter()
+                            .map(|p| {
+                                obj(vec![
+                                    ("name", p.name.as_str().into()),
+                                    ("source", p.source.as_str().into()),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
             Frame::ShardAssigned { id, islands } => obj(vec![
                 ("event", "shard_assigned".into()),
                 ("id", uid(*id)),
@@ -938,6 +999,26 @@ impl Frame {
             }),
             "pong" => Frame::Pong,
             "bye" => Frame::Bye,
+            "platform_registered" => Frame::PlatformRegistered {
+                id: id()?,
+                name: j.get("name").and_then(Json::as_str).unwrap_or_default().to_string(),
+            },
+            "platforms" => Frame::Platforms {
+                platforms: j
+                    .get("platforms")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|p| PlatformInfo {
+                        name: p.get("name").and_then(Json::as_str).unwrap_or_default().to_string(),
+                        source: p
+                            .get("source")
+                            .and_then(Json::as_str)
+                            .unwrap_or_default()
+                            .to_string(),
+                    })
+                    .collect(),
+            },
             "shard_assigned" => Frame::ShardAssigned {
                 id: id()?,
                 islands: j.get("islands").and_then(Json::usize_vec).unwrap_or_default(),
@@ -1074,6 +1155,43 @@ mod tests {
             }),
             Frame::Pong,
             Frame::Bye,
+        ];
+        for f in frames {
+            let line = f.to_line();
+            assert!(!line.contains('\n'), "one frame per line: {line}");
+            assert_eq!(Frame::parse(&line).unwrap(), f, "{line}");
+        }
+    }
+
+    #[test]
+    fn platform_ops_round_trip() {
+        let manifest = crate::util::json::obj(vec![
+            ("format_version", 1.0.into()),
+            ("name", "lut-test".into()),
+        ]);
+        let reqs = vec![
+            Request::RegisterPlatform { id: 5, manifest },
+            Request::Platforms,
+        ];
+        for r in reqs {
+            let line = r.to_line();
+            assert!(!line.contains('\n'), "one frame per line: {line}");
+            assert_eq!(Request::parse(&line).unwrap(), r, "{line}");
+        }
+        let e = Request::parse(r#"{"op":"register_platform","id":5}"#).unwrap_err();
+        assert!(e.message.contains("manifest"), "{e}");
+        let e = Request::parse(r#"{"op":"register_platform","manifest":{}}"#).unwrap_err();
+        assert!(e.message.contains("id"), "{e}");
+
+        let frames = vec![
+            Frame::PlatformRegistered { id: 5, name: "lut-test".into() },
+            Frame::Platforms {
+                platforms: vec![
+                    PlatformInfo { name: "bitfusion".into(), source: "builtin".into() },
+                    PlatformInfo { name: "lut-test".into(), source: "manifest (tenant)".into() },
+                ],
+            },
+            Frame::Platforms { platforms: vec![] },
         ];
         for f in frames {
             let line = f.to_line();

@@ -24,15 +24,18 @@
 //! `error` frame (`kind: "panic"`), and malformed input yields
 //! `kind: "protocol"` frames — the connection stays up either way.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use super::protocol::{event_frame, front_frame, Frame, Request, ServerStats};
+use super::protocol::{event_frame, front_frame, Frame, PlatformInfo, Request, ServerStats};
 use crate::coordinator::{CancelToken, ExperimentSpec, SearchSession};
+use crate::hw::manifest::{ManifestError, PlatformManifest};
+use crate::hw::registry;
+use crate::util::json::{obj, Json};
 use crate::util::pool::{panic_message, relock, WorkQueue};
 
 /// How often idle connection readers wake to check for server shutdown.
@@ -302,6 +305,72 @@ fn run_search(
     }
 }
 
+/// Inject a connection's tenant manifests into a raw search spec:
+/// platform-table entries naming a tenant platform gain an inline
+/// `"manifest"` parameter (unless the client inlined its own), and
+/// `metric@name` objective bindings referencing a tenant platform absent
+/// from the table get an entry appended. By the time
+/// `ExperimentSpec::from_json` resolves the spec against the registry,
+/// every tenant reference is self-contained — the GLOBAL registry is
+/// never touched, which is the whole tenant-isolation contract.
+fn inline_tenant_manifests(spec: Json, tenant: &BTreeMap<String, PlatformManifest>) -> Json {
+    if tenant.is_empty() {
+        return spec;
+    }
+    let mut top = match spec {
+        Json::Obj(t) => t,
+        other => return other, // not an object: the spec parser will say so
+    };
+    let entry_name = |e: &Json| {
+        e.get("name").or_else(|| e.get("kind")).and_then(Json::as_str).map(str::to_lowercase)
+    };
+    let covered: BTreeSet<String> = top
+        .get("platforms")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(entry_name)
+        .collect();
+    // Tenant platforms referenced only through objective bindings.
+    let missing: BTreeSet<String> = top
+        .get("objectives")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(Json::as_str)
+        .filter_map(|o| o.rsplit_once('@').map(|(_, p)| p.trim().to_lowercase()))
+        .filter(|p| tenant.contains_key(p) && !covered.contains(p))
+        .collect();
+    if let Some(Json::Arr(entries)) = top.get_mut("platforms") {
+        for e in entries.iter_mut() {
+            let Some(name) = entry_name(e) else { continue };
+            let Some(m) = tenant.get(&name) else { continue };
+            if let Json::Obj(o) = e {
+                let has_inline = o.contains_key("manifest")
+                    || o.get("params").and_then(|p| p.get("manifest")).is_some();
+                if !has_inline {
+                    o.insert("manifest".into(), m.to_json());
+                }
+            }
+        }
+    }
+    if !missing.is_empty() {
+        let new_entries: Vec<Json> = missing
+            .iter()
+            .map(|name| {
+                obj(vec![("name", name.as_str().into()), ("manifest", tenant[name].to_json())])
+            })
+            .collect();
+        match top.get_mut("platforms") {
+            Some(Json::Arr(arr)) => arr.extend(new_entries),
+            _ => {
+                top.insert("platforms".into(), Json::Arr(new_entries));
+            }
+        }
+    }
+    Json::Obj(top)
+}
+
 /// The request id of a shard op (the dist ops all carry one).
 fn shard_request_id(req: &Request) -> Option<u64> {
     match req {
@@ -338,6 +407,10 @@ fn handle_connection(stream: TcpStream, state: Arc<ServeState>, server_addr: Soc
     // connection, which is what frees a shard when a coordinator
     // re-shards after a loss.
     let mut shard: Option<crate::dist::worker::ShardSession> = None;
+    // Tenant platform registry: manifests registered on THIS connection
+    // only. Dropped with the connection; never written to the process
+    // registry, so tenants cannot see (or shadow) each other's platforms.
+    let mut tenant: BTreeMap<String, PlatformManifest> = BTreeMap::new();
 
     'conn: loop {
         // read_until may return a timeout mid-line; `buf` keeps the
@@ -415,6 +488,71 @@ fn handle_connection(stream: TcpStream, state: Arc<ServeState>, server_addr: Soc
                 let _ = TcpStream::connect(nudge_addr(server_addr));
                 break 'conn;
             }
+            Ok(Request::RegisterPlatform { id, manifest }) => {
+                match PlatformManifest::from_json(&manifest) {
+                    Err(e) => {
+                        send(
+                            &writer,
+                            &Frame::Error {
+                                id: Some(id),
+                                kind: "manifest".into(),
+                                message: e.to_string(),
+                            },
+                        );
+                    }
+                    Ok(m) => {
+                        if let Some(source) = registry::source_of(&m.name) {
+                            // Built-in / custom / globally loaded names
+                            // are off limits: a tenant must not shadow
+                            // what other connections resolve by name.
+                            let e = ManifestError::Collision {
+                                name: m.name.clone(),
+                                existing: source.to_string(),
+                            };
+                            send(
+                                &writer,
+                                &Frame::Error {
+                                    id: Some(id),
+                                    kind: "manifest".into(),
+                                    message: e.to_string(),
+                                },
+                            );
+                        } else if tenant.get(&m.name).is_some_and(|prev| prev != &m) {
+                            send(
+                                &writer,
+                                &Frame::Error {
+                                    id: Some(id),
+                                    kind: "manifest".into(),
+                                    message: format!(
+                                        "platform '{}' is already registered on this \
+                                         connection with different contents",
+                                        m.name
+                                    ),
+                                },
+                            );
+                        } else {
+                            // Identical re-registration is an idempotent
+                            // ack; a rejected one (above) leaves `tenant`
+                            // untouched.
+                            let name = m.name.clone();
+                            tenant.insert(name.clone(), m);
+                            send(&writer, &Frame::PlatformRegistered { id, name });
+                        }
+                    }
+                }
+            }
+            Ok(Request::Platforms) => {
+                let mut platforms: Vec<PlatformInfo> = registry::known_platforms_with_sources()
+                    .into_iter()
+                    .map(|(name, source)| PlatformInfo { name, source: source.to_string() })
+                    .collect();
+                platforms.extend(tenant.keys().map(|name| PlatformInfo {
+                    name: name.clone(),
+                    source: "manifest (tenant)".into(),
+                }));
+                platforms.sort_by(|a, b| a.name.cmp(&b.name));
+                send(&writer, &Frame::Platforms { platforms });
+            }
             Ok(
                 req @ (Request::ShardAssign { .. }
                 | Request::RunIslands { .. }
@@ -467,8 +605,11 @@ fn handle_connection(stream: TcpStream, state: Arc<ServeState>, server_addr: Soc
                     );
                     continue;
                 }
-                // Parse server-side so validation failures come back as
-                // typed error frames tagged with the request id.
+                // Self-contain any references to this connection's tenant
+                // platforms, then parse server-side so validation
+                // failures come back as typed error frames tagged with
+                // the request id.
+                let spec = inline_tenant_manifests(spec, &tenant);
                 let spec = match ExperimentSpec::from_json(&spec) {
                     Ok(s) => s,
                     Err(e) => {

@@ -1,0 +1,147 @@
+//! Platform-manifest integration tests — the tentpole acceptance
+//! criterion lives here: a search bound to the checked-in
+//! SiLago-equivalent manifest (`platforms/silago_lut.json`) produces a
+//! front BITWISE-identical to the built-in `silago` platform at the same
+//! seed/thread/island configuration. Same for the Bitfusion pair
+//! (untied genome). Everything runs on the hermetic surrogate evaluator,
+//! so the suite needs no artifact bundle — the `manifest-smoke` CI job
+//! re-checks the SiLago equivalence end to end through the release
+//! binary.
+
+use mohaq::coordinator::{ExperimentSpec, ScoredObjective, SearchSession, SolutionRow};
+use mohaq::hw::registry;
+use mohaq::hw::PlatformManifest;
+use mohaq::util::json::Json;
+
+fn manifest_path(file: &str) -> String {
+    format!("{}/platforms/{file}", env!("CARGO_MANIFEST_DIR"))
+}
+
+/// Load and globally register both checked-in manifests (idempotent:
+/// `register_manifest` accepts identical re-registration, so every test
+/// in this binary can call this).
+fn register_checked_in() {
+    for file in ["silago_lut.json", "bitfusion_lut.json"] {
+        let m = PlatformManifest::load_file(manifest_path(file)).unwrap();
+        registry::register_manifest(&m).unwrap();
+    }
+}
+
+/// The acceptance spec shape: island-model GA with energy + speedup
+/// objectives, parameterized only by the platform name. The widened
+/// feasibility area keeps the surrogate front non-empty at this seed;
+/// `sram_mb` (when given) exercises the spec-level override on BOTH the
+/// builtin factory and the manifest-backed one.
+fn spec(platform: &str, energy: bool, sram_mb: Option<f64>) -> ExperimentSpec {
+    let mut b = ExperimentSpec::builder()
+        .name(format!("manifest-accept-{platform}"))
+        .platform(platform)
+        .objective(ScoredObjective::error())
+        .objective(ScoredObjective::neg_speedup())
+        .pop_size(16)
+        .initial_pop_size(32)
+        .generations(8)
+        .seed(0x10_117)
+        .islands(2)
+        .migration_interval(2)
+        .err_feasible_pp(30.0);
+    if let Some(mb) = sram_mb {
+        b = b.sram_mb(mb);
+    }
+    if energy {
+        b = b.objective(ScoredObjective::energy_uj());
+    }
+    b.build().unwrap()
+}
+
+/// Bitwise front equality, ignoring the platform LABELS (the manifest
+/// platform has a different name, so `hw[i].platform` legitimately
+/// differs; every number must not).
+fn assert_fronts_bitwise_equal(lut: &[SolutionRow], builtin: &[SolutionRow]) {
+    assert!(!lut.is_empty(), "manifest-platform front is empty");
+    assert_eq!(lut.len(), builtin.len(), "front sizes diverged");
+    for (a, b) in lut.iter().zip(builtin) {
+        assert_eq!(a.qc.display_wa(), b.qc.display_wa(), "genomes diverged");
+        assert_eq!(a.wer_v.to_bits(), b.wer_v.to_bits(), "wer_v diverged");
+        assert_eq!(a.wer_t.to_bits(), b.wer_t.to_bits(), "wer_t diverged");
+        assert_eq!(a.size_mb.to_bits(), b.size_mb.to_bits(), "size diverged");
+        assert_eq!(a.hw.len(), b.hw.len());
+        for (ha, hb) in a.hw.iter().zip(&b.hw) {
+            assert_eq!(ha.speedup.to_bits(), hb.speedup.to_bits(), "speedup diverged");
+            match (ha.energy_uj, hb.energy_uj) {
+                (Some(x), Some(y)) => assert_eq!(x.to_bits(), y.to_bits(), "energy diverged"),
+                (x, y) => assert_eq!(x.is_some(), y.is_some(), "energy presence diverged"),
+            }
+        }
+    }
+}
+
+fn run(spec: &ExperimentSpec) -> Vec<SolutionRow> {
+    SearchSession::synthetic().unwrap().threads(2).run(spec).unwrap().rows
+}
+
+/// THE acceptance test: checked-in SiLago-equivalent manifest == builtin
+/// silago, bit for bit, through the full island search.
+#[test]
+fn silago_manifest_search_front_is_bitwise_identical_to_builtin() {
+    register_checked_in();
+    let lut = run(&spec("silago_lut", true, None));
+    let builtin = run(&spec("silago", true, None));
+    assert_fronts_bitwise_equal(&lut, &builtin);
+}
+
+/// Same for the untied Bitfusion pair (no energy model: the full W×A
+/// table is exercised instead).
+#[test]
+fn bitfusion_manifest_search_front_is_bitwise_identical_to_builtin() {
+    register_checked_in();
+    let lut = run(&spec("bitfusion_lut", false, Some(8.0)));
+    let builtin = run(&spec("bitfusion", false, Some(8.0)));
+    assert_fronts_bitwise_equal(&lut, &builtin);
+}
+
+/// Spec-inlined manifests: a platform entry carrying its own manifest
+/// resolves WITHOUT any prior registration, and the search it drives
+/// matches the builtin bitwise too.
+#[test]
+fn inline_manifest_spec_matches_builtin_without_registration() {
+    // Build the inline spec as raw JSON: take the builtin spec, rename
+    // its platform to a name that exists nowhere in the registry, and
+    // attach the manifest (renamed to match) to the platform entry.
+    let name = "silago-inline-accept";
+    assert!(registry::source_of(name).is_none(), "test name must start unregistered");
+    let text = std::fs::read_to_string(manifest_path("silago_lut.json")).unwrap();
+    let mut manifest = PlatformManifest::from_json_str(&text).unwrap();
+    manifest.name = name.to_string();
+
+    let base = spec("silago", true, None).to_json().to_string();
+    let patched = base.replace("silago", name);
+    let mut spec_json = Json::parse(&patched).unwrap();
+    let Json::Obj(top) = &mut spec_json else { panic!("spec JSON is not an object") };
+    let Some(Json::Arr(platforms)) = top.get_mut("platforms") else {
+        panic!("spec JSON has no platforms array");
+    };
+    match &mut platforms[0] {
+        Json::Obj(entry) => {
+            entry.insert("manifest".into(), manifest.to_json());
+        }
+        other => panic!("platform entry is not an object: {other:?}"),
+    }
+    let inline_spec = ExperimentSpec::from_json(&spec_json).unwrap();
+    let lut = run(&inline_spec);
+    let builtin = run(&spec("silago", true, None));
+    assert_fronts_bitwise_equal(&lut, &builtin);
+    // Resolution stayed spec-local: the registry never learned the name.
+    assert!(registry::source_of(name).is_none(), "inline resolution leaked into the registry");
+}
+
+/// The checked-in manifests survive a lossless JSON round trip through
+/// the public API (what `mohaq platform lint` relies on).
+#[test]
+fn checked_in_manifests_round_trip_losslessly() {
+    for file in ["silago_lut.json", "bitfusion_lut.json"] {
+        let m = PlatformManifest::load_file(manifest_path(file)).unwrap();
+        let reparsed = PlatformManifest::from_json_str(&m.to_json_string()).unwrap();
+        assert_eq!(m, reparsed, "{file} did not round-trip");
+    }
+}

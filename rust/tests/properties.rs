@@ -357,6 +357,101 @@ fn compression_ratio_bounds_hold() {
     );
 }
 
+/// A valid manifest text to mutate (the checked-in SiLago-equivalent).
+fn manifest_text() -> String {
+    std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/platforms/silago_lut.json"
+    ))
+    .unwrap()
+}
+
+/// Malformed-input robustness (manifest loader + platform-spec parser):
+/// every hostile payload must come back as a typed error, never a panic.
+/// Deterministic worst cases first, then randomized truncation/splicing.
+#[test]
+fn hostile_json_yields_typed_errors_never_panics() {
+    use mohaq::hw::{PlatformManifest, PlatformSpec};
+
+    let deep = format!("{}1{}", "[".repeat(200), "]".repeat(200));
+    let cases: &[&str] = &[
+        "",                                     // empty
+        "{",                                    // truncated object
+        "nul",                                  // truncated literal
+        &deep,                                  // over-deep nesting
+        r#"{"format_version": 1, "format_version": 1}"#, // duplicate keys
+        r#"{"format_version": "one", "name": "x"}"#,     // wrong type
+        r#"{"format_version": 1, "name": 7}"#,           // wrong type
+        r#"{"format_version": 1e99, "name": "x"}"#,      // absurd version
+        r#"{"name": {"nested": true}}"#,        // wrong shape
+        r#"[1, 2, 3]"#,                         // not an object
+        "\"just a string\"",
+        r#"{"format_version": 1, "name": "x", "supported_bits": [4.5]}"#,
+        r#"{"format_version": 1, "name": "x", "supported_bits": "all"}"#,
+        r#"{"format_version": 1, "name": "x", "supported_bits": [8],
+            "speedup": {"8x8": "fast"}}"#,
+        r#"{"format_version": 1, "name": "x", "supported_bits": [8],
+            "speedup": {"8x8": NaN}}"#,
+    ];
+    for case in cases {
+        // The Err contents differ per case; the property is purely
+        // "returns Result, never unwinds".
+        let _ = PlatformManifest::from_json_str(case);
+        let _ = PlatformSpec::from_json_str(case);
+        let _ = mohaq::coordinator::ExperimentSpec::from_json_str(case);
+    }
+
+    // Randomized: truncate / splice the valid manifest at arbitrary
+    // byte-safe points and re-parse. Any panic fails check_prop.
+    let valid = manifest_text();
+    check_prop(
+        "manifest_truncation_robustness",
+        200,
+        |r| (r.below(valid.len()), r.below(valid.len())),
+        |&(a, b)| {
+            let cut = |mut i: usize| {
+                while !valid.is_char_boundary(i) {
+                    i -= 1;
+                }
+                i
+            };
+            let (a, b) = (cut(a), cut(b));
+            let truncated = &valid[..a];
+            let spliced = format!("{}{}", &valid[..a], &valid[b..]);
+            for text in [truncated, spliced.as_str()] {
+                let _ = PlatformManifest::from_json_str(text);
+                let _ = PlatformSpec::from_json_str(text);
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A failed manifest registration must leave the registry untouched —
+/// the serve-mode per-request registration path relies on this.
+#[test]
+fn failed_registration_leaves_registry_untouched() {
+    use mohaq::hw::{registry, PlatformManifest};
+
+    // Shadowing a builtin: rejected, registry unchanged.
+    let mut m = PlatformManifest::from_json_str(&manifest_text()).unwrap();
+    m.name = "silago".into();
+    let before = registry::known_platforms();
+    let err = registry::register_manifest(&m).unwrap_err();
+    assert!(err.to_string().contains("builtin"), "{err}");
+    assert_eq!(registry::known_platforms(), before);
+
+    // An invalid manifest: rejected before any insertion.
+    let mut invalid = PlatformManifest::from_json_str(&manifest_text()).unwrap();
+    invalid.name = "prop-invalid-entry".into();
+    invalid.speedup.clear(); // coverage check must fail
+    assert!(registry::register_manifest(&invalid).is_err());
+    assert!(
+        !registry::known_platforms().contains(&"prop-invalid-entry".to_string()),
+        "rejected manifest leaked into the registry"
+    );
+}
+
 #[test]
 fn beacon_distance_zero_iff_same_weight_bits() {
     check_prop(

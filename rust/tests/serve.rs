@@ -385,6 +385,167 @@ fn shard_ops_on_a_non_worker_server_get_typed_errors() {
     server.join().unwrap().unwrap();
 }
 
+/// Tenant platform manifests: registered per CONNECTION, never visible
+/// to other connections or the process registry; a search bound to a
+/// tenant manifest transcribing SiLago scores bitwise like the builtin.
+#[test]
+fn tenant_manifests_are_connection_scoped_and_bitwise_equivalent() {
+    use mohaq::hw::PlatformManifest;
+
+    let (addr, server) = spawn_server();
+
+    let path = format!("{}/platforms/silago_lut.json", env!("CARGO_MANIFEST_DIR"));
+    let mut m = PlatformManifest::load_file(path).unwrap();
+    m.name = "tenant_lut".into();
+
+    let mut raw = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(raw.try_clone().unwrap());
+
+    // Register, then idempotently re-register the identical manifest.
+    for id in [1u64, 2] {
+        raw_send(&mut raw, &Request::RegisterPlatform { id, manifest: m.to_json() }.to_line());
+        match raw_read(&mut reader) {
+            Frame::PlatformRegistered { id: fid, name } => {
+                assert_eq!(fid, id);
+                assert_eq!(name, "tenant_lut");
+            }
+            other => panic!("expected platform_registered, got {other:?}"),
+        }
+    }
+
+    // Same name, DIFFERENT contents: rejected, existing entry intact.
+    let mut changed = m.clone();
+    changed.sram_mb = Some(1.0);
+    raw_send(&mut raw, &Request::RegisterPlatform { id: 3, manifest: changed.to_json() }.to_line());
+    match raw_read(&mut reader) {
+        Frame::Error { id, kind, message } => {
+            assert_eq!(id, Some(3));
+            assert_eq!(kind, "manifest");
+            assert!(message.contains("different contents"), "{message}");
+        }
+        other => panic!("expected manifest error frame, got {other:?}"),
+    }
+
+    // Shadowing a builtin name: rejected with the collision message.
+    let mut shadow = m.clone();
+    shadow.name = "silago".into();
+    raw_send(&mut raw, &Request::RegisterPlatform { id: 4, manifest: shadow.to_json() }.to_line());
+    match raw_read(&mut reader) {
+        Frame::Error { id, kind, message } => {
+            assert_eq!(id, Some(4));
+            assert_eq!(kind, "manifest");
+            assert!(message.contains("builtin"), "{message}");
+        }
+        other => panic!("expected manifest error frame, got {other:?}"),
+    }
+
+    // An INVALID manifest is rejected and leaves the tenant registry
+    // untouched: a later search naming it still says unknown_platform.
+    raw_send(
+        &mut raw,
+        r#"{"op":"register_platform","id":5,"manifest":{"format_version":1,"name":"ghost"}}"#,
+    );
+    match raw_read(&mut reader) {
+        Frame::Error { id, kind, .. } => {
+            assert_eq!(id, Some(5));
+            assert_eq!(kind, "manifest");
+        }
+        other => panic!("expected manifest error frame, got {other:?}"),
+    }
+    let ghost =
+        Json::parse(r#"{"name":"g","platforms":[{"name":"ghost"}],"objectives":["error"]}"#)
+            .unwrap();
+    raw_send(&mut raw, &Request::Search { id: 6, spec: ghost }.to_line());
+    match raw_read(&mut reader) {
+        Frame::Error { id, kind, .. } => {
+            assert_eq!(id, Some(6));
+            assert_eq!(kind, "unknown_platform");
+        }
+        other => panic!("expected unknown_platform error frame, got {other:?}"),
+    }
+
+    // A search bound to the tenant manifest matches an offline run of
+    // the SAME spec on the builtin platform, bit for bit (the manifest
+    // transcribes SiLago's tables; only the label differs).
+    let spec_json =
+        Json::parse(&silago_spec().to_json().to_string().replace("silago", "tenant_lut"))
+            .unwrap();
+    raw_send(&mut raw, &Request::Search { id: 7, spec: spec_json }.to_line());
+    let rows = loop {
+        match raw_read(&mut reader) {
+            Frame::Front { id, rows, .. } => {
+                assert_eq!(id, 7);
+                break rows;
+            }
+            Frame::Error { kind, message, .. } => {
+                panic!("tenant search failed [{kind}]: {message}")
+            }
+            _ => continue,
+        }
+    };
+    let offline = SearchSession::synthetic().unwrap().run(&silago_spec()).unwrap();
+    assert!(!rows.is_empty(), "tenant front is empty");
+    assert_eq!(rows.len(), offline.rows.len(), "front size diverged");
+    for (served, local) in rows.iter().zip(&offline.rows) {
+        assert_eq!(served.config, local.qc.display_wa());
+        assert_eq!(served.wer_v.to_bits(), local.wer_v.to_bits());
+        assert_eq!(served.hw.len(), local.hw.len());
+        for (sh, lh) in served.hw.iter().zip(&local.hw) {
+            assert_eq!(sh.platform, "tenant_lut");
+            assert_eq!(sh.speedup.to_bits(), lh.speedup.to_bits());
+        }
+    }
+
+    // Discovery on THIS connection lists the tenant platform; the ghost
+    // never made it in.
+    raw_send(&mut raw, &Request::Platforms.to_line());
+    match raw_read(&mut reader) {
+        Frame::Platforms { platforms } => {
+            let find = |n: &str| platforms.iter().find(|p| p.name == n);
+            assert_eq!(find("silago").unwrap().source, "builtin");
+            assert_eq!(find("tenant_lut").unwrap().source, "manifest (tenant)");
+            assert!(find("ghost").is_none(), "rejected manifest leaked into discovery");
+        }
+        other => panic!("expected platforms frame, got {other:?}"),
+    }
+
+    // A SECOND connection sees no tenant platform — not in discovery,
+    // not resolvable by a search.
+    let mut b = connect(addr);
+    assert!(
+        b.platforms().unwrap().iter().all(|p| p.name != "tenant_lut"),
+        "tenant platform leaked to another connection"
+    );
+    let mut raw_b = TcpStream::connect(addr).unwrap();
+    let mut reader_b = BufReader::new(raw_b.try_clone().unwrap());
+    let foreign =
+        Json::parse(r#"{"name":"b","platforms":[{"name":"tenant_lut"}],"objectives":["error"]}"#)
+            .unwrap();
+    raw_send(&mut raw_b, &Request::Search { id: 1, spec: foreign }.to_line());
+    match raw_read(&mut reader_b) {
+        Frame::Error { id, kind, .. } => {
+            assert_eq!(id, Some(1));
+            assert_eq!(kind, "unknown_platform");
+        }
+        other => panic!("expected unknown_platform error frame, got {other:?}"),
+    }
+
+    // The typed client helper drives the same ops.
+    let mut m_b = m.clone();
+    m_b.name = "tenant_b".into();
+    assert_eq!(b.register_platform(&m_b).unwrap(), "tenant_b");
+    assert!(
+        b.platforms()
+            .unwrap()
+            .iter()
+            .any(|p| p.name == "tenant_b" && p.source == "manifest (tenant)"),
+        "typed registration missing from discovery"
+    );
+
+    b.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
 #[test]
 fn disconnect_cancels_in_flight_searches() {
     let (addr, server) = spawn_server();
