@@ -49,7 +49,9 @@ use super::spec::ExperimentSpec;
 use super::trainer::Trainer;
 use crate::eval::{EvalService, EvalStats};
 use crate::hw::Platform;
-use crate::moo::island::{front_hypervolume, IslandConfig, IslandEvent, IslandModel};
+use crate::moo::island::{
+    front_hypervolume, IslandConfig, IslandEvent, IslandModel, IslandShard, IslandSnapshot,
+};
 use crate::moo::{Individual, Nsga2, Nsga2Config, Parallel, Problem, SyncProblem};
 use crate::quant::{Bits, QuantConfig};
 use crate::runtime::{Artifacts, Runtime};
@@ -300,9 +302,33 @@ impl SearchSession {
     pub fn run_with_cancel(
         &self,
         spec: &ExperimentSpec,
-        mut on_event: impl FnMut(&SearchEvent),
+        on_event: impl FnMut(&SearchEvent),
         cancel: &CancelToken,
     ) -> Result<SearchOutcome, SearchError> {
+        self.run_checkpointed(spec, on_event, None, cancel)
+    }
+
+    /// `run_with_cancel` plus a checkpoint sink: at every migration
+    /// boundary of an island-model search the sink receives
+    /// `(generation, snapshots)` — the state `run_resumed` (or
+    /// `store::SearchCheckpoint`) continues bitwise. Single-population
+    /// specs have no boundaries, so the sink never fires there; beacon
+    /// specs are rejected when a sink is attached (retrainer state is not
+    /// checkpointable, and a checkpoint that cannot resume must not be
+    /// written).
+    pub fn run_checkpointed(
+        &self,
+        spec: &ExperimentSpec,
+        mut on_event: impl FnMut(&SearchEvent),
+        mut checkpoint: Option<&mut dyn FnMut(usize, &[IslandSnapshot])>,
+        cancel: &CancelToken,
+    ) -> Result<SearchOutcome, SearchError> {
+        if checkpoint.is_some() && spec.beacon.is_some() {
+            return Err(SearchError::invalid(
+                "beacon retraining state is not checkpointable; drop 'beacon' from the \
+                 spec or run without --checkpoint",
+            ));
+        }
         let t0 = std::time::Instant::now();
         let arts = self.arts.clone();
         let eval = self.eval.clone();
@@ -360,25 +386,29 @@ impl SearchSession {
                 // islands share the EvalService cache through it.
                 Some(cfg) if cfg.islands > 1 => {
                     let mut model = IslandModel::new(spec.ga.clone(), cfg.clone());
-                    let pop = model.run(&mut problem, |event| match event {
-                        IslandEvent::Generation { island, stats } => emit_generation(
-                            &beacon_sink,
-                            &mut history,
-                            &mut on_event,
-                            Some(*island),
-                            stats.generation,
-                            stats.evaluations,
-                            stats.population,
-                        ),
-                        IslandEvent::Migration { generation, from, to, accepted } => {
-                            on_event(&SearchEvent::Migration {
-                                generation: *generation,
-                                from: *from,
-                                to: *to,
-                                accepted: *accepted,
-                            });
-                        }
-                    });
+                    let pop = model.run_with_checkpoints(
+                        &mut problem,
+                        |event| match event {
+                            IslandEvent::Generation { island, stats } => emit_generation(
+                                &beacon_sink,
+                                &mut history,
+                                &mut on_event,
+                                Some(*island),
+                                stats.generation,
+                                stats.evaluations,
+                                stats.population,
+                            ),
+                            IslandEvent::Migration { generation, from, to, accepted } => {
+                                on_event(&SearchEvent::Migration {
+                                    generation: *generation,
+                                    from: *from,
+                                    to: *to,
+                                    accepted: *accepted,
+                                });
+                            }
+                        },
+                        checkpoint.take(),
+                    );
                     (pop, model.evaluations())
                 }
                 _ => {
@@ -478,6 +508,181 @@ impl SearchSession {
         cancel: &CancelToken,
     ) -> Result<SearchOutcome, SearchError> {
         crate::dist::run_search(self, spec, workers, config, on_event, cancel)
+    }
+
+    /// Distributed sibling of `run_resumed`/`run_checkpointed`: `resume`
+    /// (a checkpoint's `(generation, snapshots)`) seeds the fleet's
+    /// replay state — workers are assigned their shards pre-restored, and
+    /// rounds at or before the boundary are skipped; `checkpoint`
+    /// receives every migration boundary the coordinator completes, so a
+    /// coordinator crash mid-distributed-run is recoverable from the
+    /// latest written boundary.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_distributed_resumable(
+        &self,
+        spec: &ExperimentSpec,
+        workers: &[String],
+        config: &crate::dist::DistConfig,
+        resume: Option<(usize, Vec<IslandSnapshot>)>,
+        checkpoint: Option<&mut dyn FnMut(usize, &[IslandSnapshot])>,
+        on_event: impl FnMut(&SearchEvent),
+        cancel: &CancelToken,
+    ) -> Result<SearchOutcome, SearchError> {
+        crate::dist::run_search_resumable(
+            self, spec, workers, config, resume, checkpoint, on_event, cancel,
+        )
+    }
+
+    /// Continue an island-model search from a migration-boundary
+    /// checkpoint: `snapshots` must cover islands `0..K` in ascending
+    /// order, captured at `generation` by a checkpoint sink. The
+    /// remainder of the search replays the uninterrupted run's exact
+    /// stream — island RNG positions, populations and evaluation budgets
+    /// come from the snapshots, and everything downstream is
+    /// deterministic — so the merged front is bitwise-identical to the
+    /// run that was interrupted. `checkpoint` keeps receiving later
+    /// boundaries, so an interrupted resume can itself be resumed.
+    pub fn run_resumed(
+        &self,
+        spec: &ExperimentSpec,
+        generation: usize,
+        snapshots: Vec<IslandSnapshot>,
+        mut on_event: impl FnMut(&SearchEvent),
+        mut checkpoint: Option<&mut dyn FnMut(usize, &[IslandSnapshot])>,
+        cancel: &CancelToken,
+    ) -> Result<SearchOutcome, SearchError> {
+        let t0 = std::time::Instant::now();
+        let cfg = match &spec.island {
+            Some(c) if c.islands > 1 => c.clone(),
+            _ => {
+                return Err(SearchError::invalid(
+                    "resume needs an island-model spec with >= 2 islands (checkpoints \
+                     only exist at migration boundaries)",
+                ))
+            }
+        };
+        let k = cfg.islands;
+        if snapshots.len() != k || snapshots.iter().enumerate().any(|(i, s)| s.island != i) {
+            return Err(SearchError::invalid(format!(
+                "resume needs snapshots covering all {k} islands in ascending order"
+            )));
+        }
+        if generation == 0
+            || generation > spec.ga.generations
+            || generation % cfg.migration_interval != 0
+        {
+            return Err(SearchError::invalid(format!(
+                "generation {generation} is not a migration boundary of this spec \
+                 (interval {}, {} generations)",
+                cfg.migration_interval, spec.ga.generations
+            )));
+        }
+        let stats0 = self.eval.stats();
+        // shard_problem rejects beacon specs with a typed error — the
+        // retrainer's state is not in the checkpoint, so resuming one
+        // could silently diverge instead of failing loudly.
+        let mut problem = self.shard_problem(spec, cancel.clone())?;
+        on_event(&SearchEvent::Started {
+            name: spec.name.clone(),
+            num_vars: problem.num_vars(),
+            objectives: problem.objective_names(),
+            threads: problem.evaluator.workers(),
+            islands: k,
+        });
+        let mut shard = IslandShard::restore(spec.ga.clone(), cfg.clone(), generation, snapshots)
+            .map_err(SearchError::invalid)?;
+
+        let mut history: Vec<GenerationLog> = Vec::new();
+        // No beacons on this path; emit_generation still drains the sink.
+        let beacon_sink = Mutex::new(Vec::new());
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            for gen in generation + 1..=spec.ga.generations {
+                if problem.aborted() {
+                    break;
+                }
+                shard.step(&mut problem);
+                let boundary = gen % cfg.migration_interval == 0;
+                if boundary {
+                    // One shard owns every island, so elites() is already
+                    // in global island order and the exchange below is
+                    // exactly IslandModel::migrate's schedule.
+                    let elites = shard.elites();
+                    for to in 0..k {
+                        for from in cfg.topology.sources(k, to) {
+                            if let Some(accepted) = shard.inject(to, &elites[from].1) {
+                                if accepted > 0 {
+                                    on_event(&SearchEvent::Migration {
+                                        generation: gen,
+                                        from,
+                                        to,
+                                        accepted,
+                                    });
+                                }
+                            }
+                        }
+                    }
+                }
+                for local in 0..k {
+                    let evals = shard.engine_evaluations(local);
+                    emit_generation(
+                        &beacon_sink,
+                        &mut history,
+                        &mut on_event,
+                        Some(local),
+                        gen,
+                        evals,
+                        &shard.pops()[local],
+                    );
+                }
+                if boundary {
+                    if let Some(sink) = checkpoint.as_deref_mut() {
+                        sink(gen, &shard.snapshot());
+                    }
+                }
+            }
+            let pop: Vec<Individual> = shard.pops().iter().flatten().cloned().collect();
+            (pop, shard.evaluations())
+        }));
+        let (pop, evaluations) = match run {
+            Ok(result) => result,
+            Err(payload) => return Err(SearchError::from_panic(pool::panic_message(payload))),
+        };
+        if let Some(e) = problem.failure.take() {
+            return Err(e);
+        }
+        if cancel.is_cancelled() {
+            return Err(SearchError::Cancelled);
+        }
+        let set = Nsga2::pareto_set(&pop);
+        let front_hv = front_hypervolume(&set);
+        // Every error came from parameter set 0 (no beacons here), so the
+        // empty genome→set map is exact — same reasoning as the
+        // distributed merge.
+        let rows = assemble_rows(&problem, &set, &HashMap::new())?;
+        let stats = problem.eval.stats();
+        let outcome = SearchOutcome {
+            spec_name: spec.name.clone(),
+            objective_names: problem.objective_names(),
+            rows,
+            history,
+            evaluations,
+            exec_calls: stats.executions - stats0.executions,
+            cache_hits: stats.cache_hits - stats0.cache_hits,
+            eval_stats: stats,
+            beacons: Vec::new(),
+            records: problem.records,
+            baseline_val_err: self.arts.baseline.val_err_16bit,
+            baseline_test_err: self.arts.baseline.test_err,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            front_hypervolume: front_hv,
+        };
+        on_event(&SearchEvent::Finished {
+            evaluations: outcome.evaluations,
+            pareto: outcome.rows.len(),
+            wall_secs: outcome.wall_secs,
+            hypervolume: outcome.front_hypervolume,
+        });
+        Ok(outcome)
     }
 
     /// Resolve `spec` into the evaluation problem (no beacon machinery

@@ -5,7 +5,7 @@
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
-use std::net::TcpStream;
+use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
 use crate::coordinator::session::assemble_rows;
@@ -69,8 +69,26 @@ struct WorkerLink {
 impl WorkerLink {
     fn connect(worker: usize, addr: &str, timeout: Duration) -> Result<WorkerLink, DriveError> {
         let lost = |detail: String| DriveError::Lost { worker, detail };
-        let stream =
-            TcpStream::connect(addr).map_err(|e| lost(format!("connect {addr}: {e}")))?;
+        // Bound the connect itself by the heartbeat window: an
+        // unreachable worker must surface as `ShardLost` now, not after
+        // the OS default connect timeout (minutes on some platforms).
+        let mut stream = None;
+        let mut last_err = format!("connect {addr}: no addresses resolved");
+        match addr.to_socket_addrs() {
+            Err(e) => last_err = format!("resolve {addr}: {e}"),
+            Ok(addrs) => {
+                for sa in addrs {
+                    match TcpStream::connect_timeout(&sa, timeout) {
+                        Ok(s) => {
+                            stream = Some(s);
+                            break;
+                        }
+                        Err(e) => last_err = format!("connect {addr}: {e}"),
+                    }
+                }
+            }
+        }
+        let Some(stream) = stream else { return Err(lost(last_err)) };
         // The read timeout IS the heartbeat deadline: workers stream
         // heartbeats while computing, so any single read blocking past
         // the window means the worker is gone.
@@ -100,9 +118,20 @@ impl WorkerLink {
     ) -> Result<T, DriveError> {
         loop {
             let mut line = String::new();
-            let n = self.reader.read_line(&mut line).map_err(|e| DriveError::Lost {
-                worker: self.worker,
-                detail: format!("read: {e}"),
+            let n = self.reader.read_line(&mut line).map_err(|e| {
+                // A torn-down socket surfaces as a reset/abort/EOF error
+                // or as a clean `Ok(0)` depending on the platform and on
+                // what raced the close — classify both as the link being
+                // gone so the loss is declared immediately, instead of
+                // hiding the EOF behind a generic read error.
+                let detail = match e.kind() {
+                    std::io::ErrorKind::ConnectionReset
+                    | std::io::ErrorKind::ConnectionAborted
+                    | std::io::ErrorKind::BrokenPipe
+                    | std::io::ErrorKind::UnexpectedEof => "connection closed".into(),
+                    _ => format!("read: {e}"),
+                };
+                DriveError::Lost { worker: self.worker, detail }
             })?;
             if n == 0 {
                 return Err(DriveError::Lost {
@@ -180,6 +209,28 @@ pub fn run_search(
     spec: &ExperimentSpec,
     workers: &[String],
     config: &DistConfig,
+    on_event: impl FnMut(&SearchEvent),
+    cancel: &CancelToken,
+) -> Result<SearchOutcome, SearchError> {
+    run_search_resumable(session, spec, workers, config, None, None, on_event, cancel)
+}
+
+/// [`run_search`] with durable-state hooks: `resume` seeds the replay
+/// state with a checkpoint's `(generation, snapshots)` — the fleet is
+/// assigned its shards pre-restored and rounds at or before that
+/// boundary are skipped, exactly the mechanism worker-loss recovery
+/// already uses — and `checkpoint` receives every migration boundary the
+/// coordinator completes (including mid-retry), so a coordinator crash
+/// is recoverable from the latest boundary written. Both hooks preserve
+/// the bitwise-determinism contract.
+#[allow(clippy::too_many_arguments)]
+pub fn run_search_resumable(
+    session: &SearchSession,
+    spec: &ExperimentSpec,
+    workers: &[String],
+    config: &DistConfig,
+    resume: Option<(usize, Vec<IslandSnapshot>)>,
+    mut checkpoint: Option<&mut dyn FnMut(usize, &[IslandSnapshot])>,
     mut on_event: impl FnMut(&SearchEvent),
     cancel: &CancelToken,
 ) -> Result<SearchOutcome, SearchError> {
@@ -200,6 +251,19 @@ pub fn run_search(
     let k = island_cfg.islands;
     let generations = spec.ga.generations;
     let interval = island_cfg.migration_interval.max(1);
+    if let Some((gen, snaps)) = &resume {
+        if snaps.len() != k || snaps.iter().enumerate().any(|(i, s)| s.island != i) {
+            return Err(SearchError::invalid(format!(
+                "resume needs snapshots covering all {k} islands in ascending order"
+            )));
+        }
+        if *gen == 0 || *gen > generations || *gen % interval != 0 {
+            return Err(SearchError::invalid(format!(
+                "generation {gen} is not a migration boundary of this spec \
+                 (interval {interval}, {generations} generations)"
+            )));
+        }
+    }
 
     on_event(&SearchEvent::Started {
         name: spec.name.clone(),
@@ -224,7 +288,7 @@ pub fn run_search(
 
     let mut alive: Vec<(usize, String)> =
         workers.iter().enumerate().map(|(i, a)| (i, a.clone())).collect();
-    let mut last_state: Option<(usize, Vec<IslandSnapshot>)> = None;
+    let mut last_state: Option<(usize, Vec<IslandSnapshot>)> = resume;
     let mut history: Vec<GenerationLog> = Vec::new();
     let mut losses = 0usize;
 
@@ -239,6 +303,7 @@ pub fn run_search(
             &alive,
             config,
             &mut last_state,
+            checkpoint.as_deref_mut(),
             &mut history,
             &mut on_event,
             cancel,
@@ -317,6 +382,7 @@ fn drive_fleet(
     alive: &[(usize, String)],
     config: &DistConfig,
     last_state: &mut Option<(usize, Vec<IslandSnapshot>)>,
+    mut checkpoint: Option<&mut dyn FnMut(usize, &[IslandSnapshot])>,
     history: &mut Vec<GenerationLog>,
     on_event: &mut dyn FnMut(&SearchEvent),
     cancel: &CancelToken,
@@ -470,6 +536,9 @@ fn drive_fleet(
                 },
             );
             snaps.push(s.state);
+        }
+        if let Some(sink) = checkpoint.as_deref_mut() {
+            sink(upto, &snaps);
         }
         *last_state = Some((upto, snaps));
     }

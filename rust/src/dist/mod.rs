@@ -41,5 +41,5 @@ pub mod coordinator;
 pub mod shard;
 pub mod worker;
 
-pub use coordinator::{run_search, DistConfig};
+pub use coordinator::{run_search, run_search_resumable, DistConfig};
 pub use shard::shard_map;

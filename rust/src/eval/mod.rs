@@ -271,6 +271,21 @@ impl<K: std::hash::Hash + Eq, V: Clone> ResultCache<K, V> {
         self.inner.is_poisoned()
     }
 
+    /// Snapshot every resident entry (hot + cold) under one lock
+    /// acquisition — the eval-store export path. Order is unspecified
+    /// (HashMap iteration); durable formats must sort their serialized
+    /// form themselves.
+    pub fn entries(&self) -> Result<Vec<(K, V)>>
+    where
+        K: Clone,
+    {
+        let g = self.guard()?;
+        let mut out = Vec::with_capacity(g.hot.len() + g.cold.len());
+        out.extend(g.hot.iter().map(|(k, v)| (k.clone(), v.clone())));
+        out.extend(g.cold.iter().map(|(k, v)| (k.clone(), v.clone())));
+        Ok(out)
+    }
+
     pub fn is_empty(&self) -> bool {
         self.len() == Some(0)
     }
@@ -498,6 +513,35 @@ impl EvalService {
             let _guard = self.param_sets.write();
             panic!("poisoning param sets");
         }));
+    }
+
+    /// Snapshot the resident memo — the eval-store export path. One lock
+    /// acquisition; order is unspecified (the store sorts its serialized
+    /// form for file determinism).
+    pub fn export_entries(&self) -> Result<Vec<(CacheKey, f64)>> {
+        self.cache.entries()
+    }
+
+    /// Bulk-load memo entries — the eval-store import path. The
+    /// configured capacity still bounds residency through normal
+    /// rotation, so a store larger than `--cache-cap` cannot blow the
+    /// budget.
+    pub fn import_entries(&self, entries: Vec<(CacheKey, f64)>) -> Result<()> {
+        self.cache.insert_many(entries)
+    }
+
+    /// Live (non-evicted) parameter sets with their indices, ascending —
+    /// the eval-store export path. Index 0 (the baseline) is included;
+    /// the store skips persisting its tensors and re-derives it from the
+    /// artifacts on load.
+    pub fn snapshot_param_sets(&self) -> Result<Vec<(usize, Arc<ParamSet>)>> {
+        let sets = self.sets()?;
+        Ok(sets
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.evicted)
+            .map(|(i, s)| (i, s.clone()))
+            .collect())
     }
 
     pub fn stats(&self) -> EvalStats {

@@ -31,6 +31,7 @@ pub mod pareto;
 pub mod quant;
 pub mod report;
 pub mod serve;
+pub mod store;
 pub mod util;
 
 pub use coordinator::{

@@ -120,7 +120,25 @@ front is bitwise-identical to the same seed run in-process):
   is rejected in distributed mode (order-dependent across the global
   population). Without an artifact bundle the search falls back to the
   hermetic surrogate evaluator so the distributed stack can be exercised
-  offline.";
+  offline.
+
+checkpoint / resume (durable search state; see DESIGN.md 'Durable state'):
+  --checkpoint FILE      write a search checkpoint (spec + per-island RNG
+                         positions + populations) to FILE at every
+                         migration boundary, via atomic rename; needs an
+                         island config with >= 2 islands
+  --resume FILE          continue an interrupted search from a checkpoint.
+                         The checkpoint carries the full spec, so spec
+                         flags (--exp/--config/--gens/--seed/--islands/...)
+                         are rejected alongside it; the finished front is
+                         bitwise-identical to the uninterrupted run. Also
+                         works distributed (--workers/--spawn-workers) —
+                         a crashed coordinator resumes from its last
+                         written boundary
+  --stop-after-checkpoints N
+                         exit(0) immediately after the Nth checkpoint
+                         write: a deterministic mid-run interruption (what
+                         the CI resume-smoke job uses to simulate a crash)";
 
 const WORKER_USAGE: &str = "\
 usage: mohaq worker [--addr HOST:PORT] [--artifacts DIR] [--threads N]
@@ -172,6 +190,13 @@ options:
                     + host memory and their memo entries) once its front
                     is reported; only safe when beacon-enabled requests
                     run serially
+  --store DIR       durable eval store: reload DIR/eval_store.json at
+                    startup (after --cache-cap/--evict-beacons apply, so
+                    the reloaded memo respects this server's bounds) and
+                    save it back on clean shutdown — a restarted server
+                    answers repeated configs from cache. A corrupt store
+                    file is a hard typed error, never a partial load.
+                    See DESIGN.md 'Durable state'
 
 Drive it with examples/serve_quickstart.rs:
   cargo run --release --example serve_quickstart -- --addr 127.0.0.1:7070";
@@ -215,9 +240,12 @@ fn cmd_bench_gate(args: &Args) -> Result<()> {
              cannot be speed-normalized (is this really a Bencher::emit_json report?)"
         );
         // Copy the bytes verbatim (not a re-serialization) so the committed
-        // baseline diffs cleanly against the artifact it came from.
+        // baseline diffs cleanly against the artifact it came from. Written
+        // atomically: an interrupted promote must not leave a torn baseline
+        // that fails every subsequent gate run.
         let text = std::fs::read_to_string(current_path)?;
-        std::fs::write(baseline_path, &text).with_context(|| format!("writing {baseline_path}"))?;
+        mohaq::util::fsio::atomic_write(std::path::Path::new(baseline_path), text.as_bytes())
+            .with_context(|| format!("writing {baseline_path}"))?;
         println!("bench-gate: wrote {baseline_path} from {current_path}");
         println!("commit it to arm the >{}% regression gate", args.get_f64("max-regress-pct", 25.0));
         return Ok(());
@@ -271,13 +299,45 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .set_cache_capacity(cap)
             .map_err(|e| anyhow::anyhow!("{e}"))?;
     }
-    if args.has("evict-beacons") {
+    let evict_beacons = args.has("evict-beacons");
+    if evict_beacons {
         state.set_evict_beacons(true);
     }
+    // --store DIR: reload the eval memo a previous server saved, and save
+    // it back on clean shutdown. The load runs AFTER --cache-cap /
+    // --evict-beacons apply so the reloaded memo respects this server's
+    // bounds; a corrupt store file is a hard typed error, never a silent
+    // partial warm-start.
+    let store_path = args.get("store").map(|dir| std::path::Path::new(dir).join("eval_store.json"));
+    if let Some(path) = &store_path {
+        let dir = path.parent().expect("store path has a parent");
+        std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+        if path.exists() {
+            let report = mohaq::store::eval_store::load(path, state.session().eval(), evict_beacons)
+                .map_err(|e| anyhow::anyhow!("loading eval store {}: {e}", path.display()))?;
+            println!(
+                "eval store: reloaded {} ({} param set(s) registered, {} skipped; \
+                 {} memo entries, {} dropped)",
+                path.display(),
+                report.param_sets_registered,
+                report.param_sets_skipped,
+                report.entries_loaded,
+                report.entries_dropped
+            );
+        } else {
+            println!("eval store: {} not found; starting cold", path.display());
+        }
+    }
+    let state_for_save = state.clone();
     let server = mohaq::serve::Server::bind(args.get_or("addr", "127.0.0.1:7070"), state)?;
     println!("mohaq serve: listening on {}", server.local_addr()?);
     println!("(send {{\"op\":\"shutdown\"}} on any connection to stop)");
     server.run()?;
+    if let Some(path) = &store_path {
+        mohaq::store::eval_store::save(path, state_for_save.session().eval())
+            .map_err(|e| anyhow::anyhow!("saving eval store {}: {e}", path.display()))?;
+        println!("eval store: saved {}", path.display());
+    }
     println!("mohaq serve: shut down cleanly");
     Ok(())
 }
@@ -649,7 +709,46 @@ fn cmd_search(args: &Args) -> Result<()> {
         SearchSession::new(Arc::new(mohaq::runtime::Artifacts::load(dir)?))?
     };
     let arts = session.artifacts().clone();
-    let mut spec = if let Some(cfg) = args.get("config") {
+    // --resume FILE: the checkpoint carries the complete spec of the
+    // interrupted run, so every spec-shaping flag is rejected — a resumed
+    // search that silently diverged from the original would void the
+    // bitwise-identical-front contract.
+    let resume = match args.get("resume") {
+        None => None,
+        Some(path) => {
+            for flag in [
+                "exp",
+                "config",
+                "beacon",
+                "platforms",
+                "objectives",
+                "gens",
+                "seed",
+                "islands",
+                "migration-interval",
+                "topology",
+                "migrants",
+            ] {
+                anyhow::ensure!(
+                    !args.has(flag),
+                    "--{flag} cannot be combined with --resume: the checkpoint carries the \
+                     full spec of the interrupted run"
+                );
+            }
+            let ckpt = mohaq::store::SearchCheckpoint::load(std::path::Path::new(path))
+                .map_err(|e| anyhow::anyhow!("loading checkpoint {path}: {e}"))?;
+            println!(
+                "loaded checkpoint {path}: '{}' at generation {} ({} islands)",
+                ckpt.spec.name,
+                ckpt.generation,
+                ckpt.islands()
+            );
+            Some(ckpt)
+        }
+    };
+    let mut spec = if let Some(ckpt) = &resume {
+        ckpt.spec.clone()
+    } else if let Some(cfg) = args.get("config") {
         // Refuse to silently discard flags the chosen spec source ignores.
         anyhow::ensure!(
             args.get("platforms").is_none() && args.get("objectives").is_none(),
@@ -762,16 +861,77 @@ fn cmd_search(args: &Args) -> Result<()> {
         }
         SearchEvent::Finished { .. } => {}
     };
-    let outcome = if distributed {
-        session.run_distributed(
+
+    // --checkpoint FILE: persist (spec, generation, island snapshots) at
+    // every migration boundary, atomically. Only island-model searches
+    // have boundaries, so anything else is rejected up front.
+    let checkpoint_path = args.get("checkpoint").map(std::path::PathBuf::from);
+    if let Some(p) = &checkpoint_path {
+        anyhow::ensure!(
+            spec.island.as_ref().is_some_and(|c| c.islands >= 2),
+            "--checkpoint {} needs an island config with >= 2 islands — checkpoints are \
+             written at migration boundaries (pass --islands K)",
+            p.display()
+        );
+    }
+    let stop_after = args.get_usize("stop-after-checkpoints", 0);
+    anyhow::ensure!(
+        stop_after == 0 || checkpoint_path.is_some(),
+        "--stop-after-checkpoints requires --checkpoint"
+    );
+    let spec_for_ckpt = spec.clone();
+    let mut written = 0usize;
+    let mut sink = |gen: usize, snaps: &[mohaq::moo::IslandSnapshot]| {
+        let path = checkpoint_path.as_deref().expect("sink only installed with --checkpoint");
+        match mohaq::store::SearchCheckpoint::new(spec_for_ckpt.clone(), gen, snaps.to_vec())
+            .and_then(|c| c.save(path))
+        {
+            // A failed write must not kill a running search: a checkpoint
+            // is a recovery aid, and losing one is strictly better than
+            // losing the run.
+            Err(e) => eprintln!("  checkpoint: FAILED writing {}: {e}", path.display()),
+            Ok(()) => {
+                written += 1;
+                println!("  checkpoint: generation {gen} -> {}", path.display());
+                if stop_after > 0 && written >= stop_after {
+                    println!(
+                        "stopping after {written} checkpoint(s) as requested \
+                         (--stop-after-checkpoints); continue with --resume {}",
+                        path.display()
+                    );
+                    std::process::exit(0);
+                }
+            }
+        }
+    };
+    let sink_opt: Option<&mut dyn FnMut(usize, &[mohaq::moo::IslandSnapshot])> =
+        if checkpoint_path.is_some() { Some(&mut sink) } else { None };
+
+    let cancel = mohaq::coordinator::CancelToken::new();
+    let dist_cfg = mohaq::dist::DistConfig::default();
+    let outcome = match (resume, distributed) {
+        (Some(ckpt), true) => session.run_distributed_resumable(
             &spec,
             &addrs,
-            &mohaq::dist::DistConfig::default(),
+            &dist_cfg,
+            Some((ckpt.generation, ckpt.snapshots)),
+            sink_opt,
             on_event,
-            &mohaq::coordinator::CancelToken::new(),
-        )?
-    } else {
-        session.run_with(&spec, on_event)?
+            &cancel,
+        )?,
+        (Some(ckpt), false) => {
+            session.run_resumed(&spec, ckpt.generation, ckpt.snapshots, on_event, sink_opt, &cancel)?
+        }
+        (None, true) => session.run_distributed_resumable(
+            &spec,
+            &addrs,
+            &dist_cfg,
+            None,
+            sink_opt,
+            on_event,
+            &cancel,
+        )?,
+        (None, false) => session.run_checkpointed(&spec, on_event, sink_opt, &cancel)?,
     };
     println!(
         "\n{}",

@@ -171,7 +171,22 @@ impl IslandModel {
     pub fn run(
         &mut self,
         problem: &mut dyn Problem,
+        observer: impl FnMut(&IslandEvent),
+    ) -> Vec<Individual> {
+        self.run_with_checkpoints(problem, observer, None)
+    }
+
+    /// [`IslandModel::run`] with a checkpoint sink: at every migration
+    /// boundary (post-exchange, after the generation events) the sink
+    /// receives `(generation, snapshots)` — one [`IslandSnapshot`] per
+    /// island, exactly the state [`IslandShard::restore`] resumes
+    /// bitwise. `None` skips snapshotting entirely (no population
+    /// clones on the plain path).
+    pub fn run_with_checkpoints(
+        &mut self,
+        problem: &mut dyn Problem,
         mut observer: impl FnMut(&IslandEvent),
+        mut checkpoint: Option<&mut dyn FnMut(usize, &[IslandSnapshot])>,
     ) -> Vec<Individual> {
         let k = self.islands.len();
         let (target0, pop_size, generations) = {
@@ -218,7 +233,8 @@ impl IslandModel {
                 pool.extend(off);
                 pops[i] = self.islands[i].select_survivors(pool, pop_size);
             }
-            if k > 1 && gen % self.config.migration_interval == 0 {
+            let boundary = k > 1 && gen % self.config.migration_interval == 0;
+            if boundary {
                 self.migrate(&mut pops, gen, &mut observer);
             }
             for (i, pop) in pops.iter().enumerate() {
@@ -231,8 +247,28 @@ impl IslandModel {
                     },
                 });
             }
+            if boundary {
+                if let Some(sink) = checkpoint.as_deref_mut() {
+                    sink(gen, &self.snapshot_at(&pops));
+                }
+            }
         }
         pops.into_iter().flatten().collect()
+    }
+
+    /// Snapshot every island against the given populations — the
+    /// checkpoint payload (post-migration state; the engine RNG at this
+    /// point is exactly the pre-offspring state of the next generation).
+    fn snapshot_at(&self, pops: &[Vec<Individual>]) -> Vec<IslandSnapshot> {
+        pops.iter()
+            .enumerate()
+            .map(|(i, pop)| IslandSnapshot {
+                island: i,
+                rng: self.islands[i].rng_state(),
+                evaluations: self.islands[i].evaluations(),
+                pop: pop.clone(),
+            })
+            .collect()
     }
 
     /// One migration round. Elites are snapshotted from every island

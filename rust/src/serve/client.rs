@@ -109,12 +109,22 @@ impl ServeClient {
         }
     }
 
-    pub fn server_stats(&mut self) -> Result<ServerStats, ClientError> {
+    /// Cumulative server counters: eval executions, cache hits, resident
+    /// memo occupancy (`unique_solutions`), eviction counts, and the
+    /// cache-poisoned marker. With `mohaq serve --store DIR`, a restarted
+    /// server answers its first repeated request from the reloaded memo —
+    /// `cache_hits` here is how warm-start coverage is observed.
+    pub fn stats(&mut self) -> Result<ServerStats, ClientError> {
         self.send(&Request::Stats)?;
         match self.read_frame()? {
             Frame::Stats(s) => Ok(s),
             other => Err(ClientError::Protocol(format!("expected stats, got {other:?}"))),
         }
+    }
+
+    /// Alias of [`ServeClient::stats`] (the historical name).
+    pub fn server_stats(&mut self) -> Result<ServerStats, ClientError> {
+        self.stats()
     }
 
     /// Ask the server to stop; resolves once the server confirms.

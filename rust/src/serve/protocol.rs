@@ -207,7 +207,9 @@ fn inds_from_json(j: Option<&Json>) -> Result<Vec<Individual>, ProtocolError> {
     j.and_then(Json::as_arr).unwrap_or(&[]).iter().map(ind_from_json).collect()
 }
 
-fn snapshot_to_json(s: &IslandSnapshot) -> Json {
+// Also the checkpoint-file payload codec (`store::checkpoint`): the
+// wire and the disk must agree bitwise on what an island snapshot is.
+pub(crate) fn snapshot_to_json(s: &IslandSnapshot) -> Json {
     obj(vec![
         ("island", s.island.into()),
         // u64 state words would lose low bits through the f64 wire type.
@@ -217,7 +219,7 @@ fn snapshot_to_json(s: &IslandSnapshot) -> Json {
     ])
 }
 
-fn snapshot_from_json(j: &Json) -> Result<IslandSnapshot, ProtocolError> {
+pub(crate) fn snapshot_from_json(j: &Json) -> Result<IslandSnapshot, ProtocolError> {
     let bad = |msg: &str| ProtocolError { id: None, message: msg.into() };
     let island = j
         .get("island")
@@ -593,6 +595,11 @@ pub struct ServerStats {
     pub executions: usize,
     pub cache_hits: usize,
     pub unique_solutions: usize,
+    /// Memo entries discarded so far (capacity rotation + param-set
+    /// purges).
+    pub evictions: usize,
+    /// Beacon parameter sets retired so far.
+    pub param_sets_evicted: usize,
     /// The shared result cache was poisoned by a worker panic.
     pub poisoned: bool,
     /// Search requests accepted since the server started.
@@ -796,6 +803,8 @@ impl Frame {
                 ("executions", s.executions.into()),
                 ("cache_hits", s.cache_hits.into()),
                 ("unique_solutions", s.unique_solutions.into()),
+                ("evictions", s.evictions.into()),
+                ("param_sets_evicted", s.param_sets_evicted.into()),
                 ("poisoned", s.poisoned.into()),
                 ("requests", s.requests.into()),
                 ("active", s.active.into()),
@@ -992,6 +1001,13 @@ impl Frame {
                 executions: num("executions")?,
                 cache_hits: num("cache_hits")?,
                 unique_solutions: num("unique_solutions")?,
+                // Lenient: frames from servers predating these counters
+                // still parse (same posture as `poisoned`/`surrogate`).
+                evictions: j.get("evictions").and_then(Json::as_usize).unwrap_or(0),
+                param_sets_evicted: j
+                    .get("param_sets_evicted")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(0),
                 poisoned: j.get("poisoned").and_then(Json::as_bool).unwrap_or(false),
                 requests: num("requests")?,
                 active: num("active")?,
@@ -1148,6 +1164,8 @@ mod tests {
                 executions: 10,
                 cache_hits: 5,
                 unique_solutions: 8,
+                evictions: 3,
+                param_sets_evicted: 1,
                 poisoned: false,
                 requests: 2,
                 active: 1,

@@ -135,6 +135,8 @@ impl ServeState {
             executions: eval.executions,
             cache_hits: eval.cache_hits,
             unique_solutions: eval.unique_solutions,
+            evictions: eval.evictions,
+            param_sets_evicted: eval.param_sets_evicted,
             poisoned: eval.poisoned,
             requests: self.requests.load(Ordering::Relaxed),
             active: self.active.load(Ordering::Relaxed),

@@ -1,0 +1,176 @@
+//! Search checkpoints: the exact migration-boundary state the
+//! distributed re-shard already replays, persisted to disk.
+//!
+//! A checkpoint is written at a migration boundary and holds the full
+//! experiment spec plus one post-migration [`IslandSnapshot`] per global
+//! island — RNG position, cumulative evaluation count, ranked
+//! population. Because island RNG streams are pure functions of
+//! (seed, K, island index) and the restore is exact,
+//! `mohaq search --resume CKPT` continues to a merged front
+//! bitwise-identical to the uninterrupted run (pinned by
+//! `rust/tests/store.rs` and the `resume-smoke` CI job) — whether the
+//! original run was single-process or a distributed coordinator that
+//! crashed mid-fleet.
+//!
+//! The snapshot payload rides the SAME lossless codec the dist wire
+//! protocol uses (`serve::protocol`): u64 RNG words as decimal strings
+//! (f64 would drop low bits), shortest-round-trip floats, `usize::MAX`
+//! rank via the saturating cast. On top of that codec this module is
+//! strict the way `hw::manifest` is: unknown fields are rejected at the
+//! levels it owns, `format_version` is gated exactly, and every failure
+//! is a typed [`StoreError`].
+
+use std::path::Path;
+
+use crate::coordinator::ExperimentSpec;
+use crate::moo::IslandSnapshot;
+use crate::serve::protocol::{snapshot_from_json, snapshot_to_json};
+use crate::util::fsio::atomic_write;
+use crate::util::json::{obj, Json};
+
+use super::error::{StoreError, STORE_VERSION};
+use super::{check_keys, gate_header, read_text};
+
+/// `kind` discriminator of a checkpoint file.
+pub const CHECKPOINT_KIND: &str = "mohaq-checkpoint";
+
+/// Exactly the keys a v1 snapshot object may carry (strict rejection —
+/// a typo'd `"evaluations"` must not silently zero a counter).
+const SNAPSHOT_KEYS: [&str; 4] = ["island", "rng", "evaluations", "pop"];
+
+/// One resumable search: the spec that produced it, the boundary
+/// generation the snapshots were taken at, and one post-migration
+/// snapshot per global island (ascending island order).
+#[derive(Debug, Clone)]
+pub struct SearchCheckpoint {
+    pub spec: ExperimentSpec,
+    pub generation: usize,
+    pub snapshots: Vec<IslandSnapshot>,
+}
+
+impl SearchCheckpoint {
+    /// Build a validated checkpoint. The same validation runs on load,
+    /// so an unloadable checkpoint can never be written.
+    pub fn new(
+        spec: ExperimentSpec,
+        generation: usize,
+        snapshots: Vec<IslandSnapshot>,
+    ) -> Result<SearchCheckpoint, StoreError> {
+        let ckpt = SearchCheckpoint { spec, generation, snapshots };
+        ckpt.validate()?;
+        Ok(ckpt)
+    }
+
+    /// Number of global islands this checkpoint covers.
+    pub fn islands(&self) -> usize {
+        self.snapshots.len()
+    }
+
+    fn validate(&self) -> Result<(), StoreError> {
+        let cfg = self.spec.island.as_ref().ok_or_else(|| {
+            StoreError::Invalid("checkpoint spec has no island config (checkpoints exist only \
+                                 at migration boundaries, which need >= 2 islands)".into())
+        })?;
+        if cfg.islands < 2 {
+            return Err(StoreError::Invalid(format!(
+                "checkpoint spec declares {} island(s); migration boundaries need >= 2",
+                cfg.islands
+            )));
+        }
+        if self.generation == 0
+            || self.generation > self.spec.ga.generations
+            || self.generation % cfg.migration_interval != 0
+        {
+            return Err(StoreError::Invalid(format!(
+                "generation {} is not a migration boundary of this spec \
+                 (interval {}, {} generations)",
+                self.generation, cfg.migration_interval, self.spec.ga.generations
+            )));
+        }
+        if self.snapshots.len() != cfg.islands {
+            return Err(StoreError::Invalid(format!(
+                "checkpoint has {} snapshot(s) for {} island(s)",
+                self.snapshots.len(),
+                cfg.islands
+            )));
+        }
+        for (i, s) in self.snapshots.iter().enumerate() {
+            if s.island != i {
+                return Err(StoreError::Invalid(format!(
+                    "snapshot {i} is for island {} (snapshots must cover islands 0..{} \
+                     in ascending order)",
+                    s.island,
+                    cfg.islands
+                )));
+            }
+            if s.pop.is_empty() {
+                return Err(StoreError::Invalid(format!(
+                    "snapshot for island {i} has an empty population"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("format_version", (STORE_VERSION as usize).into()),
+            ("kind", CHECKPOINT_KIND.into()),
+            ("generation", self.generation.into()),
+            ("spec", self.spec.to_json()),
+            ("islands", Json::Arr(self.snapshots.iter().map(snapshot_to_json).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<SearchCheckpoint, StoreError> {
+        gate_header(j, CHECKPOINT_KIND)?;
+        check_keys(
+            j,
+            "checkpoint",
+            &["format_version", "kind", "generation", "spec", "islands"],
+        )?;
+        let generation = j
+            .get("generation")
+            .and_then(Json::as_f64)
+            .filter(|n| n.fract() == 0.0 && *n >= 0.0)
+            .map(|n| n as usize)
+            .ok_or_else(|| StoreError::Missing { field: "generation".into() })?;
+        let spec_json = j.get("spec").ok_or(StoreError::Missing { field: "spec".into() })?;
+        let spec = ExperimentSpec::from_json(spec_json)
+            .map_err(|e| StoreError::Invalid(format!("checkpoint spec: {e}")))?;
+        let islands = j
+            .get("islands")
+            .and_then(Json::as_arr)
+            .ok_or(StoreError::Missing { field: "islands".into() })?;
+        let mut snapshots = Vec::with_capacity(islands.len());
+        for (i, s) in islands.iter().enumerate() {
+            check_keys(s, &format!("snapshot {i}"), &SNAPSHOT_KEYS)?;
+            for key in SNAPSHOT_KEYS {
+                if s.get(key).is_none() {
+                    return Err(StoreError::Missing { field: format!("islands[{i}].{key}") });
+                }
+            }
+            snapshots.push(snapshot_from_json(s).map_err(|e| {
+                StoreError::Invalid(format!("snapshot {i}: {}", e.message))
+            })?);
+        }
+        SearchCheckpoint::new(spec, generation, snapshots)
+    }
+
+    pub fn from_str(text: &str) -> Result<SearchCheckpoint, StoreError> {
+        SearchCheckpoint::from_json(&Json::parse(text)?)
+    }
+
+    /// Crash-safe write: temp file + fsync + atomic rename, so a reader
+    /// (or a resume after a crash mid-write) sees either the previous
+    /// checkpoint or this one, never a torn prefix.
+    pub fn save(&self, path: &Path) -> Result<(), StoreError> {
+        self.validate()?;
+        atomic_write(path, self.to_json().to_string().as_bytes())
+            .map_err(|e| StoreError::Io(format!("writing {}: {e}", path.display())))
+    }
+
+    pub fn load(path: &Path) -> Result<SearchCheckpoint, StoreError> {
+        SearchCheckpoint::from_str(&read_text(path)?)
+    }
+}

@@ -1,0 +1,67 @@
+//! Typed failure classes for the durable-state files — the same
+//! discipline as [`hw::manifest::ManifestError`](crate::hw::manifest::ManifestError):
+//! feeding arbitrary bytes into a store loader must land in exactly one
+//! of these variants, never a panic and never a silent partial load.
+
+use std::fmt;
+
+use crate::util::json::JsonError;
+
+/// The store format version this build reads and writes (checkpoints
+/// and eval stores share the version counter; their `kind` field keeps
+/// the two file species apart).
+pub const STORE_VERSION: u64 = 1;
+
+/// Typed store failure.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StoreError {
+    /// The text is not valid JSON (position details in the message).
+    Parse(String),
+    /// `format_version` is missing or not one this build understands.
+    Version { found: u64, supported: u64 },
+    /// The file's `kind` discriminator names the other store species (or
+    /// something else entirely) — loading a checkpoint as an eval store
+    /// must not half-succeed.
+    Kind { found: String, expected: &'static str },
+    /// A required field is absent.
+    Missing { field: String },
+    /// A field this schema does not define (strict rejection — a typo'd
+    /// field must not silently drop state).
+    UnknownField { context: String, field: String },
+    /// A field is present but its value is out of contract.
+    Invalid(String),
+    /// Filesystem failure while loading or saving (path in the message).
+    Io(String),
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StoreError::Parse(msg) => write!(f, "store file is not valid JSON: {msg}"),
+            StoreError::Version { found, supported } => write!(
+                f,
+                "store format_version {found} is not supported (this build reads \
+                 version {supported})"
+            ),
+            StoreError::Kind { found, expected } => {
+                write!(f, "store file kind '{found}' is not '{expected}'")
+            }
+            StoreError::Missing { field } => write!(f, "store file is missing '{field}'"),
+            StoreError::UnknownField { context, field } => write!(
+                f,
+                "unknown field '{field}' in {context} (the store schema is strict; \
+                 see DESIGN.md \"Durable state\")"
+            ),
+            StoreError::Invalid(msg) => write!(f, "invalid store file: {msg}"),
+            StoreError::Io(msg) => write!(f, "store io error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+impl From<JsonError> for StoreError {
+    fn from(e: JsonError) -> StoreError {
+        StoreError::Parse(e.to_string())
+    }
+}

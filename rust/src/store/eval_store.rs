@@ -1,0 +1,365 @@
+//! The on-disk eval store: the PTQ eval memo ([`eval::ResultCache`])
+//! plus the beacon param-set index, persisted so `mohaq serve --store
+//! DIR` warm-starts with a hot cache instead of re-running every
+//! evaluation after a restart.
+//!
+//! Layout (v1): `{"format_version":1, "kind":"mohaq-eval-store",
+//! "param_sets":[{"name":..., "tensors":[[...], ...]}, ...],
+//! "entries":[{"set":S, ...key..., "value":E}, ...]}`.
+//!
+//! * `param_sets` holds the retrained beacon sets only. Set index 0 —
+//!   the baseline — is always re-derived from the artifacts on load, so
+//!   a store can never smuggle a different baseline under index 0.
+//!   Store-local indices are therefore 1-based positions in the
+//!   `param_sets` array; `apply` remaps them to whatever live indices
+//!   registration assigns.
+//! * `entries` carry [`CacheKey`]s in their two runtime shapes: packed
+//!   keys as `{"pw": "<u64>", "pa": "<u64>"}` decimal STRINGS (f64
+//!   would drop low bits, silently corrupting keys past 2^53) and wide
+//!   keys as explicit per-layer bit-width arrays `{"w":[...],
+//!   "a":[...]}`. Wide entries whose genomes turn out packable are
+//!   canonicalized to packed form on load, so a stored key always
+//!   compares equal to the key the live service builds for the same
+//!   genome.
+//! * f32 tensor values travel as JSON numbers — every f32 is exactly
+//!   representable as f64 and the codec prints shortest-round-trip
+//!   decimals, so the round trip is lossless.
+//! * The entry array is sorted by its serialized form before writing,
+//!   so the same cache state always produces byte-identical files
+//!   (HashMap iteration order is not deterministic).
+//!
+//! Execution/hit counters are NOT persisted: they are process-lifetime
+//! observability, not state — a warm-started process starts at zero and
+//! its first requests show up as cache hits (which is exactly the
+//! signal the `resume-smoke` CI job asserts on).
+//!
+//! Loading is two-phase so a failed load can never leave the service
+//! half-updated: [`EvalStoreData::from_json`] parses and validates the
+//! whole file into a staging value without touching the service;
+//! [`EvalStoreData::apply`] then validates every tensor shape up front
+//! and only afterwards registers sets and bulk-inserts memo entries.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::eval::{CacheKey, EvalService};
+use crate::quant::{Bits, QuantConfig};
+use crate::util::fsio::atomic_write;
+use crate::util::json::{obj, Json};
+
+use super::error::{StoreError, STORE_VERSION};
+use super::{check_keys, gate_header, read_text};
+
+/// `kind` discriminator of an eval-store file.
+pub const EVAL_STORE_KIND: &str = "mohaq-eval-store";
+
+/// What a load actually did — surfaced on the serve console so
+/// operators can see warm-start coverage at a glance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct LoadReport {
+    /// Beacon param sets registered into the live service.
+    pub param_sets_registered: usize,
+    /// Beacon param sets skipped because `--evict-beacons` is active.
+    pub param_sets_skipped: usize,
+    /// Memo entries inserted into the live cache.
+    pub entries_loaded: usize,
+    /// Memo entries dropped because their param set was skipped.
+    pub entries_dropped: usize,
+}
+
+/// A fully parsed, fully validated eval store — no live state touched
+/// yet. Entry keys use STORE-LOCAL set indices (0 = baseline, i >= 1 =
+/// `param_sets[i-1]`); [`EvalStoreData::apply`] remaps them to live
+/// indices.
+#[derive(Debug, Clone)]
+pub struct EvalStoreData {
+    pub param_sets: Vec<(String, Vec<Vec<f32>>)>,
+    pub entries: Vec<(CacheKey, f64)>,
+}
+
+impl EvalStoreData {
+    pub fn from_str(text: &str) -> Result<EvalStoreData, StoreError> {
+        EvalStoreData::from_json(&Json::parse(text)?)
+    }
+
+    pub fn from_json(j: &Json) -> Result<EvalStoreData, StoreError> {
+        gate_header(j, EVAL_STORE_KIND)?;
+        check_keys(j, "eval store", &["format_version", "kind", "param_sets", "entries"])?;
+        let sets_json = j
+            .get("param_sets")
+            .and_then(Json::as_arr)
+            .ok_or(StoreError::Missing { field: "param_sets".into() })?;
+        let mut param_sets = Vec::with_capacity(sets_json.len());
+        for (i, s) in sets_json.iter().enumerate() {
+            let context = format!("param set {i}");
+            check_keys(s, &context, &["name", "tensors"])?;
+            let name = s
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| StoreError::Missing { field: format!("param_sets[{i}].name") })?;
+            let tensors_json = s.get("tensors").and_then(Json::as_arr).ok_or_else(|| {
+                StoreError::Missing { field: format!("param_sets[{i}].tensors") }
+            })?;
+            let mut tensors = Vec::with_capacity(tensors_json.len());
+            for (t, tj) in tensors_json.iter().enumerate() {
+                let vals = tj.as_arr().ok_or_else(|| {
+                    StoreError::Invalid(format!(
+                        "param_sets[{i}].tensors[{t}] must be an array of numbers"
+                    ))
+                })?;
+                let mut data = Vec::with_capacity(vals.len());
+                for (k, vj) in vals.iter().enumerate() {
+                    let v = vj.as_f64().ok_or_else(|| {
+                        StoreError::Invalid(format!(
+                            "param_sets[{i}].tensors[{t}][{k}] must be a number"
+                        ))
+                    })?;
+                    // Every f32 round-trips exactly through f64; anything
+                    // a cast would alter was not written by us.
+                    let f = v as f32;
+                    if f64::from(f).to_bits() != v.to_bits() {
+                        return Err(StoreError::Invalid(format!(
+                            "param_sets[{i}].tensors[{t}][{k}] = {v} is not an f32 value"
+                        )));
+                    }
+                    data.push(f);
+                }
+                tensors.push(data);
+            }
+            param_sets.push((name.to_string(), tensors));
+        }
+        let entries_json = j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or(StoreError::Missing { field: "entries".into() })?;
+        let mut entries = Vec::with_capacity(entries_json.len());
+        for (i, e) in entries_json.iter().enumerate() {
+            entries.push(entry_from_json(e, i, param_sets.len())?);
+        }
+        Ok(EvalStoreData { param_sets, entries })
+    }
+
+    /// Apply a parsed store to a live service: register the beacon param
+    /// sets (unless `evict_beacons` trims them) and bulk-insert the memo
+    /// entries under their live set indices. All shape validation runs
+    /// BEFORE the first registration, so a bad store leaves the service
+    /// untouched; `--cache-cap` keeps bounding residency through normal
+    /// rotation.
+    pub fn apply(
+        self,
+        svc: &EvalService,
+        evict_beacons: bool,
+    ) -> Result<LoadReport, StoreError> {
+        let expect: Vec<usize> =
+            svc.arts.tensors.iter().map(|t| t.shape.iter().product()).collect();
+        if !evict_beacons {
+            for (i, (name, tensors)) in self.param_sets.iter().enumerate() {
+                if tensors.len() != expect.len() {
+                    return Err(StoreError::Invalid(format!(
+                        "param set {i} ('{name}') has {} tensors, artifact expects {}",
+                        tensors.len(),
+                        expect.len()
+                    )));
+                }
+                for (t, (data, want)) in tensors.iter().zip(&expect).enumerate() {
+                    if data.len() != *want {
+                        return Err(StoreError::Invalid(format!(
+                            "param set {i} ('{name}') tensor {t} has {} values, \
+                             artifact expects {want}",
+                            data.len()
+                        )));
+                    }
+                }
+            }
+        }
+        let mut report = LoadReport::default();
+        // Store-local set index -> live index. 0 is always the baseline.
+        let mut remap: HashMap<usize, usize> = HashMap::from([(0, 0)]);
+        if evict_beacons {
+            report.param_sets_skipped = self.param_sets.len();
+        } else {
+            for (i, (name, tensors)) in self.param_sets.into_iter().enumerate() {
+                let live = svc
+                    .add_param_set(&name, tensors)
+                    .map_err(|e| StoreError::Invalid(format!("registering '{name}': {e}")))?;
+                remap.insert(i + 1, live);
+                report.param_sets_registered += 1;
+            }
+        }
+        let mut batch = Vec::with_capacity(self.entries.len());
+        for (key, value) in self.entries {
+            match remap.get(&key.set()) {
+                Some(&live) => batch.push((rekey(key, live), value)),
+                None => report.entries_dropped += 1,
+            }
+        }
+        report.entries_loaded = batch.len();
+        svc.import_entries(batch)
+            .map_err(|e| StoreError::Invalid(format!("inserting memo entries: {e}")))?;
+        Ok(report)
+    }
+}
+
+/// Serialize a live service's durable state. Counters are not included
+/// (process-lifetime observability, not state).
+pub fn to_json(svc: &EvalService) -> Result<Json, StoreError> {
+    let sets = svc
+        .snapshot_param_sets()
+        .map_err(|e| StoreError::Invalid(format!("eval service: {e}")))?;
+    // Live index -> store-local index; evicted sets are already absent
+    // (their memo entries were purged at eviction, but stay defensive).
+    let mut remap: HashMap<usize, usize> = HashMap::new();
+    let mut sets_json = Vec::new();
+    for (live, set) in &sets {
+        if *live == 0 {
+            remap.insert(0, 0);
+            continue;
+        }
+        remap.insert(*live, sets_json.len() + 1);
+        sets_json.push(obj(vec![
+            ("name", set.name.as_str().into()),
+            (
+                "tensors",
+                Json::Arr(
+                    set.host
+                        .iter()
+                        .map(|t| Json::Arr(t.iter().map(|&v| Json::from(f64::from(v))).collect()))
+                        .collect(),
+                ),
+            ),
+        ]));
+    }
+    let entries = svc
+        .export_entries()
+        .map_err(|e| StoreError::Invalid(format!("eval service: {e}")))?;
+    let mut entry_rows: Vec<(String, Json)> = Vec::with_capacity(entries.len());
+    for (key, value) in entries {
+        let Some(&local) = remap.get(&key.set()) else { continue };
+        let row = entry_to_json(rekey(key, local), value);
+        entry_rows.push((row.to_string(), row));
+    }
+    // HashMap iteration order is nondeterministic; the file must not be.
+    entry_rows.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(obj(vec![
+        ("format_version", (STORE_VERSION as usize).into()),
+        ("kind", EVAL_STORE_KIND.into()),
+        ("param_sets", Json::Arr(sets_json)),
+        ("entries", Json::Arr(entry_rows.into_iter().map(|(_, j)| j).collect())),
+    ]))
+}
+
+/// Crash-safe save (temp file + fsync + atomic rename).
+pub fn save(path: &Path, svc: &EvalService) -> Result<(), StoreError> {
+    atomic_write(path, to_json(svc)?.to_string().as_bytes())
+        .map_err(|e| StoreError::Io(format!("writing {}: {e}", path.display())))
+}
+
+/// Load a store file into a live service; see [`EvalStoreData::apply`]
+/// for the untouched-on-failure contract.
+pub fn load(
+    path: &Path,
+    svc: &EvalService,
+    evict_beacons: bool,
+) -> Result<LoadReport, StoreError> {
+    EvalStoreData::from_str(&read_text(path)?)?.apply(svc, evict_beacons)
+}
+
+/// Rewrite a key's set index, preserving the genome encoding bitwise.
+fn rekey(key: CacheKey, set: usize) -> CacheKey {
+    match key {
+        CacheKey::Packed(_, pw, pa) => CacheKey::Packed(set, pw, pa),
+        CacheKey::Wide(_, w, a) => CacheKey::Wide(set, w, a),
+    }
+}
+
+fn entry_to_json(key: CacheKey, value: f64) -> Json {
+    match key {
+        CacheKey::Packed(set, pw, pa) => obj(vec![
+            ("set", set.into()),
+            ("pw", pw.to_string().into()),
+            ("pa", pa.to_string().into()),
+            ("value", value.into()),
+        ]),
+        CacheKey::Wide(set, w, a) => obj(vec![
+            ("set", set.into()),
+            ("w", Json::Arr(w.iter().map(|b| Json::from(b.bits() as usize)).collect())),
+            ("a", Json::Arr(a.iter().map(|b| Json::from(b.bits() as usize)).collect())),
+            ("value", value.into()),
+        ]),
+    }
+}
+
+fn entry_from_json(e: &Json, i: usize, num_sets: usize) -> Result<(CacheKey, f64), StoreError> {
+    let context = format!("entry {i}");
+    check_keys(e, &context, &["set", "pw", "pa", "w", "a", "value"])?;
+    let set = e
+        .get("set")
+        .and_then(Json::as_f64)
+        .filter(|n| n.fract() == 0.0 && *n >= 0.0)
+        .map(|n| n as usize)
+        .ok_or_else(|| StoreError::Missing { field: format!("entries[{i}].set") })?;
+    if set > num_sets {
+        return Err(StoreError::Invalid(format!(
+            "entries[{i}].set = {set} but the store declares {num_sets} param set(s)"
+        )));
+    }
+    let value = e
+        .get("value")
+        .and_then(Json::as_f64)
+        .filter(|v| v.is_finite())
+        .ok_or_else(|| {
+            StoreError::Invalid(format!("entries[{i}].value must be a finite number"))
+        })?;
+    let packed = (e.get("pw"), e.get("pa"));
+    let wide = (e.get("w"), e.get("a"));
+    let key = match (packed, wide) {
+        ((Some(pw), Some(pa)), (None, None)) => {
+            let parse_word = |side: &str, v: &Json| -> Result<u64, StoreError> {
+                v.as_str().and_then(|s| s.parse::<u64>().ok()).ok_or_else(|| {
+                    StoreError::Invalid(format!(
+                        "entries[{i}].{side} must be a u64 encoded as a decimal string"
+                    ))
+                })
+            };
+            CacheKey::Packed(set, parse_word("pw", pw)?, parse_word("pa", pa)?)
+        }
+        ((None, None), (Some(w), Some(a))) => {
+            let parse_bits = |side: &str, v: &Json| -> Result<Vec<Bits>, StoreError> {
+                let nums = v.as_arr().ok_or_else(|| {
+                    StoreError::Invalid(format!(
+                        "entries[{i}].{side} must be an array of bit widths"
+                    ))
+                })?;
+                nums.iter()
+                    .map(|n| {
+                        n.as_f64()
+                            .filter(|x| x.fract() == 0.0 && *x >= 0.0 && *x <= u32::MAX as f64)
+                            .and_then(|x| Bits::from_bits(x as u32))
+                            .ok_or_else(|| {
+                                StoreError::Invalid(format!(
+                                    "entries[{i}].{side}: {n:?} is not a supported bit width"
+                                ))
+                            })
+                    })
+                    .collect()
+            };
+            let (w_bits, a_bits) = (parse_bits("w", w)?, parse_bits("a", a)?);
+            if w_bits.len() != a_bits.len() {
+                return Err(StoreError::Invalid(format!(
+                    "entries[{i}]: 'w' has {} genes, 'a' has {}",
+                    w_bits.len(),
+                    a_bits.len()
+                )));
+            }
+            // Canonicalize: a packable genome stored wide must compare
+            // equal to the packed key the live service builds for it.
+            CacheKey::new(set, &QuantConfig { w_bits, a_bits })
+        }
+        _ => {
+            return Err(StoreError::Invalid(format!(
+                "entries[{i}] must carry either a packed key (pw + pa) or a wide key (w + a)"
+            )))
+        }
+    };
+    Ok((key, value))
+}

@@ -1,0 +1,91 @@
+//! Durable search state.
+//!
+//! Two file species, one discipline (see DESIGN.md "Durable state"):
+//!
+//! * **Search checkpoints** ([`checkpoint::SearchCheckpoint`]) — the
+//!   migration-boundary island state; `mohaq search --resume CKPT`
+//!   continues to a merged front bitwise-identical to the uninterrupted
+//!   run, single-process or distributed.
+//! * **Eval stores** ([`eval_store`]) — the PTQ eval memo and beacon
+//!   param-set index; `mohaq serve --store DIR` warm-starts with a hot
+//!   cache instead of recomputing evaluations across restarts.
+//!
+//! Both are versioned JSON written only through
+//! [`util::fsio::atomic_write`](crate::util::fsio::atomic_write)
+//! (temp file + fsync + atomic rename), gated on an exact
+//! `format_version`, strict about unknown fields, and fail only with a
+//! typed [`StoreError`] — never a panic and never a silent partial
+//! load. A failed load leaves all in-memory state untouched.
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+pub mod checkpoint;
+pub mod error;
+pub mod eval_store;
+
+pub use checkpoint::{SearchCheckpoint, CHECKPOINT_KIND};
+pub use error::{StoreError, STORE_VERSION};
+pub use eval_store::{EvalStoreData, LoadReport, EVAL_STORE_KIND};
+
+/// Read a store file to text, mapping filesystem failures to the typed
+/// error (path included — store errors surface on operator terminals).
+pub(crate) fn read_text(path: &Path) -> Result<String, StoreError> {
+    std::fs::read_to_string(path)
+        .map_err(|e| StoreError::Io(format!("reading {}: {e}", path.display())))
+}
+
+/// Gate the shared header of every store file: top level must be an
+/// object, `format_version` must be exactly [`STORE_VERSION`], and the
+/// `kind` discriminator must name the expected file species. The kind
+/// check runs before the version check so "you handed the eval-store
+/// loader a checkpoint" is reported as such even across future version
+/// bumps.
+pub(crate) fn gate_header(j: &Json, expected_kind: &'static str) -> Result<(), StoreError> {
+    if j.as_obj().is_none() {
+        return Err(StoreError::Invalid("top level must be a JSON object".into()));
+    }
+    match j.get("kind") {
+        None => return Err(StoreError::Missing { field: "kind".into() }),
+        Some(k) => match k.as_str() {
+            None => return Err(StoreError::Invalid("'kind' must be a string".into())),
+            Some(s) if s != expected_kind => {
+                return Err(StoreError::Kind { found: s.to_string(), expected: expected_kind })
+            }
+            Some(_) => {}
+        },
+    }
+    let version = j
+        .get("format_version")
+        .ok_or(StoreError::Missing { field: "format_version".into() })?;
+    let found = version
+        .as_f64()
+        .filter(|n| n.fract() == 0.0 && *n >= 0.0 && *n <= u64::MAX as f64)
+        .map(|n| n as u64)
+        .ok_or_else(|| {
+            StoreError::Invalid("'format_version' must be a non-negative integer".into())
+        })?;
+    if found != STORE_VERSION {
+        return Err(StoreError::Version { found, supported: STORE_VERSION });
+    }
+    Ok(())
+}
+
+/// Strict-schema guard: every key of `j` must be in `allowed`, anything
+/// else is a typed [`StoreError::UnknownField`]. A typo'd field in a
+/// hand-edited store file must fail loudly, not silently drop state.
+pub(crate) fn check_keys(j: &Json, context: &str, allowed: &[&str]) -> Result<(), StoreError> {
+    let map = j.as_obj().ok_or_else(|| {
+        StoreError::Invalid(format!("{context} must be a JSON object"))
+    })?;
+    for key in map.keys() {
+        if !allowed.contains(&key.as_str()) {
+            return Err(StoreError::UnknownField {
+                context: context.to_string(),
+                field: key.clone(),
+            });
+        }
+    }
+    Ok(())
+}

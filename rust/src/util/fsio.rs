@@ -1,0 +1,104 @@
+//! Crash-safe filesystem helpers.
+//!
+//! [`atomic_write`] is the one write primitive every durable-state file
+//! in the repo goes through (the `store` subsystem, `bench-gate
+//! --write-baseline`): readers either see the complete previous file or
+//! the complete new one, never a torn prefix.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Per-process counter so concurrent writers in one process never race
+/// on the same temp name (the pid alone distinguishes processes).
+static TMP_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+/// Write `bytes` to `path` atomically: the data lands in a temp file in
+/// the SAME directory (rename across filesystems is not atomic), is
+/// fsync'd, and is renamed over the target in one step. On any failure
+/// the temp file is removed and the previous contents of `path` are
+/// untouched. The directory entry is fsync'd best-effort afterwards so
+/// the rename itself survives a crash on journaling filesystems.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    let dir = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p,
+        _ => Path::new("."),
+    };
+    let base = path
+        .file_name()
+        .ok_or_else(|| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("{} has no file name", path.display()),
+            )
+        })?;
+    let tmp = dir.join(format!(
+        ".{}.tmp.{}.{}",
+        base.to_string_lossy(),
+        std::process::id(),
+        TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let write_and_rename = || -> std::io::Result<()> {
+        let mut f = OpenOptions::new().write(true).create(true).truncate(true).open(&tmp)?;
+        f.write_all(bytes)?;
+        // Data must be on disk BEFORE the rename makes it visible — a
+        // rename of unsynced data can survive a crash as an empty file.
+        f.sync_all()?;
+        drop(f);
+        std::fs::rename(&tmp, path)
+    };
+    if let Err(e) = write_and_rename() {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    // Persist the directory entry too; failure here does not un-write
+    // the file, so it is advisory.
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all();
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("mohaq_fsio_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn atomic_write_replaces_contents_and_leaves_no_temp_files() {
+        let dir = tmp_dir("replace");
+        let path = dir.join("state.json");
+        atomic_write(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        atomic_write(&path, b"second version").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second version");
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files leaked: {leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn failed_write_preserves_the_previous_file() {
+        let dir = tmp_dir("preserve");
+        let path = dir.join("state.json");
+        atomic_write(&path, b"durable").unwrap();
+        // Writing THROUGH a missing parent directory must fail cleanly...
+        let bad = dir.join("no_such_subdir").join("state.json");
+        assert!(atomic_write(&bad, b"x").is_err());
+        // ...and a directory path (no file name) is a typed error.
+        assert!(atomic_write(Path::new("/"), b"x").is_err());
+        assert_eq!(std::fs::read(&path).unwrap(), b"durable");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

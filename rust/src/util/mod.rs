@@ -5,6 +5,7 @@
 pub mod bench;
 pub mod benchgate;
 pub mod cli;
+pub mod fsio;
 pub mod json;
 pub mod pool;
 pub mod prop;

@@ -452,6 +452,230 @@ fn failed_registration_leaves_registry_untouched() {
     );
 }
 
+/// A valid serialized checkpoint to mutate: harvested from a real
+/// 2-island run so the populations/RNG states are genuine.
+fn valid_checkpoint_text() -> String {
+    use mohaq::coordinator::{CancelToken, ExperimentSpec, ScoredObjective};
+    use mohaq::moo::IslandSnapshot;
+    use mohaq::store::SearchCheckpoint;
+
+    let mut spec = ExperimentSpec::builder()
+        .name("prop-store")
+        .platform("silago")
+        .sram_mb(6.0)
+        .objective(ScoredObjective::error())
+        .objective(ScoredObjective::neg_speedup())
+        .pop_size(8)
+        .initial_pop_size(16)
+        .generations(4)
+        .seed(0x9E0)
+        .err_feasible_pp(25.0)
+        .build()
+        .unwrap();
+    spec.island = Some(IslandConfig {
+        islands: 2,
+        migration_interval: 2,
+        topology: Topology::Ring,
+        migrants: 1,
+    });
+    let mut first: Option<(usize, Vec<IslandSnapshot>)> = None;
+    let mut sink = |gen: usize, snaps: &[IslandSnapshot]| {
+        if first.is_none() {
+            first = Some((gen, snaps.to_vec()));
+        }
+    };
+    let sink_opt: Option<&mut dyn FnMut(usize, &[IslandSnapshot])> = Some(&mut sink);
+    SearchSession::synthetic()
+        .unwrap()
+        .run_checkpointed(&spec, |_| {}, sink_opt, &CancelToken::new())
+        .unwrap();
+    let (gen, snaps) = first.expect("a 2-island 4-generation run must hit a boundary");
+    SearchCheckpoint::new(spec, gen, snaps).unwrap().to_json().to_string()
+}
+
+/// A valid serialized eval store to mutate: a real memo entry under the
+/// baseline parameter set.
+fn valid_eval_store_text() -> String {
+    let s = SearchSession::synthetic().unwrap();
+    let n = s.artifacts().layer_names.len();
+    let qc = QuantConfig::uniform(n, Bits::B4, Bits::B4);
+    s.eval().val_error(&qc, 0).unwrap();
+    mohaq::store::eval_store::to_json(s.eval()).unwrap().to_string()
+}
+
+/// Malformed-input robustness for the durable-state files: every hostile
+/// payload through BOTH strict parsers (checkpoint + eval store) must
+/// come back as a typed `StoreError`, never a panic and never a silent
+/// partial parse. Deterministic worst cases first, then randomized
+/// truncation/splicing of genuine files.
+#[test]
+fn hostile_store_files_yield_typed_errors_never_panics() {
+    use mohaq::store::{EvalStoreData, SearchCheckpoint, StoreError};
+
+    let deep = format!("{}1{}", "[".repeat(200), "]".repeat(200));
+    let generic: &[&str] = &[
+        "",                                                   // empty
+        "{",                                                  // truncated object
+        "nul",                                                // truncated literal
+        &deep,                                                // over-deep nesting
+        "[1, 2, 3]",                                          // not an object
+        "\"just a string\"",
+        r#"{"kind": 7, "format_version": 1}"#,                // kind wrong type
+        r#"{"format_version": "one", "kind": "mohaq-checkpoint"}"#,
+        r#"{"format_version": 1.5, "kind": "mohaq-checkpoint"}"#, // fractional
+        r#"{"format_version": -1, "kind": "mohaq-checkpoint"}"#,  // negative
+    ];
+    for case in generic {
+        assert!(SearchCheckpoint::from_str(case).is_err(), "checkpoint accepted: {case:?}");
+        assert!(EvalStoreData::from_str(case).is_err(), "eval store accepted: {case:?}");
+    }
+
+    // The typed classes, pinned exactly.
+    assert!(matches!(
+        SearchCheckpoint::from_str(r#"{"format_version": 1}"#),
+        Err(StoreError::Missing { .. })
+    ));
+    assert!(matches!(
+        SearchCheckpoint::from_str(r#"{"kind": "mohaq-checkpoint"}"#),
+        Err(StoreError::Missing { .. })
+    ));
+    assert!(matches!(
+        SearchCheckpoint::from_str(r#"{"format_version": 99, "kind": "mohaq-checkpoint"}"#),
+        Err(StoreError::Version { found: 99, .. })
+    ));
+    // The kind gates BEFORE the version: a file of the wrong kind reports
+    // Kind even when its version is also unsupported (the actionable
+    // error is "wrong file", not "wrong version of the wrong file").
+    assert!(matches!(
+        SearchCheckpoint::from_str(r#"{"format_version": 99, "kind": "mohaq-eval-store"}"#),
+        Err(StoreError::Kind { .. })
+    ));
+    assert!(matches!(
+        EvalStoreData::from_str(r#"{"format_version": 1, "kind": "mohaq-checkpoint"}"#),
+        Err(StoreError::Kind { .. })
+    ));
+
+    let ckpt = valid_checkpoint_text();
+    assert!(SearchCheckpoint::from_str(&ckpt).is_ok(), "fixture checkpoint must be valid");
+    // Duplicate keys: the JSON object is a BTreeMap, so the LAST value
+    // wins — the duplicated bad version is seen and rejected, never
+    // silently shadowed by the first occurrence.
+    let dup = format!("{},\"format_version\":99}}", &ckpt[..ckpt.len() - 1]);
+    assert!(matches!(
+        SearchCheckpoint::from_str(&dup),
+        Err(StoreError::Version { found: 99, .. })
+    ));
+    // Unknown fields are typed errors (strict-parse discipline).
+    let unknown = format!("{},\"checksum\":\"abc\"}}", &ckpt[..ckpt.len() - 1]);
+    assert!(matches!(
+        SearchCheckpoint::from_str(&unknown),
+        Err(StoreError::UnknownField { .. })
+    ));
+    // A generation off the migration grid fails checkpoint validation.
+    let off_grid = ckpt.replace("\"generation\":2", "\"generation\":3");
+    assert!(matches!(SearchCheckpoint::from_str(&off_grid), Err(StoreError::Invalid(_))));
+
+    let store = valid_eval_store_text();
+    assert!(EvalStoreData::from_str(&store).is_ok(), "fixture eval store must be valid");
+    // An entry carrying both a packed AND a wide key is ambiguous.
+    assert!(matches!(
+        EvalStoreData::from_str(
+            r#"{"format_version":1,"kind":"mohaq-eval-store","param_sets":[],
+                "entries":[{"set":0,"pw":"1","pa":"2","w":[4],"a":[4],"value":0.5}]}"#
+        ),
+        Err(StoreError::Invalid(_))
+    ));
+    // A set index past the declared param sets.
+    assert!(matches!(
+        EvalStoreData::from_str(
+            r#"{"format_version":1,"kind":"mohaq-eval-store","param_sets":[],
+                "entries":[{"set":3,"pw":"1","pa":"2","value":0.5}]}"#
+        ),
+        Err(StoreError::Invalid(_))
+    ));
+    // A fractional set index (as_f64 would truncate; the parser must not).
+    assert!(matches!(
+        EvalStoreData::from_str(
+            r#"{"format_version":1,"kind":"mohaq-eval-store","param_sets":[],
+                "entries":[{"set":0.5,"pw":"1","pa":"2","value":0.5}]}"#
+        ),
+        Err(StoreError::Invalid(_))
+    ));
+    // A tensor value that is not exactly representable as f32 would be
+    // silently rounded on load — rejected instead.
+    assert!(matches!(
+        EvalStoreData::from_str(
+            r#"{"format_version":1,"kind":"mohaq-eval-store",
+                "param_sets":[{"name":"x","tensors":[[0.1]]}],"entries":[]}"#
+        ),
+        Err(StoreError::Invalid(_))
+    ));
+
+    // Randomized: truncate / splice genuine files at arbitrary points and
+    // re-parse through BOTH parsers. Any panic fails check_prop.
+    for valid in [ckpt, store] {
+        check_prop(
+            "store_truncation_robustness",
+            150,
+            |r| (r.below(valid.len()), r.below(valid.len())),
+            |&(a, b)| {
+                let cut = |mut i: usize| {
+                    while !valid.is_char_boundary(i) {
+                        i -= 1;
+                    }
+                    i
+                };
+                let (a, b) = (cut(a), cut(b));
+                let truncated = &valid[..a];
+                let spliced = format!("{}{}", &valid[..a], &valid[b..]);
+                for text in [truncated, spliced.as_str()] {
+                    let _ = SearchCheckpoint::from_str(text);
+                    let _ = EvalStoreData::from_str(text);
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// A failed eval-store load must leave the live cache untouched — the
+/// `mohaq serve --store` startup path relies on this: a corrupt store is
+/// a hard error, never a partially warm cache.
+#[test]
+fn failed_eval_store_load_leaves_the_cache_untouched() {
+    use mohaq::store::EvalStoreData;
+
+    let s = SearchSession::synthetic().unwrap();
+    let n = s.artifacts().layer_names.len();
+    let qc = QuantConfig::uniform(n, Bits::B8, Bits::B8);
+    let before_val = s.eval().val_error(&qc, 0).unwrap();
+    let before_stats = s.eval().stats();
+    let before_entries = s.eval().export_entries().unwrap();
+    let before_sets = s.eval().snapshot_param_sets().unwrap().len();
+
+    // Parses cleanly but fails in apply(): the param set carries one more
+    // tensor than the model has, caught by pre-registration validation.
+    let extra = s.artifacts().tensors.len() + 1;
+    let tensors = vec!["[0.5]"; extra].join(",");
+    let text = format!(
+        r#"{{"format_version":1,"kind":"mohaq-eval-store","param_sets":[{{"name":"bad","tensors":[{tensors}]}}],"entries":[{{"set":1,"pw":"9","pa":"9","value":0.25}}]}}"#
+    );
+    let data = EvalStoreData::from_str(&text).expect("the corruption is apply-time, not parse-time");
+    assert!(data.apply(s.eval(), false).is_err(), "a mismatched param set must be rejected");
+
+    // Nothing changed: no phantom sets, no phantom entries, no counters.
+    assert_eq!(s.eval().snapshot_param_sets().unwrap().len(), before_sets);
+    let after_entries = s.eval().export_entries().unwrap();
+    assert_eq!(after_entries.len(), before_entries.len(), "entry count changed");
+    for e in &before_entries {
+        assert!(after_entries.contains(e), "entry vanished after a failed load");
+    }
+    let after = s.eval().stats();
+    assert_eq!(after.executions, before_stats.executions);
+    assert_eq!(after.unique_solutions, before_stats.unique_solutions);
+    assert_eq!(s.eval().val_error(&qc, 0).unwrap().to_bits(), before_val.to_bits());
+}
+
 #[test]
 fn beacon_distance_zero_iff_same_weight_bits() {
     check_prop(

@@ -1,0 +1,400 @@
+//! Durable-state integration tests — hermetic (surrogate evaluator, no
+//! artifacts): real checkpoint files and eval stores on disk, real
+//! resume runs, real serve processes warm-starting from a store.
+//!
+//! Covers the acceptance contracts of the store tentpole:
+//!   * checkpoint files round-trip losslessly (RNG words as decimal
+//!     strings, populations bit for bit) and save/load/save is
+//!     byte-identical;
+//!   * a search resumed from a mid-run checkpoint finishes with a front
+//!     BITWISE-identical to the uninterrupted run — single-process and
+//!     distributed (simulated coordinator crash included);
+//!   * the eval store snapshots the PTQ memo + beacon param sets and a
+//!     fresh session (or a restarted serve server) answers repeated
+//!     configs from cache — no re-executions, bitwise-equal values.
+
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use mohaq::coordinator::{
+    CancelToken, ExperimentSpec, ScoredObjective, SearchError, SearchOutcome, SearchSession,
+};
+use mohaq::dist::DistConfig;
+use mohaq::eval::CacheKey;
+use mohaq::moo::{IslandConfig, IslandSnapshot, Topology};
+use mohaq::quant::{Bits, QuantConfig};
+use mohaq::serve::{ServeClient, ServeState, Server};
+use mohaq::store::{eval_store, SearchCheckpoint};
+
+/// A scratch file under a per-process temp directory (tests in one
+/// binary may run concurrently, so every caller picks a distinct name).
+fn temp_path(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mohaq-store-tests-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// The shared fixture: 4 islands, migration every 2 of 6 generations —
+/// boundaries at generation 2 and 4, so a checkpoint always exists
+/// strictly mid-run. Same shape as the dist test fixture.
+fn island_spec(topology: Topology) -> ExperimentSpec {
+    let mut spec = ExperimentSpec::builder()
+        .name("store-silago")
+        .platform("silago")
+        .sram_mb(6.0)
+        .objective(ScoredObjective::error())
+        .objective(ScoredObjective::neg_speedup())
+        .pop_size(8)
+        .initial_pop_size(16)
+        .generations(6)
+        .seed(0x570CA)
+        .err_feasible_pp(25.0)
+        .build()
+        .unwrap();
+    spec.island = Some(IslandConfig {
+        islands: 4,
+        migration_interval: 2,
+        topology,
+        migrants: 2,
+    });
+    spec
+}
+
+/// The determinism contract, at full strength: same front, bit for bit.
+fn assert_fronts_bitwise_equal(resumed: &SearchOutcome, reference: &SearchOutcome) {
+    assert_eq!(resumed.objective_names, reference.objective_names, "objective labels diverged");
+    assert_eq!(resumed.evaluations, reference.evaluations, "evaluation totals diverged");
+    assert_eq!(resumed.rows.len(), reference.rows.len(), "front size diverged");
+    for (r, l) in resumed.rows.iter().zip(&reference.rows) {
+        assert_eq!(r.qc.display_wa(), l.qc.display_wa(), "genomes diverged");
+        assert_eq!(r.wer_v.to_bits(), l.wer_v.to_bits(), "wer_v not bitwise equal");
+        assert_eq!(r.wer_t.to_bits(), l.wer_t.to_bits(), "wer_t not bitwise equal");
+        assert_eq!(r.size_mb.to_bits(), l.size_mb.to_bits());
+        assert_eq!(r.hw.len(), l.hw.len());
+        for (rh, lh) in r.hw.iter().zip(&l.hw) {
+            assert_eq!(rh.platform, lh.platform);
+            assert_eq!(rh.speedup.to_bits(), lh.speedup.to_bits());
+        }
+    }
+    match (resumed.front_hypervolume, reference.front_hypervolume) {
+        (Some(a), Some(b)) => assert_eq!(a.to_bits(), b.to_bits(), "hypervolume diverged"),
+        (a, b) => assert_eq!(a.is_some(), b.is_some(), "hypervolume presence diverged"),
+    }
+}
+
+/// Harvest the FIRST migration-boundary checkpoint from a full run of
+/// `spec`; also returns the run's outcome (the bitwise reference).
+fn first_checkpoint(spec: &ExperimentSpec) -> ((usize, Vec<IslandSnapshot>), SearchOutcome) {
+    let mut first: Option<(usize, Vec<IslandSnapshot>)> = None;
+    let mut sink = |gen: usize, snaps: &[IslandSnapshot]| {
+        if first.is_none() {
+            first = Some((gen, snaps.to_vec()));
+        }
+    };
+    let sink_opt: Option<&mut dyn FnMut(usize, &[IslandSnapshot])> = Some(&mut sink);
+    let outcome = SearchSession::synthetic()
+        .unwrap()
+        .run_checkpointed(spec, |_| {}, sink_opt, &CancelToken::new())
+        .unwrap();
+    (first.expect("a 4-island 6-generation run must hit a boundary"), outcome)
+}
+
+#[test]
+fn checkpoint_files_round_trip_losslessly_and_deterministically() {
+    let spec = island_spec(Topology::Ring);
+    let ((gen, mut snaps), _) = first_checkpoint(&spec);
+
+    // Push the codec to its edges: RNG words that do not survive an f64
+    // round-trip (why they travel as decimal strings) and an evaluation
+    // count beyond 2^53.
+    snaps[0].rng = [u64::MAX, 0, 1, 0x8000_0000_0000_0001];
+    snaps[1].evaluations = (1u64 << 60) as usize;
+
+    let ckpt = SearchCheckpoint::new(spec.clone(), gen, snaps).unwrap();
+    let text = ckpt.to_json().to_string();
+    let back = SearchCheckpoint::from_str(&text).unwrap();
+    assert_eq!(back.generation, ckpt.generation);
+    assert_eq!(back.snapshots, ckpt.snapshots, "snapshots did not round-trip bit for bit");
+    assert_eq!(
+        back.spec.to_json().to_string(),
+        ckpt.spec.to_json().to_string(),
+        "spec did not round-trip"
+    );
+
+    // save -> load -> save is byte-identical (atomic_write + a canonical
+    // serialization = checkpoint files diff cleanly across interrupts).
+    let path_a = temp_path("roundtrip_a.json");
+    let path_b = temp_path("roundtrip_b.json");
+    ckpt.save(&path_a).unwrap();
+    let loaded = SearchCheckpoint::load(&path_a).unwrap();
+    loaded.save(&path_b).unwrap();
+    assert_eq!(
+        std::fs::read(&path_a).unwrap(),
+        std::fs::read(&path_b).unwrap(),
+        "re-saving a loaded checkpoint changed the bytes"
+    );
+}
+
+#[test]
+fn resumed_search_matches_the_uninterrupted_run_bitwise() {
+    for topology in [Topology::Ring, Topology::FullyConnected] {
+        let spec = island_spec(topology);
+        // Reference: the plain uninterrupted run; run_checkpointed with a
+        // sink must not perturb it.
+        let reference = SearchSession::synthetic().unwrap().run(&spec).unwrap();
+        assert!(!reference.rows.is_empty(), "reference front is empty (bad fixture)");
+        let ((gen, snaps), full) = first_checkpoint(&spec);
+        assert_fronts_bitwise_equal(&full, &reference);
+        assert!(gen > 0 && gen < spec.ga.generations, "checkpoint not strictly mid-run");
+
+        // Through the real file format, into a FRESH session (cold cache:
+        // proves the front depends on the checkpoint, not leftover state).
+        let path = temp_path(&format!("resume_{topology:?}.json"));
+        SearchCheckpoint::new(spec.clone(), gen, snaps).unwrap().save(&path).unwrap();
+        let ckpt = SearchCheckpoint::load(&path).unwrap();
+        let resumed = SearchSession::synthetic()
+            .unwrap()
+            .run_resumed(
+                &ckpt.spec,
+                ckpt.generation,
+                ckpt.snapshots,
+                |_| {},
+                None,
+                &CancelToken::new(),
+            )
+            .unwrap();
+        assert_fronts_bitwise_equal(&resumed, &reference);
+    }
+}
+
+/// Start a hermetic worker server on an ephemeral port (dist test idiom).
+fn spawn_worker() -> (SocketAddr, std::thread::JoinHandle<std::io::Result<()>>) {
+    let state = ServeState::worker(SearchSession::synthetic().unwrap(), 2);
+    let server = Server::bind("127.0.0.1:0", state).unwrap();
+    let addr = server.local_addr().unwrap();
+    (addr, std::thread::spawn(move || server.run()))
+}
+
+fn stop_worker(addr: SocketAddr) {
+    use std::io::{BufRead, BufReader, Write};
+    if let Ok(mut s) = std::net::TcpStream::connect(addr) {
+        let _ = s.write_all(b"{\"op\":\"shutdown\"}\n");
+        let _ = s.flush();
+        let mut line = String::new();
+        let _ = BufReader::new(s).read_line(&mut line);
+    }
+}
+
+#[test]
+fn distributed_resume_after_coordinator_crash_matches_bitwise() {
+    let spec = island_spec(Topology::Ring);
+    let reference = SearchSession::synthetic().unwrap().run(&spec).unwrap();
+
+    let workers: Vec<_> = (0..2).map(|_| spawn_worker()).collect();
+    let addrs: Vec<String> = workers.iter().map(|(a, _)| a.to_string()).collect();
+
+    // "Crash" the coordinator right after its first durable boundary: the
+    // checkpoint sink records the state, then cancels the run — the
+    // worker processes keep running (they hold no cross-search state).
+    let cancel = CancelToken::new();
+    let trigger = cancel.clone();
+    let mut recorded: Option<(usize, Vec<IslandSnapshot>)> = None;
+    let mut sink = |gen: usize, snaps: &[IslandSnapshot]| {
+        if recorded.is_none() {
+            recorded = Some((gen, snaps.to_vec()));
+            trigger.cancel();
+        }
+    };
+    let sink_opt: Option<&mut dyn FnMut(usize, &[IslandSnapshot])> = Some(&mut sink);
+    let err = SearchSession::synthetic()
+        .unwrap()
+        .run_distributed_resumable(
+            &spec,
+            &addrs,
+            &DistConfig::default(),
+            None,
+            sink_opt,
+            |_| {},
+            &cancel,
+        )
+        .expect_err("the interrupted coordinator must not finish");
+    assert!(matches!(err, SearchError::Cancelled), "expected Cancelled, got {err:?}");
+    let (gen, snaps) = recorded.expect("the sink never fired");
+    assert!(gen < spec.ga.generations, "checkpoint not strictly mid-run");
+
+    // A brand-new coordinator process-equivalent (fresh session, fresh
+    // connections) resumes from the written file against the SAME still-
+    // running workers and lands on the identical front.
+    let path = temp_path("dist_resume.json");
+    SearchCheckpoint::new(spec.clone(), gen, snaps).unwrap().save(&path).unwrap();
+    let ckpt = SearchCheckpoint::load(&path).unwrap();
+    let resumed = SearchSession::synthetic()
+        .unwrap()
+        .run_distributed_resumable(
+            &ckpt.spec,
+            &addrs,
+            &DistConfig::default(),
+            Some((ckpt.generation, ckpt.snapshots)),
+            None,
+            |_| {},
+            &CancelToken::new(),
+        )
+        .expect("resume against the surviving workers");
+    assert_fronts_bitwise_equal(&resumed, &reference);
+
+    for (addr, handle) in workers {
+        stop_worker(addr);
+        handle.join().unwrap().unwrap();
+    }
+}
+
+#[test]
+fn eval_store_round_trips_the_memo_and_warm_starts_a_fresh_session() {
+    // Session A: populate the memo — two executed configs on the
+    // baseline set, plus a registered param set with an imported entry
+    // (standing in for a beacon's retrained parameters).
+    let a = SearchSession::synthetic().unwrap();
+    let n = a.artifacts().layer_names.len();
+    let qc4 = QuantConfig::uniform(n, Bits::from_bits(4).unwrap(), Bits::from_bits(4).unwrap());
+    let qc8 = QuantConfig::uniform(n, Bits::from_bits(8).unwrap(), Bits::from_bits(8).unwrap());
+    let e4 = a.eval().val_error(&qc4, 0).unwrap();
+    let e8 = a.eval().val_error(&qc8, 0).unwrap();
+    let host: Vec<Vec<f32>> = a
+        .artifacts()
+        .tensors
+        .iter()
+        .map(|t| vec![0.25f32; t.shape.iter().product()])
+        .collect();
+    let warm_idx = a.eval().add_param_set("warm-beacon", host).unwrap();
+    a.eval().import_entries(vec![(CacheKey::new(warm_idx, &qc4), 0.123)]).unwrap();
+
+    let path = temp_path("eval_store.json");
+    eval_store::save(&path, a.eval()).unwrap();
+
+    // Session B: reload everything, byte-deterministically.
+    let b = SearchSession::synthetic().unwrap();
+    let report = eval_store::load(&path, b.eval(), false).unwrap();
+    assert_eq!(report.param_sets_registered, 1);
+    assert_eq!(report.param_sets_skipped, 0);
+    assert_eq!(report.entries_loaded, 3);
+    assert_eq!(report.entries_dropped, 0);
+    let resaved = temp_path("eval_store_resaved.json");
+    eval_store::save(&resaved, b.eval()).unwrap();
+    assert_eq!(
+        std::fs::read(&path).unwrap(),
+        std::fs::read(&resaved).unwrap(),
+        "save -> load -> save changed the bytes"
+    );
+
+    // Warm start: repeated configs are pure cache hits — no executions,
+    // values bitwise equal to what session A computed.
+    let stats0 = b.eval().stats();
+    assert_eq!(b.eval().val_error(&qc4, 0).unwrap().to_bits(), e4.to_bits());
+    assert_eq!(b.eval().val_error(&qc8, 0).unwrap().to_bits(), e8.to_bits());
+    let stats1 = b.eval().stats();
+    assert_eq!(stats1.executions, stats0.executions, "warm start re-executed");
+    assert_eq!(stats1.cache_hits, stats0.cache_hits + 2);
+    // The imported beacon entry landed under B's live index for the set.
+    let warm_b = b
+        .eval()
+        .snapshot_param_sets()
+        .unwrap()
+        .into_iter()
+        .find(|(_, ps)| ps.name == "warm-beacon")
+        .map(|(idx, _)| idx)
+        .expect("the beacon set was not re-registered");
+    assert!(
+        b.eval()
+            .export_entries()
+            .unwrap()
+            .contains(&(CacheKey::new(warm_b, &qc4), 0.123)),
+        "the beacon memo entry did not survive the reload"
+    );
+
+    // Session C honors --evict-beacons on load: baseline entries only,
+    // the beacon set and its entry reported as skipped/dropped.
+    let c = SearchSession::synthetic().unwrap();
+    let report = eval_store::load(&path, c.eval(), true).unwrap();
+    assert_eq!(report.param_sets_registered, 0);
+    assert_eq!(report.param_sets_skipped, 1);
+    assert_eq!(report.entries_loaded, 2);
+    assert_eq!(report.entries_dropped, 1);
+    let stats0 = c.eval().stats();
+    assert_eq!(c.eval().val_error(&qc4, 0).unwrap().to_bits(), e4.to_bits());
+    assert_eq!(c.eval().stats().executions, stats0.executions);
+}
+
+/// Serve quickstart spec (serve test idiom): wide feasibility so the
+/// front is never empty.
+fn serve_spec() -> ExperimentSpec {
+    ExperimentSpec::builder()
+        .name("store-tenant")
+        .platform("silago")
+        .sram_mb(6.0)
+        .objective(ScoredObjective::error())
+        .objective(ScoredObjective::neg_speedup())
+        .pop_size(8)
+        .initial_pop_size(16)
+        .generations(6)
+        .seed(0x5708E)
+        .err_feasible_pp(25.0)
+        .build()
+        .unwrap()
+}
+
+/// Start a hermetic serve server, keeping a handle on its shared state
+/// (what `mohaq serve --store DIR` uses to save/reload the eval store).
+fn spawn_server_with_state(
+) -> (SocketAddr, std::thread::JoinHandle<std::io::Result<()>>, std::sync::Arc<ServeState>) {
+    let state = ServeState::new(SearchSession::synthetic().unwrap(), 2);
+    let keep = state.clone();
+    let server = Server::bind("127.0.0.1:0", state).unwrap();
+    let addr = server.local_addr().unwrap();
+    (addr, std::thread::spawn(move || server.run()), keep)
+}
+
+#[test]
+fn restarted_server_warm_starts_from_the_eval_store() {
+    let path = temp_path("serve_store.json");
+
+    // First server lifetime: run a search, save the store at shutdown.
+    let (addr, handle, state) = spawn_server_with_state();
+    let mut client = ServeClient::connect_retry(&addr.to_string(), Duration::from_secs(10)).unwrap();
+    let cold = client.search(&serve_spec()).unwrap();
+    assert!(!cold.rows.is_empty(), "cold front is empty");
+    let stats = client.stats().unwrap();
+    assert!(stats.unique_solutions > 0);
+    assert_eq!(stats.evictions, 0);
+    assert_eq!(stats.param_sets_evicted, 0);
+    client.shutdown().unwrap();
+    handle.join().unwrap().unwrap();
+    eval_store::save(&path, state.session().eval()).unwrap();
+
+    // Second server lifetime: reload the store, then answer the SAME
+    // spec — hits on the very first post-restart request, search-phase
+    // executions at most the final report's per-row test scoring, and a
+    // bitwise-identical front.
+    let (addr, handle, state) = spawn_server_with_state();
+    let report = eval_store::load(&path, state.session().eval(), false).unwrap();
+    assert!(report.entries_loaded > 0, "the store carried no memo entries");
+    let mut client = ServeClient::connect_retry(&addr.to_string(), Duration::from_secs(10)).unwrap();
+    let warm = client.search(&serve_spec()).unwrap();
+    assert!(warm.cache_hits > 0, "first post-restart request must hit the reloaded cache");
+    assert!(
+        warm.exec_calls <= warm.rows.len(),
+        "warm request re-executed {} times for {} rows",
+        warm.exec_calls,
+        warm.rows.len()
+    );
+    assert_eq!(warm.rows.len(), cold.rows.len());
+    for (w, c) in warm.rows.iter().zip(&cold.rows) {
+        assert_eq!(w.config, c.config);
+        assert_eq!(w.wer_v.to_bits(), c.wer_v.to_bits());
+    }
+    // Server-level counters agree with the per-request view.
+    let stats = client.stats().unwrap();
+    assert!(stats.cache_hits >= warm.cache_hits);
+    client.shutdown().unwrap();
+    handle.join().unwrap().unwrap();
+}
