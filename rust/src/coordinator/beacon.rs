@@ -13,6 +13,7 @@ use anyhow::Result;
 
 use super::trainer::{RetrainReport, Trainer};
 use crate::eval::EvalService;
+use crate::params::ParamStore;
 use crate::quant::QuantConfig;
 
 /// Shared sink the search session drains to stream `BeaconCreated` events
@@ -60,6 +61,32 @@ pub struct Beacon {
     pub report: RetrainReport,
 }
 
+/// Where in the schedule this manager may CREATE beacons.
+///
+/// Single-population beacon runs keep the classic per-batch Algorithm 1
+/// schedule. Island searches (single-process or distributed) create
+/// beacons only in the coordinator's boundary window pass — mid-window
+/// candidates on every shard SHARE already-finalized beacons, which is
+/// what keeps Algorithm 1's order dependence well-defined when the
+/// population is split across processes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BeaconMode {
+    /// Creation allowed on every evaluation batch (classic Algorithm 1).
+    PerBatch,
+    /// Creation suppressed: `decide` maps `Create` to `Baseline`; only
+    /// the explicit [`BeaconManager::plan_window`] pass creates.
+    ShareOnly,
+}
+
+/// Resumable/replicable identity of one beacon: its position plus the
+/// NAME of its parameter set (ids are process-local; names are what the
+/// durable eval store and checkpoints key on).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BeaconSnapshot {
+    pub qc: QuantConfig,
+    pub set_name: String,
+}
+
 /// Outcome of the pure eligibility half of Algorithm 1 (`decide`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BeaconDecision {
@@ -95,6 +122,7 @@ pub struct BeaconManager {
     pub created_log: Vec<String>,
     /// Optional live event sink: (beacon name, retrain steps) per creation.
     sink: Option<BeaconSink>,
+    mode: BeaconMode,
 }
 
 impl BeaconManager {
@@ -105,6 +133,7 @@ impl BeaconManager {
             lookups: 0,
             created_log: Vec::new(),
             sink: None,
+            mode: BeaconMode::PerBatch,
         }
     }
 
@@ -112,6 +141,16 @@ impl BeaconManager {
     pub fn with_sink(mut self, sink: BeaconSink) -> BeaconManager {
         self.sink = Some(sink);
         self
+    }
+
+    /// Switch the creation schedule (see [`BeaconMode`]).
+    pub fn with_mode(mut self, mode: BeaconMode) -> BeaconManager {
+        self.mode = mode;
+        self
+    }
+
+    pub fn mode(&self) -> BeaconMode {
+        self.mode
     }
 
     /// Nearest beacon by the weights-only log2 distance.
@@ -132,6 +171,18 @@ impl BeaconManager {
     /// nearest beacon up to 1.5x the threshold" grace band (a dead branch
     /// that once suggested otherwise is pinned removed by the tests).
     pub fn decide(&self, qc: &QuantConfig, base_err: f64) -> BeaconDecision {
+        match self.decide_full(qc, base_err) {
+            // ShareOnly schedules defer creation to the window pass.
+            BeaconDecision::Create if self.mode == BeaconMode::ShareOnly => {
+                BeaconDecision::Baseline
+            }
+            d => d,
+        }
+    }
+
+    /// `decide` with creation always allowed — the window pass runs this
+    /// regardless of the manager's mode.
+    fn decide_full(&self, qc: &QuantConfig, base_err: f64) -> BeaconDecision {
         // Outside the (enlarged) beacon-feasible area: baseline evaluation.
         if base_err > self.policy.feasible_err {
             return BeaconDecision::Baseline;
@@ -151,6 +202,22 @@ impl BeaconManager {
         }
     }
 
+    /// Non-mutating share lookup for final-row assembly: the beacon (if
+    /// any) this candidate would re-evaluate against given the FINAL
+    /// beacon list — exactly `decide`'s share gate, with creation out of
+    /// the picture. Both the single-process island driver and the dist
+    /// coordinator build their report rows through this, which is what
+    /// makes their fronts structurally identical.
+    pub fn share_target(&self, qc: &QuantConfig, base_err: f64) -> Option<usize> {
+        if base_err > self.policy.feasible_err {
+            return None;
+        }
+        match self.nearest(qc) {
+            Some((idx, d)) if d <= self.policy.threshold => Some(idx),
+            _ => None,
+        }
+    }
+
     /// The sequential half of the batched Algorithm 1 schedule: walk the
     /// candidates in input order, decide Baseline/Share/Create for each,
     /// and register fresh beacons IMMEDIATELY (param set pending) so later
@@ -162,11 +229,33 @@ impl BeaconManager {
     /// retraining the caller may dispatch in parallel before applying
     /// results with `finalize_pending`.
     pub fn plan_batch(&mut self, cands: &[(&QuantConfig, f64)]) -> (Vec<BeaconPlan>, Vec<usize>) {
+        self.plan_inner(cands, false)
+    }
+
+    /// The boundary WINDOW pass of the island/fleet schedule: identical
+    /// sequential planning, but creation is always allowed regardless of
+    /// the manager's mode. Island searches run this once per migration
+    /// boundary over every island's elites in global island order — the
+    /// one place beacons are born when the population is sharded.
+    pub fn plan_window(&mut self, cands: &[(&QuantConfig, f64)]) -> (Vec<BeaconPlan>, Vec<usize>) {
+        self.plan_inner(cands, true)
+    }
+
+    fn plan_inner(
+        &mut self,
+        cands: &[(&QuantConfig, f64)],
+        full: bool,
+    ) -> (Vec<BeaconPlan>, Vec<usize>) {
         let mut plans = Vec::with_capacity(cands.len());
         let mut fresh = Vec::new();
         for (qc, base_err) in cands {
             self.lookups += 1;
-            let plan = match self.decide(qc, *base_err) {
+            let decision = if full {
+                self.decide_full(qc, *base_err)
+            } else {
+                self.decide(qc, *base_err)
+            };
+            let plan = match decision {
                 BeaconDecision::Baseline => BeaconPlan::Baseline,
                 BeaconDecision::Share { beacon_idx } => BeaconPlan::Beacon { beacon_idx },
                 BeaconDecision::Create => {
@@ -190,6 +279,77 @@ impl BeaconManager {
         (plans, fresh)
     }
 
+    /// Worker-replica entry: a finalized beacon arrived via `param_push`.
+    /// Pushes MUST arrive in creation order (the wire layer's contiguity
+    /// check guarantees it); re-pushes on reconnect are no-ops. The
+    /// report is a placeholder — replicas share beacons, they never
+    /// report retraining.
+    pub fn push_replicated(&mut self, qc: QuantConfig, set_idx: usize) {
+        if self.beacons.iter().any(|b| b.set_idx == set_idx) {
+            return;
+        }
+        self.beacons.push(Beacon {
+            qc,
+            set_idx,
+            report: RetrainReport {
+                steps: self.policy.retrain_steps,
+                lr: self.policy.lr,
+                loss_curve: Vec::new(),
+                wall_secs: 0.0,
+            },
+        });
+    }
+
+    /// Durable identity of every beacon, in creation order — what
+    /// checkpoints carry so `--resume` can rebuild the manager.
+    pub fn snapshot(&self, store: &dyn ParamStore) -> Result<Vec<BeaconSnapshot>> {
+        self.beacons
+            .iter()
+            .map(|b| {
+                Ok(BeaconSnapshot {
+                    qc: b.qc.clone(),
+                    set_name: store.get(b.set_idx)?.name.clone(),
+                })
+            })
+            .collect()
+    }
+
+    /// Rebuild the manager from checkpointed snapshots, resolving each
+    /// set NAME against the live store (the eval store re-registers sets
+    /// in creation order, so resolved ids — which the memo keys and the
+    /// surrogate jitter hash — are identical to the original run's). A
+    /// missing set is a typed error: the checkpoint cannot be resumed
+    /// without the eval store that holds its beacon tensors.
+    pub fn restore(&mut self, snaps: &[BeaconSnapshot], store: &dyn ParamStore) -> Result<()> {
+        debug_assert!(self.beacons.is_empty(), "restore into a fresh manager");
+        let sets = store.snapshot()?;
+        for s in snaps {
+            let idx = sets
+                .iter()
+                .find(|(_, p)| p.name == s.set_name)
+                .map(|(i, _)| *i)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "checkpoint references parameter set '{}' which the eval store does \
+                         not hold; resume with the --store DIR the run was checkpointed with",
+                        s.set_name
+                    )
+                })?;
+            self.beacons.push(Beacon {
+                qc: s.qc.clone(),
+                set_idx: idx,
+                report: RetrainReport {
+                    steps: self.policy.retrain_steps,
+                    lr: self.policy.lr,
+                    loss_curve: Vec::new(),
+                    wall_secs: 0.0,
+                },
+            });
+            self.created_log.push(s.set_name.clone());
+        }
+        Ok(())
+    }
+
     /// Apply one finished retraining to the pending beacon at
     /// `beacon_idx`: register the parameter set, record the report and
     /// stream the creation event. MUST be called in ascending beacon
@@ -199,13 +359,13 @@ impl BeaconManager {
     pub fn finalize_pending(
         &mut self,
         beacon_idx: usize,
-        eval: &EvalService,
+        store: &dyn ParamStore,
         params: Vec<Vec<f32>>,
         report: RetrainReport,
     ) -> Result<usize> {
         debug_assert_eq!(self.beacons[beacon_idx].set_idx, PENDING_SET);
         let name = format!("beacon{beacon_idx}[{}]", self.beacons[beacon_idx].qc.display_wa());
-        let set_idx = eval.add_param_set(&name, params)?;
+        let set_idx = store.add(&name, params)?;
         if let Some(sink) = &self.sink {
             sink.lock().expect("beacon sink poisoned").push((name.clone(), report.steps));
         }
@@ -384,5 +544,74 @@ mod tests {
         assert_eq!(mgr.beacons.len(), 1);
         assert_eq!(mgr.beacons[0].set_idx, PENDING_SET, "param set still pending");
         assert!(mgr.created_log.is_empty(), "creation is logged at finalize, not planning");
+    }
+
+    /// ShareOnly mode (island/fleet shards): `decide` never creates, but
+    /// sharing an existing beacon still works, and the explicit window
+    /// pass creates exactly like the per-batch schedule would.
+    #[test]
+    fn share_only_defers_creation_to_the_window_pass() {
+        let policy = BeaconPolicy::paper_defaults(0.16, 1e-3);
+        let mut mgr = BeaconManager::new(policy).with_mode(BeaconMode::ShareOnly);
+        let creator = qc(&[2; 8]);
+        // A would-be Create candidate evaluates with the baseline...
+        assert_eq!(mgr.decide(&creator, 0.30), BeaconDecision::Baseline);
+        let (plans, fresh) = mgr.plan_batch(&[(&creator, 0.30)]);
+        assert_eq!(plans, vec![BeaconPlan::Baseline]);
+        assert!(fresh.is_empty(), "per-batch planning never creates in ShareOnly");
+        // ...until the boundary window pass runs with creation enabled.
+        let (plans, fresh) = mgr.plan_window(&[(&creator, 0.30)]);
+        assert_eq!(fresh, vec![0]);
+        assert_eq!(plans, vec![BeaconPlan::Beacon { beacon_idx: 0 }]);
+        // With the beacon in place, mid-window candidates share it.
+        let near = qc(&[2, 2, 2, 2, 2, 2, 2, 4]);
+        assert_eq!(mgr.decide(&near, 0.28), BeaconDecision::Share { beacon_idx: 0 });
+        assert_eq!(mgr.share_target(&near, 0.28), Some(0));
+        assert_eq!(mgr.share_target(&near, 0.60), None, "outside the feasible area");
+        assert_eq!(mgr.share_target(&qc(&[16; 8]), 0.28), None, "no beacon in range");
+    }
+
+    #[test]
+    fn replicated_pushes_are_idempotent_by_set_id() {
+        let policy = BeaconPolicy::paper_defaults(0.16, 1e-3);
+        let mut mgr = BeaconManager::new(policy).with_mode(BeaconMode::ShareOnly);
+        mgr.push_replicated(qc(&[2; 8]), 1);
+        mgr.push_replicated(qc(&[2; 8]), 1); // reconnect replay
+        mgr.push_replicated(qc(&[4; 8]), 2);
+        assert_eq!(mgr.beacons.len(), 2);
+        assert_eq!(mgr.set_of(0), 1);
+        assert_eq!(mgr.set_of(1), 2);
+        // Replicated beacons participate in sharing immediately.
+        let near = qc(&[2, 2, 2, 2, 2, 2, 2, 4]);
+        assert_eq!(mgr.decide(&near, 0.28), BeaconDecision::Share { beacon_idx: 0 });
+    }
+
+    #[test]
+    fn snapshot_restore_round_trips_through_a_store() {
+        use crate::params::{LocalParamStore, ParamStore};
+        let store = LocalParamStore::new(None);
+        store.add("baseline", vec![vec![0.0; 2]; 3]).unwrap();
+        store.add("beacon0[w2 a8]", vec![vec![1.0; 2]; 3]).unwrap();
+
+        let policy = BeaconPolicy::paper_defaults(0.16, 1e-3);
+        let mut mgr = BeaconManager::new(policy.clone());
+        mgr.push_replicated(qc(&[2; 8]), 1);
+        let snaps = mgr.snapshot(&store).unwrap();
+        assert_eq!(snaps.len(), 1);
+        assert_eq!(snaps[0].set_name, "beacon0[w2 a8]");
+
+        let mut restored = BeaconManager::new(policy.clone());
+        restored.restore(&snaps, &store).unwrap();
+        assert_eq!(restored.beacons.len(), 1);
+        assert_eq!(restored.set_of(0), 1, "name resolved back to the same id");
+        assert_eq!(restored.beacons[0].qc, snaps[0].qc);
+
+        // A store without the referenced set is a typed error naming it.
+        let empty = LocalParamStore::new(None);
+        empty.add("baseline", vec![vec![0.0; 2]; 3]).unwrap();
+        let mut missing = BeaconManager::new(policy);
+        let err = missing.restore(&snaps, &empty).unwrap_err();
+        assert!(err.to_string().contains("beacon0[w2 a8]"), "{err}");
+        assert!(err.to_string().contains("--store"), "{err}");
     }
 }

@@ -20,7 +20,7 @@ pub mod session;
 pub mod spec;
 pub mod trainer;
 
-pub use beacon::{Beacon, BeaconDecision, BeaconManager, BeaconPolicy};
+pub use beacon::{Beacon, BeaconDecision, BeaconManager, BeaconPolicy, BeaconSnapshot};
 pub use error::SearchError;
 pub use objective::{BoundObjective, Direction, HwMetrics, PlatformBinding, ScoredObjective};
 pub use problem::{EvalRecord, EvalStrategy, MohaqProblem};

@@ -36,13 +36,13 @@
 use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::Arc;
 
-use crate::coordinator::beacon::{BeaconManager, BeaconPlan};
+use crate::coordinator::beacon::{BeaconManager, BeaconPlan, BeaconSnapshot};
 use crate::coordinator::error::SearchError;
 use crate::coordinator::objective::{sram_violation_mb, BoundObjective, PlatformBinding};
 use crate::coordinator::session::CancelToken;
-use crate::coordinator::trainer::Trainer;
+use crate::coordinator::trainer::Retrainer;
 use crate::eval::EvalService;
-use crate::moo::{Evaluation, Problem};
+use crate::moo::{Evaluation, Individual, Problem};
 use crate::quant::QuantConfig;
 use crate::runtime::Artifacts;
 use crate::util::pool::{map_parallel, run_once_parallel, WorkQueue};
@@ -88,7 +88,10 @@ pub struct MohaqProblem {
     /// Shared evaluation service — `Arc` so a long-lived session (serve
     /// mode) keeps ONE PTQ cache across every request it runs.
     pub eval: Arc<EvalService>,
-    pub trainer: Option<Trainer>,
+    /// Retraining engine for beacon creation. `None` on share-only
+    /// shards (fleet workers), which re-evaluate against replicated
+    /// beacon sets but never create beacons themselves.
+    pub trainer: Option<Retrainer>,
     pub beacons: Option<BeaconManager>,
     /// Distinct platform bindings the objectives reference; EVERY binding
     /// contributes its SRAM constraint.
@@ -246,37 +249,17 @@ impl MohaqProblem {
             // Disjoint field borrows: the beacon manager is held mutably
             // across fan-outs that need the evaluator and eval service.
             let Self { beacons, trainer, evaluator, eval, .. } = &mut *self;
-            if let (Some(beacons), Some(trainer)) = (beacons.as_mut(), trainer.as_ref()) {
+            if let Some(beacons) = beacons.as_mut() {
                 let cands: Vec<(&QuantConfig, f64)> = genomes
                     .iter()
                     .zip(&qcs)
                     .map(|(g, qc)| (qc, base_errs[slot_of[g.as_slice()]]))
                     .collect();
+                // In ShareOnly mode (island/fleet shards) this never
+                // plans fresh beacons — candidates only share already
+                // finalized (possibly replicated) sets.
                 let (plans, fresh) = beacons.plan_batch(&cands);
-
-                if !fresh.is_empty() {
-                    let base = eval.param_set(0).map_err(SearchError::eval)?;
-                    let (steps, lr) = (beacons.policy.retrain_steps, beacons.policy.lr);
-                    let jobs: Vec<_> = fresh
-                        .iter()
-                        .map(|&bidx| {
-                            let mut t = trainer.fork(bidx as u64);
-                            let qc = beacons.beacons[bidx].qc.clone();
-                            let base = base.clone();
-                            move || t.retrain(&base.host, &qc, steps, lr)
-                        })
-                        .collect();
-                    let results = match evaluator {
-                        EvalStrategy::Threads(threads) => run_once_parallel(*threads, jobs),
-                        EvalStrategy::Shared(queue) => queue.run_batch(jobs),
-                    };
-                    for (&bidx, result) in fresh.iter().zip(results) {
-                        let (params, report) = result.map_err(SearchError::eval)?;
-                        beacons
-                            .finalize_pending(bidx, eval, params, report)
-                            .map_err(SearchError::eval)?;
-                    }
-                }
+                retrain_and_finalize(beacons, trainer.as_ref(), evaluator, eval, &fresh)?;
 
                 // 2d: one re-eval per unique (set, genome) pair, grouped
                 // by set so each group is a packed batched submission.
@@ -327,6 +310,131 @@ impl MohaqProblem {
             })
             .collect()
     }
+
+    /// Window-scheduled beacon creation (island + distributed searches):
+    /// run Algorithm 1's selection pass over the boundary elites of every
+    /// island in global island order, retrain the fresh beacons it plans,
+    /// and finalize them. Mid-window candidates only SHARE the resulting
+    /// sets (the manager runs in `ShareOnly` mode), so the beacon list is
+    /// a pure function of the boundary elites — identical whether the
+    /// islands ran in one process or across a worker fleet. `elites` must
+    /// be the per-island elite groups in ascending global island order.
+    pub(crate) fn run_beacon_window(&mut self, elites: &[&[Individual]]) -> Result<(), SearchError> {
+        if self.beacons.is_none() {
+            return Ok(());
+        }
+        let mut qcs: Vec<QuantConfig> = Vec::new();
+        for group in elites {
+            for ind in group.iter() {
+                qcs.push(self.try_decode(&ind.genome)?);
+            }
+        }
+        // Baseline errors are cache hits when this process evaluated the
+        // elites itself, fresh (pure, so identical) computations when a
+        // worker did.
+        let mut base_errs = Vec::with_capacity(qcs.len());
+        for qc in &qcs {
+            base_errs.push(self.eval.val_error(qc, 0).map_err(SearchError::eval)?);
+        }
+        let Self { beacons, trainer, evaluator, eval, .. } = &mut *self;
+        let mgr = beacons.as_mut().expect("window pass checked for a manager");
+        let cands: Vec<(&QuantConfig, f64)> =
+            qcs.iter().zip(base_errs.iter().copied()).collect();
+        let (_plans, fresh) = mgr.plan_window(&cands);
+        retrain_and_finalize(mgr, trainer.as_ref(), evaluator, eval, &fresh)
+    }
+
+    /// Final-front parameter-set assignment for window-scheduled runs:
+    /// which finalized beacon set (if any) each front genome should report
+    /// its error against. Built from the FINAL beacon list via the
+    /// non-mutating share rule + the keep-better comparison, so a
+    /// distributed merge and the single-process run derive identical rows
+    /// from identical fronts. Empty map when no beacon manager is
+    /// attached.
+    pub(crate) fn beacon_set_map(
+        &self,
+        set: &[Individual],
+    ) -> Result<HashMap<Vec<i64>, usize>, SearchError> {
+        let mut map = HashMap::new();
+        let Some(mgr) = self.beacons.as_ref() else { return Ok(map) };
+        for ind in set {
+            let qc = self.try_decode(&ind.genome)?;
+            let base = self.eval.val_error(&qc, 0).map_err(SearchError::eval)?;
+            if let Some(b) = mgr.share_target(&qc, base) {
+                let s = mgr.set_of(b);
+                let err = self.eval.val_error(&qc, s).map_err(SearchError::eval)?;
+                if err < base {
+                    map.insert(ind.genome.clone(), s);
+                }
+            }
+        }
+        Ok(map)
+    }
+
+    /// Checkpointable view of the attached beacon manager (empty when
+    /// beacons are off).
+    pub(crate) fn beacon_snapshots(&self) -> Result<Vec<BeaconSnapshot>, SearchError> {
+        match &self.beacons {
+            Some(mgr) => mgr
+                .snapshot(self.eval.param_store().as_ref())
+                .map_err(SearchError::eval),
+            None => Ok(Vec::new()),
+        }
+    }
+
+    /// `(config, retrain_steps)` per created beacon, for `SearchOutcome`.
+    pub(crate) fn beacon_outcomes(&self) -> Vec<(String, usize)> {
+        self.beacons
+            .as_ref()
+            .map(|m| m.beacons.iter().map(|bc| (bc.qc.display_wa(), bc.report.steps)).collect())
+            .unwrap_or_default()
+    }
+}
+
+/// Retrain the freshly planned beacons and finalize them in ascending
+/// beacon order — the one code path both the per-batch schedule and the
+/// boundary window pass go through. Retraining is order-independent
+/// (each beacon trains on an RNG stream forked from its GLOBAL beacon
+/// index), so only finalization is sequential.
+fn retrain_and_finalize(
+    beacons: &mut BeaconManager,
+    trainer: Option<&Retrainer>,
+    evaluator: &EvalStrategy,
+    eval: &Arc<EvalService>,
+    fresh: &[usize],
+) -> Result<(), SearchError> {
+    if fresh.is_empty() {
+        return Ok(());
+    }
+    let trainer = trainer.ok_or_else(|| {
+        SearchError::invalid(
+            "beacon creation requires a retrainer; share-only shards must \
+             never plan fresh beacons",
+        )
+    })?;
+    let base = eval.param_set(0).map_err(SearchError::eval)?;
+    let (steps, lr) = (beacons.policy.retrain_steps, beacons.policy.lr);
+    let jobs: Vec<_> = fresh
+        .iter()
+        .map(|&bidx| {
+            let mut t = trainer.fork(bidx as u64);
+            let qc = beacons.beacons[bidx].qc.clone();
+            let base = base.clone();
+            move || t.retrain(&base.host, &qc, steps, lr)
+        })
+        .collect();
+    let results = match evaluator {
+        EvalStrategy::Threads(threads) => run_once_parallel(*threads, jobs),
+        EvalStrategy::Shared(queue) => queue.run_batch(jobs),
+    };
+    let store = eval.param_store();
+    for (&bidx, result) in fresh.iter().zip(results) {
+        let (params, report) = result.map_err(SearchError::eval)?;
+        beacons
+            .finalize_pending(bidx, store.as_ref(), params, report)
+            .map_err(SearchError::eval)?;
+    }
+    Ok(())
 }
 
 impl Problem for MohaqProblem {

@@ -41,12 +41,12 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Context;
 
-use super::beacon::{BeaconManager, BeaconPolicy};
+use super::beacon::{BeaconManager, BeaconMode, BeaconPolicy, BeaconSnapshot};
 use super::error::SearchError;
 use super::objective::HwMetrics;
 use super::problem::{EvalStrategy, MohaqProblem};
 use super::spec::ExperimentSpec;
-use super::trainer::Trainer;
+use super::trainer::{Retrainer, SurrogateTrainer, Trainer};
 use crate::eval::{EvalService, EvalStats};
 use crate::hw::Platform;
 use crate::moo::island::{
@@ -235,8 +235,9 @@ impl SearchSession {
     /// AOT bundle, no files, and no PJRT runtime (the surrogate never
     /// executes a graph, so the fallback cannot fail on client startup).
     /// Serve mode and CI fall back to this so the full search/serve
-    /// stack runs end to end offline. Beacon retraining is unavailable
-    /// (it needs the runtime and the lowered train graph).
+    /// stack runs end to end offline. Beacon retraining runs through the
+    /// pure [`SurrogateTrainer`], so beacon searches (including the
+    /// distributed window schedule) are fully observable offline too.
     pub fn synthetic() -> Result<SearchSession, SearchError> {
         let arts = Arc::new(Artifacts::synthetic());
         let eval = EvalService::surrogate(arts.clone())
@@ -310,25 +311,24 @@ impl SearchSession {
 
     /// `run_with_cancel` plus a checkpoint sink: at every migration
     /// boundary of an island-model search the sink receives
-    /// `(generation, snapshots)` — the state `run_resumed` (or
-    /// `store::SearchCheckpoint`) continues bitwise. Single-population
-    /// specs have no boundaries, so the sink never fires there; beacon
-    /// specs are rejected when a sink is attached (retrainer state is not
-    /// checkpointable, and a checkpoint that cannot resume must not be
-    /// written).
+    /// `(generation, snapshots, beacon_snapshots)` — the state
+    /// `run_resumed` (or `store::SearchCheckpoint`) continues bitwise.
+    /// Single-population specs have no boundaries, so the sink never
+    /// fires there. Island+beacon runs use the WINDOW schedule: beacons
+    /// are created only at migration boundaries from that boundary's
+    /// elites (mid-window candidates share the finalized sets), which is
+    /// what makes both checkpoints and distributed sharding exact —
+    /// beacon state is a pure function of the boundary stream. Resuming
+    /// a beacon checkpoint needs the eval store the run saved alongside
+    /// it (the parameter sets themselves live there, not in the
+    /// checkpoint).
     pub fn run_checkpointed(
         &self,
         spec: &ExperimentSpec,
         mut on_event: impl FnMut(&SearchEvent),
-        mut checkpoint: Option<&mut dyn FnMut(usize, &[IslandSnapshot])>,
+        mut checkpoint: Option<&mut dyn FnMut(usize, &[IslandSnapshot], &[BeaconSnapshot])>,
         cancel: &CancelToken,
     ) -> Result<SearchOutcome, SearchError> {
-        if checkpoint.is_some() && spec.beacon.is_some() {
-            return Err(SearchError::invalid(
-                "beacon retraining state is not checkpointable; drop 'beacon' from the \
-                 spec or run without --checkpoint",
-            ));
-        }
         let t0 = std::time::Instant::now();
         let arts = self.arts.clone();
         let eval = self.eval.clone();
@@ -337,31 +337,18 @@ impl SearchSession {
         let stats0 = eval.stats();
         let mut problem = self.base_problem(spec, cancel.clone())?;
 
+        let island_cfg = spec.island.clone();
+        // Island + beacon searches run the window schedule (share-only
+        // mid-window, creation at boundaries); single-population beacon
+        // searches keep the classic per-batch Algorithm 1 schedule.
+        let windowed =
+            spec.beacon.is_some() && island_cfg.as_ref().is_some_and(|c| c.islands > 1);
         let beacon_sink = Arc::new(Mutex::new(Vec::new()));
-        if let Some(ov) = &spec.beacon {
-            let mut policy = BeaconPolicy::paper_defaults(
-                arts.baseline.val_err_16bit,
-                arts.baseline.beacon_lr as f32,
-            );
-            if let Some(t) = ov.threshold {
-                policy.threshold = t;
-            }
-            if let Some(s) = ov.retrain_steps {
-                policy.retrain_steps = s;
-            }
-            if let Some(m) = ov.max_beacons {
-                policy.max_beacons = m;
-            }
-            let rt = self.rt.as_ref().ok_or_else(|| {
-                SearchError::invalid(
-                    "beacon retraining requires a PJRT runtime; synthetic \
-                     (surrogate) sessions have none",
-                )
-            })?;
-            let trainer = Trainer::new(rt, arts.clone(), spec.ga.seed ^ 0xbeac0)
-                .map_err(SearchError::eval)?;
-            problem.trainer = Some(trainer);
-            problem.beacons = Some(BeaconManager::new(policy).with_sink(beacon_sink.clone()));
+        if let Some(policy) = beacon_policy_for(&arts, spec) {
+            let mode = if windowed { BeaconMode::ShareOnly } else { BeaconMode::PerBatch };
+            problem.trainer = Some(self.retrainer(spec)?);
+            problem.beacons =
+                Some(BeaconManager::new(policy).with_mode(mode).with_sink(beacon_sink.clone()));
         }
 
         on_event(&SearchEvent::Started {
@@ -376,16 +363,52 @@ impl SearchSession {
         });
 
         let mut history: Vec<GenerationLog> = Vec::new();
-        let island_cfg = spec.island.clone();
         // Evaluation failures trip the problem's typed-error fuse (no
         // worker-pool panics); the catch_unwind stays as a backstop for
         // engine bugs and poisoned-lock classification.
         let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             match &island_cfg {
+                // K > 1 with beacons: the window-scheduled driver —
+                // beacon creation happens only at migration boundaries,
+                // the exact schedule a distributed worker fleet (and a
+                // checkpoint resume) reproduces.
+                Some(cfg) if cfg.islands > 1 && windowed => {
+                    match drive_islands(
+                        spec,
+                        cfg,
+                        &mut problem,
+                        None,
+                        &beacon_sink,
+                        &mut history,
+                        &mut on_event,
+                        checkpoint.take(),
+                    ) {
+                        Ok(r) => r,
+                        Err(e) => {
+                            if problem.failure.is_none() {
+                                problem.failure = Some(e);
+                            }
+                            (Vec::new(), 0)
+                        }
+                    }
+                }
                 // K > 1: island-model search over the same problem; all
                 // islands share the EvalService cache through it.
                 Some(cfg) if cfg.islands > 1 => {
                     let mut model = IslandModel::new(spec.ga.clone(), cfg.clone());
+                    // IslandModel's sink carries no beacon payload; adapt
+                    // (beacon checkpoints only exist on the windowed and
+                    // single-population paths, and single-population
+                    // specs have no boundaries).
+                    let mut taken = checkpoint.take();
+                    let has_ck = taken.is_some();
+                    let mut adapt = |g: usize, s: &[IslandSnapshot]| {
+                        if let Some(c) = taken.as_deref_mut() {
+                            c(g, s, &[]);
+                        }
+                    };
+                    let ck2: Option<&mut dyn FnMut(usize, &[IslandSnapshot])> =
+                        if has_ck { Some(&mut adapt) } else { None };
                     let pop = model.run_with_checkpoints(
                         &mut problem,
                         |event| match event {
@@ -407,7 +430,7 @@ impl SearchSession {
                                 });
                             }
                         },
-                        checkpoint.take(),
+                        ck2,
                     );
                     (pop, model.evaluations())
                 }
@@ -452,13 +475,22 @@ impl SearchSession {
         // the concatenated island populations (or the single population).
         let set = Nsga2::pareto_set(&pop);
         let front_hv = front_hypervolume(&set);
-        // Latest record per genome tells us which parameter set scored it.
-        let mut set_of: HashMap<Vec<i64>, usize> = HashMap::new();
-        for r in &problem.records {
-            set_of.insert(r.genome.clone(), r.set_idx);
-        }
-
-        let rows = assemble_rows(&problem, &set, &set_of)?;
+        let rows = if windowed {
+            // Window schedule: the parameter-set assignment is re-derived
+            // from the FINAL beacon list by the share rule — the same
+            // pure computation the distributed merge performs, so both
+            // produce identical rows from identical fronts.
+            let set_map = problem.beacon_set_map(&set)?;
+            assemble_rows(&problem, &set, &set_map)?
+        } else {
+            // Latest record per genome tells us which parameter set
+            // scored it.
+            let mut set_of: HashMap<Vec<i64>, usize> = HashMap::new();
+            for r in &problem.records {
+                set_of.insert(r.genome.clone(), r.set_idx);
+            }
+            assemble_rows(&problem, &set, &set_of)?
+        };
 
         let stats = problem.eval.stats();
         let outcome = SearchOutcome {
@@ -470,16 +502,7 @@ impl SearchSession {
             exec_calls: stats.executions - stats0.executions,
             cache_hits: stats.cache_hits - stats0.cache_hits,
             eval_stats: stats,
-            beacons: problem
-                .beacons
-                .as_ref()
-                .map(|b| {
-                    b.beacons
-                        .iter()
-                        .map(|bc| (bc.qc.display_wa(), bc.report.steps))
-                        .collect()
-                })
-                .unwrap_or_default(),
+            beacons: problem.beacon_outcomes(),
             records: problem.records,
             baseline_val_err: arts.baseline.val_err_16bit,
             baseline_test_err: arts.baseline.test_err,
@@ -511,9 +534,10 @@ impl SearchSession {
     }
 
     /// Distributed sibling of `run_resumed`/`run_checkpointed`: `resume`
-    /// (a checkpoint's `(generation, snapshots)`) seeds the fleet's
-    /// replay state — workers are assigned their shards pre-restored, and
-    /// rounds at or before the boundary are skipped; `checkpoint`
+    /// (a checkpoint's `(generation, snapshots, beacon_snapshots)`) seeds
+    /// the fleet's replay state — workers are assigned their shards
+    /// pre-restored, restored beacon sets re-replicate to every shard,
+    /// and rounds at or before the boundary are skipped; `checkpoint`
     /// receives every migration boundary the coordinator completes, so a
     /// coordinator crash mid-distributed-run is recoverable from the
     /// latest written boundary.
@@ -523,8 +547,8 @@ impl SearchSession {
         spec: &ExperimentSpec,
         workers: &[String],
         config: &crate::dist::DistConfig,
-        resume: Option<(usize, Vec<IslandSnapshot>)>,
-        checkpoint: Option<&mut dyn FnMut(usize, &[IslandSnapshot])>,
+        resume: Option<(usize, Vec<IslandSnapshot>, Vec<BeaconSnapshot>)>,
+        checkpoint: Option<&mut dyn FnMut(usize, &[IslandSnapshot], &[BeaconSnapshot])>,
         on_event: impl FnMut(&SearchEvent),
         cancel: &CancelToken,
     ) -> Result<SearchOutcome, SearchError> {
@@ -542,13 +566,20 @@ impl SearchSession {
     /// deterministic — so the merged front is bitwise-identical to the
     /// run that was interrupted. `checkpoint` keeps receiving later
     /// boundaries, so an interrupted resume can itself be resumed.
+    ///
+    /// `beacons` restores a beacon-enabled run's manager: each snapshot
+    /// names its parameter set, which must already be registered in this
+    /// session's eval store (load the `--store` the run saved) — resume
+    /// fails with a typed error when a set is missing, never silently.
+    #[allow(clippy::too_many_arguments)]
     pub fn run_resumed(
         &self,
         spec: &ExperimentSpec,
         generation: usize,
         snapshots: Vec<IslandSnapshot>,
+        beacons: Vec<BeaconSnapshot>,
         mut on_event: impl FnMut(&SearchEvent),
-        mut checkpoint: Option<&mut dyn FnMut(usize, &[IslandSnapshot])>,
+        mut checkpoint: Option<&mut dyn FnMut(usize, &[IslandSnapshot], &[BeaconSnapshot])>,
         cancel: &CancelToken,
     ) -> Result<SearchOutcome, SearchError> {
         let t0 = std::time::Instant::now();
@@ -577,11 +608,24 @@ impl SearchSession {
                 cfg.migration_interval, spec.ga.generations
             )));
         }
+        if !beacons.is_empty() && spec.beacon.is_none() {
+            return Err(SearchError::invalid(
+                "checkpoint carries beacon state but the spec has no beacon policy",
+            ));
+        }
         let stats0 = self.eval.stats();
-        // shard_problem rejects beacon specs with a typed error — the
-        // retrainer's state is not in the checkpoint, so resuming one
-        // could silently diverge instead of failing loudly.
         let mut problem = self.shard_problem(spec, cancel.clone())?;
+        let beacon_sink = Arc::new(Mutex::new(Vec::new()));
+        if let Some(mgr) = problem.beacons.take() {
+            // Re-arm the share-only shard manager for coordinator duty:
+            // restore the checkpointed beacons against the eval store,
+            // stream creations, retrain future windows.
+            let mut mgr = mgr.with_sink(beacon_sink.clone());
+            mgr.restore(&beacons, self.eval.param_store().as_ref())
+                .map_err(|e| SearchError::invalid(e.to_string()))?;
+            problem.trainer = Some(self.retrainer(spec)?);
+            problem.beacons = Some(mgr);
+        }
         on_event(&SearchEvent::Started {
             name: spec.name.clone(),
             num_vars: problem.num_vars(),
@@ -589,76 +633,37 @@ impl SearchSession {
             threads: problem.evaluator.workers(),
             islands: k,
         });
-        let mut shard = IslandShard::restore(spec.ga.clone(), cfg.clone(), generation, snapshots)
-            .map_err(SearchError::invalid)?;
 
         let mut history: Vec<GenerationLog> = Vec::new();
-        // No beacons on this path; emit_generation still drains the sink.
-        let beacon_sink = Mutex::new(Vec::new());
         let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            for gen in generation + 1..=spec.ga.generations {
-                if problem.aborted() {
-                    break;
-                }
-                shard.step(&mut problem);
-                let boundary = gen % cfg.migration_interval == 0;
-                if boundary {
-                    // One shard owns every island, so elites() is already
-                    // in global island order and the exchange below is
-                    // exactly IslandModel::migrate's schedule.
-                    let elites = shard.elites();
-                    for to in 0..k {
-                        for from in cfg.topology.sources(k, to) {
-                            if let Some(accepted) = shard.inject(to, &elites[from].1) {
-                                if accepted > 0 {
-                                    on_event(&SearchEvent::Migration {
-                                        generation: gen,
-                                        from,
-                                        to,
-                                        accepted,
-                                    });
-                                }
-                            }
-                        }
-                    }
-                }
-                for local in 0..k {
-                    let evals = shard.engine_evaluations(local);
-                    emit_generation(
-                        &beacon_sink,
-                        &mut history,
-                        &mut on_event,
-                        Some(local),
-                        gen,
-                        evals,
-                        &shard.pops()[local],
-                    );
-                }
-                if boundary {
-                    if let Some(sink) = checkpoint.as_deref_mut() {
-                        sink(gen, &shard.snapshot());
-                    }
-                }
-            }
-            let pop: Vec<Individual> = shard.pops().iter().flatten().cloned().collect();
-            (pop, shard.evaluations())
+            drive_islands(
+                spec,
+                &cfg,
+                &mut problem,
+                Some((generation, snapshots)),
+                &beacon_sink,
+                &mut history,
+                &mut on_event,
+                checkpoint.take(),
+            )
         }));
-        let (pop, evaluations) = match run {
+        let result = match run {
             Ok(result) => result,
             Err(payload) => return Err(SearchError::from_panic(pool::panic_message(payload))),
         };
         if let Some(e) = problem.failure.take() {
             return Err(e);
         }
+        let (pop, evaluations) = result?;
         if cancel.is_cancelled() {
             return Err(SearchError::Cancelled);
         }
         let set = Nsga2::pareto_set(&pop);
         let front_hv = front_hypervolume(&set);
-        // Every error came from parameter set 0 (no beacons here), so the
-        // empty genome→set map is exact — same reasoning as the
-        // distributed merge.
-        let rows = assemble_rows(&problem, &set, &HashMap::new())?;
+        // Same pure share-rule assignment the distributed merge and the
+        // windowed single-process run use (empty map when no beacons).
+        let set_map = problem.beacon_set_map(&set)?;
+        let rows = assemble_rows(&problem, &set, &set_map)?;
         let stats = problem.eval.stats();
         let outcome = SearchOutcome {
             spec_name: spec.name.clone(),
@@ -669,7 +674,7 @@ impl SearchSession {
             exec_calls: stats.executions - stats0.executions,
             cache_hits: stats.cache_hits - stats0.cache_hits,
             eval_stats: stats,
-            beacons: Vec::new(),
+            beacons: problem.beacon_outcomes(),
             records: problem.records,
             baseline_val_err: self.arts.baseline.val_err_16bit,
             baseline_test_err: self.arts.baseline.test_err,
@@ -685,9 +690,23 @@ impl SearchSession {
         Ok(outcome)
     }
 
+    /// The retraining engine for beacon creation: the real PJRT
+    /// binary-connect loop when the session has a runtime, the pure
+    /// surrogate stand-in on synthetic sessions. Both fork per-beacon RNG
+    /// streams that are pure functions of (seed, beacon index), so the
+    /// trained parameters are identical for any scheduling order.
+    pub(crate) fn retrainer(&self, spec: &ExperimentSpec) -> Result<Retrainer, SearchError> {
+        let seed = spec.ga.seed ^ 0xbeac0;
+        Ok(match &self.rt {
+            Some(rt) => Retrainer::Pjrt(
+                Trainer::new(rt, self.arts.clone(), seed).map_err(SearchError::eval)?,
+            ),
+            None => Retrainer::Surrogate(SurrogateTrainer::new(seed)),
+        })
+    }
+
     /// Resolve `spec` into the evaluation problem (no beacon machinery
-    /// attached — `run_with_cancel` bolts that on; the distributed path
-    /// forbids it).
+    /// attached — `run_checkpointed` and `shard_problem` bolt that on).
     fn base_problem(
         &self,
         spec: &ExperimentSpec,
@@ -740,23 +759,21 @@ impl SearchSession {
     }
 
     /// The problem a distributed shard (worker or coordinator) evaluates
-    /// against. Beacon specs are rejected with a typed error: beacon
-    /// selection is order-dependent across the GLOBAL candidate batch
-    /// (Algorithm 1's sequential pass), which sharded evaluation cannot
-    /// reproduce — a distributed beacon search would silently diverge
-    /// from the single-process front instead of failing loudly here.
+    /// against. Beacon specs get a SHARE-ONLY manager: candidates
+    /// re-evaluate against finalized (replicated) beacon sets by the
+    /// log2-distance rule, but the shard never plans fresh beacons —
+    /// creation stays on the coordinator's boundary window pass, which
+    /// keeps Algorithm 1's order-dependent selection in one process.
     pub(crate) fn shard_problem(
         &self,
         spec: &ExperimentSpec,
         cancel: CancelToken,
     ) -> Result<MohaqProblem, SearchError> {
-        if spec.beacon.is_some() {
-            return Err(SearchError::invalid(
-                "beacon retraining is order-dependent across the global population and \
-                 cannot be sharded; drop 'beacon' from the spec or search single-process",
-            ));
+        let mut problem = self.base_problem(spec, cancel)?;
+        if let Some(policy) = beacon_policy_for(&self.arts, spec) {
+            problem.beacons = Some(BeaconManager::new(policy).with_mode(BeaconMode::ShareOnly));
         }
-        self.base_problem(spec, cancel)
+        Ok(problem)
     }
 
     /// Run NSGA-II over any artifact-free `SyncProblem` with `threads`
@@ -793,11 +810,133 @@ impl SearchSession {
     }
 }
 
+/// Resolve the spec's beacon overrides against the artifact defaults;
+/// `None` when the spec has beacons off.
+pub(crate) fn beacon_policy_for(arts: &Artifacts, spec: &ExperimentSpec) -> Option<BeaconPolicy> {
+    let ov = spec.beacon.as_ref()?;
+    let mut policy =
+        BeaconPolicy::paper_defaults(arts.baseline.val_err_16bit, arts.baseline.beacon_lr as f32);
+    if let Some(t) = ov.threshold {
+        policy.threshold = t;
+    }
+    if let Some(s) = ov.retrain_steps {
+        policy.retrain_steps = s;
+    }
+    if let Some(m) = ov.max_beacons {
+        policy.max_beacons = m;
+    }
+    Some(policy)
+}
+
+/// The manual island driver behind both the windowed (island + beacon)
+/// search and checkpoint resume: one `IslandShard` owns every island, so
+/// `elites()` is already in global island order and the exchange below
+/// is exactly `IslandModel::migrate`'s schedule. At each migration
+/// boundary, BEFORE the exchange, the beacon window pass runs over the
+/// boundary elites (a no-op without a beacon manager) — the same
+/// boundary-synchronized schedule the distributed coordinator runs, so
+/// fronts merge bitwise-identical across all three paths. `resume`
+/// restores from a checkpoint `(generation, snapshots)`; window passes
+/// at or before that boundary are skipped (their beacons came back
+/// through the checkpoint).
+#[allow(clippy::too_many_arguments)]
+fn drive_islands(
+    spec: &ExperimentSpec,
+    cfg: &IslandConfig,
+    problem: &mut MohaqProblem,
+    resume: Option<(usize, Vec<IslandSnapshot>)>,
+    beacon_sink: &Mutex<Vec<(String, usize)>>,
+    history: &mut Vec<GenerationLog>,
+    on_event: &mut dyn FnMut(&SearchEvent),
+    mut checkpoint: Option<&mut dyn FnMut(usize, &[IslandSnapshot], &[BeaconSnapshot])>,
+) -> Result<(Vec<Individual>, usize), SearchError> {
+    let k = cfg.islands;
+    let (mut shard, start_gen) = match resume {
+        Some((gen, snaps)) => (
+            IslandShard::restore(spec.ga.clone(), cfg.clone(), gen, snaps)
+                .map_err(SearchError::invalid)?,
+            gen,
+        ),
+        None => {
+            let indices: Vec<usize> = (0..k).collect();
+            (
+                IslandShard::new(spec.ga.clone(), cfg.clone(), &indices)
+                    .map_err(SearchError::invalid)?,
+                0,
+            )
+        }
+    };
+    let mut windows_done = start_gen;
+    if !shard.seeded() {
+        shard.seed(problem);
+        for local in 0..k {
+            emit_generation(
+                beacon_sink,
+                history,
+                on_event,
+                Some(local),
+                0,
+                shard.engine_evaluations(local),
+                &shard.pops()[local],
+            );
+        }
+    }
+    for gen in start_gen + 1..=spec.ga.generations {
+        if problem.aborted() {
+            break;
+        }
+        shard.step(problem);
+        let boundary = gen % cfg.migration_interval == 0;
+        if boundary {
+            let elites = shard.elites();
+            if gen > windows_done {
+                let groups: Vec<&[Individual]> =
+                    elites.iter().map(|(_, g)| g.as_slice()).collect();
+                problem.run_beacon_window(&groups)?;
+                windows_done = gen;
+            }
+            for to in 0..k {
+                for from in cfg.topology.sources(k, to) {
+                    if let Some(accepted) = shard.inject(to, &elites[from].1) {
+                        if accepted > 0 {
+                            on_event(&SearchEvent::Migration {
+                                generation: gen,
+                                from,
+                                to,
+                                accepted,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        for local in 0..k {
+            let evals = shard.engine_evaluations(local);
+            emit_generation(
+                beacon_sink,
+                history,
+                on_event,
+                Some(local),
+                gen,
+                evals,
+                &shard.pops()[local],
+            );
+        }
+        if boundary {
+            if let Some(sink) = checkpoint.as_deref_mut() {
+                let bsnaps = problem.beacon_snapshots()?;
+                sink(gen, &shard.snapshot(), &bsnaps);
+            }
+        }
+    }
+    let pop: Vec<Individual> = shard.pops().iter().flatten().cloned().collect();
+    Ok((pop, shard.evaluations()))
+}
+
 /// Score a final Pareto set into report rows — shared by the in-process
 /// and distributed paths so both produce identical tables for identical
 /// fronts. `set_of` maps genome → parameter-set index (empty map = the
-/// baseline set everywhere, the distributed case: beacons are rejected
-/// there, so every error came from set 0).
+/// baseline set everywhere: the non-beacon case).
 pub(crate) fn assemble_rows(
     problem: &MohaqProblem,
     set: &[Individual],

@@ -1,6 +1,8 @@
-//! Beacon retraining driver: loops the AOT binary-connect train step
-//! (paper §4.3) from Rust. Python is NOT involved — the train-step graph
-//! was lowered once at `make artifacts`.
+//! Beacon retraining drivers. [`Trainer`] loops the AOT binary-connect
+//! train step (paper §4.3) from Rust — Python is NOT involved, the
+//! train-step graph was lowered once at `make artifacts`.
+//! [`SurrogateTrainer`] is its hermetic stand-in for synthetic sessions;
+//! [`Retrainer`] is the engine-agnostic handle the search holds.
 
 use std::sync::Arc;
 
@@ -139,11 +141,121 @@ impl Trainer {
     }
 }
 
+/// Hermetic retraining stand-in for synthetic (surrogate) sessions: the
+/// returned parameters are EXACTLY the start point and the loss curve is
+/// a pure function of (seed, stream, steps). That is enough for beacons
+/// to be fully observable offline — the surrogate error model keys on
+/// the parameter-SET INDEX (`EvalService::surrogate_val_error` hashes
+/// it), so registering a beacon set changes candidate errors
+/// deterministically without any tensor arithmetic. `wall_secs` is real
+/// wall time and never front-affecting.
+pub struct SurrogateTrainer {
+    seed: u64,
+    stream: u64,
+}
+
+impl SurrogateTrainer {
+    pub fn new(seed: u64) -> SurrogateTrainer {
+        SurrogateTrainer { seed, stream: 0 }
+    }
+
+    pub fn fork(&self, stream: u64) -> SurrogateTrainer {
+        SurrogateTrainer { seed: self.seed, stream }
+    }
+
+    pub fn retrain(
+        &mut self,
+        start: &[Vec<f32>],
+        _qc: &QuantConfig,
+        steps: usize,
+        lr: f32,
+    ) -> Result<(Vec<Vec<f32>>, RetrainReport)> {
+        let t0 = std::time::Instant::now();
+        // Same logging cadence as the real trainer; strictly decreasing
+        // synthetic loss with a per-stream offset so forked streams are
+        // distinguishable in diagnostics yet bitwise-reproducible.
+        let offset = ((self.seed ^ self.stream.wrapping_mul(0x9e37)) % 997) as f32 * 1e-6;
+        let log_every = (steps / 10).max(1);
+        let mut loss_curve = Vec::new();
+        for step in 0..steps {
+            if step % log_every == 0 || step + 1 == steps {
+                let frac = step as f32 / steps.max(1) as f32;
+                loss_curve.push((step, 1.0 - 0.5 * frac + offset));
+            }
+        }
+        let report = RetrainReport {
+            steps,
+            lr,
+            loss_curve,
+            wall_secs: t0.elapsed().as_secs_f64(),
+        };
+        Ok((start.to_vec(), report))
+    }
+}
+
+/// The engine-agnostic retraining handle `MohaqProblem` holds: the real
+/// PJRT binary-connect loop on artifact-backed sessions, the pure
+/// surrogate stand-in on synthetic ones. Both fork per-beacon RNG
+/// streams that are pure functions of (base seed, stream tag), so
+/// retrained parameters never depend on scheduling order.
+pub enum Retrainer {
+    Pjrt(Trainer),
+    Surrogate(SurrogateTrainer),
+}
+
+impl Retrainer {
+    pub fn fork(&self, stream: u64) -> Retrainer {
+        match self {
+            Retrainer::Pjrt(t) => Retrainer::Pjrt(t.fork(stream)),
+            Retrainer::Surrogate(t) => Retrainer::Surrogate(t.fork(stream)),
+        }
+    }
+
+    pub fn retrain(
+        &mut self,
+        start: &[Vec<f32>],
+        qc: &QuantConfig,
+        steps: usize,
+        lr: f32,
+    ) -> Result<(Vec<Vec<f32>>, RetrainReport)> {
+        match self {
+            Retrainer::Pjrt(t) => t.retrain(start, qc, steps, lr),
+            Retrainer::Surrogate(t) => t.retrain(start, qc, steps, lr),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::quant::Bits;
     use std::path::PathBuf;
+
+    #[test]
+    fn surrogate_retrainer_is_pure_and_order_independent() {
+        let start = vec![vec![1.0f32, 2.0], vec![3.0]];
+        let qc = QuantConfig::uniform(2, Bits::B2, Bits::B8);
+        let base = Retrainer::Surrogate(SurrogateTrainer::new(7));
+        let mut a = base.fork(3);
+        let mut b = base.fork(3);
+        let (pa, ra) = a.retrain(&start, &qc, 50, 1e-3).unwrap();
+        let (pb, rb) = b.retrain(&start, &qc, 50, 1e-3).unwrap();
+        assert_eq!(pa, start, "surrogate retraining returns the start point");
+        assert_eq!(pa, pb, "same stream, same params");
+        assert_eq!(ra.loss_curve, rb.loss_curve, "same stream, same curve");
+        assert_eq!(ra.steps, 50);
+        assert!(
+            ra.loss_curve.windows(2).all(|w| w[1].1 < w[0].1),
+            "synthetic loss must decrease: {:?}",
+            ra.loss_curve
+        );
+        // Distinct streams are distinguishable in diagnostics but share
+        // the purity contract.
+        let mut c = base.fork(4);
+        let (pc, rc) = c.retrain(&start, &qc, 50, 1e-3).unwrap();
+        assert_eq!(pc, start);
+        assert_ne!(rc.loss_curve, ra.loss_curve);
+    }
 
     #[test]
     fn retraining_decreases_loss() {

@@ -3,18 +3,20 @@
 //! topology, and merge the final front. See the module docs of
 //! [`crate::dist`] for the determinism and failure contracts.
 
-use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+use crate::coordinator::beacon::BeaconSnapshot;
 use crate::coordinator::session::assemble_rows;
 use crate::coordinator::{
-    CancelToken, ExperimentSpec, GenerationLog, SearchError, SearchEvent, SearchOutcome,
-    SearchSession,
+    CancelToken, ExperimentSpec, GenerationLog, MohaqProblem, SearchError, SearchEvent,
+    SearchOutcome, SearchSession,
 };
 use crate::moo::island::front_hypervolume;
 use crate::moo::{Individual, IslandConfig, IslandSnapshot, Nsga2, Problem};
+use crate::params::ReplicatedParamStore;
 use crate::serve::protocol::{
     Frame, IncomingMigrants, Request, ShardElites, ShardMigration, ShardPop,
 };
@@ -216,8 +218,10 @@ pub fn run_search(
 }
 
 /// [`run_search`] with durable-state hooks: `resume` seeds the replay
-/// state with a checkpoint's `(generation, snapshots)` — the fleet is
-/// assigned its shards pre-restored and rounds at or before that
+/// state with a checkpoint's `(generation, snapshots, beacons)` — the
+/// fleet is assigned its shards pre-restored, the beacon manager is
+/// rebuilt against the session's param store (every referenced set must
+/// already be loaded, e.g. via `--store`), and rounds at or before that
 /// boundary are skipped, exactly the mechanism worker-loss recovery
 /// already uses — and `checkpoint` receives every migration boundary the
 /// coordinator completes (including mid-retry), so a coordinator crash
@@ -229,8 +233,8 @@ pub fn run_search_resumable(
     spec: &ExperimentSpec,
     workers: &[String],
     config: &DistConfig,
-    resume: Option<(usize, Vec<IslandSnapshot>)>,
-    mut checkpoint: Option<&mut dyn FnMut(usize, &[IslandSnapshot])>,
+    resume: Option<(usize, Vec<IslandSnapshot>, Vec<BeaconSnapshot>)>,
+    mut checkpoint: Option<&mut dyn FnMut(usize, &[IslandSnapshot], &[BeaconSnapshot])>,
     mut on_event: impl FnMut(&SearchEvent),
     cancel: &CancelToken,
 ) -> Result<SearchOutcome, SearchError> {
@@ -244,14 +248,29 @@ pub fn run_search_resumable(
         SearchError::invalid("distributed search requires an island config ('island' in the spec)")
     })?;
     island_cfg.validate(spec.ga.pop_size).map_err(SearchError::invalid)?;
-    // Validates the full spec locally — including the beacon rejection —
-    // and provides the scorer for the final report rows.
-    let problem = session.shard_problem(spec, cancel.clone())?;
+    if spec.beacon.is_some() && island_cfg.islands < 2 {
+        return Err(SearchError::invalid(
+            "distributed beacon search needs >= 2 islands: beacons are created at \
+             migration boundaries, which a single-island schedule never reaches",
+        ));
+    }
+    // Validates the full spec locally and provides the scorer for the
+    // final report rows. With a beacon policy, this problem is the
+    // AUTHORITY side of beacon state: window passes plan over the
+    // boundary elites here, retraining runs on the coordinator's pool on
+    // forked RNG streams, and finalized sets replicate to the fleet via
+    // `push_sets` — workers only ever share.
+    let mut problem = session.shard_problem(spec, cancel.clone())?;
+    let beacon_sink = Arc::new(Mutex::new(Vec::new()));
+    if let Some(mgr) = problem.beacons.take() {
+        problem.beacons = Some(mgr.with_sink(beacon_sink.clone()));
+        problem.trainer = Some(session.retrainer(spec)?);
+    }
     let stats0 = session.eval().stats();
     let k = island_cfg.islands;
     let generations = spec.ga.generations;
     let interval = island_cfg.migration_interval.max(1);
-    if let Some((gen, snaps)) = &resume {
+    if let Some((gen, snaps, beacons)) = &resume {
         if snaps.len() != k || snaps.iter().enumerate().any(|(i, s)| s.island != i) {
             return Err(SearchError::invalid(format!(
                 "resume needs snapshots covering all {k} islands in ascending order"
@@ -263,7 +282,20 @@ pub fn run_search_resumable(
                  (interval {interval}, {generations} generations)"
             )));
         }
+        if !beacons.is_empty() && spec.beacon.is_none() {
+            return Err(SearchError::invalid(
+                "checkpoint carries beacon state but the spec has no beacon policy",
+            ));
+        }
+        if let Some(mgr) = problem.beacons.as_mut() {
+            mgr.restore(beacons, problem.eval.param_store().as_ref())
+                .map_err(|e| SearchError::invalid(e.to_string()))?;
+        }
     }
+    // Window passes completed so far: boundaries at or before the resume
+    // point already retrained (their sets came back via the store), and
+    // a re-shard replay must re-push sets, not re-create them.
+    let mut windows_done: usize = resume.as_ref().map_or(0, |(g, _, _)| *g);
 
     on_event(&SearchEvent::Started {
         name: spec.name.clone(),
@@ -288,7 +320,7 @@ pub fn run_search_resumable(
 
     let mut alive: Vec<(usize, String)> =
         workers.iter().enumerate().map(|(i, a)| (i, a.clone())).collect();
-    let mut last_state: Option<(usize, Vec<IslandSnapshot>)> = resume;
+    let mut last_state: Option<(usize, Vec<IslandSnapshot>)> = resume.map(|(g, s, _)| (g, s));
     let mut history: Vec<GenerationLog> = Vec::new();
     let mut losses = 0usize;
 
@@ -302,6 +334,9 @@ pub fn run_search_resumable(
             &rounds,
             &alive,
             config,
+            &mut problem,
+            &mut windows_done,
+            &beacon_sink,
             &mut last_state,
             checkpoint.as_deref_mut(),
             &mut history,
@@ -339,9 +374,11 @@ pub fn run_search_resumable(
     let evaluations: usize = pops.iter().map(|p| p.evaluations).sum();
     let set = Nsga2::pareto_set(&pop);
     let front_hv = front_hypervolume(&set);
-    // Beacons are rejected in distributed mode, so every row scores
-    // against the baseline parameter set (set_idx 0).
-    let rows = assemble_rows(&problem, &set, &HashMap::new())?;
+    // Re-derive each front row's parameter set from the final beacon
+    // list (Algorithm 1's keep-better rule; an empty map without
+    // beacons), exactly like the single-process windowed driver.
+    let set_map = problem.beacon_set_map(&set)?;
+    let rows = assemble_rows(&problem, &set, &set_map)?;
     let stats = session.eval().stats();
     let outcome = SearchOutcome {
         spec_name: spec.name.clone(),
@@ -352,7 +389,7 @@ pub fn run_search_resumable(
         exec_calls: stats.executions - stats0.executions,
         cache_hits: stats.cache_hits - stats0.cache_hits,
         eval_stats: stats,
-        beacons: Vec::new(),
+        beacons: problem.beacon_outcomes(),
         records: Vec::new(),
         baseline_val_err: session.artifacts().baseline.val_err_16bit,
         baseline_test_err: session.artifacts().baseline.test_err,
@@ -381,8 +418,11 @@ fn drive_fleet(
     rounds: &[(usize, bool)],
     alive: &[(usize, String)],
     config: &DistConfig,
+    problem: &mut MohaqProblem,
+    windows_done: &mut usize,
+    beacon_sink: &Mutex<Vec<(String, usize)>>,
     last_state: &mut Option<(usize, Vec<IslandSnapshot>)>,
-    mut checkpoint: Option<&mut dyn FnMut(usize, &[IslandSnapshot])>,
+    mut checkpoint: Option<&mut dyn FnMut(usize, &[IslandSnapshot], &[BeaconSnapshot])>,
     history: &mut Vec<GenerationLog>,
     on_event: &mut dyn FnMut(&SearchEvent),
     cancel: &CancelToken,
@@ -432,6 +472,11 @@ fn drive_fleet(
         }
         on_event(&SearchEvent::ShardAssigned { worker: link.worker, islands: acked });
     }
+    // Replay the full param-set journal to the (re)connected fleet: a
+    // fresh worker holds only the baseline, and a re-shard after a loss
+    // must land every beacon set before any evaluation references it.
+    // Replica applies are idempotent, so survivors absorb the replay.
+    push_sets(problem, &mut links, 1, history, on_event)?;
 
     for &(upto, migrate) in rounds {
         if restored && upto <= base_gen {
@@ -463,6 +508,23 @@ fn drive_fleet(
         }
         if !migrate {
             continue; // final residual round: no exchange, no snapshot
+        }
+
+        // Beacon window pass (coordinator-authoritative, no-op without a
+        // beacon policy): plan over the boundary elites in global island
+        // order, retrain on forked RNG streams, finalize into the
+        // session store, then replicate any new sets to every worker
+        // BEFORE the exchange — the next window's evaluations must see
+        // them. `windows_done` guards replays: a re-shard re-runs the
+        // round, never the retraining.
+        if *windows_done < upto {
+            let before = problem.eval.num_param_sets().map_err(|e| {
+                DriveError::Fatal(SearchError::Eval(e.to_string()))
+            })?;
+            let groups: Vec<&[Individual]> = elites.iter().map(Vec::as_slice).collect();
+            problem.run_beacon_window(&groups).map_err(DriveError::Fatal)?;
+            *windows_done = upto;
+            push_sets(problem, &mut links, before, history, on_event)?;
         }
 
         // Phase B: route migrants through the topology. Every owning
@@ -520,6 +582,13 @@ fn drive_fleet(
                 }
             }
         }
+        // Single-process boundary order: migration events first, then
+        // the window's beacon creations, then the generation summaries.
+        let created: Vec<(String, usize)> =
+            beacon_sink.lock().expect("beacon sink poisoned").drain(..).collect();
+        for (name, retrain_steps) in created {
+            on_event(&SearchEvent::BeaconCreated { name, retrain_steps });
+        }
         let mut snaps: Vec<IslandSnapshot> = Vec::with_capacity(k);
         for slot in merged {
             let s = slot.expect("checked above");
@@ -538,7 +607,8 @@ fn drive_fleet(
             snaps.push(s.state);
         }
         if let Some(sink) = checkpoint.as_deref_mut() {
-            sink(upto, &snaps);
+            let beacons = problem.beacon_snapshots().map_err(DriveError::Fatal)?;
+            sink(upto, &snaps, &beacons);
         }
         *last_state = Some((upto, snaps));
     }
@@ -569,4 +639,57 @@ fn drive_fleet(
         })?);
     }
     Ok(pops)
+}
+
+/// Replicate every finalized parameter set with id >= `from` to every
+/// live worker, in index order, and wait for the per-set acks. The
+/// replica apply is idempotent and contiguity-checked, so replaying the
+/// full journal after a reconnect (`from = 1`) is safe and worker set
+/// ids are always identical to the coordinator's — which is what keeps
+/// memo keys and surrogate jitter bitwise-aligned across the fleet.
+/// No-op without a beacon manager.
+fn push_sets(
+    problem: &MohaqProblem,
+    links: &mut [WorkerLink],
+    from: usize,
+    history: &mut Vec<GenerationLog>,
+    on_event: &mut dyn FnMut(&SearchEvent),
+) -> Result<(), DriveError> {
+    let Some(mgr) = problem.beacons.as_ref() else { return Ok(()) };
+    let fatal = |m: String| DriveError::Fatal(SearchError::Eval(m));
+    let store = ReplicatedParamStore::authority(problem.eval.param_store());
+    let sets = store.sets_since(from.max(1)).map_err(|e| fatal(e.to_string()))?;
+    for (index, set) in &sets {
+        // The worker's share-only manager needs the beacon's quant
+        // config alongside the tensors, so mid-window candidates resolve
+        // `share_target` exactly like the coordinator would.
+        let qc = mgr
+            .beacons
+            .iter()
+            .find(|b| b.set_idx == *index)
+            .map(|b| b.qc.clone())
+            .ok_or_else(|| {
+                fatal(format!("parameter set {index} ('{}') has no beacon to replicate", set.name))
+            })?;
+        let req = Request::ParamPush {
+            id: SEARCH_ID,
+            index: *index,
+            name: set.name.clone(),
+            tensors: set.host.clone(),
+            qc,
+        };
+        for link in links.iter_mut() {
+            link.send(&req)?;
+        }
+        for link in links.iter_mut() {
+            link.read_until(
+                |f| match f {
+                    Frame::ParamPushed { index: i, .. } if i == *index => Some(()),
+                    _ => None,
+                },
+                &mut |log| note_gen(history, on_event, log),
+            )?;
+        }
+    }
+    Ok(())
 }

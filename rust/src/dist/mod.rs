@@ -23,9 +23,21 @@
 //! any shard map. This holds because island RNG streams are pure
 //! functions of (seed, K, island index), candidate evaluation is an
 //! order-independent pure function of the genome, and the exchange is
-//! replayed in the same global island order. Beacon specs are rejected
-//! with a typed error — beacon selection is order-dependent across the
-//! global candidate batch and cannot be sharded.
+//! replayed in the same global island order.
+//!
+//! Beacon runs (paper §4.3, Algorithm 1) ride the same schedule: the
+//! coordinator owns beacon *selection* and *retraining* (Algorithm 1's
+//! keep-better scan is order-dependent across the global population, so
+//! it runs in one place, over the boundary's elites in global island
+//! order — the "window schedule"; retraining forks RNG streams that are
+//! pure functions of seed + beacon index). Workers hold a share-only
+//! replica of the parameter-set store ([`crate::params`]): finalized
+//! sets replicate to every shard via `param_push` before the next
+//! window, each replica validating that its indices stay contiguous
+//! with the coordinator's, so `surrogate_val_error`'s set-index jitter
+//! and the PTQ cache keys agree fleet-wide. Replication replays the
+//! full set journal after every (re)connect, so a re-shard after
+//! `ShardLost` rebuilds a bit-identical replica on the survivors.
 //!
 //! Failure story: workers heartbeat while computing; a worker silent
 //! past [`DistConfig::heartbeat_timeout`] (or disconnected) is declared

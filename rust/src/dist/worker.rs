@@ -1,10 +1,11 @@
 //! Worker-side shard execution: the serve server in worker mode routes
-//! `shard_assign` / `run_islands` / `elite_exchange` / `shard_front`
-//! ops here. Shard ops are handled synchronously on the connection's
-//! reader thread — the coordinator drives every worker in lockstep, so
-//! there is never more than one shard op in flight per connection — and
-//! a dedicated heartbeat thread proves liveness (and watches for server
-//! shutdown) while an advance is computing.
+//! `shard_assign` / `run_islands` / `elite_exchange` / `shard_front` /
+//! `param_push` / `param_fetch` ops here. Shard ops are handled
+//! synchronously on the connection's reader thread — the coordinator
+//! drives every worker in lockstep, so there is never more than one
+//! shard op in flight per connection — and a dedicated heartbeat thread
+//! proves liveness (and watches for server shutdown) while an advance
+//! (or a replicated param-set landing) is computing.
 
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -13,6 +14,8 @@ use std::time::Duration;
 
 use crate::coordinator::{CancelToken, ExperimentSpec, MohaqProblem, SearchError};
 use crate::moo::{IslandShard, IslandSnapshot, Problem};
+use crate::params::ReplicatedParamStore;
+use crate::quant::QuantConfig;
 use crate::serve::protocol::{
     Frame, IncomingMigrants, Request, ShardElites, ShardMigration, ShardPop, ShardStats,
 };
@@ -60,7 +63,11 @@ pub(crate) fn handle(
             exchange(writer, slot, id, generation, incoming);
         }
         Request::ShardFront { id } => front(writer, slot, id),
-        // The server routes only the four shard ops here.
+        Request::ParamPush { id, index, name, tensors, qc } => {
+            param_push(state, writer, slot, id, index, name, tensors, qc);
+        }
+        Request::ParamFetch { id, index } => param_fetch(state, writer, id, index),
+        // The server routes only the shard/replication ops here.
         _ => {}
     }
 }
@@ -108,8 +115,11 @@ fn assign(
         return;
     };
     let cancel = CancelToken::new();
-    // shard_problem also enforces the beacon rejection worker-side, so a
-    // coordinator bug cannot smuggle an order-dependent spec through.
+    // A beacon spec gets a SHARE-ONLY manager worker-side: mid-window
+    // candidates share replicated sets, but creation (order-dependent,
+    // Algorithm 1) stays with the coordinator — a share-only shard that
+    // ever plans a fresh beacon is a typed error, so a coordinator bug
+    // cannot smuggle order-dependent retraining through.
     let problem = match state.session().shard_problem(&spec, cancel.clone()) {
         Ok(p) => p,
         Err(e) => {
@@ -316,4 +326,75 @@ fn front(writer: &Arc<Mutex<TcpStream>>, slot: &mut Option<ShardSession>, id: u6
         })
         .collect();
     send(writer, &Frame::ShardFront { id, shards });
+}
+
+/// Land one replicated beacon parameter set: register it in the shared
+/// param store at exactly the authoritative index (idempotent on
+/// re-push) and mirror it into the shard's share-only beacon manager so
+/// the next window's candidates can resolve `share_target` against it.
+/// A heartbeat sidecar streams liveness while the set lands — device
+/// upload of a large set can outlast the coordinator's silence window.
+#[allow(clippy::too_many_arguments)]
+fn param_push(
+    state: &Arc<ServeState>,
+    writer: &Arc<Mutex<TcpStream>>,
+    slot: &mut Option<ShardSession>,
+    id: u64,
+    index: usize,
+    name: String,
+    tensors: Vec<Vec<f32>>,
+    qc: QuantConfig,
+) {
+    let Some(sess) = session_for(writer, slot, id) else { return };
+    let done = Arc::new(AtomicBool::new(false));
+    let hb = {
+        let done = done.clone();
+        let state = state.clone();
+        let writer = writer.clone();
+        let generation = sess.shard.generation();
+        std::thread::spawn(move || loop {
+            if done.load(Ordering::SeqCst) || state.is_shutdown() {
+                break;
+            }
+            if !send(&writer, &Frame::WorkerHeartbeat { id, generation }) {
+                break;
+            }
+            std::thread::sleep(HEARTBEAT_INTERVAL);
+        })
+    };
+    let store = ReplicatedParamStore::replica(sess.problem.eval.param_store());
+    let applied = store.apply_push(index, &name, tensors);
+    done.store(true, Ordering::SeqCst);
+    let _ = hb.join();
+    match applied {
+        Ok(_) => {
+            if let Some(mgr) = sess.problem.beacons.as_mut() {
+                // Idempotent, like the store apply: a re-push after a
+                // reconnect leaves the beacon list unchanged.
+                mgr.push_replicated(qc, index);
+            }
+            send(writer, &Frame::ParamPushed { id, index });
+        }
+        Err(e) => {
+            send(writer, &err_frame(id, &SearchError::Eval(e.to_string())));
+        }
+    }
+}
+
+/// Read one replicated set back — the verification/diagnostic leg of
+/// the replication protocol (`mohaq client` and the dist tests use it
+/// to prove a worker's table matches the coordinator's bit-for-bit).
+fn param_fetch(state: &Arc<ServeState>, writer: &Arc<Mutex<TcpStream>>, id: u64, index: usize) {
+    match state.session().eval().param_set(index) {
+        Ok(set) => {
+            let frame = Frame::ParamSet {
+                id,
+                index,
+                name: set.name.clone(),
+                tensors: set.host.clone(),
+            };
+            send(writer, &frame);
+        }
+        Err(e) => send(writer, &err_frame(id, &SearchError::Eval(e.to_string()))),
+    }
 }

@@ -35,25 +35,17 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
+use crate::params::{LocalParamStore, ParamStore, ParamUploader, ReplicatedParamStore};
 use crate::quant::{Bits, QuantConfig};
 use crate::runtime::{scalar_f32, Artifacts, DeviceTensor, Executor, Input, Runtime, Split};
 
-pub struct ParamSet {
-    pub name: String,
-    /// Host copy (beacon sets need it as the start point of further runs
-    /// and for the final report).
-    pub host: Vec<Vec<f32>>,
-    bufs: Vec<DeviceTensor>,
-    /// Tombstone: the set was retired through
-    /// [`EvalService::evict_param_set`] — its host/device memory is
-    /// freed, its index stays reserved so later sets keep their ids, and
-    /// any attempt to evaluate against it is a typed error.
-    evicted: bool,
-}
+// The parameter-set table itself lives in `crate::params` now; the old
+// `crate::eval::ParamSet` path keeps working.
+pub use crate::params::ParamSet;
 
 /// Memo key for one (parameter set, genome) pair.
 ///
@@ -337,7 +329,9 @@ enum Engine {
     /// evaluation moves only the (L,4) qparam rows across the host
     /// boundary (and batched evaluation amortizes even that packing).
     Pjrt {
-        exec: Executor,
+        /// Shared with the param store's uploader (registered sets become
+        /// device-resident through the same executor).
+        exec: Arc<Executor>,
         /// `val_data[subset][batch]` = pre-uploaded (x, y) device pair.
         val_data: Vec<Vec<(DeviceTensor, DeviceTensor)>>,
         test_data: Vec<(DeviceTensor, DeviceTensor)>,
@@ -350,6 +344,7 @@ impl Engine {
     /// Build the PJRT engine: compile nothing (the executor is handed in
     /// compiled), upload every data batch once.
     fn pjrt(exec: Executor, arts: &Artifacts) -> Result<Engine> {
+        let exec = Arc::new(exec);
         let (b, t, f) = (arts.batch, arts.seq_len, arts.feat_dim);
         let upload_split = |split: &Split| -> Result<Vec<(DeviceTensor, DeviceTensor)>> {
             (0..split.num_batches(b))
@@ -372,7 +367,10 @@ impl Engine {
 pub struct EvalService {
     pub arts: Arc<Artifacts>,
     engine: Engine,
-    param_sets: RwLock<Vec<Arc<ParamSet>>>,
+    /// The parameter-set table (`crate::params`). Behind the trait so
+    /// the same service runs over the plain local table or a replicated
+    /// one (fleet workers) without the evaluation paths knowing.
+    params: Arc<dyn ParamStore>,
     cache: ResultCache<CacheKey, f64>,
     executions: AtomicUsize,
     cache_hits: AtomicUsize,
@@ -406,11 +404,40 @@ impl EvalService {
         EvalService::with_engine(arts, Engine::Surrogate)
     }
 
+    /// Hermetic surrogate service whose parameter sets live behind a
+    /// [`ReplicatedParamStore`] authority — the dependency-injection
+    /// hook the store-equivalence property tests and the replicated
+    /// session path use. Same contract as [`EvalService::surrogate`].
+    pub fn surrogate_replicated(arts: Arc<Artifacts>) -> Result<EvalService> {
+        EvalService::with_store(arts, Engine::Surrogate, |up| {
+            Arc::new(ReplicatedParamStore::authority(Arc::new(LocalParamStore::new(up))))
+        })
+    }
+
     fn with_engine(arts: Arc<Artifacts>, engine: Engine) -> Result<EvalService> {
+        EvalService::with_store(arts, engine, |up| Arc::new(LocalParamStore::new(up)))
+    }
+
+    /// Construct over a caller-chosen store. The store receives this
+    /// engine's device uploader (PJRT engines keep every registered set
+    /// device-resident; surrogates need none), then the baseline set is
+    /// registered as id 0 — every engine/store combination starts from
+    /// the same table.
+    fn with_store(
+        arts: Arc<Artifacts>,
+        engine: Engine,
+        make_store: impl FnOnce(Option<ParamUploader>) -> Arc<dyn ParamStore>,
+    ) -> Result<EvalService> {
+        let uploader = match &engine {
+            Engine::Pjrt { exec, .. } => {
+                Some(device_uploader(exec.clone(), arts.clone()))
+            }
+            Engine::Surrogate => None,
+        };
         let svc = EvalService {
             arts: arts.clone(),
             engine,
-            param_sets: RwLock::new(Vec::new()),
+            params: make_store(uploader),
             cache: ResultCache::new(),
             executions: AtomicUsize::new(0),
             cache_hits: AtomicUsize::new(0),
@@ -426,14 +453,11 @@ impl EvalService {
         matches!(self.engine, Engine::Surrogate)
     }
 
-    /// Read access to the parameter-set table; a poisoned lock surfaces
-    /// as the same typed "poisoned" error the result cache uses (so
-    /// `SearchError` classifies it as `Poisoned`), NOT as a second panic
-    /// inside the worker pool.
-    fn sets(&self) -> Result<std::sync::RwLockReadGuard<'_, Vec<Arc<ParamSet>>>> {
-        self.param_sets.read().map_err(|_| {
-            anyhow::anyhow!("param sets poisoned: a worker panicked while holding the lock")
-        })
+    /// The parameter-set table this service evaluates against. The
+    /// beacon finalize path registers sets through this, and the fleet
+    /// wraps it in replica/authority roles (`crate::params`).
+    pub fn param_store(&self) -> Arc<dyn ParamStore> {
+        self.params.clone()
     }
 
     /// Register a parameter set (e.g. a retrained beacon); returns its id.
@@ -444,20 +468,7 @@ impl EvalService {
             host.len(),
             self.arts.tensors.len()
         );
-        let mut bufs = Vec::new();
-        if let Engine::Pjrt { exec, .. } = &self.engine {
-            bufs.reserve(host.len());
-            for (data, info) in host.iter().zip(&self.arts.tensors) {
-                let shape: Vec<i64> = info.shape.iter().map(|&d| d as i64).collect();
-                // Scalars/1-D keep their manifest shape.
-                bufs.push(exec.upload(&Input::F32(data, shape))?);
-            }
-        }
-        let mut sets = self.param_sets.write().map_err(|_| {
-            anyhow::anyhow!("param sets poisoned: a worker panicked while holding the lock")
-        })?;
-        sets.push(Arc::new(ParamSet { name: name.to_string(), host, bufs, evicted: false }));
-        Ok(sets.len() - 1)
+        self.params.add(name, host)
     }
 
     /// Retire a beacon parameter set: free its host and device memory
@@ -466,33 +477,18 @@ impl EvalService {
     /// against — is not evictable. Evaluating against a retired set is a
     /// typed error, so callers must only retire sets whose searches have
     /// fully reported (the serve opt-in does this after rows are built).
+    /// Eviction goes through the service (never the raw store): the memo
+    /// purge and the eviction counter live here, next to the cache.
     pub fn evict_param_set(&self, idx: usize) -> Result<()> {
-        anyhow::ensure!(idx != 0, "parameter set 0 is the baseline and cannot be evicted");
-        {
-            let mut sets = self.param_sets.write().map_err(|_| {
-                anyhow::anyhow!("param sets poisoned: a worker panicked while holding the lock")
-            })?;
-            let slot = sets.get_mut(idx).ok_or_else(|| {
-                anyhow::anyhow!("parameter set {idx} out of range ({} registered)", sets.len())
-            })?;
-            if slot.evicted {
-                return Ok(()); // already retired — idempotent
-            }
-            let name = slot.name.clone();
-            *slot = Arc::new(ParamSet { name, host: Vec::new(), bufs: Vec::new(), evicted: true });
+        if self.params.evict(idx)? {
+            self.cache.retain(|k| k.set() != idx)?;
+            self.param_sets_evicted.fetch_add(1, Ordering::Relaxed);
         }
-        self.cache.retain(|k| k.set() != idx)?;
-        self.param_sets_evicted.fetch_add(1, Ordering::Relaxed);
         Ok(())
     }
 
     pub fn param_set(&self, idx: usize) -> Result<Arc<ParamSet>> {
-        let sets = self.sets()?;
-        let set = sets.get(idx).cloned().ok_or_else(|| {
-            anyhow::anyhow!("parameter set {idx} out of range ({} registered)", sets.len())
-        })?;
-        anyhow::ensure!(!set.evicted, "parameter set {idx} ('{}') was evicted", set.name);
-        Ok(set)
+        self.params.get(idx)
     }
 
     /// Bound the result memo (entries, not bytes); see
@@ -502,17 +498,14 @@ impl EvalService {
     }
 
     pub fn num_param_sets(&self) -> Result<usize> {
-        Ok(self.sets()?.len())
+        self.params.len()
     }
 
     /// Poison the parameter-set lock by panicking while holding it — the
     /// regression hook mirroring `ResultCache::poison_for_test`.
     #[doc(hidden)]
     pub fn poison_param_sets_for_test(&self) {
-        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            let _guard = self.param_sets.write();
-            panic!("poisoning param sets");
-        }));
+        self.params.poison_for_test();
     }
 
     /// Snapshot the resident memo — the eval-store export path. One lock
@@ -535,13 +528,7 @@ impl EvalService {
     /// the store skips persisting its tensors and re-derives it from the
     /// artifacts on load.
     pub fn snapshot_param_sets(&self) -> Result<Vec<(usize, Arc<ParamSet>)>> {
-        let sets = self.sets()?;
-        Ok(sets
-            .iter()
-            .enumerate()
-            .filter(|(_, s)| !s.evicted)
-            .map(|(i, s)| (i, s.clone()))
-            .collect())
+        self.params.snapshot()
     }
 
     pub fn stats(&self) -> EvalStats {
@@ -635,8 +622,9 @@ impl EvalService {
         let params = self.param_set(set)?;
         let (mut err, mut total, mut loss) = (0.0, 0.0, 0.0);
         for (x, y) in data {
-            let mut bufs: Vec<&DeviceTensor> = Vec::with_capacity(params.bufs.len() + 4);
-            bufs.extend(params.bufs.iter());
+            let mut bufs: Vec<&DeviceTensor> =
+                Vec::with_capacity(params.device_bufs().len() + 4);
+            bufs.extend(params.device_bufs().iter());
             bufs.extend([&qp.0, &qp.1, x, y]);
             let out = exec
                 .run_device(&bufs)
@@ -821,6 +809,20 @@ impl EvalService {
     }
 }
 
+/// The store-held uploader for PJRT engines: registered sets (baseline,
+/// beacons, replicated pushes) become device-resident through the same
+/// executor evaluation runs on. Scalars/1-D keep their manifest shape.
+fn device_uploader(exec: Arc<Executor>, arts: Arc<Artifacts>) -> ParamUploader {
+    Box::new(move |host: &[Vec<f32>]| {
+        let mut bufs = Vec::with_capacity(host.len());
+        for (data, info) in host.iter().zip(&arts.tensors) {
+            let shape: Vec<i64> = info.shape.iter().map(|&d| d as i64).collect();
+            bufs.push(exec.upload(&Input::F32(data, shape))?);
+        }
+        Ok(bufs)
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -905,33 +907,9 @@ mod tests {
         assert!(cache.insert_many(vec![(4, 0.4)]).is_err());
     }
 
-    #[test]
-    fn poisoned_param_sets_surface_typed_errors_not_panics() {
-        // Regression: `.expect("param sets poisoned")` panicked every
-        // later eval in the pool once a worker died holding the lock.
-        // The accessors now return the typed "poisoned" error path that
-        // `SearchError::from_panic`/`SearchError::eval` classify.
-        let arts = Arc::new(Artifacts::synthetic());
-        let svc = EvalService::surrogate(arts.clone()).unwrap();
-        assert_eq!(svc.num_param_sets().unwrap(), 1);
-        assert_eq!(svc.param_set(0).unwrap().name, "baseline");
-        let oob = svc.param_set(7).unwrap_err();
-        assert!(oob.to_string().contains("out of range"), "{oob}");
-
-        svc.poison_param_sets_for_test();
-        for err in [
-            svc.param_set(0).unwrap_err(),
-            svc.num_param_sets().unwrap_err(),
-            svc.add_param_set("b", arts.weights.clone()).unwrap_err(),
-        ] {
-            assert!(err.to_string().contains("poisoned"), "{err}");
-        }
-        // The PJRT path (pjrt_run -> param_set) reads through the same
-        // accessor, so evaluation errors out instead of panicking; the
-        // surrogate path never touches the table and stays usable.
-        let qc = QuantConfig::uniform(arts.layer_names.len(), Bits::B8, Bits::B8);
-        assert!(svc.val_error(&qc, 0).is_ok());
-    }
+    // (`poisoned_param_sets_surface_typed_errors_not_panics` and
+    // `evicting_a_param_set_frees_it_and_purges_its_memos` moved to
+    // `crate::params::tests` with the store extraction.)
 
     #[test]
     fn val_error_batch_matches_sequential_on_surrogate() {
@@ -1007,37 +985,6 @@ mod tests {
         assert_eq!(cache.evictions(), Some(5));
         assert_eq!(cache.get(&3).unwrap(), None);
         assert_eq!(cache.get(&4).unwrap(), Some(4.0));
-    }
-
-    #[test]
-    fn evicting_a_param_set_frees_it_and_purges_its_memos() {
-        let arts = Arc::new(Artifacts::synthetic());
-        let svc = EvalService::surrogate(arts.clone()).unwrap();
-        let beacon = svc.add_param_set("beacon-a", arts.weights.clone()).unwrap();
-        let n = arts.layer_names.len();
-        let qc = QuantConfig::uniform(n, Bits::B8, Bits::B8);
-        svc.val_error(&qc, 0).unwrap();
-        svc.val_error(&qc, beacon).unwrap();
-        assert_eq!(svc.stats().unique_solutions, 2);
-
-        svc.evict_param_set(beacon).unwrap();
-        let stats = svc.stats();
-        assert_eq!(stats.param_sets_evicted, 1);
-        assert_eq!(stats.unique_solutions, 1, "beacon memo purged, baseline kept");
-        assert_eq!(stats.evictions, 1);
-        // The slot is tombstoned: id space is stable, access is a typed
-        // error, and re-eviction is idempotent.
-        let err = svc.param_set(beacon).unwrap_err();
-        assert!(err.to_string().contains("evicted"), "{err}");
-        svc.evict_param_set(beacon).unwrap();
-        assert_eq!(svc.stats().param_sets_evicted, 1);
-        let next = svc.add_param_set("beacon-b", arts.weights.clone()).unwrap();
-        assert_eq!(next, beacon + 1);
-        // The baseline is not evictable, and the baseline memo still hits.
-        assert!(svc.evict_param_set(0).is_err());
-        let before = svc.stats().executions;
-        svc.val_error(&qc, 0).unwrap();
-        assert_eq!(svc.stats().executions, before);
     }
 
     #[test]

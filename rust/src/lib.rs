@@ -27,6 +27,7 @@ pub mod hw;
 pub mod runtime;
 pub mod model;
 pub mod moo;
+pub mod params;
 pub mod pareto;
 pub mod quant;
 pub mod report;

@@ -116,17 +116,20 @@ front is bitwise-identical to the same seed run in-process):
   --spawn-workers N      spawn N local worker processes (ephemeral ports)
                          for this search and stop them afterwards; adds
                          to any --workers list
-  Requires an island config (--islands or the spec's); beacon retraining
-  is rejected in distributed mode (order-dependent across the global
-  population). Without an artifact bundle the search falls back to the
-  hermetic surrogate evaluator so the distributed stack can be exercised
-  offline.
+  Requires an island config (--islands or the spec's). Beacon retraining
+  (--beacon) runs distributed: beacon selection and retraining happen on
+  the coordinator at migration boundaries, and the finalized parameter
+  sets replicate to every worker (param_push) before the next window, so
+  the merged front is bitwise-identical to the single-process beacon run
+  at the same seed — see DESIGN.md 'Parameter-set store'. Without an
+  artifact bundle the search falls back to the hermetic surrogate
+  evaluator so the distributed stack can be exercised offline.
 
 checkpoint / resume (durable search state; see DESIGN.md 'Durable state'):
   --checkpoint FILE      write a search checkpoint (spec + per-island RNG
-                         positions + populations) to FILE at every
-                         migration boundary, via atomic rename; needs an
-                         island config with >= 2 islands
+                         positions + populations + finalized beacons) to
+                         FILE at every migration boundary, via atomic
+                         rename; needs an island config with >= 2 islands
   --resume FILE          continue an interrupted search from a checkpoint.
                          The checkpoint carries the full spec, so spec
                          flags (--exp/--config/--gens/--seed/--islands/...)
@@ -134,7 +137,14 @@ checkpoint / resume (durable search state; see DESIGN.md 'Durable state'):
                          bitwise-identical to the uninterrupted run. Also
                          works distributed (--workers/--spawn-workers) —
                          a crashed coordinator resumes from its last
-                         written boundary
+                         written boundary. A beacon checkpoint names its
+                         parameter sets; resume it with the --store the
+                         run saved, or it is rejected rather than
+                         silently retrained
+  --store DIR            durable eval store for this search: reload
+                         DIR/eval_store.json first (beacon resumes
+                         resolve their parameter-set names against it)
+                         and save it back when the search finishes
   --stop-after-checkpoints N
                          exit(0) immediately after the Nth checkpoint
                          write: a deterministic mid-run interruption (what
@@ -197,6 +207,11 @@ options:
                     answers repeated configs from cache. A corrupt store
                     file is a hard typed error, never a partial load.
                     See DESIGN.md 'Durable state'
+  --store-interval SECS
+                    also save the eval store every SECS seconds from a
+                    background thread (temp file + atomic rename, so
+                    readers never see a torn store), bounding what a
+                    crash can lose to one interval; requires --store
 
 Drive it with examples/serve_quickstart.rs:
   cargo run --release --example serve_quickstart -- --addr 127.0.0.1:7070";
@@ -328,11 +343,47 @@ fn cmd_serve(args: &Args) -> Result<()> {
             println!("eval store: {} not found; starting cold", path.display());
         }
     }
+    // --store-interval SECS: a background saver bounds what a crash can
+    // lose to one interval. Each snapshot goes through atomic_write
+    // (inside eval_store::save), so a reader — or the startup reload of
+    // the next server — sees either the previous store or this one,
+    // never a torn file. The thread polls shutdown at 200ms so it never
+    // delays a clean exit by more than that.
+    let store_interval = args.get_usize("store-interval", 0);
+    anyhow::ensure!(
+        store_interval == 0 || store_path.is_some(),
+        "--store-interval requires --store DIR (there is nowhere to save)"
+    );
     let state_for_save = state.clone();
+    let mut saver = None;
+    if store_interval > 0 {
+        let path = store_path.clone().expect("checked above");
+        let state = state_for_save.clone();
+        saver = Some(std::thread::spawn(move || {
+            let interval = std::time::Duration::from_secs(store_interval as u64);
+            let mut next = std::time::Instant::now() + interval;
+            while !state.is_shutdown() {
+                std::thread::sleep(std::time::Duration::from_millis(200));
+                if std::time::Instant::now() < next || state.is_shutdown() {
+                    continue;
+                }
+                next = std::time::Instant::now() + interval;
+                match mohaq::store::eval_store::save(&path, state.session().eval()) {
+                    Ok(()) => println!("eval store: periodic save -> {}", path.display()),
+                    // A failed snapshot must not kill a serving process;
+                    // the next tick retries.
+                    Err(e) => eprintln!("eval store: periodic save FAILED: {e}"),
+                }
+            }
+        }));
+    }
     let server = mohaq::serve::Server::bind(args.get_or("addr", "127.0.0.1:7070"), state)?;
     println!("mohaq serve: listening on {}", server.local_addr()?);
     println!("(send {{\"op\":\"shutdown\"}} on any connection to stop)");
     server.run()?;
+    if let Some(h) = saver {
+        let _ = h.join();
+    }
     if let Some(path) = &store_path {
         mohaq::store::eval_store::save(path, state_for_save.session().eval())
             .map_err(|e| anyhow::anyhow!("saving eval store {}: {e}", path.display()))?;
@@ -800,6 +851,32 @@ fn cmd_search(args: &Args) -> Result<()> {
 
     let session = session.threads(args.get_usize("threads", 0));
 
+    // --store DIR: reload the durable eval store BEFORE the search runs,
+    // so a beacon checkpoint's parameter-set names resolve against the
+    // reloaded sets (a resume referencing a set the store lacks is
+    // rejected, not silently retrained); saved back after the run.
+    let search_store =
+        args.get("store").map(|dir| std::path::Path::new(dir).join("eval_store.json"));
+    if let Some(path) = &search_store {
+        let dir = path.parent().expect("store path has a parent");
+        std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+        if path.exists() {
+            let report = mohaq::store::eval_store::load(path, session.eval(), false)
+                .map_err(|e| anyhow::anyhow!("loading eval store {}: {e}", path.display()))?;
+            println!(
+                "eval store: reloaded {} ({} param set(s) registered, {} skipped; \
+                 {} memo entries, {} dropped)",
+                path.display(),
+                report.param_sets_registered,
+                report.param_sets_skipped,
+                report.entries_loaded,
+                report.entries_dropped
+            );
+        } else {
+            println!("eval store: {} not found; starting cold", path.display());
+        }
+    }
+
     // Distributed setup: collect worker addresses (named + spawned) and
     // make sure there is an island config to shard.
     let mut addrs: Vec<String> = args
@@ -862,9 +939,10 @@ fn cmd_search(args: &Args) -> Result<()> {
         SearchEvent::Finished { .. } => {}
     };
 
-    // --checkpoint FILE: persist (spec, generation, island snapshots) at
-    // every migration boundary, atomically. Only island-model searches
-    // have boundaries, so anything else is rejected up front.
+    // --checkpoint FILE: persist (spec, generation, island snapshots,
+    // finalized beacons) at every migration boundary, atomically. Only
+    // island-model searches have boundaries, so anything else is
+    // rejected up front.
     let checkpoint_path = args.get("checkpoint").map(std::path::PathBuf::from);
     if let Some(p) = &checkpoint_path {
         anyhow::ensure!(
@@ -880,11 +958,20 @@ fn cmd_search(args: &Args) -> Result<()> {
         "--stop-after-checkpoints requires --checkpoint"
     );
     let spec_for_ckpt = spec.clone();
+    let eval_for_ckpt = session.eval().clone();
+    let store_for_ckpt = search_store.clone();
     let mut written = 0usize;
-    let mut sink = |gen: usize, snaps: &[mohaq::moo::IslandSnapshot]| {
+    let mut sink = |gen: usize,
+                    snaps: &[mohaq::moo::IslandSnapshot],
+                    beacons: &[mohaq::coordinator::BeaconSnapshot]| {
         let path = checkpoint_path.as_deref().expect("sink only installed with --checkpoint");
-        match mohaq::store::SearchCheckpoint::new(spec_for_ckpt.clone(), gen, snaps.to_vec())
-            .and_then(|c| c.save(path))
+        match mohaq::store::SearchCheckpoint::new(
+            spec_for_ckpt.clone(),
+            gen,
+            snaps.to_vec(),
+            beacons.to_vec(),
+        )
+        .and_then(|c| c.save(path))
         {
             // A failed write must not kill a running search: a checkpoint
             // is a recovery aid, and losing one is strictly better than
@@ -894,6 +981,18 @@ fn cmd_search(args: &Args) -> Result<()> {
                 written += 1;
                 println!("  checkpoint: generation {gen} -> {}", path.display());
                 if stop_after > 0 && written >= stop_after {
+                    // The simulated crash must still leave a loadable
+                    // eval store: a beacon checkpoint references its
+                    // parameter sets by name, and the resume resolves
+                    // them against --store.
+                    if let Some(sp) = &store_for_ckpt {
+                        match mohaq::store::eval_store::save(sp, &eval_for_ckpt) {
+                            Ok(()) => println!("eval store: saved {}", sp.display()),
+                            Err(e) => {
+                                eprintln!("eval store: FAILED saving {}: {e}", sp.display())
+                            }
+                        }
+                    }
                     println!(
                         "stopping after {written} checkpoint(s) as requested \
                          (--stop-after-checkpoints); continue with --resume {}",
@@ -904,8 +1003,9 @@ fn cmd_search(args: &Args) -> Result<()> {
             }
         }
     };
-    let sink_opt: Option<&mut dyn FnMut(usize, &[mohaq::moo::IslandSnapshot])> =
-        if checkpoint_path.is_some() { Some(&mut sink) } else { None };
+    let sink_opt: Option<
+        &mut dyn FnMut(usize, &[mohaq::moo::IslandSnapshot], &[mohaq::coordinator::BeaconSnapshot]),
+    > = if checkpoint_path.is_some() { Some(&mut sink) } else { None };
 
     let cancel = mohaq::coordinator::CancelToken::new();
     let dist_cfg = mohaq::dist::DistConfig::default();
@@ -914,14 +1014,20 @@ fn cmd_search(args: &Args) -> Result<()> {
             &spec,
             &addrs,
             &dist_cfg,
-            Some((ckpt.generation, ckpt.snapshots)),
+            Some((ckpt.generation, ckpt.snapshots, ckpt.beacons)),
             sink_opt,
             on_event,
             &cancel,
         )?,
-        (Some(ckpt), false) => {
-            session.run_resumed(&spec, ckpt.generation, ckpt.snapshots, on_event, sink_opt, &cancel)?
-        }
+        (Some(ckpt), false) => session.run_resumed(
+            &spec,
+            ckpt.generation,
+            ckpt.snapshots,
+            ckpt.beacons,
+            on_event,
+            sink_opt,
+            &cancel,
+        )?,
         (None, true) => session.run_distributed_resumable(
             &spec,
             &addrs,
@@ -946,6 +1052,11 @@ fn cmd_search(args: &Args) -> Result<()> {
         report::write_front_csv(format!("{out_dir}/front.csv"), &outcome.rows)?;
         report::write_records_csv(format!("{out_dir}/records.csv"), &outcome)?;
         println!("wrote {out_dir}/");
+    }
+    if let Some(path) = &search_store {
+        mohaq::store::eval_store::save(path, session.eval())
+            .map_err(|e| anyhow::anyhow!("saving eval store {}: {e}", path.display()))?;
+        println!("eval store: saved {}", path.display());
     }
     Ok(())
 }

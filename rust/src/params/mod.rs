@@ -1,0 +1,522 @@
+//! Parameter-set store: the authoritative table of model parameter sets.
+//!
+//! Index 0 is the baseline pre-trained model; beacon retraining (paper
+//! §4.3) registers additional sets. The table used to be private state
+//! inside `EvalService`; it is a first-class layer now so the distributed
+//! fleet can replicate beacon sets across processes:
+//!
+//!   * [`LocalParamStore`] — the in-process table, bit-for-bit the
+//!     behavior `EvalService` always had: append-only ids, tombstone
+//!     eviction (ids stay reserved), poison-aware typed errors, and an
+//!     optional device uploader so registered sets become PJRT-resident
+//!     exactly once.
+//!   * [`ReplicatedParamStore`] — the same table plus a replication role.
+//!     The coordinator holds the `Authority` side (its set list is the
+//!     truth; [`ReplicatedParamStore::sets_since`] is the journal the
+//!     fleet ships at migration boundaries) and every worker holds a
+//!     `Replica` (sets arrive through `param_push` wire ops and land via
+//!     [`ReplicatedParamStore::apply_push`], which enforces index
+//!     contiguity so replica ids are always identical to authority ids —
+//!     the surrogate's jitter and the memo keys both hash the set index,
+//!     so id identity is what makes distributed fronts bitwise-equal to
+//!     single-process ones).
+//!
+//! Eviction STAYS an `EvalService` affair (`evict_param_set`): the memo
+//! purge and the `param_sets_evicted` counter live next to the cache, so
+//! callers must retire sets through the service, not the raw store.
+
+use std::sync::{Arc, RwLock};
+
+use anyhow::Result;
+
+use crate::runtime::DeviceTensor;
+
+pub struct ParamSet {
+    pub name: String,
+    /// Host copy (beacon sets need it as the start point of further runs
+    /// and for the final report).
+    pub host: Vec<Vec<f32>>,
+    /// Device-resident copy when the owning store has an uploader.
+    bufs: Vec<DeviceTensor>,
+    /// Tombstone: the set was retired through
+    /// `EvalService::evict_param_set` — its host/device memory is freed,
+    /// its index stays reserved so later sets keep their ids, and any
+    /// attempt to evaluate against it is a typed error.
+    evicted: bool,
+}
+
+impl ParamSet {
+    /// Device buffers uploaded at registration (empty on surrogate
+    /// engines and tombstones).
+    pub fn device_bufs(&self) -> &[DeviceTensor] {
+        &self.bufs
+    }
+
+    pub fn is_evicted(&self) -> bool {
+        self.evicted
+    }
+}
+
+/// Uploads one set's host tensors to the device at registration time.
+/// `EvalService` installs one over its PJRT executor; surrogate services
+/// install none. Living IN the store (rather than at the call site) is
+/// what lets replicated pushes land device-resident on PJRT workers
+/// without the replication path knowing about engines.
+pub type ParamUploader = Box<dyn Fn(&[Vec<f32>]) -> Result<Vec<DeviceTensor>> + Send + Sync>;
+
+/// The parameter-set table behind a trait so `EvalService` (and the
+/// beacon finalize path) read through it the same way in-process and
+/// across the fleet. Every method surfaces lock poisoning as the typed
+/// "poisoned" error `SearchError` classifies — never a second panic.
+pub trait ParamStore: Send + Sync {
+    /// Register a set; returns its id (append-only, never reused).
+    fn add(&self, name: &str, host: Vec<Vec<f32>>) -> Result<usize>;
+
+    /// Fetch a live set. Out-of-range and tombstoned ids are typed
+    /// errors.
+    fn get(&self, idx: usize) -> Result<Arc<ParamSet>>;
+
+    /// Tombstone a set, freeing its host/device memory but reserving its
+    /// id. Returns `true` the first time, `false` when already retired
+    /// (idempotent). Index 0 — the baseline — is not evictable. Callers
+    /// outside `EvalService::evict_param_set` must not use this: the
+    /// memo purge lives there.
+    fn evict(&self, idx: usize) -> Result<bool>;
+
+    /// Registered slots, tombstones included (ids are dense).
+    fn len(&self) -> Result<usize>;
+
+    fn is_empty(&self) -> Result<bool> {
+        Ok(self.len()? == 0)
+    }
+
+    /// Live (non-evicted) sets with their ids, ascending.
+    fn snapshot(&self) -> Result<Vec<(usize, Arc<ParamSet>)>>;
+
+    /// Poison the table lock by panicking while holding it — the
+    /// regression hook behind `EvalService::poison_param_sets_for_test`.
+    #[doc(hidden)]
+    fn poison_for_test(&self);
+}
+
+/// In-process store: exactly the table `EvalService` used to own.
+pub struct LocalParamStore {
+    sets: RwLock<Vec<Arc<ParamSet>>>,
+    uploader: Option<ParamUploader>,
+}
+
+impl LocalParamStore {
+    pub fn new(uploader: Option<ParamUploader>) -> LocalParamStore {
+        LocalParamStore { sets: RwLock::new(Vec::new()), uploader }
+    }
+
+    fn read(&self) -> Result<std::sync::RwLockReadGuard<'_, Vec<Arc<ParamSet>>>> {
+        self.sets.read().map_err(|_| {
+            anyhow::anyhow!("param sets poisoned: a worker panicked while holding the lock")
+        })
+    }
+
+    fn write(&self) -> Result<std::sync::RwLockWriteGuard<'_, Vec<Arc<ParamSet>>>> {
+        self.sets.write().map_err(|_| {
+            anyhow::anyhow!("param sets poisoned: a worker panicked while holding the lock")
+        })
+    }
+}
+
+impl ParamStore for LocalParamStore {
+    fn add(&self, name: &str, host: Vec<Vec<f32>>) -> Result<usize> {
+        // Every set must shape-match the baseline (set 0) — the one
+        // structural invariant the store can enforce without knowing the
+        // artifact (`EvalService::add_param_set` still validates against
+        // the manifest first on its path).
+        {
+            let sets = self.read()?;
+            if let Some(base) = sets.first() {
+                anyhow::ensure!(
+                    host.len() == base.host.len(),
+                    "param set has {} tensors, the baseline has {}",
+                    host.len(),
+                    base.host.len()
+                );
+            }
+        }
+        // Upload OUTSIDE the lock: device transfers are slow and must
+        // not block concurrent readers (in-flight evaluations).
+        let bufs = match &self.uploader {
+            Some(up) => up(&host)?,
+            None => Vec::new(),
+        };
+        let mut sets = self.write()?;
+        sets.push(Arc::new(ParamSet { name: name.to_string(), host, bufs, evicted: false }));
+        Ok(sets.len() - 1)
+    }
+
+    fn get(&self, idx: usize) -> Result<Arc<ParamSet>> {
+        let sets = self.read()?;
+        let set = sets.get(idx).cloned().ok_or_else(|| {
+            anyhow::anyhow!("parameter set {idx} out of range ({} registered)", sets.len())
+        })?;
+        anyhow::ensure!(!set.evicted, "parameter set {idx} ('{}') was evicted", set.name);
+        Ok(set)
+    }
+
+    fn evict(&self, idx: usize) -> Result<bool> {
+        anyhow::ensure!(idx != 0, "parameter set 0 is the baseline and cannot be evicted");
+        let mut sets = self.write()?;
+        let slot = sets.get_mut(idx).ok_or_else(|| {
+            anyhow::anyhow!("parameter set {idx} out of range ({} registered)", sets.len())
+        })?;
+        if slot.evicted {
+            return Ok(false); // already retired — idempotent
+        }
+        let name = slot.name.clone();
+        *slot = Arc::new(ParamSet { name, host: Vec::new(), bufs: Vec::new(), evicted: true });
+        Ok(true)
+    }
+
+    fn len(&self) -> Result<usize> {
+        Ok(self.read()?.len())
+    }
+
+    fn snapshot(&self) -> Result<Vec<(usize, Arc<ParamSet>)>> {
+        let sets = self.read()?;
+        Ok(sets
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.evicted)
+            .map(|(i, s)| (i, s.clone()))
+            .collect())
+    }
+
+    fn poison_for_test(&self) {
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = self.sets.write();
+            panic!("poisoning param sets");
+        }));
+    }
+}
+
+/// Which side of the replication protocol a store plays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreRole {
+    /// The coordinator: its set list is the truth, `sets_since` is the
+    /// journal shipped to the fleet.
+    Authority,
+    /// A worker: sets only arrive through `apply_push`, in index order.
+    Replica,
+}
+
+/// A [`ParamStore`] participating in fleet replication. Plain store
+/// operations delegate to the wrapped table unchanged; the replication
+/// surface (`sets_since` / `apply_push`) is role-checked so a worker can
+/// never invent authoritative ids and the coordinator can never be fed
+/// pushes.
+pub struct ReplicatedParamStore {
+    inner: Arc<dyn ParamStore>,
+    role: StoreRole,
+}
+
+impl ReplicatedParamStore {
+    pub fn authority(inner: Arc<dyn ParamStore>) -> ReplicatedParamStore {
+        ReplicatedParamStore { inner, role: StoreRole::Authority }
+    }
+
+    pub fn replica(inner: Arc<dyn ParamStore>) -> ReplicatedParamStore {
+        ReplicatedParamStore { inner, role: StoreRole::Replica }
+    }
+
+    pub fn role(&self) -> StoreRole {
+        self.role
+    }
+
+    /// Authority journal: every live set with id >= `from`, ascending.
+    /// The fleet replays this to (re)connecting workers — `from = 1`
+    /// ships all beacons (the baseline is re-derived from the artifacts
+    /// on every process and is never replicated).
+    pub fn sets_since(&self, from: usize) -> Result<Vec<(usize, Arc<ParamSet>)>> {
+        anyhow::ensure!(
+            self.role == StoreRole::Authority,
+            "sets_since is an authority operation; this store is a replica"
+        );
+        let mut sets = self.inner.snapshot()?;
+        sets.retain(|(i, _)| *i >= from);
+        Ok(sets)
+    }
+
+    /// Replica apply: land one replicated set at exactly `index`.
+    /// Returns `true` when newly registered, `false` when the push is a
+    /// duplicate of a set already held (re-pushes happen on every worker
+    /// reconnect — idempotence is what makes `ShardLost` replay safe).
+    /// Gaps, id-0 pushes and name mismatches are typed errors: replica
+    /// ids must be identical to authority ids (the memo keys and the
+    /// surrogate jitter both hash the id).
+    pub fn apply_push(&self, index: usize, name: &str, host: Vec<Vec<f32>>) -> Result<bool> {
+        anyhow::ensure!(
+            self.role == StoreRole::Replica,
+            "apply_push is a replica operation; this store is the authority"
+        );
+        anyhow::ensure!(index != 0, "param push for set 0: the baseline is never replicated");
+        let len = self.inner.len()?;
+        if index < len {
+            let existing = self.inner.get(index)?;
+            anyhow::ensure!(
+                existing.name == name,
+                "param push for set {index} carries name '{name}', replica already holds '{}'",
+                existing.name
+            );
+            anyhow::ensure!(
+                existing.host.len() == host.len(),
+                "param push for set {index} ('{name}') carries {} tensors, replica holds {}",
+                host.len(),
+                existing.host.len()
+            );
+            return Ok(false);
+        }
+        anyhow::ensure!(
+            index == len,
+            "param push for set {index} leaves a gap: replica holds {len} sets \
+             (pushes must arrive in index order)"
+        );
+        let got = self.inner.add(name, host)?;
+        debug_assert_eq!(got, index);
+        Ok(true)
+    }
+}
+
+impl ParamStore for ReplicatedParamStore {
+    fn add(&self, name: &str, host: Vec<Vec<f32>>) -> Result<usize> {
+        self.inner.add(name, host)
+    }
+
+    fn get(&self, idx: usize) -> Result<Arc<ParamSet>> {
+        self.inner.get(idx)
+    }
+
+    fn evict(&self, idx: usize) -> Result<bool> {
+        self.inner.evict(idx)
+    }
+
+    fn len(&self) -> Result<usize> {
+        self.inner.len()
+    }
+
+    fn snapshot(&self) -> Result<Vec<(usize, Arc<ParamSet>)>> {
+        self.inner.snapshot()
+    }
+
+    fn poison_for_test(&self) {
+        self.inner.poison_for_test()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::EvalService;
+    use crate::quant::{Bits, QuantConfig};
+    use crate::runtime::Artifacts;
+
+    fn tensors(n: usize) -> Vec<Vec<f32>> {
+        (0..n).map(|i| vec![i as f32; 3]).collect()
+    }
+
+    #[test]
+    fn stores_are_send_sync() {
+        fn check<T: Send + Sync>() {}
+        check::<LocalParamStore>();
+        check::<ReplicatedParamStore>();
+    }
+
+    #[test]
+    fn local_store_is_append_only_with_tombstone_eviction() {
+        let store = LocalParamStore::new(None);
+        assert!(store.is_empty().unwrap());
+        assert_eq!(store.add("baseline", tensors(2)).unwrap(), 0);
+        assert_eq!(store.add("beacon0", tensors(2)).unwrap(), 1);
+        assert_eq!(store.len().unwrap(), 2);
+        // Shape mismatch against the baseline is a typed error.
+        let err = store.add("bad", tensors(3)).unwrap_err();
+        assert!(err.to_string().contains("the baseline has 2"), "{err}");
+
+        assert!(store.evict(1).unwrap(), "first eviction");
+        assert!(!store.evict(1).unwrap(), "idempotent");
+        assert!(store.evict(0).is_err(), "baseline unevictable");
+        assert!(store.evict(9).is_err(), "out of range");
+        let err = store.get(1).unwrap_err();
+        assert!(err.to_string().contains("was evicted"), "{err}");
+        // Ids stay dense across tombstones; snapshots skip them.
+        assert_eq!(store.add("beacon1", tensors(2)).unwrap(), 2);
+        let live: Vec<usize> = store.snapshot().unwrap().iter().map(|(i, _)| *i).collect();
+        assert_eq!(live, vec![0, 2]);
+    }
+
+    #[test]
+    fn replica_pushes_are_contiguous_and_idempotent() {
+        let replica = ReplicatedParamStore::replica(Arc::new(LocalParamStore::new(None)));
+        replica.add("baseline", tensors(2)).unwrap();
+
+        // The baseline is never replicated, and gaps are rejected.
+        assert!(replica.apply_push(0, "baseline", tensors(2)).is_err());
+        let gap = replica.apply_push(2, "beacon1", tensors(2)).unwrap_err();
+        assert!(gap.to_string().contains("leaves a gap"), "{gap}");
+
+        assert!(replica.apply_push(1, "beacon0", tensors(2)).unwrap(), "new set lands");
+        assert_eq!(replica.get(1).unwrap().name, "beacon0");
+        // Reconnect replay: the same push is a no-op...
+        assert!(!replica.apply_push(1, "beacon0", tensors(2)).unwrap());
+        assert_eq!(replica.len().unwrap(), 2);
+        // ...but a DIFFERENT set claiming a held id is corruption.
+        let clash = replica.apply_push(1, "impostor", tensors(2)).unwrap_err();
+        assert!(clash.to_string().contains("already holds 'beacon0'"), "{clash}");
+
+        // Role checks both ways.
+        assert!(replica.sets_since(1).is_err());
+        let authority = ReplicatedParamStore::authority(Arc::new(LocalParamStore::new(None)));
+        authority.add("baseline", tensors(2)).unwrap();
+        authority.add("beacon0", tensors(2)).unwrap();
+        assert!(authority.apply_push(1, "beacon0", tensors(2)).is_err());
+        let journal = authority.sets_since(1).unwrap();
+        assert_eq!(journal.len(), 1);
+        assert_eq!(journal[0].0, 1);
+        assert_eq!(journal[0].1.name, "beacon0");
+    }
+
+    #[test]
+    fn authority_journal_replays_into_an_identical_replica() {
+        let authority = ReplicatedParamStore::authority(Arc::new(LocalParamStore::new(None)));
+        authority.add("baseline", tensors(2)).unwrap();
+        authority.add("beacon0", tensors(2)).unwrap();
+        authority.add("beacon1", tensors(2)).unwrap();
+
+        let replica = ReplicatedParamStore::replica(Arc::new(LocalParamStore::new(None)));
+        replica.add("baseline", tensors(2)).unwrap();
+        // Replaying the journal twice (a reconnect) converges to the same
+        // table with authority-identical ids.
+        for _ in 0..2 {
+            for (idx, set) in authority.sets_since(1).unwrap() {
+                replica.apply_push(idx, &set.name, set.host.clone()).unwrap();
+            }
+        }
+        assert_eq!(replica.len().unwrap(), authority.len().unwrap());
+        for (idx, set) in authority.snapshot().unwrap() {
+            assert_eq!(replica.get(idx).unwrap().name, set.name);
+        }
+    }
+
+    /// Moved from `eval/` with the store extraction. Regression:
+    /// `.expect("param sets poisoned")` panicked every later eval in the
+    /// pool once a worker died holding the lock. The accessors now
+    /// return the typed "poisoned" error path that
+    /// `SearchError::from_panic`/`SearchError::eval` classify.
+    #[test]
+    fn poisoned_param_sets_surface_typed_errors_not_panics() {
+        let arts = Arc::new(Artifacts::synthetic());
+        let svc = EvalService::surrogate(arts.clone()).unwrap();
+        assert_eq!(svc.num_param_sets().unwrap(), 1);
+        assert_eq!(svc.param_set(0).unwrap().name, "baseline");
+        let oob = svc.param_set(7).unwrap_err();
+        assert!(oob.to_string().contains("out of range"), "{oob}");
+
+        svc.poison_param_sets_for_test();
+        for err in [
+            svc.param_set(0).unwrap_err(),
+            svc.num_param_sets().unwrap_err(),
+            svc.add_param_set("b", arts.weights.clone()).unwrap_err(),
+        ] {
+            assert!(err.to_string().contains("poisoned"), "{err}");
+        }
+        // The PJRT path (pjrt_run -> param_set) reads through the same
+        // accessor, so evaluation errors out instead of panicking; the
+        // surrogate path never touches the table and stays usable.
+        let qc = QuantConfig::uniform(arts.layer_names.len(), Bits::B8, Bits::B8);
+        assert!(svc.val_error(&qc, 0).is_ok());
+    }
+
+    /// Moved from `eval/` with the store extraction: eviction ordering —
+    /// tombstoned ids stay reserved, memos purge, eviction is idempotent
+    /// and the baseline is protected.
+    #[test]
+    fn evicting_a_param_set_frees_it_and_purges_its_memos() {
+        let arts = Arc::new(Artifacts::synthetic());
+        let svc = EvalService::surrogate(arts.clone()).unwrap();
+        let beacon = svc.add_param_set("beacon-a", arts.weights.clone()).unwrap();
+        let n = arts.layer_names.len();
+        let qc = QuantConfig::uniform(n, Bits::B8, Bits::B8);
+        svc.val_error(&qc, 0).unwrap();
+        svc.val_error(&qc, beacon).unwrap();
+        assert_eq!(svc.stats().unique_solutions, 2);
+
+        svc.evict_param_set(beacon).unwrap();
+        let stats = svc.stats();
+        assert_eq!(stats.param_sets_evicted, 1);
+        assert_eq!(stats.unique_solutions, 1, "beacon memo purged, baseline kept");
+        assert_eq!(stats.evictions, 1);
+        // The slot is tombstoned: id space is stable, access is a typed
+        // error, and re-eviction is idempotent.
+        let err = svc.param_set(beacon).unwrap_err();
+        assert!(err.to_string().contains("evicted"), "{err}");
+        svc.evict_param_set(beacon).unwrap();
+        assert_eq!(svc.stats().param_sets_evicted, 1);
+        let next = svc.add_param_set("beacon-b", arts.weights.clone()).unwrap();
+        assert_eq!(next, beacon + 1);
+        // The baseline is not evictable, and the baseline memo still hits.
+        assert!(svc.evict_param_set(0).is_err());
+        let before = svc.stats().executions;
+        svc.val_error(&qc, 0).unwrap();
+        assert_eq!(svc.stats().executions, before);
+    }
+
+    /// The replicated wrapper is transparent to evaluation: a surrogate
+    /// service over a `ReplicatedParamStore` authority produces bitwise
+    /// the errors and identical `EvalStats` to one over the plain local
+    /// store, across random geometries with in-batch duplicates.
+    #[test]
+    fn replicated_store_service_matches_local_bitwise() {
+        use crate::util::prop::check_prop;
+        use crate::util::rng::Rng;
+        let arts = Arc::new(Artifacts::synthetic());
+        let n = arts.layer_names.len();
+        let gen_batch = |r: &mut Rng| -> Vec<QuantConfig> {
+            let m = 1 + r.below(6);
+            let mut qcs: Vec<QuantConfig> = (0..m)
+                .map(|_| QuantConfig {
+                    w_bits: (0..n).map(|_| *r.choose(&Bits::SEARCHABLE)).collect(),
+                    a_bits: (0..n).map(|_| *r.choose(&Bits::SEARCHABLE)).collect(),
+                })
+                .collect();
+            // Force duplicates so the hit-accounting contract is covered.
+            if qcs.len() > 1 {
+                let dup = qcs[0].clone();
+                qcs.push(dup);
+            }
+            qcs
+        };
+        check_prop(
+            "replicated_store_matches_local",
+            40,
+            gen_batch,
+            |qcs| {
+                let local = EvalService::surrogate(arts.clone()).unwrap();
+                let repl = EvalService::surrogate_replicated(arts.clone()).unwrap();
+                for svc in [&local, &repl] {
+                    svc.add_param_set("beacon0", arts.weights.clone()).unwrap();
+                }
+                for set in [0usize, 1] {
+                    let a = local.val_error_batch(qcs, set).unwrap();
+                    let b = repl.val_error_batch(qcs, set).unwrap();
+                    if a.iter().zip(&b).any(|(x, y)| x.to_bits() != y.to_bits()) {
+                        return Err(format!("set {set}: fronts differ: {a:?} vs {b:?}"));
+                    }
+                }
+                if local.stats() != repl.stats() {
+                    return Err(format!(
+                        "stats differ: {:?} vs {:?}",
+                        local.stats(),
+                        repl.stats()
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}

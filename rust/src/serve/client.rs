@@ -168,6 +168,31 @@ impl ServeClient {
         }
     }
 
+    /// Read one replicated parameter set back from a worker server:
+    /// `(name, tensors)` on the lossless f32 codec. The verification leg
+    /// of beacon replication — the dist tests use it to prove a worker's
+    /// param table matches the coordinator's bit-for-bit. Heartbeat
+    /// frames (a shard may be replicating concurrently) are skipped.
+    pub fn param_fetch(&mut self, index: usize) -> Result<(String, Vec<Vec<f32>>), ClientError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.send(&Request::ParamFetch { id, index })?;
+        loop {
+            match self.read_frame()? {
+                Frame::ParamSet { id: fid, name, tensors, .. } if fid == id => {
+                    return Ok((name, tensors))
+                }
+                Frame::Error { id: fid, kind, message } if fid == Some(id) || fid.is_none() => {
+                    return Err(ClientError::Server { kind, message })
+                }
+                Frame::WorkerHeartbeat { .. } => {}
+                other => {
+                    return Err(ClientError::Protocol(format!("expected param_set, got {other:?}")))
+                }
+            }
+        }
+    }
+
     /// Run a search to completion, discarding progress frames.
     pub fn search(&mut self, spec: &ExperimentSpec) -> Result<SearchReply, ClientError> {
         self.search_with(spec, |_| false)

@@ -31,16 +31,22 @@
 //!
 //! Worker mode (distributed island sharding, `rust/src/dist/`) extends
 //! the protocol with coordinator → worker ops `shard_assign` /
-//! `run_islands` / `elite_exchange` / `shard_front` and worker →
-//! coordinator frames `shard_assigned` / `elite_exchange` /
-//! `migration_applied` / `shard_front` / `worker_heartbeat`.
+//! `run_islands` / `elite_exchange` / `shard_front` / `param_push` /
+//! `param_fetch` and worker → coordinator frames `shard_assigned` /
+//! `elite_exchange` / `migration_applied` / `shard_front` /
+//! `param_pushed` / `param_set` / `worker_heartbeat`.
 //! Individuals and island snapshots ride the same lossless number
 //! codec; the one exception is the RNG state, whose `u64` words exceed
 //! f64 precision and therefore travel as decimal strings (the same
-//! convention `ExperimentSpec` uses for `ga.seed`).
+//! convention `ExperimentSpec` uses for `ga.seed`). Replicated
+//! parameter tensors are f32 and travel as plain JSON numbers — every
+//! f32 is exactly representable as an f64, and the parser rejects any
+//! value a cast back to f32 would alter (same contract as
+//! `store::eval_store`), so a pushed beacon set lands bit-for-bit.
 
 use crate::coordinator::{SearchEvent, SearchOutcome, SolutionRow};
 use crate::moo::{Individual, IslandSnapshot};
+use crate::quant::{Bits, QuantConfig};
 use crate::util::json::{obj, Json};
 
 /// Client → server message.
@@ -84,6 +90,17 @@ pub enum Request {
     /// Coordinator → worker: ship back the full final island
     /// populations for the global merge.
     ShardFront { id: u64 },
+    /// Coordinator → worker: replicate one finalized beacon parameter
+    /// set. `index` is the authoritative store id (pushes arrive in
+    /// index order — the replica enforces contiguity so worker ids are
+    /// identical to coordinator ids); `qc` is the beacon's quantization
+    /// config, which the worker's share-only `BeaconManager` needs so
+    /// mid-window candidates resolve `share_target` exactly like the
+    /// coordinator. Re-pushes after a worker reconnect are idempotent.
+    ParamPush { id: u64, index: usize, name: String, tensors: Vec<Vec<f32>>, qc: QuantConfig },
+    /// Coordinator (or a diagnostic client) → worker: read back one
+    /// replicated set for verification.
+    ParamFetch { id: u64, index: usize },
 }
 
 /// Migrants routed to one island of a worker's shard, grouped by source
@@ -242,6 +259,75 @@ pub(crate) fn snapshot_from_json(j: &Json) -> Result<IslandSnapshot, ProtocolErr
     })
 }
 
+fn tensors_to_json(tensors: &[Vec<f32>]) -> Json {
+    Json::Arr(
+        tensors
+            .iter()
+            .map(|t| Json::Arr(t.iter().map(|v| Json::Num(f64::from(*v))).collect()))
+            .collect(),
+    )
+}
+
+/// Parse replicated f32 tensors. Every f32 round-trips exactly through
+/// f64; anything a cast would alter was not written by us (same
+/// contract as the eval-store codec).
+fn tensors_from_json(j: Option<&Json>) -> Result<Vec<Vec<f32>>, ProtocolError> {
+    let bad = |msg: String| ProtocolError { id: None, message: msg };
+    let mut tensors = Vec::new();
+    for (t, tj) in j.and_then(Json::as_arr).unwrap_or(&[]).iter().enumerate() {
+        let vals = tj
+            .as_arr()
+            .ok_or_else(|| bad(format!("tensors[{t}] must be an array of numbers")))?;
+        let mut data = Vec::with_capacity(vals.len());
+        for (k, vj) in vals.iter().enumerate() {
+            let v = vj
+                .as_f64()
+                .ok_or_else(|| bad(format!("tensors[{t}][{k}] must be a number")))?;
+            let f = v as f32;
+            if f64::from(f).to_bits() != v.to_bits() {
+                return Err(bad(format!("tensors[{t}][{k}] = {v} is not an f32 value")));
+            }
+            data.push(f);
+        }
+        tensors.push(data);
+    }
+    Ok(tensors)
+}
+
+/// Quantization configs travel as two bit-width arrays (`[2,4,8,16]`
+/// values) — the searchable `Bits` domain, validated on parse. Also the
+/// checkpoint-file beacon codec (`store::checkpoint`): the wire and the
+/// disk must agree on what a beacon's config is.
+pub(crate) fn qc_to_json(qc: &QuantConfig) -> Json {
+    let widths =
+        |bits: &[Bits]| Json::Arr(bits.iter().map(|b| Json::Num(f64::from(b.bits()))).collect());
+    obj(vec![("w_bits", widths(&qc.w_bits)), ("a_bits", widths(&qc.a_bits))])
+}
+
+pub(crate) fn qc_from_json(j: Option<&Json>) -> Result<QuantConfig, ProtocolError> {
+    let bad = |msg: String| ProtocolError { id: None, message: msg };
+    let j = j.ok_or_else(|| bad("missing 'qc'".into()))?;
+    let widths = |key: &str| -> Result<Vec<Bits>, ProtocolError> {
+        j.get(key)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| bad(format!("'qc' missing '{key}'")))?
+            .iter()
+            .map(|w| {
+                let n = w
+                    .as_usize()
+                    .and_then(|n| u32::try_from(n).ok())
+                    .ok_or_else(|| bad(format!("'qc.{key}' entries must be bit widths")))?;
+                Bits::from_bits(n).ok_or_else(|| bad(format!("'qc.{key}' has no {n}-bit level")))
+            })
+            .collect()
+    };
+    let qc = QuantConfig { w_bits: widths("w_bits")?, a_bits: widths("a_bits")? };
+    if qc.w_bits.len() != qc.a_bits.len() || qc.w_bits.is_empty() {
+        return Err(bad("'qc' bit arrays must be non-empty and equal-length".into()));
+    }
+    Ok(qc)
+}
+
 fn parse_incoming_migrants(m: &Json) -> Result<IncomingMigrants, ProtocolError> {
     let island = m.get("island").and_then(Json::as_usize).ok_or_else(|| ProtocolError {
         id: None,
@@ -382,6 +468,19 @@ impl Request {
             Request::ShardFront { id } => {
                 obj(vec![("op", "shard_front".into()), ("id", (*id as usize).into())])
             }
+            Request::ParamPush { id, index, name, tensors, qc } => obj(vec![
+                ("op", "param_push".into()),
+                ("id", (*id as usize).into()),
+                ("index", (*index).into()),
+                ("name", name.as_str().into()),
+                ("tensors", tensors_to_json(tensors)),
+                ("qc", qc_to_json(qc)),
+            ]),
+            Request::ParamFetch { id, index } => obj(vec![
+                ("op", "param_fetch".into()),
+                ("id", (*id as usize).into()),
+                ("index", (*index).into()),
+            ]),
         }
     }
 
@@ -476,6 +575,31 @@ impl Request {
                 })
             }
             "shard_front" => Ok(Request::ShardFront { id: need_id(id)? }),
+            "param_push" => {
+                let index = j.get("index").and_then(Json::as_usize).ok_or_else(|| {
+                    ProtocolError { id, message: "'param_push' needs an 'index'".into() }
+                })?;
+                let name = j.get("name").and_then(Json::as_str).ok_or_else(|| {
+                    ProtocolError { id, message: "'param_push' needs a 'name'".into() }
+                })?;
+                let tensors = tensors_from_json(j.get("tensors"))
+                    .map_err(|e| ProtocolError { id, message: e.message })?;
+                let qc = qc_from_json(j.get("qc"))
+                    .map_err(|e| ProtocolError { id, message: e.message })?;
+                Ok(Request::ParamPush {
+                    id: need_id(id)?,
+                    index,
+                    name: name.to_string(),
+                    tensors,
+                    qc,
+                })
+            }
+            "param_fetch" => {
+                let index = j.get("index").and_then(Json::as_usize).ok_or_else(|| {
+                    ProtocolError { id, message: "'param_fetch' needs an 'index'".into() }
+                })?;
+                Ok(Request::ParamFetch { id: need_id(id)?, index })
+            }
             other => Err(ProtocolError { id, message: format!("unknown op '{other}'") }),
         }
     }
@@ -668,9 +792,17 @@ pub enum Frame {
     MigrationApplied { id: u64, generation: usize, shards: Vec<ShardMigration> },
     /// Worker reply to `shard_front`: full final island populations.
     ShardFront { id: u64, shards: Vec<ShardPop> },
+    /// Worker ack of `param_push`: the set landed (or was already held —
+    /// re-pushes after a reconnect are idempotent) at exactly `index`.
+    ParamPushed { id: u64, index: usize },
+    /// Worker reply to `param_fetch`: one replicated set, tensors on the
+    /// lossless f32 codec so round trips are bit-for-bit.
+    ParamSet { id: u64, index: usize, name: String, tensors: Vec<Vec<f32>> },
     /// Liveness signal streamed while a `run_islands` advance is in
     /// flight; a coordinator that stops seeing these (or generation
-    /// frames) past its deadline declares the worker lost.
+    /// frames) past its deadline declares the worker lost. Also
+    /// streamed while a `param_push` lands, so replication windows
+    /// (device upload included) never trip the liveness deadline.
     WorkerHeartbeat { id: u64, generation: usize },
 }
 
@@ -906,6 +1038,18 @@ impl Frame {
                     ),
                 ),
             ]),
+            Frame::ParamPushed { id, index } => obj(vec![
+                ("event", "param_pushed".into()),
+                ("id", uid(*id)),
+                ("index", (*index).into()),
+            ]),
+            Frame::ParamSet { id, index, name, tensors } => obj(vec![
+                ("event", "param_set".into()),
+                ("id", uid(*id)),
+                ("index", (*index).into()),
+                ("name", name.as_str().into()),
+                ("tensors", tensors_to_json(tensors)),
+            ]),
             Frame::WorkerHeartbeat { id, generation } => obj(vec![
                 ("event", "worker_heartbeat".into()),
                 ("id", uid(*id)),
@@ -1070,6 +1214,13 @@ impl Frame {
                     .iter()
                     .map(parse_shard_pop)
                     .collect::<Result<_, _>>()?,
+            },
+            "param_pushed" => Frame::ParamPushed { id: id()?, index: num("index")? },
+            "param_set" => Frame::ParamSet {
+                id: id()?,
+                index: num("index")?,
+                name: j.get("name").and_then(Json::as_str).unwrap_or_default().to_string(),
+                tensors: tensors_from_json(j.get("tensors"))?,
             },
             "worker_heartbeat" => Frame::WorkerHeartbeat { id: id()?, generation: num("generation")? },
             other => {
@@ -1361,6 +1512,75 @@ mod tests {
             assert!(!line.contains('\n'), "one frame per line: {line}");
             assert_eq!(Frame::parse(&line).unwrap(), f, "{line}");
         }
+    }
+
+    #[test]
+    fn param_ops_round_trip_bitwise() {
+        // Denormal, negative zero and precision-heavy values: the f32
+        // tensor codec must be bit-for-bit or replicated beacon sets
+        // would diverge from the coordinator's.
+        let tensors = vec![vec![1.0f32, -0.0, f32::MIN_POSITIVE, 0.1, 1.0e-40], vec![3.25]];
+        let qc = QuantConfig {
+            w_bits: vec![Bits::B2, Bits::B16],
+            a_bits: vec![Bits::B8, Bits::B4],
+        };
+        let reqs = vec![
+            Request::ParamPush {
+                id: 11,
+                index: 1,
+                name: "beacon1[W2A8 ...]".into(),
+                tensors: tensors.clone(),
+                qc: qc.clone(),
+            },
+            Request::ParamFetch { id: 11, index: 1 },
+        ];
+        for r in reqs {
+            let line = r.to_line();
+            assert!(!line.contains('\n'), "one frame per line: {line}");
+            let back = Request::parse(&line).unwrap();
+            assert_eq!(back, r, "{line}");
+            if let Request::ParamPush { tensors: t2, .. } = &back {
+                for (a, b) in tensors.iter().flatten().zip(t2.iter().flatten()) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+        }
+        let frames = vec![
+            Frame::ParamPushed { id: 11, index: 1 },
+            Frame::ParamSet { id: 11, index: 1, name: "beacon1[W2A8 ...]".into(), tensors },
+        ];
+        for f in frames {
+            let line = f.to_line();
+            assert!(!line.contains('\n'), "one frame per line: {line}");
+            assert_eq!(Frame::parse(&line).unwrap(), f, "{line}");
+        }
+    }
+
+    #[test]
+    fn param_push_validates() {
+        let e = Request::parse(r#"{"op":"param_push","id":1,"name":"b","qc":{}}"#).unwrap_err();
+        assert!(e.message.contains("index"), "{e}");
+        let e = Request::parse(r#"{"op":"param_push","id":1,"index":1,"qc":{}}"#).unwrap_err();
+        assert!(e.message.contains("name"), "{e}");
+        // A value no f32 produced must be rejected, not silently rounded.
+        let e = Request::parse(
+            r#"{"op":"param_push","id":1,"index":1,"name":"b","tensors":[[0.3000000000000001]],"qc":{"w_bits":[8],"a_bits":[8]}}"#,
+        )
+        .unwrap_err();
+        assert!(e.message.contains("not an f32"), "{e}");
+        // Bit widths outside the searchable domain are typed errors.
+        let e = Request::parse(
+            r#"{"op":"param_push","id":1,"index":1,"name":"b","tensors":[[1.5]],"qc":{"w_bits":[3],"a_bits":[8]}}"#,
+        )
+        .unwrap_err();
+        assert!(e.message.contains("3-bit"), "{e}");
+        let e = Request::parse(
+            r#"{"op":"param_push","id":1,"index":1,"name":"b","tensors":[[1.5]],"qc":{"w_bits":[8,8],"a_bits":[8]}}"#,
+        )
+        .unwrap_err();
+        assert!(e.message.contains("equal-length"), "{e}");
+        let e = Request::parse(r#"{"op":"param_fetch","id":1}"#).unwrap_err();
+        assert!(e.message.contains("index"), "{e}");
     }
 
     #[test]

@@ -102,7 +102,8 @@ impl ServeState {
 
     /// Like [`ServeState::new`], but in worker mode: the server also
     /// accepts `shard_assign` / `run_islands` / `elite_exchange` /
-    /// `shard_front` ops from a distributed-search coordinator.
+    /// `shard_front` / `param_push` / `param_fetch` ops from a
+    /// distributed-search coordinator.
     pub fn worker(session: SearchSession, eval_workers: usize) -> Arc<ServeState> {
         let queue = Arc::new(WorkQueue::new(eval_workers));
         Arc::new(ServeState {
@@ -379,7 +380,9 @@ fn shard_request_id(req: &Request) -> Option<u64> {
         Request::ShardAssign { id, .. }
         | Request::RunIslands { id, .. }
         | Request::EliteExchange { id, .. }
-        | Request::ShardFront { id } => Some(*id),
+        | Request::ShardFront { id }
+        | Request::ParamPush { id, .. }
+        | Request::ParamFetch { id, .. } => Some(*id),
         _ => None,
     }
 }
@@ -559,7 +562,9 @@ fn handle_connection(stream: TcpStream, state: Arc<ServeState>, server_addr: Soc
                 req @ (Request::ShardAssign { .. }
                 | Request::RunIslands { .. }
                 | Request::EliteExchange { .. }
-                | Request::ShardFront { .. }),
+                | Request::ShardFront { .. }
+                | Request::ParamPush { .. }
+                | Request::ParamFetch { .. }),
             ) => {
                 if state.is_worker() {
                     // Shard ops are synchronous on the reader thread: the

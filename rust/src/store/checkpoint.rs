@@ -19,12 +19,20 @@
 //! strict the way `hw::manifest` is: unknown fields are rejected at the
 //! levels it owns, `format_version` is gated exactly, and every failure
 //! is a typed [`StoreError`].
+//!
+//! Beacon runs additionally carry one [`BeaconSnapshot`] per finalized
+//! beacon: its quantization config (the wire's bit-width codec) plus the
+//! NAME of its retrained parameter set. Names — not process-local
+//! indices — are the durable identity; a resume re-resolves each name
+//! against the eval store and rejects the checkpoint if a referenced
+//! set is missing, instead of silently restarting retraining.
 
 use std::path::Path;
 
+use crate::coordinator::beacon::BeaconSnapshot;
 use crate::coordinator::ExperimentSpec;
 use crate::moo::IslandSnapshot;
-use crate::serve::protocol::{snapshot_from_json, snapshot_to_json};
+use crate::serve::protocol::{qc_from_json, qc_to_json, snapshot_from_json, snapshot_to_json};
 use crate::util::fsio::atomic_write;
 use crate::util::json::{obj, Json};
 
@@ -38,14 +46,19 @@ pub const CHECKPOINT_KIND: &str = "mohaq-checkpoint";
 /// a typo'd `"evaluations"` must not silently zero a counter).
 const SNAPSHOT_KEYS: [&str; 4] = ["island", "rng", "evaluations", "pop"];
 
+/// Exactly the keys a beacon entry may carry.
+const BEACON_KEYS: [&str; 2] = ["set_name", "qc"];
+
 /// One resumable search: the spec that produced it, the boundary
-/// generation the snapshots were taken at, and one post-migration
-/// snapshot per global island (ascending island order).
+/// generation the snapshots were taken at, one post-migration snapshot
+/// per global island (ascending island order), and — for beacon runs —
+/// the beacons finalized so far, in creation order.
 #[derive(Debug, Clone)]
 pub struct SearchCheckpoint {
     pub spec: ExperimentSpec,
     pub generation: usize,
     pub snapshots: Vec<IslandSnapshot>,
+    pub beacons: Vec<BeaconSnapshot>,
 }
 
 impl SearchCheckpoint {
@@ -55,8 +68,9 @@ impl SearchCheckpoint {
         spec: ExperimentSpec,
         generation: usize,
         snapshots: Vec<IslandSnapshot>,
+        beacons: Vec<BeaconSnapshot>,
     ) -> Result<SearchCheckpoint, StoreError> {
-        let ckpt = SearchCheckpoint { spec, generation, snapshots };
+        let ckpt = SearchCheckpoint { spec, generation, snapshots, beacons };
         ckpt.validate()?;
         Ok(ckpt)
     }
@@ -109,17 +123,41 @@ impl SearchCheckpoint {
                 )));
             }
         }
+        if !self.beacons.is_empty() && self.spec.beacon.is_none() {
+            return Err(StoreError::Invalid(format!(
+                "checkpoint carries {} beacon(s) but its spec has no beacon policy",
+                self.beacons.len()
+            )));
+        }
+        for (i, b) in self.beacons.iter().enumerate() {
+            if b.set_name.is_empty() {
+                return Err(StoreError::Invalid(format!(
+                    "beacon {i} has an empty parameter-set name"
+                )));
+            }
+        }
         Ok(())
     }
 
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut fields = vec![
             ("format_version", (STORE_VERSION as usize).into()),
             ("kind", CHECKPOINT_KIND.into()),
             ("generation", self.generation.into()),
             ("spec", self.spec.to_json()),
             ("islands", Json::Arr(self.snapshots.iter().map(snapshot_to_json).collect())),
-        ])
+        ];
+        if !self.beacons.is_empty() {
+            let arr = self
+                .beacons
+                .iter()
+                .map(|b| {
+                    obj(vec![("set_name", b.set_name.as_str().into()), ("qc", qc_to_json(&b.qc))])
+                })
+                .collect();
+            fields.push(("beacons", Json::Arr(arr)));
+        }
+        obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<SearchCheckpoint, StoreError> {
@@ -127,7 +165,7 @@ impl SearchCheckpoint {
         check_keys(
             j,
             "checkpoint",
-            &["format_version", "kind", "generation", "spec", "islands"],
+            &["format_version", "kind", "generation", "spec", "islands", "beacons"],
         )?;
         let generation = j
             .get("generation")
@@ -154,7 +192,25 @@ impl SearchCheckpoint {
                 StoreError::Invalid(format!("snapshot {i}: {}", e.message))
             })?);
         }
-        SearchCheckpoint::new(spec, generation, snapshots)
+        let mut beacons = Vec::new();
+        if let Some(entries) = j.get("beacons") {
+            let entries = entries
+                .as_arr()
+                .ok_or_else(|| StoreError::Invalid("'beacons' must be an array".into()))?;
+            for (i, b) in entries.iter().enumerate() {
+                check_keys(b, &format!("beacon {i}"), &BEACON_KEYS)?;
+                let set_name = b
+                    .get("set_name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| StoreError::Missing { field: format!("beacons[{i}].set_name") })?
+                    .to_string();
+                let qc = qc_from_json(b.get("qc")).map_err(|e| {
+                    StoreError::Invalid(format!("beacon {i}: {}", e.message))
+                })?;
+                beacons.push(BeaconSnapshot { qc, set_name });
+            }
+        }
+        SearchCheckpoint::new(spec, generation, snapshots, beacons)
     }
 
     pub fn from_str(text: &str) -> Result<SearchCheckpoint, StoreError> {

@@ -11,18 +11,26 @@
 //!     and still completes with the SAME bitwise-identical front
 //!     (restore from the last migration snapshot is exact);
 //!   * retry exhaustion — losing every worker yields a typed
-//!     `SearchError::WorkerLost`, never a panic or a hang.
+//!     `SearchError::WorkerLost`, never a panic or a hang;
+//!   * beacon replication — a beacon-enabled distributed run (coordinator
+//!     selects + retrains at migration boundaries, finalized parameter
+//!     sets replicate to every shard via `param_push`) merges a front
+//!     bitwise-identical to the single-process beacon run, every worker
+//!     replica's param table matches the coordinator's bit-for-bit
+//!     (`param_fetch`), and a mid-run worker loss replays the
+//!     replication journal onto the survivors with the same front.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::time::Duration;
 
 use mohaq::coordinator::{
-    CancelToken, ExperimentSpec, ScoredObjective, SearchEvent, SearchOutcome, SearchSession,
+    BeaconPolicyOverrides, CancelToken, ExperimentSpec, ScoredObjective, SearchEvent,
+    SearchOutcome, SearchSession,
 };
 use mohaq::dist::DistConfig;
 use mohaq::moo::{IslandConfig, Topology};
-use mohaq::serve::{ServeState, Server};
+use mohaq::serve::{ServeClient, ServeState, Server};
 
 /// Start a hermetic worker server on an ephemeral port; returns its
 /// address and the accept-loop thread (joined to assert clean shutdown).
@@ -66,6 +74,23 @@ fn dist_spec(topology: Topology) -> ExperimentSpec {
         migration_interval: 2,
         topology,
         migrants: 2,
+    });
+    spec
+}
+
+/// The beacon fixture: the dist spec plus a beacon policy sized for the
+/// surrogate evaluator — cheap retrains, capped at 2 beacons, default
+/// threshold. Boundary elites on the surrogate span the beacon-feasible
+/// error band (mid-precision genomes land ~0.15 above the baseline,
+/// inside paper_defaults' [base+0.04, base+0.35] create window), so the
+/// window pass reliably creates beacons; the tests assert it did.
+fn beacon_spec(topology: Topology) -> ExperimentSpec {
+    let mut spec = dist_spec(topology);
+    spec.name = "dist-silago-beacon".into();
+    spec.beacon = Some(BeaconPolicyOverrides {
+        threshold: None,
+        retrain_steps: Some(6),
+        max_beacons: Some(2),
     });
     spec
 }
@@ -261,4 +286,132 @@ fn unreachable_workers_fail_over_to_the_reachable_one() {
 
     stop_worker(addr);
     handle.join().unwrap().unwrap();
+}
+
+/// One worker replica's param table vs the coordinator's authoritative
+/// store, through the `param_fetch` verification op: same names, same
+/// tensors, bit for bit.
+fn assert_replica_matches_coordinator(addr: SocketAddr, coord: &SearchSession) {
+    let n = coord.eval().num_param_sets().unwrap();
+    let mut client = ServeClient::connect(addr).unwrap();
+    // Index 0 is the baseline (never pushed — workers register their
+    // own); every index past it is a replicated beacon set.
+    for idx in 1..n {
+        let set = coord.eval().param_set(idx).unwrap();
+        let (name, tensors) = client.param_fetch(idx).unwrap();
+        assert_eq!(name, set.name, "replica set {idx} name diverged");
+        assert_eq!(tensors.len(), set.host.len(), "replica set {idx} tensor count diverged");
+        for (t, (a, b)) in tensors.iter().zip(&set.host).enumerate() {
+            assert_eq!(a.len(), b.len(), "set {idx} tensor {t} length diverged");
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "set {idx} tensor {t} not bitwise equal");
+            }
+        }
+    }
+}
+
+#[test]
+fn distributed_beacon_front_matches_single_process_bitwise_on_both_topologies() {
+    for topology in [Topology::Ring, Topology::FullyConnected] {
+        let spec = beacon_spec(topology);
+        // Reference: the single-process windowed island+beacon schedule.
+        let local = SearchSession::synthetic().unwrap().run(&spec).unwrap();
+        assert!(!local.rows.is_empty(), "reference front is empty (bad fixture)");
+        assert!(
+            !local.beacons.is_empty(),
+            "reference run created no beacons ({topology:?}); the fixture must exercise \
+             retraining for this test to mean anything"
+        );
+
+        let workers: Vec<_> = (0..2).map(|_| spawn_worker()).collect();
+        let addrs: Vec<String> = workers.iter().map(|(a, _)| a.to_string()).collect();
+
+        let coord = SearchSession::synthetic().unwrap();
+        let mut created: Vec<(String, usize)> = Vec::new();
+        let outcome = coord
+            .run_distributed(
+                &spec,
+                &addrs,
+                &DistConfig::default(),
+                |event| match event {
+                    SearchEvent::BeaconCreated { name, retrain_steps } => {
+                        created.push((name.clone(), *retrain_steps));
+                    }
+                    SearchEvent::ShardLost { .. } => panic!("no worker should be lost here"),
+                    _ => {}
+                },
+                &CancelToken::new(),
+            )
+            .unwrap();
+
+        // Same beacons, by name and retrain budget, in creation order —
+        // both in the outcome and as streamed events.
+        assert_eq!(outcome.beacons, local.beacons, "beacon outcomes diverged ({topology:?})");
+        assert_eq!(created, local.beacons, "streamed BeaconCreated events diverged");
+        assert_fronts_bitwise_equal(&outcome, &local);
+
+        // Every worker holds every finalized set, bit for bit.
+        assert!(coord.eval().num_param_sets().unwrap() >= 2, "no beacon sets registered");
+        for (addr, _) in &workers {
+            assert_replica_matches_coordinator(*addr, &coord);
+        }
+
+        for (addr, handle) in workers {
+            stop_worker(addr);
+            handle.join().unwrap().unwrap();
+        }
+    }
+}
+
+#[test]
+fn killing_a_worker_mid_beacon_run_replays_replication_and_keeps_the_front() {
+    let spec = beacon_spec(Topology::Ring);
+    let local = SearchSession::synthetic().unwrap().run(&spec).unwrap();
+    assert!(!local.beacons.is_empty(), "reference run created no beacons (bad fixture)");
+
+    let workers: Vec<_> = (0..3).map(|_| spawn_worker()).collect();
+    let addrs: Vec<String> = workers.iter().map(|(a, _)| a.to_string()).collect();
+    let victim = workers[2].0;
+
+    let coord = SearchSession::synthetic().unwrap();
+    let mut killed = false;
+    let mut lost = 0usize;
+    let outcome = coord
+        .run_distributed(
+            &spec,
+            &addrs,
+            &DistConfig { heartbeat_timeout: Duration::from_secs(10), max_retries: 2 },
+            |event| match event {
+                // Pull the plug as soon as the fleet shows life; the
+                // re-shard must replay the full replication journal onto
+                // the survivors (push_sets after reconnect), not just
+                // sets finalized after the loss.
+                SearchEvent::Generation(_) if !killed => {
+                    killed = true;
+                    stop_worker(victim);
+                }
+                SearchEvent::ShardLost { .. } => lost += 1,
+                _ => {}
+            },
+            &CancelToken::new(),
+        )
+        .expect("beacon search must survive a single worker loss");
+
+    assert!(killed, "the kill never triggered");
+    assert_eq!(lost, 1, "expected exactly one shard loss");
+    assert_eq!(outcome.beacons, local.beacons, "beacon outcomes diverged after re-shard");
+    assert_fronts_bitwise_equal(&outcome, &local);
+
+    // The survivors' replicas absorbed the journal replay.
+    for (addr, _) in workers.iter().take(2) {
+        assert_replica_matches_coordinator(*addr, &coord);
+    }
+
+    let mut workers = workers;
+    let (_, victim_handle) = workers.remove(2);
+    victim_handle.join().unwrap().unwrap();
+    for (addr, handle) in workers {
+        stop_worker(addr);
+        handle.join().unwrap().unwrap();
+    }
 }

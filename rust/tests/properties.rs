@@ -478,19 +478,21 @@ fn valid_checkpoint_text() -> String {
         topology: Topology::Ring,
         migrants: 1,
     });
+    use mohaq::coordinator::BeaconSnapshot;
     let mut first: Option<(usize, Vec<IslandSnapshot>)> = None;
-    let mut sink = |gen: usize, snaps: &[IslandSnapshot]| {
+    let mut sink = |gen: usize, snaps: &[IslandSnapshot], _beacons: &[BeaconSnapshot]| {
         if first.is_none() {
             first = Some((gen, snaps.to_vec()));
         }
     };
-    let sink_opt: Option<&mut dyn FnMut(usize, &[IslandSnapshot])> = Some(&mut sink);
+    let sink_opt: Option<&mut dyn FnMut(usize, &[IslandSnapshot], &[BeaconSnapshot])> =
+        Some(&mut sink);
     SearchSession::synthetic()
         .unwrap()
         .run_checkpointed(&spec, |_| {}, sink_opt, &CancelToken::new())
         .unwrap();
     let (gen, snaps) = first.expect("a 2-island 4-generation run must hit a boundary");
-    SearchCheckpoint::new(spec, gen, snaps).unwrap().to_json().to_string()
+    SearchCheckpoint::new(spec, gen, snaps, Vec::new()).unwrap().to_json().to_string()
 }
 
 /// A valid serialized eval store to mutate: a real memo entry under the

@@ -11,7 +11,14 @@
 //!     distributed (simulated coordinator crash included);
 //!   * the eval store snapshots the PTQ memo + beacon param sets and a
 //!     fresh session (or a restarted serve server) answers repeated
-//!     configs from cache — no re-executions, bitwise-equal values.
+//!     configs from cache — no re-executions, bitwise-equal values;
+//!   * beacon runs checkpoint their beacons (config + parameter-set
+//!     name): a resume restores them through the eval store and matches
+//!     the uninterrupted run bitwise, and a resume WITHOUT the store is
+//!     a typed rejection naming the missing set — never a silent
+//!     re-retrain.
+
+use mohaq::coordinator::{BeaconPolicyOverrides, BeaconSnapshot};
 
 use std::net::SocketAddr;
 use std::path::PathBuf;
@@ -87,12 +94,13 @@ fn assert_fronts_bitwise_equal(resumed: &SearchOutcome, reference: &SearchOutcom
 /// `spec`; also returns the run's outcome (the bitwise reference).
 fn first_checkpoint(spec: &ExperimentSpec) -> ((usize, Vec<IslandSnapshot>), SearchOutcome) {
     let mut first: Option<(usize, Vec<IslandSnapshot>)> = None;
-    let mut sink = |gen: usize, snaps: &[IslandSnapshot]| {
+    let mut sink = |gen: usize, snaps: &[IslandSnapshot], _beacons: &[BeaconSnapshot]| {
         if first.is_none() {
             first = Some((gen, snaps.to_vec()));
         }
     };
-    let sink_opt: Option<&mut dyn FnMut(usize, &[IslandSnapshot])> = Some(&mut sink);
+    let sink_opt: Option<&mut dyn FnMut(usize, &[IslandSnapshot], &[BeaconSnapshot])> =
+        Some(&mut sink);
     let outcome = SearchSession::synthetic()
         .unwrap()
         .run_checkpointed(spec, |_| {}, sink_opt, &CancelToken::new())
@@ -111,7 +119,7 @@ fn checkpoint_files_round_trip_losslessly_and_deterministically() {
     snaps[0].rng = [u64::MAX, 0, 1, 0x8000_0000_0000_0001];
     snaps[1].evaluations = (1u64 << 60) as usize;
 
-    let ckpt = SearchCheckpoint::new(spec.clone(), gen, snaps).unwrap();
+    let ckpt = SearchCheckpoint::new(spec.clone(), gen, snaps, Vec::new()).unwrap();
     let text = ckpt.to_json().to_string();
     let back = SearchCheckpoint::from_str(&text).unwrap();
     assert_eq!(back.generation, ckpt.generation);
@@ -151,7 +159,7 @@ fn resumed_search_matches_the_uninterrupted_run_bitwise() {
         // Through the real file format, into a FRESH session (cold cache:
         // proves the front depends on the checkpoint, not leftover state).
         let path = temp_path(&format!("resume_{topology:?}.json"));
-        SearchCheckpoint::new(spec.clone(), gen, snaps).unwrap().save(&path).unwrap();
+        SearchCheckpoint::new(spec.clone(), gen, snaps, Vec::new()).unwrap().save(&path).unwrap();
         let ckpt = SearchCheckpoint::load(&path).unwrap();
         let resumed = SearchSession::synthetic()
             .unwrap()
@@ -159,6 +167,7 @@ fn resumed_search_matches_the_uninterrupted_run_bitwise() {
                 &ckpt.spec,
                 ckpt.generation,
                 ckpt.snapshots,
+                ckpt.beacons,
                 |_| {},
                 None,
                 &CancelToken::new(),
@@ -200,13 +209,14 @@ fn distributed_resume_after_coordinator_crash_matches_bitwise() {
     let cancel = CancelToken::new();
     let trigger = cancel.clone();
     let mut recorded: Option<(usize, Vec<IslandSnapshot>)> = None;
-    let mut sink = |gen: usize, snaps: &[IslandSnapshot]| {
+    let mut sink = |gen: usize, snaps: &[IslandSnapshot], _beacons: &[BeaconSnapshot]| {
         if recorded.is_none() {
             recorded = Some((gen, snaps.to_vec()));
             trigger.cancel();
         }
     };
-    let sink_opt: Option<&mut dyn FnMut(usize, &[IslandSnapshot])> = Some(&mut sink);
+    let sink_opt: Option<&mut dyn FnMut(usize, &[IslandSnapshot], &[BeaconSnapshot])> =
+        Some(&mut sink);
     let err = SearchSession::synthetic()
         .unwrap()
         .run_distributed_resumable(
@@ -227,7 +237,7 @@ fn distributed_resume_after_coordinator_crash_matches_bitwise() {
     // connections) resumes from the written file against the SAME still-
     // running workers and lands on the identical front.
     let path = temp_path("dist_resume.json");
-    SearchCheckpoint::new(spec.clone(), gen, snaps).unwrap().save(&path).unwrap();
+    SearchCheckpoint::new(spec.clone(), gen, snaps, Vec::new()).unwrap().save(&path).unwrap();
     let ckpt = SearchCheckpoint::load(&path).unwrap();
     let resumed = SearchSession::synthetic()
         .unwrap()
@@ -235,7 +245,7 @@ fn distributed_resume_after_coordinator_crash_matches_bitwise() {
             &ckpt.spec,
             &addrs,
             &DistConfig::default(),
-            Some((ckpt.generation, ckpt.snapshots)),
+            Some((ckpt.generation, ckpt.snapshots, ckpt.beacons)),
             None,
             |_| {},
             &CancelToken::new(),
@@ -397,4 +407,114 @@ fn restarted_server_warm_starts_from_the_eval_store() {
     assert!(stats.cache_hits >= warm.cache_hits);
     client.shutdown().unwrap();
     handle.join().unwrap().unwrap();
+}
+
+/// The island fixture with a beacon policy sized for the surrogate:
+/// cheap retrains, two beacons max (same shape as the dist beacon test).
+fn beacon_island_spec() -> ExperimentSpec {
+    let mut spec = island_spec(Topology::Ring);
+    spec.name = "store-silago-beacon".into();
+    spec.beacon = Some(BeaconPolicyOverrides {
+        threshold: None,
+        retrain_steps: Some(6),
+        max_beacons: Some(2),
+    });
+    spec
+}
+
+#[test]
+fn beacon_checkpoints_round_trip_and_validate_strictly() {
+    let spec = beacon_island_spec();
+    let ((gen, snaps), _) = first_checkpoint(&spec);
+    let beacons = vec![BeaconSnapshot {
+        qc: QuantConfig::uniform(8, Bits::from_bits(4).unwrap(), Bits::from_bits(4).unwrap()),
+        set_name: "beacon0[w4 a4]".into(),
+    }];
+
+    // Round trip: the beacon payload (config + set name) survives the
+    // file format exactly.
+    let ckpt = SearchCheckpoint::new(spec.clone(), gen, snaps.clone(), beacons.clone()).unwrap();
+    let back = SearchCheckpoint::from_str(&ckpt.to_json().to_string()).unwrap();
+    assert_eq!(back.beacons, beacons, "beacons did not round-trip");
+
+    // Beacons without a beacon policy in the spec: typed rejection (this
+    // pins the old bug of serializing `beacons: Vec::new()` — a payload
+    // the spec cannot explain must never load silently).
+    let plain = island_spec(Topology::Ring);
+    let err = SearchCheckpoint::new(plain, gen, snaps, beacons).unwrap_err();
+    assert!(err.to_string().contains("beacon policy"), "{err}");
+
+    // Strictness: an unknown key inside a beacon entry is rejected.
+    let mut text = ckpt.to_json().to_string();
+    text = text.replace("\"set_name\"", "\"extra\":1,\"set_name\"");
+    assert!(SearchCheckpoint::from_str(&text).is_err(), "unknown beacon key accepted");
+}
+
+#[test]
+fn beacon_resume_restores_through_the_eval_store_and_rejects_without_it() {
+    let spec = beacon_island_spec();
+
+    // Reference run; at every boundary capture the checkpoint payload
+    // AND the eval store as it stood at that instant (what `mohaq search
+    // --store --checkpoint --stop-after-checkpoints` persists together —
+    // the store must hold exactly the sets the checkpoint references).
+    let session = SearchSession::synthetic().unwrap();
+    let eval = session.eval().clone();
+    let mut grabs: Vec<(usize, Vec<IslandSnapshot>, Vec<BeaconSnapshot>, PathBuf)> = Vec::new();
+    let mut sink = |gen: usize, snaps: &[IslandSnapshot], beacons: &[BeaconSnapshot]| {
+        let p = temp_path(&format!("beacon_resume_store_{gen}.json"));
+        eval_store::save(&p, &eval).unwrap();
+        grabs.push((gen, snaps.to_vec(), beacons.to_vec(), p));
+    };
+    let sink_opt: Option<&mut dyn FnMut(usize, &[IslandSnapshot], &[BeaconSnapshot])> =
+        Some(&mut sink);
+    let reference = session.run_checkpointed(&spec, |_| {}, sink_opt, &CancelToken::new()).unwrap();
+    assert!(!reference.rows.is_empty(), "reference front is empty (bad fixture)");
+    assert!(!reference.beacons.is_empty(), "reference run created no beacons (bad fixture)");
+
+    // Resume from the first boundary that had finalized beacons.
+    let (gen, snaps, beacons, store_path) = grabs
+        .into_iter()
+        .find(|(_, _, b, _)| !b.is_empty())
+        .expect("no migration boundary saw a finalized beacon");
+    let path = temp_path("beacon_resume.json");
+    SearchCheckpoint::new(spec.clone(), gen, snaps, beacons.clone()).unwrap().save(&path).unwrap();
+    let ckpt = SearchCheckpoint::load(&path).unwrap();
+    assert_eq!(ckpt.beacons, beacons, "beacon payload did not survive the file");
+
+    // A fresh session WITHOUT the eval store: typed rejection naming the
+    // missing parameter set — never a silent re-retrain.
+    let err = SearchSession::synthetic()
+        .unwrap()
+        .run_resumed(
+            &ckpt.spec,
+            ckpt.generation,
+            ckpt.snapshots.clone(),
+            ckpt.beacons.clone(),
+            |_| {},
+            None,
+            &CancelToken::new(),
+        )
+        .expect_err("resume without the eval store must be rejected");
+    assert!(err.to_string().contains(&beacons[0].set_name), "{err}");
+
+    // With the store reloaded first (set names resolve back to the same
+    // indices), the resumed run matches the uninterrupted one bitwise —
+    // beacons included.
+    let fresh = SearchSession::synthetic().unwrap();
+    let report = eval_store::load(&store_path, fresh.eval(), false).unwrap();
+    assert!(report.param_sets_registered >= 1, "the boundary store carried no beacon sets");
+    let resumed = fresh
+        .run_resumed(
+            &ckpt.spec,
+            ckpt.generation,
+            ckpt.snapshots,
+            ckpt.beacons,
+            |_| {},
+            None,
+            &CancelToken::new(),
+        )
+        .expect("resume with the eval store loaded");
+    assert_eq!(resumed.beacons, reference.beacons, "beacon outcomes diverged across resume");
+    assert_fronts_bitwise_equal(&resumed, &reference);
 }
